@@ -1,0 +1,110 @@
+//! END-TO-END driver (recorded in EXPERIMENTS.md): the full three-layer
+//! system on the paper's headline workload.
+//!
+//! * L1/L2: the AOT-compiled Pallas `cloudlet_burn` kernel really executes
+//!   on the hot path of every workload round (PJRT, CPU client), and the
+//!   `matchmake` kernel scores the matchmaking scenario.
+//! * L3: the Rust coordinator runs the Table 5.1 scenario — 200 VMs,
+//!   400 loaded cloudlets, 15 datacenters, round-robin scheduling — on
+//!   plain CloudSim and on Cloud²Sim over 1/2/3/6 simulated nodes.
+//!
+//! Requires `make artifacts`; falls back to the calibrated native model
+//! (with a warning) when artifacts are missing.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_paper
+//! ```
+
+use cloud2sim::dist::{run_cloudsim_baseline_with, run_distributed_full, Strategy};
+use cloud2sim::dist::matchmaking::run_matchmaking_distributed;
+use cloud2sim::metrics::Table;
+use cloud2sim::prelude::*;
+use cloud2sim::runtime::registry::{default_artifacts_dir, PjrtRuntime};
+use cloud2sim::runtime::workload::{NativeBurnModel, PjrtBurnModel, WorkloadModel};
+
+fn main() -> Result<()> {
+    println!("Cloud2Sim end-to-end driver — Table 5.1 with the PJRT kernel on the hot path\n");
+
+    let dir = default_artifacts_dir();
+    let mut model: Box<dyn WorkloadModel> = match PjrtRuntime::load(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            for e in &rt.manifest {
+                println!("  artifact {:?} {} ({}x{} t={})", e.kind, e.name, e.d1, e.d2, e.d3);
+            }
+            Box::new(PjrtBurnModel::new(rt, 256)?)
+        }
+        Err(e) => {
+            println!("WARNING: {e}\n         running with the native workload model instead.");
+            Box::new(NativeBurnModel::default())
+        }
+    };
+    println!();
+
+    let cfg = SimConfig::default_round_robin(200, 400, true);
+    let paper = ["1247.400", "1259.743", "120.009", "96.053", "104.440"];
+
+    let mut table = Table::new(
+        "Table 5.1 (loaded) — paper vs measured, real kernel executions",
+        &["deployment", "measured (s)", "paper (s)", "kernel wall", "speedup vs serial"],
+    );
+
+    let base = run_cloudsim_baseline_with(&cfg, model.as_mut(), true)?;
+    table.row(&[
+        "CloudSim".into(),
+        format!("{:.1}", base.sim_time_s),
+        paper[0].into(),
+        format!("{:?}", base.workload_wall),
+        "1.0x".into(),
+    ]);
+
+    let mut measured = vec![base.sim_time_s];
+    for (i, n) in [1usize, 2, 3, 6].iter().enumerate() {
+        let r = run_distributed_full(&cfg, *n, Strategy::MultipleSimulator, model.as_mut(), true)?;
+        table.row(&[
+            format!("Cloud2Sim ({n} node{})", if *n > 1 { "s" } else { "" }),
+            format!("{:.1}", r.sim_time_s),
+            paper[i + 1].into(),
+            format!("{:?}", r.workload_wall),
+            format!("{:.1}x", base.sim_time_s / r.sim_time_s),
+        ]);
+        measured.push(r.sim_time_s);
+    }
+    table.print();
+
+    // headline shape assertions
+    let (t1, t2, t3, t6) = (measured[1], measured[2], measured[3], measured[4]);
+    assert!(t1 / t2 > 5.0, "~10x improvement at 2 nodes: {t1} -> {t2}");
+    assert!(t3 < t2 && t6 > t3, "3-node optimum with 6-node coordination cost");
+    println!(
+        "\nheadline: {:.1}x speedup at 2 nodes, {:.1}x at 3 nodes (paper: 10.4x / 13.0x)",
+        t1 / t2,
+        t1 / t3
+    );
+
+    // matchmaking with the real kernel
+    if let Ok(rt) = PjrtRuntime::load(&dir) {
+        let mut rt = rt;
+        let mcfg = SimConfig {
+            no_of_vms: 100,
+            no_of_cloudlets: 1200,
+            ..SimConfig::default()
+        };
+        let r1 = run_matchmaking_distributed(&mcfg, 1, Some(&mut rt))?;
+        let r3 = run_matchmaking_distributed(&mcfg, 3, Some(&mut rt))?;
+        println!(
+            "\nmatchmaking (PJRT scored): 1 node {:.1}s -> 3 nodes {:.1}s ({:.1}x), kernel wall {:?}",
+            r1.sim_time_s,
+            r3.sim_time_s,
+            r1.sim_time_s / r3.sim_time_s,
+            r1.workload_wall + r3.workload_wall,
+        );
+        println!(
+            "PJRT totals: {} kernel executions, {:?} in-kernel wall time",
+            rt.total_executions(),
+            rt.total_kernel_time()
+        );
+    }
+    println!("\ne2e OK — all layers composed (L1 Pallas kernel → L2 HLO artifact → L3 coordinator).");
+    Ok(())
+}

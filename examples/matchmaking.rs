@@ -1,0 +1,88 @@
+//! Fair matchmaking-based cloudlet scheduling (§5.1.2), with the scoring
+//! hot loop executed by the AOT-compiled Pallas kernel via PJRT when
+//! `artifacts/` has been built (`make artifacts`), falling back to the
+//! native Rust scorer otherwise.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example matchmaking
+//! ```
+
+use cloud2sim::dist::matchmaking::{
+    matchmake_native, required_size, run_matchmaking_baseline, run_matchmaking_distributed,
+};
+use cloud2sim::metrics::Table;
+use cloud2sim::prelude::*;
+use cloud2sim::runtime::registry::{default_artifacts_dir, PjrtRuntime};
+
+fn main() -> Result<()> {
+    println!("Cloud2Sim — fair matchmaking-based scheduling\n");
+    let cfg = SimConfig {
+        no_of_vms: 100,
+        no_of_cloudlets: 1200,
+        ..SimConfig::default()
+    };
+
+    // PJRT runtime, if artifacts exist
+    let mut pjrt = match PjrtRuntime::load(default_artifacts_dir()) {
+        Ok(rt) => {
+            println!("PJRT ready on '{}', artifacts: {}", rt.platform(), rt.manifest.len());
+            Some(rt)
+        }
+        Err(e) => {
+            println!("(no PJRT artifacts — native scoring only: {e})");
+            None
+        }
+    };
+
+    // kernel-vs-native parity spot check
+    if let Some(rt) = pjrt.as_mut() {
+        let entry = rt.pick_matchmake(256, 64)?;
+        let reqs: Vec<f32> = (0..entry.d1).map(|i| 10.0 + (i % 37) as f32).collect();
+        let caps: Vec<f32> = (0..entry.d2).map(|v| 8.0 + (v % 53) as f32 * 1.7).collect();
+        let loads: Vec<f32> = (0..entry.d2).map(|v| (v % 5) as f32).collect();
+        let (k_assign, k_best, wall) = rt.execute_matchmake(&entry, &reqs, &caps, &loads)?;
+        let (n_assign, n_best) = matchmake_native(&reqs, &caps, &loads);
+        assert_eq!(k_assign, n_assign, "kernel and native must agree on bindings");
+        for (a, b) in k_best.iter().zip(n_best.iter()) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+        println!(
+            "kernel parity OK: {} cloudlets x {} VMs scored in {:?} (assignments identical)\n",
+            entry.d1, entry.d2, wall
+        );
+    }
+
+    // the paper's scaling sweep
+    let base = run_matchmaking_baseline(&cfg)?;
+    let mut table = Table::new(
+        "Matchmaking simulation time (1200 cloudlets, 100 VMs)",
+        &["deployment", "time (s)", "speedup", "max CPU load"],
+    );
+    table.row(&[
+        "CloudSim".into(),
+        format!("{:.1}", base.sim_time_s),
+        "1.0x".into(),
+        "1.00".into(),
+    ]);
+    for n in [1usize, 2, 3, 4, 6] {
+        let r = run_matchmaking_distributed(&cfg, n, pjrt.as_mut())?;
+        table.row(&[
+            format!("Cloud2Sim ({n})"),
+            format!("{:.1}", r.sim_time_s),
+            format!("{:.1}x", base.sim_time_s / r.sim_time_s),
+            format!("{:.2}", r.max_process_cpu_load),
+        ]);
+    }
+    table.print();
+
+    let example_req = required_size(40_000);
+    println!("\n(cloudlet of 40,000 MI requires a VM of size ≥ {example_req})");
+    if let Some(rt) = pjrt.as_ref() {
+        println!(
+            "PJRT kernel executions: {} ({:?} total)",
+            rt.total_executions(),
+            rt.total_kernel_time()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+"""AOT bridge: lower the L2 graphs to HLO *text* artifacts + a manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla_extension 0.5.1 behind the Rust ``xla`` crate rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (under ``artifacts/``):
+
+* ``burn_b{B}_d{D}_t{T}.hlo.txt``  — workload_step variants
+* ``matchmake_c{C}_v{V}.hlo.txt``  — matchmaking variants
+* ``manifest.tsv`` — one line per artifact:
+  ``kind\tname\tpath\tdims...`` parsed by ``rust/src/runtime/registry.rs``.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import matchmake, workload_step
+
+# Variant tables: small ones for tests/calibration, large for e2e/benches.
+BURN_VARIANTS = [
+    # (batch, dim, iterations, block_b)
+    (64, 128, 16, 64),
+    (256, 128, 64, 64),
+]
+MATCHMAKE_VARIANTS = [
+    # (cloudlets, vms, block_c, block_v)
+    (256, 64, 64, 64),
+    (1024, 256, 64, 64),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_burn(b: int, d: int, t: int, block_b: int) -> str:
+    spec = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    lowered = workload_step.lower(spec, iterations=t, block_b=block_b)
+    return to_hlo_text(lowered)
+
+
+def lower_matchmake(c: int, v: int, block_c: int, block_v: int) -> str:
+    req = jax.ShapeDtypeStruct((c,), jnp.float32)
+    cap = jax.ShapeDtypeStruct((v,), jnp.float32)
+    load = jax.ShapeDtypeStruct((v,), jnp.float32)
+    lowered = matchmake.lower(req, cap, load, block_c=block_c, block_v=block_v)
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+
+    for b, d, t, block_b in BURN_VARIANTS:
+        name = f"burn_b{b}_d{d}_t{t}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_burn(b, d, t, block_b)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"burn\t{name}\t{os.path.basename(path)}\t{b}\t{d}\t{t}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for c, v, block_c, block_v in MATCHMAKE_VARIANTS:
+        name = f"matchmake_c{c}_v{v}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_matchmake(c, v, block_c, block_v)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"matchmake\t{name}\t{os.path.basename(path)}\t{c}\t{v}\t0")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest} ({len(manifest_lines)} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

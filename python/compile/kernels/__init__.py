@@ -1,0 +1,15 @@
+"""L1 Pallas kernels for Cloud2Sim's compute hot-spots.
+
+Two kernels, both lowered with ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls; see DESIGN.md "Hardware adaptation"):
+
+* :mod:`cloudlet_burn` — the paper's "complex mathematical operation"
+  cloudlet workload (Table 5.1 "loaded" runs), a batched iterated
+  matmul+tanh chain tiled for VMEM.
+* :mod:`matchmaking` — the fair matchmaking-based scheduling score matrix
+  (paper 5.1.2), an all-pairs tiled kernel.
+
+``ref`` holds the pure-jnp oracles used by pytest/hypothesis.
+"""
+
+from . import cloudlet_burn, matchmaking, ref  # noqa: F401

@@ -1,0 +1,79 @@
+"""Cloudlet workload ("burn") Pallas kernel.
+
+The paper's loaded simulations attach "a complex mathematical operation" to
+every cloudlet (5.1.1). We model one *batch* of cloudlet workloads as a
+state matrix ``x``: one row per cloudlet, ``d`` state features. Each burn
+iteration applies an affine transform with a fixed weight matrix followed by
+``tanh`` — an MXU-friendly matmul chain whose cost scales linearly with the
+iteration count, letting the coordinator map cloudlet MI lengths to
+iterations.
+
+TPU mapping (DESIGN.md "Hardware-Adaptation"): the batch is tiled into
+``(block_b, d)`` VMEM blocks; the ``(d, d)`` weight tile is pinned in VMEM
+across the whole grid (its BlockSpec index map is constant), and the
+iteration loop is an in-kernel ``fori_loop`` so the chain never round-trips
+to HBM. ``d`` defaults to 128 = one MXU lane dimension.
+
+VMEM footprint per program instance (f32): ``block_b*d`` (x) + ``d*d`` (w)
++ ``block_b*d`` (out) floats; for block_b=256, d=128 that is
+2*256*128*4 + 128*128*4 = 320 KiB, comfortably inside the ~16 MiB VMEM
+budget (DESIGN.md 7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Scale keeps the tanh chain well-conditioned (|x @ W * SCALE| ~ O(1)).
+SCALE = 0.1
+BIAS = 0.01
+
+
+def make_weights(d: int, seed: int = 7) -> jax.Array:
+    """Deterministic (d, d) weight matrix, constant-folded into the HLO."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (d, d), dtype=jnp.float32) / jnp.sqrt(d)
+
+
+def _burn_kernel(x_ref, w_ref, o_ref, *, iterations: int):
+    """One grid step: iterate the affine+tanh chain on a VMEM-resident tile."""
+    w = w_ref[...]
+
+    def body(_, acc):
+        return jnp.tanh(jnp.dot(acc, w) * SCALE + BIAS)
+
+    o_ref[...] = jax.lax.fori_loop(0, iterations, body, x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "block_b"))
+def cloudlet_burn(x: jax.Array, w: jax.Array, *, iterations: int, block_b: int = 64) -> jax.Array:
+    """Run `iterations` burn steps over the cloudlet state batch ``x``.
+
+    Args:
+      x: ``(b, d)`` float32 cloudlet state (b divisible by ``block_b``).
+      w: ``(d, d)`` float32 weights (see :func:`make_weights`).
+      iterations: burn-loop trips; the coordinator maps MI length to this.
+      block_b: batch tile size (VMEM sizing knob).
+
+    Returns:
+      ``(b, d)`` float32 post-burn state.
+    """
+    b, d = x.shape
+    if b % block_b:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    if w.shape != (d, d):
+        raise ValueError(f"weights {w.shape} do not match state dim {d}")
+    kernel = functools.partial(_burn_kernel, iterations=iterations)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),  # W pinned across the grid
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w)

@@ -1,0 +1,84 @@
+"""Fair matchmaking score-matrix Pallas kernel.
+
+The paper's matchmaking scheduling (5.1.2, after Raman et al.) has every
+cloudlet "search the object space to find the best fit ... while ensuring
+that the minimal specifications are met, cloudlets also ensure fairness, by
+not binding to a VM that is much larger than their specification
+requirements". That search is the dominant workload — O(C x V) — and is
+exactly an all-pairs score computation:
+
+    score[c, v] = waste + ALPHA * load[v] + BETA * relu(waste - FAIR_WINDOW * req[c])
+                  where waste = cap[v] - req[c],        if waste >= 0
+    score[c, v] = INFEASIBLE                            otherwise
+
+The best (minimum-score) VM per cloudlet is the binding decision.
+
+TPU mapping: classic tiled all-pairs kernel — grid over (cloudlet tiles x
+VM tiles); the req tile is a column vector and cap/load tiles are row
+vectors broadcast across the (block_c, block_v) VMEM tile. HBM traffic is
+O(C + V) per tile row/column instead of O(C*V).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fairness weights: calibrated so load-balance matters but feasibility wins.
+ALPHA = 0.25   # per-queued-cloudlet load penalty
+BETA = 4.0     # oversize (unfairness) penalty slope
+FAIR_WINDOW = 0.5  # waste beyond 50% of the requirement is "unfair"
+INFEASIBLE = 1.0e30
+
+
+def _mm_kernel(req_ref, cap_ref, load_ref, o_ref):
+    req = req_ref[...]            # (block_c, 1)
+    cap = cap_ref[...]            # (1, block_v)
+    load = load_ref[...]          # (1, block_v)
+    waste = cap - req             # (block_c, block_v) broadcast
+    fair_excess = jnp.maximum(waste - FAIR_WINDOW * req, 0.0)
+    score = waste + ALPHA * load + BETA * fair_excess
+    o_ref[...] = jnp.where(waste >= 0.0, score, INFEASIBLE)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_v"))
+def matchmaking_scores(
+    req: jax.Array,
+    cap: jax.Array,
+    load: jax.Array,
+    *,
+    block_c: int = 64,
+    block_v: int = 64,
+) -> jax.Array:
+    """Score matrix for cloudlet requirements vs VM capacities.
+
+    Args:
+      req: ``(c,)`` float32 required VM size per cloudlet.
+      cap: ``(v,)`` float32 VM sizes.
+      load: ``(v,)`` float32 current VM load (bound-cloudlet count).
+      block_c / block_v: tile sizes (c, v must divide evenly).
+
+    Returns:
+      ``(c, v)`` float32 scores; ``INFEASIBLE`` marks VMs below spec.
+    """
+    c, v = req.shape[0], cap.shape[0]
+    if c % block_c or v % block_v:
+        raise ValueError(f"shapes ({c},{v}) not divisible by blocks ({block_c},{block_v})")
+    if load.shape != cap.shape:
+        raise ValueError("load and cap must align")
+    req2 = req.reshape(c, 1)
+    cap2 = cap.reshape(1, v)
+    load2 = load.reshape(1, v)
+    return pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct((c, v), jnp.float32),
+        grid=(c // block_c, v // block_v),
+        in_specs=[
+            pl.BlockSpec((block_c, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_v), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_v), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_c, block_v), lambda i, j: (i, j)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(req2, cap2, load2)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+checked by pytest + hypothesis at build time (the paper's accuracy claim:
+"the output is consistent as if simulating in a single instance", 3.1.1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .cloudlet_burn import BIAS, SCALE
+from .matchmaking import ALPHA, BETA, FAIR_WINDOW, INFEASIBLE
+
+
+def cloudlet_burn_ref(x: jax.Array, w: jax.Array, *, iterations: int) -> jax.Array:
+    """Reference burn chain: plain jnp, no tiling."""
+
+    def body(_, acc):
+        return jnp.tanh(acc @ w * SCALE + BIAS)
+
+    return jax.lax.fori_loop(0, iterations, body, x)
+
+
+def matchmaking_scores_ref(req: jax.Array, cap: jax.Array, load: jax.Array) -> jax.Array:
+    """Reference score matrix: broadcast jnp, no tiling."""
+    waste = cap[None, :] - req[:, None]
+    fair_excess = jnp.maximum(waste - FAIR_WINDOW * req[:, None], 0.0)
+    score = waste + ALPHA * load[None, :] + BETA * fair_excess
+    return jnp.where(waste >= 0.0, score, INFEASIBLE)
+
+
+def matchmake_ref(req: jax.Array, cap: jax.Array, load: jax.Array):
+    """Reference end-to-end matchmaking: scores -> (assignment, best score)."""
+    scores = matchmaking_scores_ref(req, cap, load)
+    return jnp.argmin(scores, axis=1).astype(jnp.int32), scores.min(axis=1)

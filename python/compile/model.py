@@ -1,0 +1,47 @@
+"""L2: the JAX compute graphs the Rust coordinator executes via PJRT.
+
+Two entry points, each calling an L1 Pallas kernel:
+
+* :func:`workload_step` — one burn round for a batch of cloudlet states
+  (the Table 5.1 "loaded" workload).
+* :func:`matchmake` — fair matchmaking: score matrix (L1) + argmin binding
+  decision and per-cloudlet best score (Figs 5.4-5.7 scenario).
+
+These are lowered once by :mod:`compile.aot` to HLO text; Python never runs
+on the Rust request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cloudlet_burn import cloudlet_burn, make_weights
+from .kernels.matchmaking import matchmaking_scores
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "block_b"))
+def workload_step(x: jax.Array, *, iterations: int, block_b: int = 64):
+    """Advance a batch of cloudlet workload states by `iterations` burns.
+
+    The weight matrix is a trace-time constant (folded into the artifact),
+    so the runtime passes only the state batch.
+
+    Returns a 1-tuple (the AOT bridge lowers with ``return_tuple=True``).
+    """
+    w = make_weights(x.shape[1])
+    return (cloudlet_burn(x, w, iterations=iterations, block_b=block_b),)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_v"))
+def matchmake(req: jax.Array, cap: jax.Array, load: jax.Array, *, block_c: int = 64, block_v: int = 64):
+    """Fair matchmaking decision: ``(assignment int32[c], best_score f32[c])``.
+
+    ``assignment[i]`` is the index of the feasible, fairness-optimal VM for
+    cloudlet ``i``; when no VM is feasible the best score is
+    ``INFEASIBLE`` and the coordinator falls back to round-robin.
+    """
+    scores = matchmaking_scores(req, cap, load, block_c=block_c, block_v=block_v)
+    assignment = jnp.argmin(scores, axis=1).astype(jnp.int32)
+    best = scores.min(axis=1)
+    return assignment, best

@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and, for the burn kernel, dtypes) and asserts
+allclose against ref — the CORE correctness signal of the build path.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.cloudlet_burn import cloudlet_burn, make_weights
+from compile.kernels.matchmaking import INFEASIBLE, matchmaking_scores
+from compile.kernels.ref import (
+    cloudlet_burn_ref,
+    matchmake_ref,
+    matchmaking_scores_ref,
+)
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(key, shape, dtype=jnp.float32, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, dtype=jnp.float32, minval=lo, maxval=hi).astype(dtype)
+
+
+# ---------------------------------------------------------------- burn ----
+
+
+@given(
+    b_mult=st.integers(min_value=1, max_value=4),
+    block_b=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([16, 64, 128]),
+    iterations=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_burn_matches_ref_shapes(b_mult, block_b, d, iterations, seed):
+    b = b_mult * block_b
+    x = rand(seed, (b, d))
+    w = make_weights(d)
+    got = cloudlet_burn(x, w, iterations=iterations, block_b=block_b)
+    want = cloudlet_burn_ref(x, w, iterations=iterations)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_burn_bfloat16(seed):
+    x = rand(seed, (32, 64), dtype=jnp.bfloat16)
+    w = make_weights(64).astype(jnp.bfloat16)
+    got = cloudlet_burn(x, w, iterations=4, block_b=16)
+    want = cloudlet_burn_ref(x, w, iterations=4)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_burn_output_bounded():
+    # tanh chain must stay in (-1, 1): numerical stability of long burns
+    x = rand(3, (64, 128), lo=-10.0, hi=10.0)
+    w = make_weights(128)
+    out = cloudlet_burn(x, w, iterations=200, block_b=64)
+    assert np.all(np.abs(np.asarray(out)) <= 1.0)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_burn_zero_iterations_identity():
+    x = rand(5, (16, 16))
+    w = make_weights(16)
+    out = cloudlet_burn(x, w, iterations=0, block_b=16)
+    np.testing.assert_allclose(out, x)
+
+
+def test_burn_rejects_bad_shapes():
+    x = rand(0, (30, 16))
+    w = make_weights(16)
+    with pytest.raises(ValueError):
+        cloudlet_burn(x, w, iterations=1, block_b=16)  # 30 % 16 != 0
+    with pytest.raises(ValueError):
+        cloudlet_burn(rand(0, (16, 16)), make_weights(8), iterations=1, block_b=16)
+
+
+def test_burn_iterations_compose():
+    # burn(t1+t2) == burn(t2) . burn(t1)
+    x = rand(9, (32, 64))
+    w = make_weights(64)
+    once = cloudlet_burn(x, w, iterations=12, block_b=32)
+    twice = cloudlet_burn(
+        cloudlet_burn(x, w, iterations=5, block_b=32), w, iterations=7, block_b=32
+    )
+    np.testing.assert_allclose(once, twice, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------- matchmaking ----
+
+
+@given(
+    c_mult=st.integers(min_value=1, max_value=4),
+    v_mult=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matchmaking_matches_ref(c_mult, v_mult, block, seed):
+    c, v = c_mult * block, v_mult * block
+    req = rand(seed, (c,), lo=1.0, hi=10.0)
+    cap = rand(seed + 1, (v,), lo=1.0, hi=20.0)
+    load = rand(seed + 2, (v,), lo=0.0, hi=8.0)
+    got = matchmaking_scores(req, cap, load, block_c=block, block_v=block)
+    want = matchmaking_scores_ref(req, cap, load)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_matchmaking_infeasible_marked():
+    req = jnp.full((8,), 100.0)
+    cap = jnp.full((8,), 1.0)  # nothing fits
+    load = jnp.zeros((8,))
+    scores = matchmaking_scores(req, cap, load, block_c=8, block_v=8)
+    assert np.all(np.asarray(scores) == INFEASIBLE)
+
+
+def test_matchmaking_prefers_snug_fit():
+    # req=10; caps 11 (snug), 100 (wasteful), 5 (infeasible) → pick 11
+    req = jnp.full((8,), 10.0)
+    cap = jnp.array([11.0, 100.0, 5.0] + [5.0] * 5)
+    load = jnp.zeros((8,))
+    assign, best = matchmake_ref(req, cap, load)
+    assert np.all(np.asarray(assign) == 0)
+    assert np.all(np.asarray(best) < INFEASIBLE)
+
+
+def test_matchmaking_fairness_avoids_loaded_vm():
+    # two equal snug VMs, one heavily loaded → pick the idle one
+    req = jnp.full((8,), 10.0)
+    cap = jnp.array([11.0, 11.0] + [1.0] * 6)
+    load = jnp.array([50.0, 0.0] + [0.0] * 6)
+    assign, _ = matchmake_ref(req, cap, load)
+    assert np.all(np.asarray(assign) == 1)

@@ -1,0 +1,151 @@
+//! Ablation benches for the design choices DESIGN.md calls out — not a
+//! paper figure, but the paper argues each of these qualitatively:
+//!
+//! * partitioning strategy (§3.1.1: multiple-Simulator preferred over
+//!   Simulator–Initiator because the static master bottlenecks),
+//! * in-memory format (§4.1.2: BINARY for cloud sims vs OBJECT for MR),
+//! * synchronous vs asynchronous backups (§2.3.1),
+//! * near-cache on/off (§4.1.1: disabled multi-node for consistency),
+//! * XML vs compact entity codecs (§6.2 lazy-loading future work).
+
+use cloud2sim::bench::BenchHarness;
+use cloud2sim::dist::lazy::CompactVm;
+use cloud2sim::dist::{run_distributed_full, Strategy};
+use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+use cloud2sim::grid::serialize::{GridSerialize, InMemoryFormat};
+use cloud2sim::metrics::Table;
+use cloud2sim::prelude::*;
+use cloud2sim::runtime::workload::NativeBurnModel;
+use cloud2sim::sim::vm::Vm;
+
+fn main() {
+    BenchHarness::banner(
+        "Ablations — design choices of §3.1.1/§4.1.2/§2.3.1",
+        "DESIGN.md ablation index",
+    );
+    let mut h = BenchHarness::new();
+    let mut table = Table::new("Ablation results", &["choice", "variant", "result"]);
+
+    // ---- 1. partitioning strategy (4 nodes, unloaded 100/200) ----
+    let cfg = SimConfig::default_round_robin(100, 200, false);
+    let mut times = Vec::new();
+    for s in Strategy::all() {
+        let mut model = NativeBurnModel::default();
+        let t = h.case(&format!("strategy {s}"), || {
+            run_distributed_full(&cfg, 4, s, &mut model, false)
+                .unwrap()
+                .sim_time_s
+        });
+        table.row(&["strategy".into(), s.to_string(), format!("{t:.2}s")]);
+        times.push((s, t));
+    }
+    let multi = times
+        .iter()
+        .find(|(s, _)| *s == Strategy::MultipleSimulator)
+        .unwrap()
+        .1;
+    let initiator = times
+        .iter()
+        .find(|(s, _)| *s == Strategy::SimulatorInitiator)
+        .unwrap()
+        .1;
+    assert!(
+        multi < initiator,
+        "§3.1.1: the static master is a bottleneck ({initiator:.2}s vs {multi:.2}s)"
+    );
+
+    // ---- 2. in-memory format: codec cost of 2000 puts ----
+    for (name, fmt) in [("BINARY", InMemoryFormat::Binary), ("OBJECT", InMemoryFormat::Object)] {
+        let t = h.case(&format!("in-memory format {name}"), || {
+            let mut c = GridCluster::with_members(
+                GridConfig {
+                    in_memory_format: fmt,
+                    ..GridConfig::default()
+                },
+                1,
+            );
+            let m = c.members()[0];
+            let t0 = c.clock(m);
+            for i in 0..2000 {
+                c.map_put(m, "xs", format!("k{i}"), &vec![0u8; 2048]).unwrap();
+            }
+            c.clock(m) - t0
+        });
+        table.row(&["in-memory format".into(), name.into(), format!("{:.1}ms virtual", t * 1e3)]);
+    }
+
+    // ---- 3. sync vs async backups ----
+    for (name, sync) in [("sync", true), ("async", false)] {
+        let t = h.case(&format!("backups {name}"), || {
+            let mut c = GridCluster::with_members(
+                GridConfig {
+                    backup_count: 1,
+                    sync_backups: sync,
+                    ..GridConfig::default()
+                },
+                3,
+            );
+            let m = c.members()[0];
+            let t0 = c.clock(m);
+            for i in 0..2000 {
+                c.map_put(m, "xs", format!("k{i}"), &vec![0u8; 2048]).unwrap();
+            }
+            c.clock(m) - t0
+        });
+        table.row(&["backups".into(), name.into(), format!("{:.1}ms virtual write latency", t * 1e3)]);
+    }
+
+    // ---- 4. near-cache on repeated remote reads ----
+    for (name, nc) in [("off", false), ("on", true)] {
+        let t = h.case(&format!("near-cache {name}"), || {
+            let mut c = GridCluster::with_members(
+                GridConfig {
+                    near_cache: nc,
+                    ..GridConfig::default()
+                },
+                2,
+            );
+            let members = c.members();
+            // probe for a key owned by member 1 so reads from member 0 are
+            // genuinely remote
+            let key = (0..1000)
+                .map(|i| format!("hot{i}"))
+                .find(|k| {
+                    let p = cloud2sim::grid::partition::partition_of(
+                        k.as_bytes(),
+                        c.cfg.partition_count,
+                    );
+                    c.partition_table().owner(p) == 1
+                })
+                .expect("some key lands on member 1");
+            c.map_put(members[1], "xs", key.clone(), &vec![0u8; 8192]).unwrap();
+            let t0 = c.clock(members[0]);
+            for _ in 0..500 {
+                let _: Option<Vec<u8>> = c.map_get(members[0], "xs", key.clone()).unwrap();
+            }
+            c.clock(members[0]) - t0
+        });
+        table.row(&["near-cache".into(), name.into(), format!("{:.2}ms for 500 hot reads", t * 1e3)]);
+    }
+
+    // near-cache must make hot remote reads ~free
+    {
+        let rows: Vec<&cloud2sim::bench::Measurement> = h
+            .results
+            .iter()
+            .filter(|m| m.label.starts_with("near-cache"))
+            .collect();
+        assert!(rows[1].virtual_s < rows[0].virtual_s * 0.1, "near-cache wins hot reads");
+    }
+
+    // ---- 5. XML vs compact codec payloads ----
+    let vm = Vm::new(42, 7, 2500, 4, 1024, 15_000);
+    let xml = vm.to_bytes().len();
+    let compact = CompactVm(vm).to_bytes().len();
+    table.row(&["entity codec".into(), "XML (paper §4.1.2)".into(), format!("{xml} B")]);
+    table.row(&["entity codec".into(), "compact (§6.2 lazy)".into(), format!("{compact} B")]);
+    assert!(compact * 2 < xml);
+
+    table.print();
+    println!("\nablations OK: preferred-choice orderings hold");
+}

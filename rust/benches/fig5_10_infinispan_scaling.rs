@@ -1,0 +1,81 @@
+//! Fig 5.10 — Distributing the Infinispan MapReduce execution to multiple
+//! nodes: time vs `map()` invocations (files), `reduce()` held constant by
+//! duplicating file contents (§4.2.3).
+//!
+//! Paper shape: larger `map()` counts OOM on few nodes
+//! (`java.lang.OutOfMemoryError: Java heap space`) and run once instances
+//! are added; positive scalability throughout.
+
+use cloud2sim::bench::BenchHarness;
+use cloud2sim::mapreduce::{run_inf_wordcount, Corpus, CorpusConfig, JobConfig};
+use cloud2sim::metrics::Table;
+
+// paper nodes: 12 GB; scaled-down heap so the OOM gates reproduce at
+// bench-sized corpora (DESIGN.md §2)
+const HEAP: u64 = 64 * 1024 * 1024;
+const LINES: usize = 125_000; // the paper's ≥125k-line files
+
+fn corpus(files: usize) -> Corpus {
+    Corpus::new(CorpusConfig {
+        files,
+        distinct_files: 3, // duplicates keep reduce() constant
+        lines_per_file: LINES,
+        words_per_line: 6, // keeps the real tokenization tractable
+        ..CorpusConfig::default()
+    })
+}
+
+fn main() {
+    BenchHarness::banner(
+        "Fig 5.10 — Infinispan MR scaling with map() invocations",
+        "thesis Fig 5.10 (reduce() constant via duplicate files)",
+    );
+    let mut h = BenchHarness::new();
+    let files_sweep = [3usize, 6, 9, 12];
+    let nodes = [1usize, 2, 3, 6];
+
+    let mut hdr: Vec<String> = vec!["map() invocations".into(), "reduce()".into()];
+    hdr.extend(nodes.iter().map(|n| format!("{n} node(s)")));
+    let hdr_refs: Vec<&str> = hdr.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Infinispan MR time (s); OOM = heap exhausted", &hdr_refs);
+
+    let mut reduce_counts = Vec::new();
+    let mut any_oom_fixed = false;
+    for &files in &files_sweep {
+        let mut row = vec![files.to_string(), String::new()];
+        let mut failed_small = false;
+        for &n in &nodes {
+            let label = format!("inf {files} files @ {n} node(s)");
+            let res = h.try_case(&label, || {
+                run_inf_wordcount(corpus(files), JobConfig::default(), n, HEAP).map(|r| {
+                    row[1] = r.reduce_invocations.to_string();
+                    reduce_counts.push(r.reduce_invocations);
+                    r.sim_time_s
+                })
+            });
+            match res {
+                Some(t) => {
+                    if failed_small {
+                        any_oom_fixed = true;
+                    }
+                    row.push(format!("{t:.1}"));
+                }
+                None => {
+                    failed_small = true;
+                    row.push("OOM".into());
+                }
+            }
+        }
+        table.row(&row);
+    }
+    table.print();
+
+    // duplicates hold reduce() constant
+    let all_equal = reduce_counts.windows(2).all(|w| w[0] == w[1]);
+    assert!(all_equal, "reduce() must stay constant: {reduce_counts:?}");
+    assert!(
+        any_oom_fixed,
+        "some size must OOM on few nodes and run on more (paper Fig 5.10)"
+    );
+    println!("\nshape OK: reduce() constant, single-node OOMs fixed by adding instances");
+}

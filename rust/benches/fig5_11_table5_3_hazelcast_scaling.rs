@@ -1,0 +1,109 @@
+//! Fig 5.11 + Table 5.3 — Distributing the Hazelcast MapReduce execution.
+//!
+//! Paper (3 map() invocations, size = lines read):
+//! * size 10k: 1 instance 416.7 s → 2 instances 2580.1 s (6× collapse),
+//!   recovering through 3/4/…; positive scalability only past ~8 instances
+//!   (two Hazelcast instances per node).
+//! * size 50k: OOM on 1 instance, runs on 2+, scales positively.
+//! * size 100k: OOM up to 5 instances, runs at 6.
+
+use cloud2sim::bench::BenchHarness;
+use cloud2sim::mapreduce::{run_hz_wordcount, Corpus, CorpusConfig, JobConfig};
+use cloud2sim::metrics::Table;
+
+const HEAP: u64 = 64 * 1024 * 1024;
+
+fn corpus(lines: usize) -> Corpus {
+    Corpus::new(CorpusConfig {
+        files: 3,
+        distinct_files: 3,
+        lines_per_file: lines,
+        ..CorpusConfig::default()
+    })
+}
+
+fn main() {
+    BenchHarness::banner(
+        "Fig 5.11 + Table 5.3 — Hazelcast MR distribution",
+        "thesis §5.2.2 (3 map() invocations; instances up to 12)",
+    );
+    let mut h = BenchHarness::new();
+
+    // ---- Table 5.3: size 10k across 1..12 instances ----
+    let instances = [1usize, 2, 3, 4, 6, 8, 10, 12];
+    let mut hdr: Vec<String> = vec!["instances".into()];
+    hdr.extend(instances.iter().map(|n| n.to_string()));
+    let hdr_refs: Vec<&str> = hdr.iter().map(|s| s.as_str()).collect();
+    let mut t53 = Table::new(
+        "Table 5.3 — time (s), Hazelcast MR, size 10k",
+        &hdr_refs,
+    );
+    let mut row = vec!["time (s)".to_string()];
+    let mut times = Vec::new();
+    for &n in &instances {
+        let t = h.case(&format!("hz size 10k @ {n} instance(s)"), || {
+            run_hz_wordcount(corpus(10_000), JobConfig::default(), n, HEAP)
+                .unwrap()
+                .sim_time_s
+        });
+        times.push(t);
+        row.push(format!("{t:.0}"));
+    }
+    t53.row(&row);
+    let mut paper = vec!["paper".to_string()];
+    paper.extend(
+        ["416.7", "2580.1", "1600.7", "1275.7", "~850", "~640", "~510", "~425"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    t53.row(&paper);
+    t53.print();
+
+    assert!(times[1] > times[0] * 2.0, "1→2 instance collapse (Table 5.3)");
+    assert!(times[2] < times[1] && times[3] < times[2], "recovery from 2");
+    let crossover = instances
+        .iter()
+        .zip(&times)
+        .find(|(_, &t)| t < times[0])
+        .map(|(n, _)| *n);
+    assert!(
+        matches!(crossover, Some(n) if n >= 6),
+        "positive scalability only at high instance counts: {crossover:?}"
+    );
+
+    // ---- Fig 5.11: larger sizes OOM on small clusters ----
+    let mut t511 = Table::new(
+        "Fig 5.11 — Hazelcast MR across sizes (OOM = heap exhausted)",
+        &["size", "1", "2", "3", "4", "6"],
+    );
+    let mut oom_then_ok = false;
+    for &size in &[10_000usize, 50_000, 100_000] {
+        let mut row = vec![size.to_string()];
+        let mut saw_oom = false;
+        for &n in &[1usize, 2, 3, 4, 6] {
+            let res = h.try_case(&format!("hz size {size} @ {n}"), || {
+                run_hz_wordcount(corpus(size), JobConfig::default(), n, HEAP)
+                    .map(|r| r.sim_time_s)
+            });
+            match res {
+                Some(t) => {
+                    if saw_oom {
+                        oom_then_ok = true;
+                    }
+                    row.push(format!("{t:.0}"));
+                }
+                None => {
+                    saw_oom = true;
+                    row.push("OOM".into());
+                }
+            }
+        }
+        t511.row(&row);
+    }
+    t511.print();
+    assert!(
+        oom_then_ok,
+        "larger sizes must fail on few instances and run on more (§5.2.2)"
+    );
+    println!("\nshape OK: 1→2 collapse, ≥{}-instance crossover, OOM gates", crossover.unwrap());
+}

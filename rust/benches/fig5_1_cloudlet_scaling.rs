@@ -1,0 +1,55 @@
+//! Fig 5.1 — Simulation of Application Scheduling Scenarios: execution
+//! time vs node count for varying cloudlet counts (200 VMs fixed, loaded).
+//!
+//! Paper shape: small cloudlet counts show an initial *negative*
+//! scalability at 2 nodes recovering later; ≥200 cloudlets scale
+//! positively — "performance is seen increasing with the number of nodes,
+//! depicting the suitability of the distributed execution model for larger
+//! simulations".
+
+use cloud2sim::bench::BenchHarness;
+use cloud2sim::dist::run_distributed;
+use cloud2sim::metrics::Table;
+use cloud2sim::prelude::*;
+
+fn main() {
+    BenchHarness::banner(
+        "Fig 5.1 — scheduling scenarios, time vs nodes x cloudlets",
+        "thesis Fig 5.1 (200 VMs, loaded cloudlets)",
+    );
+    let mut h = BenchHarness::new();
+    let nodes = [1usize, 2, 3, 4, 5, 6];
+    let cloudlet_counts = [150usize, 175, 200, 300, 400];
+
+    let mut headers: Vec<String> = vec!["cloudlets".into()];
+    headers.extend(nodes.iter().map(|n| format!("{n} node(s)")));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Simulation time (s), 200 VMs, loaded", &hdr);
+
+    let mut series: Vec<(usize, Vec<f64>)> = Vec::new();
+    for &c in &cloudlet_counts {
+        let cfg = SimConfig::default_round_robin(200, c, true);
+        let mut row = vec![c.to_string()];
+        let mut times = Vec::new();
+        for &n in &nodes {
+            let t = h.case(&format!("{c} cloudlets, {n} node(s)"), || {
+                run_distributed(&cfg, n).unwrap().sim_time_s
+            });
+            times.push(t);
+            row.push(format!("{t:.1}"));
+        }
+        series.push((c, times));
+        table.row(&row);
+    }
+    table.print();
+
+    // larger simulations must benefit more from distribution
+    let gain = |ts: &Vec<f64>| ts[0] / ts.iter().cloned().fold(f64::INFINITY, f64::min);
+    let g150 = gain(&series[0].1);
+    let g400 = gain(&series[4].1);
+    assert!(
+        g400 > g150,
+        "bigger sims gain more from distribution: 150cl {g150:.2}x vs 400cl {g400:.2}x"
+    );
+    println!("\nshape OK: best-case speedup grows with simulation size ({g150:.2}x -> {g400:.2}x)");
+}

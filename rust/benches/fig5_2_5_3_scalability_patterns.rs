@@ -1,0 +1,105 @@
+//! Figs 5.2 + 5.3 — the four distinct scalability cases (§5.1.1), plus the
+//! adaptive-scaling overlay of Fig 5.2.
+//!
+//! * success case (positive trend): (200 VMs, 400 cloudlets, loaded) and
+//!   (100, 200, loaded);
+//! * coordination-heavy (negative): (200, 400, no load);
+//! * common (pos→neg): (100, 175, loaded);
+//! * complex (borderline): (100, 150, loaded).
+
+use cloud2sim::bench::BenchHarness;
+use cloud2sim::dist::run_distributed;
+use cloud2sim::dist::speedup::ScalabilityCase;
+use cloud2sim::elastic::{run_adaptive, HealthMeasure};
+use cloud2sim::metrics::Table;
+use cloud2sim::prelude::*;
+use cloud2sim::runtime::workload::NativeBurnModel;
+
+fn classify(times: &[f64]) -> ScalabilityCase {
+    let diffs: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+    let dec = diffs.iter().filter(|&&d| d < 0.0).count();
+    let inc = diffs.len() - dec;
+    if inc == 0 {
+        ScalabilityCase::Positive
+    } else if dec == 0 {
+        ScalabilityCase::Negative
+    } else {
+        let flips = diffs
+            .windows(2)
+            .filter(|w| (w[0] > 0.0) != (w[1] > 0.0))
+            .count();
+        if flips >= 2 {
+            ScalabilityCase::Complex
+        } else {
+            ScalabilityCase::Common
+        }
+    }
+}
+
+fn main() {
+    BenchHarness::banner(
+        "Figs 5.2/5.3 — scalability patterns",
+        "thesis §5.1.1: positive / negative / common / complex cases",
+    );
+    let mut h = BenchHarness::new();
+    let nodes = [1usize, 2, 3, 4, 5, 6];
+    let cases: [(&str, usize, usize, bool); 5] = [
+        ("success A (Fig 5.2)", 200, 400, true),
+        ("success B (Fig 5.2)", 100, 200, true),
+        ("coordination-heavy (Fig 5.3)", 200, 400, false),
+        ("common (Fig 5.3)", 100, 175, true),
+        ("complex (Fig 5.3)", 100, 150, true),
+    ];
+
+    let mut headers: Vec<String> = vec!["case".into()];
+    headers.extend(nodes.iter().map(|n| format!("{n}n")));
+    headers.push("pattern".into());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Execution time (s) and classified pattern", &hdr);
+
+    let mut success_a_times = Vec::new();
+    for (name, vms, cls, loaded) in cases {
+        let cfg = SimConfig::default_round_robin(vms, cls, loaded);
+        let mut times = Vec::new();
+        let mut row = vec![name.to_string()];
+        for &n in &nodes {
+            let t = h.case(&format!("{name} @ {n} node(s)"), || {
+                run_distributed(&cfg, n).unwrap().sim_time_s
+            });
+            times.push(t);
+            row.push(format!("{t:.1}"));
+        }
+        let pattern = classify(&times);
+        row.push(pattern.to_string());
+        table.row(&row);
+        if name.starts_with("success A") {
+            success_a_times = times;
+        }
+    }
+
+    // Fig 5.2 overlay: the success case under adaptive scaling
+    let cfg = SimConfig {
+        backup_count: 1,
+        max_threshold: 0.20,
+        min_threshold: 0.01,
+        ..SimConfig::default_round_robin(200, 400, true)
+    };
+    let mut model = NativeBurnModel::default();
+    let adaptive = h.case("success A with adaptive scaling", || {
+        run_adaptive(&cfg, 5, HealthMeasure::LoadAverage, &mut model)
+            .unwrap()
+            .sim_time_s
+    });
+    let mut row = vec!["success A + adaptive".to_string(), format!("{adaptive:.1}")];
+    row.extend(std::iter::repeat_n("-".to_string(), nodes.len() - 1));
+    row.push("elastic".into());
+    table.row(&row);
+    table.print();
+
+    let static1 = success_a_times[0];
+    assert!(
+        adaptive < static1 * 0.6,
+        "adaptive must approach the static optimum: {adaptive} vs 1-node {static1}"
+    );
+    println!("\nshape OK: adaptive {adaptive:.1}s ≪ static-1 ({static1:.1}s)");
+}

@@ -1,0 +1,72 @@
+//! Fig 5.9 — Reduce invocations and time taken for different sizes of
+//! MapReduce tasks (single server, 3 map() invocations).
+//!
+//! Paper: reduce() invocations grow with the size (lines read); the
+//! Infinispan implementation outperforms Hazelcast by 10–100×.
+
+use cloud2sim::bench::BenchHarness;
+use cloud2sim::mapreduce::{run_hz_wordcount, run_inf_wordcount, Corpus, CorpusConfig, JobConfig};
+use cloud2sim::metrics::Table;
+
+const HEAP: u64 = 256 * 1024 * 1024; // generous: Fig 5.9 is single-server timing, not OOM
+
+fn corpus(lines: usize) -> Corpus {
+    Corpus::new(CorpusConfig {
+        files: 3,
+        distinct_files: 3,
+        lines_per_file: lines,
+        ..CorpusConfig::default()
+    })
+}
+
+fn main() {
+    BenchHarness::banner(
+        "Fig 5.9 — MapReduce size sweep (single server, 3 map() invocations)",
+        "thesis Fig 5.9 + §5.2",
+    );
+    let mut h = BenchHarness::new();
+    let sizes = [1000usize, 5000, 10_000, 25_000, 50_000];
+
+    let mut table = Table::new(
+        "Reduce invocations and time per size",
+        &["size (lines)", "reduce()", "hazelcast (s)", "infinispan (s)", "fold"],
+    );
+    let mut folds = Vec::new();
+    for &s in &sizes {
+        let mut reduces = 0;
+        let t_hz = h.case(&format!("hazelcast size {s}"), || {
+            let r = run_hz_wordcount(corpus(s), JobConfig::default(), 1, HEAP).unwrap();
+            reduces = r.reduce_invocations;
+            r.sim_time_s
+        });
+        let t_inf = h.case(&format!("infinispan size {s}"), || {
+            run_inf_wordcount(corpus(s), JobConfig::default(), 1, HEAP)
+                .unwrap()
+                .sim_time_s
+        });
+        let fold = t_hz / t_inf;
+        folds.push(fold);
+        table.row(&[
+            s.to_string(),
+            reduces.to_string(),
+            format!("{t_hz:.1}"),
+            format!("{t_inf:.2}"),
+            format!("{fold:.0}x"),
+        ]);
+    }
+    table.print();
+
+    assert!(
+        folds.iter().all(|&f| f > 10.0),
+        "Infinispan must outperform Hazelcast by 10-100 folds: {folds:?}"
+    );
+    assert!(
+        folds.iter().any(|&f| f > 30.0),
+        "... reaching high folds at some sizes: {folds:?}"
+    );
+    println!(
+        "\nshape OK: Infinispan {:.0}-{:.0}x faster",
+        folds.iter().cloned().fold(f64::INFINITY, f64::min),
+        folds.iter().cloned().fold(0.0, f64::max)
+    );
+}

@@ -1,0 +1,104 @@
+//! Grid substrate micro-benchmarks (wall-clock) — the perf-pass
+//! instrument for L3. Not a paper figure; feeds EXPERIMENTS.md §Perf.
+//!
+//! Measures the real CPU cost of the hot substrate operations: map
+//! put/get, executor dispatch, partition-table rebuild, XML entity codec,
+//! plus the Fig 5.8 distribution report.
+
+use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+use cloud2sim::grid::partition::PartitionTable;
+use cloud2sim::grid::serialize::GridSerialize;
+use cloud2sim::metrics::Table;
+use cloud2sim::sim::vm::Vm;
+use std::time::Instant;
+
+fn per_op(label: &str, ops: u64, f: impl FnOnce()) -> (String, String, String) {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed().as_secs_f64();
+    (
+        label.to_string(),
+        format!("{:.0} ns/op", dt / ops as f64 * 1e9),
+        format!("{:.2} Mops/s", ops as f64 / dt / 1e6),
+    )
+}
+
+fn main() {
+    println!("\n=== grid substrate micro-benchmarks (wall clock) ===\n");
+    let mut table = Table::new("Hot-path substrate costs", &["operation", "latency", "throughput"]);
+
+    // map put/get
+    let mut c = GridCluster::with_members(GridConfig::default(), 4);
+    let m = c.members()[0];
+    const N: u64 = 50_000;
+    table.row(&{
+        let (a, b, d) = per_op("map_put (u64, 4 members)", N, || {
+            for i in 0..N {
+                c.map_put(m, "bench", format!("k{i}"), &i).unwrap();
+            }
+        });
+        [a, b, d]
+    });
+    table.row(&{
+        let (a, b, d) = per_op("map_get (u64, 4 members)", N, || {
+            for i in 0..N {
+                let _: Option<u64> = c.map_get(m, "bench", format!("k{i}")).unwrap();
+            }
+        });
+        [a, b, d]
+    });
+
+    // executor dispatch
+    table.row(&{
+        let (a, b, d) = per_op("execute_on_all (4 members)", 10_000 * 4, || {
+            for _ in 0..10_000 {
+                c.execute_on_all(m, |_, _| ());
+            }
+        });
+        [a, b, d]
+    });
+
+    // partition table rebuild
+    table.row(&{
+        let (a, b, d) = per_op("partition table build (6 members, 271p)", 20_000, || {
+            for _ in 0..20_000 {
+                std::hint::black_box(PartitionTable::new(6, 271, 1));
+            }
+        });
+        [a, b, d]
+    });
+
+    // entity XML codec (the S term's real cost)
+    let vm = Vm::new(42, 7, 2500, 4, 1024, 15_000);
+    table.row(&{
+        let (a, b, d) = per_op("Vm XML encode+decode", 100_000, || {
+            for _ in 0..100_000 {
+                let bytes = vm.to_bytes();
+                std::hint::black_box(Vm::from_bytes(&bytes).unwrap());
+            }
+        });
+        [a, b, d]
+    });
+    table.print();
+
+    // Fig 5.8: distribution view
+    let mut t58 = Table::new(
+        "Fig 5.8 — distributed objects per member (Management Center view)",
+        &["member", "entries", "entry memory"],
+    );
+    for (node, entries, bytes) in c.map_distribution("bench") {
+        t58.row(&[
+            node.to_string(),
+            entries.to_string(),
+            cloud2sim::util::timefmt::fmt_bytes(bytes),
+        ]);
+    }
+    t58.print();
+
+    let dist = c.map_distribution("bench");
+    let counts: Vec<u64> = dist.iter().map(|d| d.1).collect();
+    let min = *counts.iter().min().unwrap();
+    let max = *counts.iter().max().unwrap();
+    assert!((max as f64) < (min as f64) * 1.5, "Fig 5.8 uniformity: {counts:?}");
+    println!("\nshape OK: near-uniform storage distribution {counts:?}");
+}

@@ -1,0 +1,78 @@
+//! Table 5.1 — Execution time (sec) for CloudSim vs Cloud²Sim.
+//!
+//! Paper values (200 VMs, 400 cloudlets, round-robin scheduling):
+//!   simple:  CloudSim 3.678 | Cloud²Sim 20.914 / 16.726 / 14.432 / 20.307
+//!   loaded:  CloudSim 1247.4 | Cloud²Sim 1259.7 / 120.0 / 96.1 / 104.4
+//! Shape criteria: baseline ≪ 1-node Cloud²Sim (grid overhead); loaded
+//! runs gain ~10× at 2–3 nodes; 6 nodes pay more coordination than 3.
+
+use cloud2sim::bench::BenchHarness;
+use cloud2sim::dist::{run_cloudsim_baseline, run_distributed};
+use cloud2sim::metrics::Table;
+use cloud2sim::prelude::*;
+
+fn main() {
+    BenchHarness::banner(
+        "Table 5.1 — CloudSim vs Cloud2Sim execution time",
+        "thesis Table 5.1 (round robin, 200 users, 15 datacenters)",
+    );
+    let mut h = BenchHarness::new();
+    let mut table = Table::new(
+        "Execution time (sec) for CloudSim vs Cloud2Sim",
+        &[
+            "Deployment",
+            "Simple Simulation",
+            "Simulation with a cloudlet workload",
+            "paper (simple)",
+            "paper (loaded)",
+        ],
+    );
+    let paper_simple = ["3.678", "20.914", "16.726", "14.432", "20.307"];
+    let paper_loaded = ["1247.400", "1259.743", "120.009", "96.053", "104.440"];
+
+    let cfg_s = SimConfig::default_round_robin(200, 400, false);
+    let cfg_l = SimConfig::default_round_robin(200, 400, true);
+
+    let base_s = h.case("CloudSim simple", || {
+        run_cloudsim_baseline(&cfg_s).unwrap().sim_time_s
+    });
+    let base_l = h.case("CloudSim loaded", || {
+        run_cloudsim_baseline(&cfg_l).unwrap().sim_time_s
+    });
+    table.row(&[
+        "CloudSim".into(),
+        format!("{base_s:.3}"),
+        format!("{base_l:.3}"),
+        paper_simple[0].into(),
+        paper_loaded[0].into(),
+    ]);
+
+    for (i, n) in [1usize, 2, 3, 6].iter().enumerate() {
+        let ts = h.case(&format!("Cloud2Sim simple, {n} node(s)"), || {
+            run_distributed(&cfg_s, *n).unwrap().sim_time_s
+        });
+        let tl = h.case(&format!("Cloud2Sim loaded, {n} node(s)"), || {
+            run_distributed(&cfg_l, *n).unwrap().sim_time_s
+        });
+        table.row(&[
+            format!("Cloud2Sim ({n} node{})", if *n > 1 { "s" } else { "" }),
+            format!("{ts:.3}"),
+            format!("{tl:.3}"),
+            paper_simple[i + 1].into(),
+            paper_loaded[i + 1].into(),
+        ]);
+    }
+    table.print();
+
+    // shape assertions (the bench doubles as a regression gate)
+    let t1 = run_distributed(&cfg_l, 1).unwrap().sim_time_s;
+    let t2 = run_distributed(&cfg_l, 2).unwrap().sim_time_s;
+    let t3 = run_distributed(&cfg_l, 3).unwrap().sim_time_s;
+    let t6 = run_distributed(&cfg_l, 6).unwrap().sim_time_s;
+    assert!(t1 / t2 > 5.0, "≈10x at 2 nodes");
+    assert!(t3 < t2 && t6 > t3 && t6 < t2, "3-node optimum, 6-node overhead");
+    println!(
+        "\nshape OK: loaded speedup {:.1}x at 2 nodes, optimum at 3 nodes",
+        t1 / t2
+    );
+}

@@ -1,0 +1,172 @@
+//! The bench harness: repetition, wall-clock statistics, and paper-style
+//! table output. Every `rust/benches/*.rs` target regenerates one of the
+//! paper's tables/figures through this.
+//!
+//! Virtual times reported by the simulator are deterministic, so a single
+//! repetition is exact; wall-clock overhead of the harness itself is
+//! measured over `reps` repetitions (`C2S_BENCH_REPS`, default 3) in
+//! criterion-style `mean ± stddev` form.
+
+use crate::util::stats::{mean, stddev};
+use crate::util::timefmt::fmt_secs;
+use std::time::Instant;
+
+/// One measured workload.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Label of the case.
+    pub label: String,
+    /// Deterministic virtual time (s) from the last repetition.
+    pub virtual_s: f64,
+    /// Wall-clock mean (s).
+    pub wall_mean: f64,
+    /// Wall-clock stddev (s).
+    pub wall_std: f64,
+}
+
+impl Measurement {
+    /// `label: virtual 96.05s  [wall 12.3ms ± 0.4ms]`.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} virtual {:>10}   [wall {} ± {}]",
+            self.label,
+            fmt_secs(self.virtual_s),
+            fmt_secs(self.wall_mean),
+            fmt_secs(self.wall_std),
+        )
+    }
+}
+
+/// The harness.
+pub struct BenchHarness {
+    /// Repetitions for wall-clock statistics.
+    pub reps: usize,
+    /// Collected measurements.
+    pub results: Vec<Measurement>,
+}
+
+impl BenchHarness {
+    /// Repetitions come from `C2S_BENCH_REPS` (default 3).
+    pub fn new() -> Self {
+        let reps = std::env::var("C2S_BENCH_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3)
+            .max(1);
+        Self {
+            reps,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` `reps` times; `f` returns the *virtual* time of the case.
+    /// Prints and records the measurement.
+    pub fn case(&mut self, label: &str, mut f: impl FnMut() -> f64) -> f64 {
+        let mut walls = Vec::with_capacity(self.reps);
+        let mut virt = 0.0;
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            virt = f();
+            walls.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            label: label.to_string(),
+            virtual_s: virt,
+            wall_mean: mean(&walls),
+            wall_std: stddev(&walls),
+        };
+        println!("{}", m.render());
+        self.results.push(m);
+        virt
+    }
+
+    /// Run a fallible case; an `Err` (e.g. simulated OOM) records
+    /// `f64::NAN` and prints the failure, mirroring the paper's
+    /// "failed to run on a single node" rows.
+    pub fn try_case(
+        &mut self,
+        label: &str,
+        mut f: impl FnMut() -> crate::error::Result<f64>,
+    ) -> Option<f64> {
+        let t0 = Instant::now();
+        match f() {
+            Ok(virt) => {
+                let wall = t0.elapsed().as_secs_f64();
+                let m = Measurement {
+                    label: label.to_string(),
+                    virtual_s: virt,
+                    wall_mean: wall,
+                    wall_std: 0.0,
+                };
+                println!("{}", m.render());
+                self.results.push(m);
+                Some(virt)
+            }
+            Err(e) => {
+                println!("{label:<44} FAILED: {e}");
+                self.results.push(Measurement {
+                    label: label.to_string(),
+                    virtual_s: f64::NAN,
+                    wall_mean: 0.0,
+                    wall_std: 0.0,
+                });
+                None
+            }
+        }
+    }
+
+    /// Header banner for a bench target.
+    pub fn banner(title: &str, paper_ref: &str) {
+        println!("\n=== {title} ===");
+        println!("    reproduces: {paper_ref}\n");
+    }
+}
+
+impl Default for BenchHarness {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_records_and_returns() {
+        let mut h = BenchHarness { reps: 2, results: vec![] };
+        let v = h.case("demo", || 42.0);
+        assert_eq!(v, 42.0);
+        assert_eq!(h.results.len(), 1);
+        assert_eq!(h.results[0].virtual_s, 42.0);
+        assert!(h.results[0].wall_mean >= 0.0);
+    }
+
+    #[test]
+    fn try_case_handles_failure() {
+        let mut h = BenchHarness { reps: 1, results: vec![] };
+        let r = h.try_case("oom", || {
+            Err(crate::error::C2SError::OutOfMemory {
+                node: 0,
+                used_bytes: 1,
+                requested_bytes: 1,
+                capacity_bytes: 1,
+            })
+        });
+        assert!(r.is_none());
+        assert!(h.results[0].virtual_s.is_nan());
+        let ok = h.try_case("fine", || Ok(7.0));
+        assert_eq!(ok, Some(7.0));
+    }
+
+    #[test]
+    fn measurement_render_contains_label() {
+        let m = Measurement {
+            label: "x".into(),
+            virtual_s: 1.0,
+            wall_mean: 0.001,
+            wall_std: 0.0,
+        };
+        assert!(m.render().contains('x'));
+    }
+}

@@ -1,0 +1,6 @@
+//! Shared bench harness (criterion is unavailable in the offline vendor
+//! set; this provides warmup + repetition + stats with similar output).
+
+pub mod harness;
+
+pub use harness::{BenchHarness, Measurement};

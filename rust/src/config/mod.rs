@@ -1,0 +1,327 @@
+//! Configuration system.
+//!
+//! Mirrors the paper's `cloud2sim.properties` (Appendix A): simulations are
+//! parameterized without recompiling. [`Properties`] is a faithful
+//! `.properties` reader; [`SimConfig`] is the typed view consumed by the
+//! simulator, grid, MapReduce engines and the elastic middleware.
+
+pub mod properties;
+
+pub use properties::Properties;
+
+use crate::error::{C2SError, Result};
+use crate::grid::backend::BackendProfile;
+
+/// What each cloudlet executes once scheduled (`isLoaded` in the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// No workload: scheduling only (Table 5.1 "Simple Simulation").
+    None,
+    /// The paper's "complex mathematical operation" per cloudlet, executed
+    /// as the AOT-compiled Pallas kernel via PJRT.
+    PjrtBurn,
+    /// Pure-Rust equivalent of the burn kernel, used for calibration and for
+    /// test runs where `artifacts/` has not been built.
+    NativeBurn,
+}
+
+impl WorkloadKind {
+    /// True when cloudlets carry a workload (the paper's `isLoaded`).
+    pub fn is_loaded(&self) -> bool {
+        !matches!(self, WorkloadKind::None)
+    }
+}
+
+/// Scaling mode of the elastic middleware (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingMode {
+    /// No dynamic scaling: instances are fixed for the whole run.
+    Static,
+    /// Auto scaling: spawn instances inside the same node (§3.2.1).
+    Auto,
+    /// Adaptive scaling via the IntelligentAdaptiveScaler (§3.2.2).
+    Adaptive,
+}
+
+/// Typed simulation configuration.
+///
+/// Field names follow `cloud2sim.properties` keys where they exist in the
+/// paper (Appendix A); everything has a sensible default so examples run
+/// without a config file.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    // ---- CloudSim scenario (§5.1) ----
+    /// Number of cloud users (`noOfUsers`, paper uses 200).
+    pub no_of_users: usize,
+    /// Number of datacenters (paper uses 15).
+    pub no_of_datacenters: usize,
+    /// Hosts per datacenter.
+    pub hosts_per_datacenter: usize,
+    /// Processing elements (cores) per host.
+    pub pes_per_host: usize,
+    /// MIPS per processing element.
+    pub mips_per_pe: u64,
+    /// RAM per host (MB).
+    pub host_ram_mb: u64,
+    /// Number of VMs (`noOfVMs`).
+    pub no_of_vms: usize,
+    /// Number of cloudlets (`noOfCloudlets`).
+    pub no_of_cloudlets: usize,
+    /// Cloudlet length in million instructions (MI).
+    pub cloudlet_length_mi: u64,
+    /// Cloudlet workload (`isLoaded`).
+    pub workload: WorkloadKind,
+    /// Workload intensity: iterations of the burn kernel per cloudlet.
+    pub load_iterations: u32,
+
+    // ---- Grid / distribution ----
+    /// In-memory data grid backend profile.
+    pub backend: BackendProfile,
+    /// Number of partitions (Hazelcast default 271).
+    pub partition_count: u32,
+    /// Synchronous backup count (0 static runs; 1 when dynamic scaling, §3.4.3).
+    pub backup_count: u32,
+    /// Enable near-cache (disabled on multi-node per §4.1.1).
+    pub near_cache: bool,
+    /// Simulated per-node heap capacity in bytes (12 GB nodes in the paper;
+    /// scaled down so OOM cases reproduce at bench scale).
+    pub node_heap_bytes: u64,
+    /// Minimum number of instances before a simulation starts.
+    pub min_instances: usize,
+    /// Deterministic seed for the whole experiment.
+    pub seed: u64,
+
+    // ---- Elasticity (§3.2, Appendix A) ----
+    pub scaling_mode: ScalingMode,
+    /// `maxThreshold` on the monitored health measure (process CPU load).
+    pub max_threshold: f64,
+    /// `minThreshold` for scale-in.
+    pub min_threshold: f64,
+    /// `maxInstancesToBeSpawned`.
+    pub max_instances_to_be_spawned: usize,
+    /// Seconds between health checks (virtual time).
+    pub time_between_health_checks: f64,
+    /// Buffer after a scaling event (virtual time), prevents cascaded scaling.
+    pub time_between_scaling: f64,
+
+    // ---- MapReduce (§4.2) ----
+    /// Number of input files (drives `map()` invocations).
+    pub mr_files: usize,
+    /// Lines read per file ("MapReduce size"; drives `reduce()` invocations).
+    pub mr_lines_per_file: usize,
+    /// Verbose mode (per-instance progress logging).
+    pub mr_verbose: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            no_of_users: 200,
+            no_of_datacenters: 15,
+            hosts_per_datacenter: 4,
+            pes_per_host: 8,
+            mips_per_pe: 3400, // i7-2600K class, as in the paper's testbed
+            host_ram_mb: 12 * 1024,
+            no_of_vms: 200,
+            no_of_cloudlets: 400,
+            cloudlet_length_mi: 40_000,
+            workload: WorkloadKind::None,
+            load_iterations: 64,
+            backend: BackendProfile::hazelcast_like(),
+            partition_count: 271,
+            backup_count: 0,
+            near_cache: false,
+            node_heap_bytes: 64 * 1024 * 1024,
+            min_instances: 1,
+            seed: 0xC10D_25B1,
+            scaling_mode: ScalingMode::Static,
+            max_threshold: 0.8,
+            min_threshold: 0.02,
+            max_instances_to_be_spawned: 6,
+            time_between_health_checks: 5.0,
+            time_between_scaling: 30.0,
+            mr_files: 3,
+            mr_lines_per_file: 10_000,
+            mr_verbose: false,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The Table 5.1 round-robin scenario: `vms` VMs, `cloudlets` cloudlets,
+    /// loaded or simple.
+    pub fn default_round_robin(vms: usize, cloudlets: usize, loaded: bool) -> Self {
+        Self {
+            no_of_vms: vms,
+            no_of_cloudlets: cloudlets,
+            workload: if loaded {
+                WorkloadKind::NativeBurn
+            } else {
+                WorkloadKind::None
+            },
+            ..Self::default()
+        }
+    }
+
+    /// Load from a `cloud2sim.properties` file.
+    pub fn from_properties(props: &Properties) -> Result<Self> {
+        let mut c = Self::default();
+        macro_rules! get {
+            ($key:expr, $field:ident, $parse:ident) => {
+                if let Some(v) = props.$parse($key)? {
+                    c.$field = v;
+                }
+            };
+        }
+        get!("noOfUsers", no_of_users, get_usize);
+        get!("noOfDatacenters", no_of_datacenters, get_usize);
+        get!("hostsPerDatacenter", hosts_per_datacenter, get_usize);
+        get!("pesPerHost", pes_per_host, get_usize);
+        get!("mipsPerPe", mips_per_pe, get_u64);
+        get!("hostRamMb", host_ram_mb, get_u64);
+        get!("noOfVMs", no_of_vms, get_usize);
+        get!("noOfCloudlets", no_of_cloudlets, get_usize);
+        get!("cloudletLengthMI", cloudlet_length_mi, get_u64);
+        get!("loadIterations", load_iterations, get_u32);
+        get!("partitionCount", partition_count, get_u32);
+        get!("backupCount", backup_count, get_u32);
+        get!("nearCache", near_cache, get_bool);
+        get!("nodeHeapBytes", node_heap_bytes, get_u64);
+        get!("minInstances", min_instances, get_usize);
+        get!("seed", seed, get_u64);
+        get!("maxThreshold", max_threshold, get_f64);
+        get!("minThreshold", min_threshold, get_f64);
+        get!(
+            "maxInstancesToBeSpawned",
+            max_instances_to_be_spawned,
+            get_usize
+        );
+        get!(
+            "timeBetweenHealthChecks",
+            time_between_health_checks,
+            get_f64
+        );
+        get!("timeBetweenScaling", time_between_scaling, get_f64);
+        get!("mapreduce.files", mr_files, get_usize);
+        get!("mapreduce.linesPerFile", mr_lines_per_file, get_usize);
+        get!("mapreduce.verbose", mr_verbose, get_bool);
+
+        if let Some(v) = props.get("isLoaded") {
+            c.workload = match v {
+                "true" => WorkloadKind::PjrtBurn,
+                "native" => WorkloadKind::NativeBurn,
+                "false" => WorkloadKind::None,
+                other => {
+                    return Err(C2SError::Config(format!(
+                        "isLoaded must be true|false|native, got {other}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = props.get("gridBackend") {
+            c.backend = match v.to_ascii_lowercase().as_str() {
+                "hazelcast" => BackendProfile::hazelcast_like(),
+                "infinispan" => BackendProfile::infinispan_like(),
+                other => {
+                    return Err(C2SError::Config(format!(
+                        "gridBackend must be hazelcast|infinispan, got {other}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = props.get("scalingMode") {
+            c.scaling_mode = match v.to_ascii_lowercase().as_str() {
+                "static" => ScalingMode::Static,
+                "auto" => ScalingMode::Auto,
+                "adaptive" => ScalingMode::Adaptive,
+                other => {
+                    return Err(C2SError::Config(format!(
+                        "scalingMode must be static|auto|adaptive, got {other}"
+                    )))
+                }
+            };
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Sanity-check cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.no_of_vms == 0 || self.no_of_cloudlets == 0 {
+            return Err(C2SError::Config(
+                "noOfVMs and noOfCloudlets must be positive".into(),
+            ));
+        }
+        if self.partition_count == 0 {
+            return Err(C2SError::Config("partitionCount must be positive".into()));
+        }
+        if self.max_threshold <= self.min_threshold {
+            return Err(C2SError::Config(format!(
+                "maxThreshold ({}) must exceed minThreshold ({}); the paper keeps the gap high to avoid jitter",
+                self.max_threshold, self.min_threshold
+            )));
+        }
+        if self.scaling_mode != ScalingMode::Static && self.backup_count == 0 {
+            return Err(C2SError::Config(
+                "dynamic scaling requires synchronous backups (backupCount >= 1, §3.4.3)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn round_robin_builder() {
+        let c = SimConfig::default_round_robin(100, 200, true);
+        assert_eq!(c.no_of_vms, 100);
+        assert_eq!(c.no_of_cloudlets, 200);
+        assert!(c.workload.is_loaded());
+        let c = SimConfig::default_round_robin(100, 200, false);
+        assert!(!c.workload.is_loaded());
+    }
+
+    #[test]
+    fn from_properties_overrides() {
+        let p = Properties::parse(
+            "noOfVMs=50\nnoOfCloudlets=75\nisLoaded=native\ngridBackend=infinispan\nseed=99\n",
+        )
+        .unwrap();
+        let c = SimConfig::from_properties(&p).unwrap();
+        assert_eq!(c.no_of_vms, 50);
+        assert_eq!(c.no_of_cloudlets, 75);
+        assert_eq!(c.workload, WorkloadKind::NativeBurn);
+        assert_eq!(c.seed, 99);
+        assert!(c.backend.is_infinispan_like());
+    }
+
+    #[test]
+    fn scaling_requires_backups() {
+        let p = Properties::parse("scalingMode=adaptive\nbackupCount=0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        let p = Properties::parse("scalingMode=adaptive\nbackupCount=1\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_ok());
+    }
+
+    #[test]
+    fn bad_enum_rejected() {
+        let p = Properties::parse("gridBackend=terracotta\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        let p = Properties::parse("isLoaded=maybe\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+    }
+
+    #[test]
+    fn threshold_gap_enforced() {
+        let p = Properties::parse("maxThreshold=0.1\nminThreshold=0.5\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+    }
+}

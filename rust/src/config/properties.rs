@@ -1,0 +1,226 @@
+//! A `.properties` file reader.
+//!
+//! Java-style properties are the paper's configuration format
+//! (`cloud2sim.properties`, `hazelcast.xml` aside). Supports `key=value`,
+//! `key: value`, `#`/`!` comments, blank lines, trailing-backslash line
+//! continuations, and `\n`/`\t`/`\\`/`A` escapes — the subset real
+//! CloudSim/Cloud²Sim configs use.
+
+use crate::error::{C2SError, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed property set, order-independent (BTreeMap for stable iteration).
+#[derive(Debug, Clone, Default)]
+pub struct Properties {
+    entries: BTreeMap<String, String>,
+}
+
+impl Properties {
+    /// Parse properties from a string.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut logical = String::new();
+        for raw in text.lines() {
+            let line = raw.trim_start();
+            if logical.is_empty() && (line.is_empty() || line.starts_with('#') || line.starts_with('!')) {
+                continue;
+            }
+            if let Some(stripped) = line.strip_suffix('\\') {
+                logical.push_str(stripped);
+                continue;
+            }
+            logical.push_str(line);
+            let entry = std::mem::take(&mut logical);
+            let (k, v) = split_kv(&entry)?;
+            entries.insert(unescape(k.trim())?, unescape(v.trim())?);
+        }
+        if !logical.is_empty() {
+            let (k, v) = split_kv(&logical)?;
+            entries.insert(unescape(k.trim())?, unescape(v.trim())?);
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            C2SError::Config(format!("cannot read {}: {e}", path.as_ref().display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    /// Insert/override a property programmatically.
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entries were parsed.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate `(key, value)` pairs in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    fn typed<T: std::str::FromStr>(&self, key: &str, tyname: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+                C2SError::Config(format!("property {key}={v} is not a valid {tyname}"))
+            }),
+        }
+    }
+
+    /// `usize` accessor (None when absent; Err when malformed).
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.typed(key, "usize")
+    }
+    /// `u64` accessor.
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.typed(key, "u64")
+    }
+    /// `u32` accessor.
+    pub fn get_u32(&self, key: &str) -> Result<Option<u32>> {
+        self.typed(key, "u32")
+    }
+    /// `f64` accessor.
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.typed(key, "f64")
+    }
+    /// `bool` accessor (accepts true/false/yes/no/1/0, case-insensitive).
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "true" | "yes" | "1" => Ok(Some(true)),
+                "false" | "no" | "0" => Ok(Some(false)),
+                _ => Err(C2SError::Config(format!(
+                    "property {key}={v} is not a valid bool"
+                ))),
+            },
+        }
+    }
+}
+
+fn split_kv(entry: &str) -> Result<(&str, &str)> {
+    // first unescaped '=' or ':' separates key and value
+    let mut prev_backslash = false;
+    for (i, ch) in entry.char_indices() {
+        if prev_backslash {
+            prev_backslash = false;
+            continue;
+        }
+        match ch {
+            '\\' => prev_backslash = true,
+            '=' | ':' => return Ok((&entry[..i], &entry[i + ch.len_utf8()..])),
+            _ => {}
+        }
+    }
+    Err(C2SError::Config(format!(
+        "malformed property line (no separator): {entry:?}"
+    )))
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('\\') => out.push('\\'),
+            Some('=') => out.push('='),
+            Some(':') => out.push(':'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                if hex.len() != 4 {
+                    return Err(C2SError::Config(format!("truncated \\u escape in {s:?}")));
+                }
+                let cp = u32::from_str_radix(&hex, 16)
+                    .map_err(|_| C2SError::Config(format!("bad \\u escape in {s:?}")))?;
+                out.push(char::from_u32(cp).ok_or_else(|| {
+                    C2SError::Config(format!("invalid codepoint \\u{hex} in {s:?}"))
+                })?);
+            }
+            Some(other) => out.push(other),
+            None => return Err(C2SError::Config(format!("dangling backslash in {s:?}"))),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_parse() {
+        let p = Properties::parse("a=1\nb: two\n# comment\n! also comment\n\nc=3").unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.get("a"), Some("1"));
+        assert_eq!(p.get("b"), Some("two"));
+        assert_eq!(p.get("c"), Some("3"));
+        assert_eq!(p.get("d"), None);
+    }
+
+    #[test]
+    fn continuation_lines() {
+        let p = Properties::parse("key=part1,\\\n    part2,\\\n    part3\n").unwrap();
+        assert_eq!(p.get("key"), Some("part1,part2,part3"));
+    }
+
+    #[test]
+    fn escapes() {
+        let p = Properties::parse(r"msg=hello\nworld\tA").unwrap();
+        assert_eq!(p.get("msg"), Some("hello\nworld\tA"));
+        let p = Properties::parse(r"weird\=key=v").unwrap();
+        assert_eq!(p.get("weird=key"), Some("v"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let p = Properties::parse("n=42\nf=2.5\nb=YES\nbad=xyz").unwrap();
+        assert_eq!(p.get_usize("n").unwrap(), Some(42));
+        assert_eq!(p.get_f64("f").unwrap(), Some(2.5));
+        assert_eq!(p.get_bool("b").unwrap(), Some(true));
+        assert_eq!(p.get_usize("missing").unwrap(), None);
+        assert!(p.get_usize("bad").is_err());
+        assert!(p.get_bool("bad").is_err());
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(Properties::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn last_line_without_newline() {
+        let p = Properties::parse("a=1\nb=2").unwrap();
+        assert_eq!(p.get("b"), Some("2"));
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut p = Properties::parse("a=1").unwrap();
+        p.set("a", "2");
+        assert_eq!(p.get("a"), Some("2"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Multi-tenant coordination (§3.1.2, Figs 3.4/3.7).
+//!
+//! A *tenant* is one experiment, mapped 1:1 to a cluster. The
+//! `Coordinator` node holds instances in multiple clusters, sharing
+//! information across tenants "through the local objects of the JVM", and
+//! "prints the final output resulting from both experiments ... enabling a
+//! combined view of multi-tenanted executions". Scaling state is keyed by
+//! tenant id in the shared control cluster (§3.2.3).
+
+use crate::config::SimConfig;
+use crate::dist::hz_cloudsim::DistReport;
+use crate::dist::{run_distributed, Strategy};
+use crate::error::Result;
+use crate::metrics::Table;
+
+/// One tenant's declaration.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    /// Tenant/experiment name (cluster group name).
+    pub name: String,
+    /// Its simulation configuration.
+    pub config: SimConfig,
+    /// Instances allocated to it.
+    pub nodes: usize,
+}
+
+/// The coordinator: runs tenants as independent clusters and aggregates
+/// their outputs.
+pub struct Coordinator {
+    tenants: Vec<Tenant>,
+    /// Completed results per tenant.
+    pub results: Vec<(String, DistReport)>,
+}
+
+impl Coordinator {
+    /// New coordinator with no tenants.
+    pub fn new() -> Self {
+        Self {
+            tenants: Vec::new(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Register a tenant. Each gets an isolated cluster, so experiments
+    /// are "independent and secured from the other parallel simulations"
+    /// (§3.1.1); different seeds keep them decorrelated.
+    pub fn add_tenant(&mut self, name: &str, mut config: SimConfig, nodes: usize) {
+        config.seed ^= crate::util::rng::fnv1a64(name.as_bytes());
+        self.tenants.push(Tenant {
+            name: name.to_string(),
+            config,
+            nodes,
+        });
+    }
+
+    /// Declared tenants.
+    pub fn tenants(&self) -> &[Tenant] {
+        &self.tenants
+    }
+
+    /// Run every tenant (each in its own cluster; virtual times are
+    /// per-tenant, i.e. tenants run in parallel as in Fig 3.4).
+    pub fn run_all(&mut self) -> Result<()> {
+        self.results.clear();
+        for t in &self.tenants {
+            let report = run_distributed(&t.config, t.nodes)?;
+            self.results.push((t.name.clone(), report));
+        }
+        Ok(())
+    }
+
+    /// Wall-clock view of the whole deployment: tenants run in parallel,
+    /// so the makespan is the slowest tenant.
+    pub fn makespan(&self) -> f64 {
+        self.results
+            .iter()
+            .map(|(_, r)| r.sim_time_s)
+            .fold(0.0, f64::max)
+    }
+
+    /// The (Node × Experiment) deployment matrix of §3.1.2. `S` marks the
+    /// tenant's master/supervisor, `I` Initiators, `C` the coordinator row.
+    pub fn deployment_matrix(&self) -> String {
+        let total_nodes: usize = self.tenants.iter().map(|t| t.nodes).max().unwrap_or(0);
+        let mut headers: Vec<String> = vec!["node".into(), "cluster0".into()];
+        headers.extend(self.tenants.iter().map(|t| t.name.clone()));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new("Deployment matrix (Node x Experiment)", &hdr_refs);
+        for node in 0..total_nodes.max(1) {
+            let mut row: Vec<String> = vec![format!("node{node}")];
+            // the coordinator lives on node0 in cluster0
+            row.push(if node == 0 { "C".into() } else { "-".into() });
+            for t in &self.tenants {
+                row.push(if node == 0 {
+                    "S".into()
+                } else if node < t.nodes {
+                    "I".into()
+                } else {
+                    "-".into()
+                });
+            }
+            table.row(&row);
+        }
+        table.render()
+    }
+
+    /// Combined final output across tenants (the coordinator's "combined
+    /// view", §3.1.2).
+    pub fn combined_report(&self) -> String {
+        let mut t = Table::new(
+            "Coordinator: combined multi-tenant results",
+            &["tenant", "nodes", "time (s)", "cloudlets", "grid msgs"],
+        );
+        for (name, r) in &self.results {
+            t.row(&[
+                name.clone(),
+                r.nodes.to_string(),
+                format!("{:.3}", r.sim_time_s),
+                r.cloudlets_ok.to_string(),
+                r.grid_messages.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Strategy note: multi-tenant deployments use [`Strategy::SimulatorInitiator`]
+/// per tenant, coordinated externally (Fig 3.4).
+pub const TENANT_STRATEGY: Strategy = Strategy::SimulatorInitiator;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenants_run_independently() {
+        let mut c = Coordinator::new();
+        c.add_tenant("exp1", SimConfig::default_round_robin(50, 100, false), 2);
+        c.add_tenant("exp2", SimConfig::default_round_robin(30, 60, false), 3);
+        c.run_all().unwrap();
+        assert_eq!(c.results.len(), 2);
+        assert!(c.results.iter().all(|(_, r)| r.cloudlets_ok > 0));
+        assert!(c.makespan() > 0.0);
+    }
+
+    #[test]
+    fn seeds_decorrelated_per_tenant() {
+        let mut c = Coordinator::new();
+        let base = SimConfig::default_round_robin(10, 20, false);
+        c.add_tenant("a", base.clone(), 1);
+        c.add_tenant("b", base, 1);
+        assert_ne!(c.tenants()[0].config.seed, c.tenants()[1].config.seed);
+    }
+
+    #[test]
+    fn matrix_renders_fig_3_4_shape() {
+        let mut c = Coordinator::new();
+        c.add_tenant("exp1", SimConfig::default_round_robin(10, 20, false), 2);
+        c.add_tenant("exp2", SimConfig::default_round_robin(10, 20, false), 3);
+        let m = c.deployment_matrix();
+        assert!(m.contains("C"), "coordinator marked");
+        assert!(m.contains("S"), "supervisors marked");
+        assert!(m.contains("I"), "initiators marked");
+        assert!(m.contains("node2"));
+    }
+
+    #[test]
+    fn combined_report_lists_all() {
+        let mut c = Coordinator::new();
+        c.add_tenant("exp1", SimConfig::default_round_robin(10, 20, false), 1);
+        c.run_all().unwrap();
+        let rep = c.combined_report();
+        assert!(rep.contains("exp1"));
+    }
+}

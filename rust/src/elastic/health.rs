@@ -1,0 +1,164 @@
+//! Health monitoring (§4.3.1).
+//!
+//! The paper's health monitor wraps `com.sun.management.OperatingSystemMXBean`
+//! and samples process CPU load, system CPU load and load average. Here the
+//! same signals are derived from the grid's virtual clocks: process CPU
+//! load between two samples is Δbusy/Δclock of a node; the load average is
+//! an exponentially-weighted average of it (per-core normalized), which is
+//! what Table 5.2 logs during scaling events.
+
+use crate::grid::cluster::{GridCluster, NodeId};
+use crate::util::stats::Ewma;
+use std::collections::BTreeMap;
+
+/// Which signal drives scaling decisions (configurable, §4.3.1: "This can
+/// also be done using the other system characteristics monitored").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthMeasure {
+    /// Busy fraction of the monitored process between samples.
+    ProcessCpuLoad,
+    /// EWMA of the busy fraction, normalized per core (UNIX load-average
+    /// analog).
+    LoadAverage,
+    /// Heap occupancy fraction.
+    HeapPct,
+}
+
+/// One sample of one node.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthSample {
+    /// Virtual time of the sample.
+    pub at: f64,
+    /// Process CPU load in `[0,1]`.
+    pub process_cpu_load: f64,
+    /// Load average (EWMA, per-core).
+    pub load_average: f64,
+    /// Heap occupancy in `[0,1]`.
+    pub heap_pct: f64,
+}
+
+#[derive(Debug, Clone)]
+struct NodeTrack {
+    last_clock: f64,
+    last_busy: f64,
+    load_avg: Ewma,
+}
+
+/// The monitor: tracks per-node deltas between samples.
+#[derive(Debug)]
+pub struct HealthMonitor {
+    cores: usize,
+    tracks: BTreeMap<NodeId, NodeTrack>,
+    /// Full sample history `(node, sample)` for reporting (Table 5.2).
+    pub history: Vec<(NodeId, HealthSample)>,
+    /// Max process CPU load ever observed (Fig 5.5).
+    pub max_process_cpu_load: f64,
+}
+
+impl HealthMonitor {
+    /// `cores` normalizes the load average (the paper's testbed: 8-thread
+    /// i7-2600K nodes).
+    pub fn new(cores: usize) -> Self {
+        Self {
+            cores: cores.max(1),
+            tracks: BTreeMap::new(),
+            history: Vec::new(),
+            max_process_cpu_load: 0.0,
+        }
+    }
+
+    /// Sample every member; returns the fresh samples in member order.
+    pub fn sample(&mut self, cluster: &GridCluster) -> Vec<(NodeId, HealthSample)> {
+        let mut out = Vec::new();
+        for m in cluster.members() {
+            let clock = cluster.clock(m);
+            let busy = cluster.busy(m);
+            let track = self.tracks.entry(m).or_insert_with(|| NodeTrack {
+                last_clock: clock,
+                last_busy: busy,
+                load_avg: Ewma::new(0.4),
+            });
+            let d_clock = (clock - track.last_clock).max(1e-9);
+            let d_busy = (busy - track.last_busy).clamp(0.0, d_clock);
+            let p = d_busy / d_clock;
+            let la = track.load_avg.update(p / self.cores as f64 * 2.0);
+            track.last_clock = clock;
+            track.last_busy = busy;
+            let heap = cluster.heap_used(m) as f64 / cluster.cfg.node_heap_bytes as f64;
+            let s = HealthSample {
+                at: clock,
+                process_cpu_load: p,
+                load_average: la,
+                heap_pct: heap,
+            };
+            self.max_process_cpu_load = self.max_process_cpu_load.max(p);
+            self.history.push((m, s));
+            out.push((m, s));
+        }
+        out
+    }
+
+    /// Extract the configured measure from a sample.
+    pub fn measure(&self, s: &HealthSample, which: HealthMeasure) -> f64 {
+        match which {
+            HealthMeasure::ProcessCpuLoad => s.process_cpu_load,
+            HealthMeasure::LoadAverage => s.load_average,
+            HealthMeasure::HeapPct => s.heap_pct,
+        }
+    }
+
+    /// Forget a departed node's track.
+    pub fn forget(&mut self, node: NodeId) {
+        self.tracks.remove(&node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::cluster::GridConfig;
+
+    #[test]
+    fn busy_node_reads_high_load() {
+        let mut c = GridCluster::with_members(GridConfig::default(), 2);
+        let ms = c.members();
+        let mut mon = HealthMonitor::new(8);
+        mon.sample(&c); // baseline
+        c.advance_busy(ms[0], 10.0); // fully busy
+        c.advance(ms[1], 10.0); // idle
+        let samples = mon.sample(&c);
+        assert!(samples[0].1.process_cpu_load > 0.95);
+        assert!(samples[1].1.process_cpu_load < 0.05);
+        assert!(mon.max_process_cpu_load > 0.95);
+    }
+
+    #[test]
+    fn load_average_smooths() {
+        let mut c = GridCluster::with_members(GridConfig::default(), 1);
+        let m = c.members()[0];
+        let mut mon = HealthMonitor::new(8);
+        mon.sample(&c);
+        // one busy burst then idle: load average decays, not jumps
+        c.advance_busy(m, 10.0);
+        let s1 = mon.sample(&c)[0].1;
+        c.advance(m, 10.0);
+        let s2 = mon.sample(&c)[0].1;
+        assert!(s2.process_cpu_load < 0.05);
+        assert!(s2.load_average > 0.0 && s2.load_average < s1.load_average + 1e-12);
+    }
+
+    #[test]
+    fn heap_pct_tracked() {
+        let cfg = GridConfig {
+            node_heap_bytes: 1000,
+            ..GridConfig::default()
+        };
+        let mut c = GridCluster::with_members(cfg, 1);
+        let m = c.members()[0];
+        c.reserve_scratch(m, 500).unwrap();
+        let mut mon = HealthMonitor::new(8);
+        let s = mon.sample(&c)[0].1;
+        assert!((s.heap_pct - 0.5).abs() < 0.1);
+        assert_eq!(mon.measure(&s, HealthMeasure::HeapPct), s.heap_pct);
+    }
+}

@@ -1,0 +1,240 @@
+//! `IntelligentAdaptiveScaler` — Algorithm 6 (§3.2.2, design #3).
+//!
+//! One IAS runs on every node of `cluster-sub` (the control plane). Nodes
+//! *without* an Initiator in the main cluster watch the `toScaleOut` flag;
+//! nodes *with* one watch `toScaleIn`. The shared atomic [`SCALING_KEY`]
+//! makes the spawn/shutdown decision exclusive: the first CAS winner acts,
+//! everyone else backs off — "This ensures 0 or 1 of Initiator instances
+//! in each node, and avoids unnecessary hits to the Hazelcast distributed
+//! objects".
+
+use crate::elastic::probe::{flag_key, SCALING_KEY, TERMINATE_ALL_FLAG};
+use crate::error::Result;
+use crate::grid::cluster::{GridCluster, NodeId};
+
+/// What an IAS probe iteration did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IasAction {
+    /// This IAS spawned an Initiator into the main cluster.
+    Spawned,
+    /// This IAS shut its Initiator down.
+    Shutdown,
+    /// Terminate-all observed: the IAS stopped.
+    Terminated,
+    /// Nothing to do (flag unset, lost the race, or cooling down).
+    Idle,
+}
+
+/// Per-sub-node IAS state.
+#[derive(Debug)]
+pub struct IntelligentAdaptiveScaler {
+    /// This IAS's member in the sub-cluster.
+    pub sub_node: NodeId,
+    /// Tenant this IAS serves.
+    pub tenant: String,
+    /// The Initiator this node contributed to the main cluster, if any.
+    pub initiator: Option<NodeId>,
+    /// Virtual time before which no new decision is taken
+    /// (`timeBetweenScalingDecisions`).
+    cooldown_until: f64,
+    /// Anti-cascade wait after acting.
+    pub time_between_scaling_decisions: f64,
+    terminated: bool,
+}
+
+impl IntelligentAdaptiveScaler {
+    /// `procedure INITHEALTHMAP` — ensure flags exist (idempotent).
+    pub fn init_health_map(sub: &mut GridCluster, me: NodeId, tenant: &str) -> Result<()> {
+        for flag in ["toScaleOut", "toScaleIn"] {
+            let key = flag_key(tenant, flag);
+            let cur: Option<bool> = sub.map_get(me, "nodeHealth", key.clone())?;
+            if cur.is_none() {
+                sub.map_put(me, "nodeHealth", key, &false)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// New IAS on a sub-cluster node.
+    pub fn new(sub_node: NodeId, tenant: &str, time_between_scaling_decisions: f64) -> Self {
+        Self {
+            sub_node,
+            tenant: tenant.to_string(),
+            initiator: None,
+            cooldown_until: 0.0,
+            time_between_scaling_decisions,
+            terminated: false,
+        }
+    }
+
+    /// True once terminate-all was observed.
+    pub fn is_terminated(&self) -> bool {
+        self.terminated
+    }
+
+    /// One `PROBE` iteration (Algorithm 6). `main` is the tenant's
+    /// simulation cluster that Initiators join/leave.
+    pub fn probe(&mut self, sub: &mut GridCluster, main: &mut GridCluster) -> Result<IasAction> {
+        if self.terminated {
+            return Ok(IasAction::Terminated);
+        }
+        let me = self.sub_node;
+        // terminate-all check (§4.3.2)
+        if sub.atomic_get(me, SCALING_KEY) == TERMINATE_ALL_FLAG {
+            self.terminated = true;
+            if let Some(init) = self.initiator.take() {
+                if main.size() > 1 {
+                    main.leave(init)?;
+                }
+            }
+            return Ok(IasAction::Terminated);
+        }
+        let now = sub.clock(me);
+        if now < self.cooldown_until {
+            return Ok(IasAction::Idle);
+        }
+        if self.initiator.is_none() {
+            // monitoring for scale-out (instances.count() == 0 branch)
+            let out_key = flag_key(&self.tenant, "toScaleOut");
+            let flagged: Option<bool> = sub.map_get(me, "nodeHealth", out_key.clone())?;
+            if flagged == Some(true) {
+                // set to false before the atomic decision
+                sub.map_put(me, "nodeHealth", out_key, &false)?;
+                // Atomic{ currentValue ← key; key ← 1 }
+                let current = sub.atomic_get_and_set(me, SCALING_KEY, 1);
+                if current == 0 {
+                    let id = main.join(); // spawnInstance()
+                    self.initiator = Some(id);
+                    self.cooldown_until =
+                        sub.clock(me) + self.time_between_scaling_decisions;
+                    sub.atomic_set(me, SCALING_KEY, 0);
+                    return Ok(IasAction::Spawned);
+                }
+                // lost the race: restore the key only if it still holds our
+                // marker — the winner resets it itself
+            }
+        } else {
+            // monitoring for scale-in
+            let in_key = flag_key(&self.tenant, "toScaleIn");
+            let flagged: Option<bool> = sub.map_get(me, "nodeHealth", in_key.clone())?;
+            if flagged == Some(true) {
+                sub.map_put(me, "nodeHealth", in_key, &false)?;
+                let current = sub.atomic_get_and_set(me, SCALING_KEY, -1);
+                if current == 0 {
+                    let init = self.initiator.take().expect("has initiator");
+                    if main.size() > 1 {
+                        main.leave(init)?; // shutdownInstance()
+                    }
+                    self.cooldown_until =
+                        sub.clock(me) + self.time_between_scaling_decisions;
+                    sub.atomic_set(me, SCALING_KEY, 0);
+                    return Ok(IasAction::Shutdown);
+                }
+            }
+        }
+        Ok(IasAction::Idle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::probe::AdaptiveScalerProbe;
+    use crate::grid::cluster::GridConfig;
+
+    fn clusters(subs: usize) -> (GridCluster, GridCluster) {
+        let sub = GridCluster::with_members(GridConfig::default(), subs);
+        let main = GridCluster::with_members(
+            GridConfig {
+                backup_count: 1, // elastic runs need backups (§3.4.3)
+                ..GridConfig::default()
+            },
+            1,
+        );
+        (sub, main)
+    }
+
+    #[test]
+    fn exactly_one_ias_spawns() {
+        let (mut sub, mut main) = clusters(4);
+        let subs = sub.members();
+        let mut probe = AdaptiveScalerProbe::new();
+        probe.add_instance();
+        probe.probe(&mut sub, subs[0], "t0").unwrap();
+        let mut iases: Vec<IntelligentAdaptiveScaler> = subs
+            .iter()
+            .map(|&s| IntelligentAdaptiveScaler::new(s, "t0", 30.0))
+            .collect();
+        for ias in &mut iases {
+            IntelligentAdaptiveScaler::init_health_map(&mut sub, ias.sub_node, "t0").unwrap();
+        }
+        let actions: Vec<IasAction> = iases
+            .iter_mut()
+            .map(|i| i.probe(&mut sub, &mut main).unwrap())
+            .collect();
+        let spawned = actions.iter().filter(|a| **a == IasAction::Spawned).count();
+        assert_eq!(spawned, 1, "exactly one instance takes the action: {actions:?}");
+        assert_eq!(main.size(), 2);
+        // flag consumed: further probes do nothing
+        for i in &mut iases {
+            assert_ne!(i.probe(&mut sub, &mut main).unwrap(), IasAction::Spawned);
+        }
+        assert_eq!(main.size(), 2);
+    }
+
+    #[test]
+    fn scale_in_by_owner_only() {
+        let (mut sub, mut main) = clusters(2);
+        let subs = sub.members();
+        let mut a = IntelligentAdaptiveScaler::new(subs[0], "t0", 0.0);
+        let mut b = IntelligentAdaptiveScaler::new(subs[1], "t0", 0.0);
+        // a spawns
+        let mut probe = AdaptiveScalerProbe::new();
+        probe.add_instance();
+        probe.probe(&mut sub, subs[0], "t0").unwrap();
+        assert_eq!(a.probe(&mut sub, &mut main).unwrap(), IasAction::Spawned);
+        // scale-in request: only a (who owns an Initiator) can act
+        probe.remove_instance();
+        probe.probe(&mut sub, subs[0], "t0").unwrap();
+        assert_eq!(b.probe(&mut sub, &mut main).unwrap(), IasAction::Idle);
+        assert_eq!(a.probe(&mut sub, &mut main).unwrap(), IasAction::Shutdown);
+        assert_eq!(main.size(), 1);
+    }
+
+    #[test]
+    fn terminate_all_stops_everyone() {
+        let (mut sub, mut main) = clusters(3);
+        let subs = sub.members();
+        let mut iases: Vec<_> = subs
+            .iter()
+            .map(|&s| IntelligentAdaptiveScaler::new(s, "t0", 0.0))
+            .collect();
+        // spawn one initiator first
+        let mut probe = AdaptiveScalerProbe::new();
+        probe.add_instance();
+        probe.probe(&mut sub, subs[0], "t0").unwrap();
+        let _ = iases[0].probe(&mut sub, &mut main).unwrap();
+        assert_eq!(main.size(), 2);
+        probe.terminate_all(&mut sub, subs[0]);
+        for ias in &mut iases {
+            assert_eq!(ias.probe(&mut sub, &mut main).unwrap(), IasAction::Terminated);
+            assert!(ias.is_terminated());
+        }
+        assert_eq!(main.size(), 1, "initiators left the main cluster");
+    }
+
+    #[test]
+    fn cooldown_blocks_consecutive_actions() {
+        let (mut sub, mut main) = clusters(1);
+        let s0 = sub.members()[0];
+        let mut ias = IntelligentAdaptiveScaler::new(s0, "t0", 1000.0);
+        let mut probe = AdaptiveScalerProbe::new();
+        probe.add_instance();
+        probe.probe(&mut sub, s0, "t0").unwrap();
+        assert_eq!(ias.probe(&mut sub, &mut main).unwrap(), IasAction::Spawned);
+        // request scale-in immediately: cooldown holds
+        probe.remove_instance();
+        probe.probe(&mut sub, s0, "t0").unwrap();
+        assert_eq!(ias.probe(&mut sub, &mut main).unwrap(), IasAction::Idle);
+    }
+}

@@ -1,0 +1,24 @@
+//! The elastic middleware platform (§3.2, §4.3): health monitoring,
+//! dynamic scaling (Algorithm 4), the AdaptiveScalerProbe (Algorithm 5)
+//! and IntelligentAdaptiveScaler (Algorithm 6) over the grid's atomic
+//! flags, IaaS provisioning, and multi-tenant coordination.
+//!
+//! "The developed middleware platform and elastic strategy is generic
+//! enough such that it is not limited to CloudSim simulations" (§4.3) —
+//! nothing here depends on `crate::sim` except the demo driver.
+
+pub mod coordinator;
+pub mod driver;
+pub mod health;
+pub mod ias;
+pub mod probe;
+pub mod provision;
+pub mod scaler;
+
+pub use coordinator::Coordinator;
+pub use driver::{run_adaptive, ElasticReport, LoadRow};
+pub use health::{HealthMeasure, HealthMonitor, HealthSample};
+pub use ias::{IasAction, IntelligentAdaptiveScaler};
+pub use probe::{AdaptiveScalerProbe, SCALING_KEY, TERMINATE_ALL_FLAG};
+pub use provision::{CloudProvisioner, LocalCluster, SimEc2};
+pub use scaler::{DynamicScaler, ScaleDecision};

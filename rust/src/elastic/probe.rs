@@ -1,0 +1,125 @@
+//! `AdaptiveScalerProbe` — Algorithm 5 (§3.2.2).
+//!
+//! Runs in the master node's JVM alongside the health monitor, but is
+//! attached to the *sub-cluster* (`cluster-sub`). The health monitor flips
+//! local atomic booleans (`addInstance`/`removeInstance`); `probe()`
+//! publishes them into the sub-cluster's distributed `nodeHealth` map,
+//! where the IntelligentAdaptiveScaler instances of the other nodes see
+//! them. On completion the probe broadcasts `TERMINATE_ALL_FLAG` so every
+//! main-cluster instance shuts down (§4.3.2).
+
+use crate::error::Result;
+use crate::grid::cluster::{GridCluster, NodeId};
+
+/// The distributed flag value ordering all instances to shut down.
+pub const TERMINATE_ALL_FLAG: i64 = -999;
+
+/// Name of the shared atomic used for scaling decisions (§4.3.2: a
+/// Hazelcast `IAtomicLong`).
+pub const SCALING_KEY: &str = "key";
+
+/// The probe thread's state.
+#[derive(Debug, Default)]
+pub struct AdaptiveScalerProbe {
+    to_scale_out: bool,
+    to_scale_in: bool,
+}
+
+impl AdaptiveScalerProbe {
+    /// New idle probe.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `procedure ADDINSTANCE`: the health monitor requests a scale-out.
+    pub fn add_instance(&mut self) {
+        self.to_scale_out = true;
+    }
+
+    /// `procedure REMOVEINSTANCE`.
+    pub fn remove_instance(&mut self) {
+        self.to_scale_in = true;
+    }
+
+    /// One `PROBE` loop iteration: publish pending local flags into the
+    /// sub-cluster's `nodeHealth` map (mutually exclusive, as in the
+    /// pseudocode). `me` is the probe's sub-cluster member.
+    pub fn probe(&mut self, sub: &mut GridCluster, me: NodeId, tenant: &str) -> Result<()> {
+        if self.to_scale_out {
+            self.to_scale_out = false;
+            sub.map_put(me, "nodeHealth", flag_key(tenant, "toScaleOut"), &true)?;
+            sub.map_put(me, "nodeHealth", flag_key(tenant, "toScaleIn"), &false)?;
+        } else if self.to_scale_in {
+            self.to_scale_in = false;
+            sub.map_put(me, "nodeHealth", flag_key(tenant, "toScaleIn"), &true)?;
+            sub.map_put(me, "nodeHealth", flag_key(tenant, "toScaleOut"), &false)?;
+        }
+        Ok(())
+    }
+
+    /// Completion: notify every instance to terminate (§4.3.2).
+    pub fn terminate_all(&self, sub: &mut GridCluster, me: NodeId) {
+        sub.atomic_set(me, SCALING_KEY, TERMINATE_ALL_FLAG);
+    }
+}
+
+/// Per-tenant flag keys: the multi-tenant coordinator maps scaling flags
+/// against the cluster/tenant id (§3.2.3: "distributed hash maps ...
+/// mapping the scaling decisions and health information against the
+/// cluster or tenant ID").
+pub fn flag_key(tenant: &str, flag: &str) -> String {
+    format!("{flag}@{tenant}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::cluster::GridConfig;
+
+    #[test]
+    fn probe_publishes_flags() {
+        let mut sub = GridCluster::with_members(GridConfig::default(), 2);
+        let me = sub.members()[0];
+        let mut p = AdaptiveScalerProbe::new();
+        p.add_instance();
+        p.probe(&mut sub, me, "t0").unwrap();
+        let out: Option<bool> = sub.map_get(me, "nodeHealth", flag_key("t0", "toScaleOut")).unwrap();
+        assert_eq!(out, Some(true));
+        let inn: Option<bool> = sub.map_get(me, "nodeHealth", flag_key("t0", "toScaleIn")).unwrap();
+        assert_eq!(inn, Some(false));
+        // flag consumed locally
+        p.probe(&mut sub, me, "t0").unwrap();
+        let out: Option<bool> = sub.map_get(me, "nodeHealth", flag_key("t0", "toScaleOut")).unwrap();
+        assert_eq!(out, Some(true), "probe without new request leaves map untouched");
+    }
+
+    #[test]
+    fn scale_in_overrides_out_flag() {
+        let mut sub = GridCluster::with_members(GridConfig::default(), 1);
+        let me = sub.members()[0];
+        let mut p = AdaptiveScalerProbe::new();
+        p.add_instance();
+        p.probe(&mut sub, me, "t0").unwrap();
+        p.remove_instance();
+        p.probe(&mut sub, me, "t0").unwrap();
+        let out: Option<bool> = sub.map_get(me, "nodeHealth", flag_key("t0", "toScaleOut")).unwrap();
+        let inn: Option<bool> = sub.map_get(me, "nodeHealth", flag_key("t0", "toScaleIn")).unwrap();
+        assert_eq!(out, Some(false));
+        assert_eq!(inn, Some(true));
+    }
+
+    #[test]
+    fn terminate_broadcasts() {
+        let mut sub = GridCluster::with_members(GridConfig::default(), 2);
+        let me = sub.members()[0];
+        let p = AdaptiveScalerProbe::new();
+        p.terminate_all(&mut sub, me);
+        let other = sub.members()[1];
+        assert_eq!(sub.atomic_get(other, SCALING_KEY), TERMINATE_ALL_FLAG);
+    }
+
+    #[test]
+    fn tenant_flags_isolated() {
+        assert_ne!(flag_key("t0", "toScaleOut"), flag_key("t1", "toScaleOut"));
+    }
+}

@@ -1,0 +1,154 @@
+//! IaaS provisioning for auto scaling beyond the local cluster (§3.2.1,
+//! Fig 3.5): "When there is only a limited availability of resources in
+//! the local computer clusters ... Cloud²Sim can be run on an actual cloud
+//! infrastructure" via the Hazelcast/AWS join mechanism.
+//!
+//! No AWS here, so [`SimEc2`] simulates the provider: instance spawn
+//! latency ≫ local joins, plus per-instance-hour cost accounting — this is
+//! also what turns the adaptive scaler into the "cloud middleware
+//! Platform-as-a-Service" costing of §3.4.3.
+
+use crate::grid::cluster::NodeId;
+
+/// An elastic infrastructure provider.
+pub trait CloudProvisioner {
+    /// Request an instance at virtual time `now`; returns when it will be
+    /// ready to join the cluster.
+    fn provision(&mut self, now: f64) -> f64;
+    /// Release an instance at `now` (stops its billing).
+    fn release(&mut self, now: f64);
+    /// Accumulated cost up to `now` (currency units).
+    fn cost(&self, now: f64) -> f64;
+    /// Provider name.
+    fn name(&self) -> &'static str;
+}
+
+/// Instant, free provisioning: the research-lab cluster.
+#[derive(Debug, Default)]
+pub struct LocalCluster {
+    active: usize,
+}
+
+impl CloudProvisioner for LocalCluster {
+    fn provision(&mut self, now: f64) -> f64 {
+        self.active += 1;
+        now
+    }
+    fn release(&mut self, _now: f64) {
+        self.active = self.active.saturating_sub(1);
+    }
+    fn cost(&self, _now: f64) -> f64 {
+        0.0
+    }
+    fn name(&self) -> &'static str {
+        "local-cluster"
+    }
+}
+
+/// Simulated EC2: spawn latency + hourly billing (billed per started hour,
+/// as 2014-era EC2 did).
+#[derive(Debug)]
+pub struct SimEc2 {
+    /// Boot + Hazelcast-join latency (s).
+    pub spawn_latency: f64,
+    /// Hourly rate per instance.
+    pub hourly_rate: f64,
+    /// `(started_at, released_at)` per instance.
+    sessions: Vec<(f64, Option<f64>)>,
+}
+
+impl SimEc2 {
+    /// m3.large-era defaults: 90 s boot, $0.266/h.
+    pub fn new() -> Self {
+        Self {
+            spawn_latency: 90.0,
+            hourly_rate: 0.266,
+            sessions: Vec::new(),
+        }
+    }
+
+    /// Number of instances ever provisioned.
+    pub fn total_provisioned(&self) -> usize {
+        self.sessions.len()
+    }
+}
+
+impl Default for SimEc2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CloudProvisioner for SimEc2 {
+    fn provision(&mut self, now: f64) -> f64 {
+        self.sessions.push((now, None));
+        now + self.spawn_latency
+    }
+
+    fn release(&mut self, now: f64) {
+        if let Some(s) = self.sessions.iter_mut().rev().find(|s| s.1.is_none()) {
+            s.1 = Some(now);
+        }
+    }
+
+    fn cost(&self, now: f64) -> f64 {
+        self.sessions
+            .iter()
+            .map(|(start, end)| {
+                let until = end.unwrap_or(now).max(*start);
+                let hours = ((until - start) / 3600.0).ceil().max(1.0);
+                hours * self.hourly_rate
+            })
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "sim-ec2"
+    }
+}
+
+/// Marker type pairing a provisioned node with its provider session
+/// (used by elastic drivers that mix local + IaaS capacity).
+#[derive(Debug, Clone, Copy)]
+pub struct ProvisionedNode {
+    /// The grid member.
+    pub node: NodeId,
+    /// When it became usable.
+    pub ready_at: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_is_instant_and_free() {
+        let mut p = LocalCluster::default();
+        assert_eq!(p.provision(5.0), 5.0);
+        assert_eq!(p.cost(100.0), 0.0);
+    }
+
+    #[test]
+    fn ec2_latency_and_billing() {
+        let mut p = SimEc2::new();
+        let ready = p.provision(0.0);
+        assert!((ready - 90.0).abs() < 1e-9);
+        // 30 minutes of use bills one full hour
+        p.release(1800.0);
+        assert!((p.cost(1800.0) - 0.266).abs() < 1e-9);
+        // a second instance running 90 minutes bills two hours
+        p.provision(0.0);
+        p.release(5400.0);
+        assert!((p.cost(5400.0) - 0.266 * 3.0).abs() < 1e-9);
+        assert_eq!(p.total_provisioned(), 2);
+    }
+
+    #[test]
+    fn unreleased_instances_keep_billing() {
+        let mut p = SimEc2::new();
+        p.provision(0.0);
+        let c1 = p.cost(3600.0);
+        let c2 = p.cost(7200.0);
+        assert!(c2 > c1);
+    }
+}

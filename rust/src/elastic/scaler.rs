@@ -1,0 +1,153 @@
+//! The dynamic scaling decision loop — Algorithm 4 (§3.2).
+//!
+//! ```text
+//! while TRUE:
+//!   getCurrentSystemHealthStatus()
+//!   if load ≥ maxThreshold AND spawned < maxInstancesToBeSpawned:
+//!     scaleOut(); wait(timeBetweenScaling)
+//!   else if load ≤ minThreshold:
+//!     scaleIn(); wait(timeBetweenScaling)
+//!   else: wait(timeBetweenHealthChecks)
+//! ```
+//!
+//! The long wait after a scaling action is the anti-jitter buffer: "This
+//! longer wait between scaling decisions prevents cascaded scaling and
+//! jitter" (§4.3.1); the wide threshold gap has the same purpose.
+
+/// A scaling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Add an instance.
+    Out,
+    /// Remove an instance.
+    In,
+    /// Do nothing this round.
+    None,
+}
+
+/// Algorithm 4 state machine.
+#[derive(Debug, Clone)]
+pub struct DynamicScaler {
+    /// `maxThreshold` on the monitored measure.
+    pub max_threshold: f64,
+    /// `minThreshold`.
+    pub min_threshold: f64,
+    /// `maxInstancesToBeSpawned`.
+    pub max_instances: usize,
+    /// Anti-jitter buffer after an action (virtual s).
+    pub time_between_scaling: f64,
+    /// Poll period (virtual s).
+    pub time_between_health_checks: f64,
+    /// Instances spawned so far by this scaler.
+    pub spawned: usize,
+    /// Next virtual time a decision may be taken.
+    next_decision_at: f64,
+}
+
+impl DynamicScaler {
+    /// Build from config-style parameters.
+    pub fn new(
+        max_threshold: f64,
+        min_threshold: f64,
+        max_instances: usize,
+        time_between_scaling: f64,
+        time_between_health_checks: f64,
+    ) -> Self {
+        assert!(
+            max_threshold > min_threshold,
+            "threshold gap must be positive (anti-jitter, §4.3.1)"
+        );
+        Self {
+            max_threshold,
+            min_threshold,
+            max_instances,
+            time_between_scaling,
+            time_between_health_checks,
+            spawned: 0,
+            next_decision_at: 0.0,
+        }
+    }
+
+    /// Evaluate one health observation at virtual time `now`; `instances`
+    /// is the current main-cluster size.
+    pub fn decide(&mut self, now: f64, load: f64, instances: usize) -> ScaleDecision {
+        if now < self.next_decision_at {
+            return ScaleDecision::None; // inside the anti-jitter buffer
+        }
+        if load >= self.max_threshold && self.spawned < self.max_instances {
+            self.spawned += 1;
+            self.next_decision_at = now + self.time_between_scaling;
+            ScaleDecision::Out
+        } else if load <= self.min_threshold && instances > 1 {
+            self.spawned = self.spawned.saturating_sub(1);
+            self.next_decision_at = now + self.time_between_scaling;
+            ScaleDecision::In
+        } else {
+            self.next_decision_at = now + self.time_between_health_checks;
+            ScaleDecision::None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler() -> DynamicScaler {
+        DynamicScaler::new(0.8, 0.1, 3, 30.0, 5.0)
+    }
+
+    #[test]
+    fn scales_out_on_high_load() {
+        let mut s = scaler();
+        assert_eq!(s.decide(0.0, 0.9, 1), ScaleDecision::Out);
+        assert_eq!(s.spawned, 1);
+    }
+
+    #[test]
+    fn anti_jitter_buffer_blocks_cascade() {
+        let mut s = scaler();
+        assert_eq!(s.decide(0.0, 0.9, 1), ScaleDecision::Out);
+        // still overloaded immediately after: no cascaded scale-out
+        assert_eq!(s.decide(5.0, 0.95, 2), ScaleDecision::None);
+        assert_eq!(s.decide(29.9, 0.95, 2), ScaleDecision::None);
+        // after the buffer the next action is allowed
+        assert_eq!(s.decide(30.0, 0.95, 2), ScaleDecision::Out);
+    }
+
+    #[test]
+    fn respects_max_instances() {
+        let mut s = scaler();
+        let mut t = 0.0;
+        for _ in 0..3 {
+            assert_eq!(s.decide(t, 0.99, 1), ScaleDecision::Out);
+            t += 31.0;
+        }
+        assert_eq!(s.decide(t, 0.99, 4), ScaleDecision::None, "cap reached");
+    }
+
+    #[test]
+    fn scales_in_on_idle() {
+        let mut s = scaler();
+        s.decide(0.0, 0.9, 1); // out
+        assert_eq!(s.decide(40.0, 0.05, 2), ScaleDecision::In);
+    }
+
+    #[test]
+    fn never_scales_in_below_one_instance() {
+        let mut s = scaler();
+        assert_eq!(s.decide(0.0, 0.0, 1), ScaleDecision::None);
+    }
+
+    #[test]
+    fn mid_band_does_nothing() {
+        let mut s = scaler();
+        assert_eq!(s.decide(0.0, 0.5, 2), ScaleDecision::None);
+    }
+
+    #[test]
+    #[should_panic(expected = "threshold gap")]
+    fn inverted_thresholds_rejected() {
+        DynamicScaler::new(0.1, 0.8, 3, 30.0, 5.0);
+    }
+}

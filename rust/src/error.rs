@@ -1,0 +1,104 @@
+//! Unified error type for the Cloud²Sim crate.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, C2SError>;
+
+/// All error conditions surfaced by the simulator, the grid substrate, the
+/// MapReduce engines and the elastic middleware.
+#[derive(Error, Debug)]
+pub enum C2SError {
+    /// A simulated node exhausted its configured heap capacity.
+    ///
+    /// Mirrors the paper's `java.lang.OutOfMemoryError: Java heap space`
+    /// observed when large MapReduce jobs run on too few instances
+    /// (§5.2, Figs 5.10/5.11, Table 5.3).
+    #[error("simulated OutOfMemory on node {node}: used {used_bytes}B + {requested_bytes}B requested > capacity {capacity_bytes}B")]
+    OutOfMemory {
+        node: usize,
+        used_bytes: u64,
+        requested_bytes: u64,
+        capacity_bytes: u64,
+    },
+
+    /// GC-overhead-limit analog: too large a fraction of virtual time spent
+    /// in simulated memory management.
+    #[error("simulated GC overhead limit exceeded on node {node} (gc fraction {gc_fraction:.2})")]
+    GcOverheadLimit { node: usize, gc_fraction: f64 },
+
+    /// Cluster-level failures (no members, master missing, split-brain...).
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    /// A distributed-executor task panicked or was rejected.
+    #[error("executor error: {0}")]
+    Executor(String),
+
+    /// The MapReduce supervisor lost a member mid-job (paper §5.2.2:
+    /// Hazelcast instances joining a running MR job crashed it).
+    #[error("mapreduce job failed: {0}")]
+    MapReduce(String),
+
+    /// Configuration file / property parsing problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// PJRT / artifact problems (missing artifacts, compile failure...).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Serialization of a distributed object failed.
+    #[error("serialization error: {0}")]
+    Serialization(String),
+
+    /// Elastic scaling protocol violation (e.g. double scale-out).
+    #[error("scaling error: {0}")]
+    Scaling(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl C2SError {
+    /// True when the error is the simulated heap exhaustion that the paper
+    /// resolves by adding nodes.
+    pub fn is_oom(&self) -> bool {
+        matches!(self, C2SError::OutOfMemory { .. })
+    }
+}
+
+impl From<anyhow::Error> for C2SError {
+    fn from(e: anyhow::Error) -> Self {
+        C2SError::Runtime(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oom_detection() {
+        let e = C2SError::OutOfMemory {
+            node: 1,
+            used_bytes: 100,
+            requested_bytes: 10,
+            capacity_bytes: 105,
+        };
+        assert!(e.is_oom());
+        assert!(!C2SError::Cluster("x".into()).is_oom());
+        let msg = e.to_string();
+        assert!(msg.contains("node 1"));
+    }
+
+    #[test]
+    fn from_anyhow() {
+        let a = anyhow::anyhow!("boom");
+        let e: C2SError = a.into();
+        assert!(matches!(e, C2SError::Runtime(_)));
+    }
+}

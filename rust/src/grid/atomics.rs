@@ -1,0 +1,145 @@
+//! Distributed atomic primitives: `IAtomicLong` (§4.3.2).
+//!
+//! The adaptive scaler's scaling-decision flag "should be get and set in a
+//! concurrent and distributed environment atomically, ensuring that exactly
+//! one instance takes action of it" (§3.2.3). The atomic lives on the
+//! partition owner of its name; callers on other members pay a round-trip
+//! control message per operation — which is why the paper uses *non-atomic*
+//! distributed objects for the rest of the scaling state "to avoid slowing
+//! down the scaling process with locks".
+
+use crate::grid::cluster::{GridCluster, NodeId};
+use crate::grid::partition::partition_of;
+
+impl GridCluster {
+    fn atomic_owner(&self, name: &str) -> NodeId {
+        let p = partition_of(name.as_bytes(), self.cfg.partition_count);
+        self.member_cache[self.table.owner(p)]
+    }
+
+    fn charge_atomic_op(&mut self, caller: NodeId, name: &str) {
+        let owner = self.atomic_owner(name);
+        let cost = if owner == caller {
+            0.0
+        } else {
+            // request + response
+            self.net.control() + self.net.control()
+        };
+        self.advance_busy(caller, cost);
+        self.metrics.incr("atomic.ops");
+    }
+
+    /// Read an `IAtomicLong` (0 when never set).
+    pub fn atomic_get(&mut self, caller: NodeId, name: &str) -> i64 {
+        self.charge_atomic_op(caller, name);
+        *self.atomics.get(name).unwrap_or(&0)
+    }
+
+    /// Set an `IAtomicLong`.
+    pub fn atomic_set(&mut self, caller: NodeId, name: &str, value: i64) {
+        self.charge_atomic_op(caller, name);
+        self.atomics.insert(name.to_string(), value);
+    }
+
+    /// Compare-and-set; returns whether the swap happened. This is the
+    /// primitive behind Algorithm 6's `Atomic{ currentValue ← key; key ← 1 }`
+    /// block — exactly one contender wins.
+    pub fn atomic_cas(&mut self, caller: NodeId, name: &str, expect: i64, new: i64) -> bool {
+        self.charge_atomic_op(caller, name);
+        let cur = self.atomics.entry(name.to_string()).or_insert(0);
+        if *cur == expect {
+            *cur = new;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Atomically read the current value and store `new`
+    /// (Algorithm 6's `currentValue ← key; key ← v`).
+    pub fn atomic_get_and_set(&mut self, caller: NodeId, name: &str, new: i64) -> i64 {
+        self.charge_atomic_op(caller, name);
+        let cur = self.atomics.entry(name.to_string()).or_insert(0);
+        let old = *cur;
+        *cur = new;
+        old
+    }
+
+    /// Add a delta, returning the new value.
+    pub fn atomic_add(&mut self, caller: NodeId, name: &str, delta: i64) -> i64 {
+        self.charge_atomic_op(caller, name);
+        let cur = self.atomics.entry(name.to_string()).or_insert(0);
+        *cur += delta;
+        *cur
+    }
+
+    /// Drop all atomics (tenant teardown).
+    pub fn clear_atomics(&mut self) {
+        self.atomics.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::cluster::GridConfig;
+
+    fn cluster(n: usize) -> GridCluster {
+        GridCluster::with_members(GridConfig::default(), n)
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut c = cluster(2);
+        let m = c.members()[0];
+        assert_eq!(c.atomic_get(m, "flag"), 0);
+        c.atomic_set(m, "flag", -999);
+        assert_eq!(c.atomic_get(m, "flag"), -999);
+    }
+
+    #[test]
+    fn cas_exactly_one_winner() {
+        let mut c = cluster(4);
+        let members = c.members();
+        c.atomic_set(members[0], "key", 0);
+        // all members race to claim the scaling decision
+        let winners: Vec<NodeId> = members
+            .iter()
+            .copied()
+            .filter(|&m| c.atomic_cas(m, "key", 0, 1))
+            .collect();
+        assert_eq!(winners.len(), 1, "exactly one instance takes the action");
+        assert_eq!(c.atomic_get(members[0], "key"), 1);
+    }
+
+    #[test]
+    fn get_and_set_returns_old() {
+        let mut c = cluster(1);
+        let m = c.members()[0];
+        assert_eq!(c.atomic_get_and_set(m, "k", 5), 0);
+        assert_eq!(c.atomic_get_and_set(m, "k", 7), 5);
+        assert_eq!(c.atomic_get(m, "k"), 7);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut c = cluster(1);
+        let m = c.members()[0];
+        assert_eq!(c.atomic_add(m, "n", 3), 3);
+        assert_eq!(c.atomic_add(m, "n", -1), 2);
+    }
+
+    #[test]
+    fn remote_ops_cost_time() {
+        let mut c = cluster(4);
+        // find a caller that does NOT own the atomic
+        let owner = c.atomic_owner("flag");
+        let caller = c.members().into_iter().find(|&m| m != owner).unwrap();
+        let t0 = c.clock(caller);
+        c.atomic_get(caller, "flag");
+        assert!(c.clock(caller) > t0, "remote atomic op pays round-trip");
+        let t0 = c.clock(owner);
+        c.atomic_get(owner, "flag");
+        assert_eq!(c.clock(owner), t0, "owner-local op is free");
+    }
+}

@@ -1,0 +1,547 @@
+//! The grid cluster facade — the `HazelSim` analog (§3.4.1).
+//!
+//! One [`GridCluster`] is one *tenant* in the paper's terminology (1:1
+//! cluster↔tenant mapping, §3.1.2). It owns the membership view, the
+//! partition table, every distributed data structure, the network model and
+//! per-node virtual clocks + heap accounting.
+//!
+//! ### Virtual time
+//!
+//! This container exposes a single CPU core, so node-level parallelism is
+//! *virtualized*: each node carries its own clock, compute advances the
+//! executing node's clock, and cluster-wide phases synchronize with
+//! [`GridCluster::barrier`] (makespan = max of node clocks). Compute costs
+//! are calibrated against real PJRT kernel executions (see
+//! `runtime::workload`), serialization costs come from real byte encoding,
+//! and communication costs from [`crate::grid::net::NetModel`] — so the
+//! §3.3 terms are measured, not invented. See DESIGN.md §2.
+
+use std::collections::BTreeMap;
+
+use crate::error::{C2SError, Result};
+use crate::grid::backend::BackendProfile;
+use crate::grid::map::DistMapState;
+use crate::grid::member::{MemberId, Membership, MembershipEvent};
+use crate::grid::net::{NetModel, Topology};
+use crate::grid::partition::PartitionTable;
+use crate::grid::serialize::InMemoryFormat;
+use crate::metrics::Metrics;
+use crate::util::rng::Pcg32;
+
+/// Node identifier alias used across the crate.
+pub type NodeId = MemberId;
+
+/// Grid-level configuration (a slice of `cloud2sim.properties` +
+/// `hazelcast.xml` equivalents).
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    /// Backend cost profile (Hazelcast-like / Infinispan-like).
+    pub backend: BackendProfile,
+    /// Deployment topology for the network model.
+    pub topology: Topology,
+    /// Number of partitions (default 271).
+    pub partition_count: u32,
+    /// Backup count.
+    pub backup_count: u32,
+    /// Synchronous backups block the writer (active replication, §2.3.1);
+    /// asynchronous backups replicate in the background ("may be
+    /// outdated") and leave the write latency untouched.
+    pub sync_backups: bool,
+    /// In-memory format (§4.1.2: BINARY for cloud sims, OBJECT for MR).
+    pub in_memory_format: InMemoryFormat,
+    /// Near-cache enabled (disabled for multi-node cloud sims, §4.1.1).
+    pub near_cache: bool,
+    /// Simulated heap capacity per node, bytes.
+    pub node_heap_bytes: u64,
+    /// Deterministic seed.
+    pub seed: u64,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        Self {
+            backend: BackendProfile::hazelcast_like(),
+            topology: Topology::LanCluster,
+            partition_count: crate::grid::partition::DEFAULT_PARTITION_COUNT,
+            backup_count: 0,
+            sync_backups: true,
+            in_memory_format: InMemoryFormat::Binary,
+            near_cache: false,
+            node_heap_bytes: 64 * 1024 * 1024,
+            seed: 0xC10D,
+        }
+    }
+}
+
+/// Per-node simulated state.
+#[derive(Debug)]
+pub struct NodeState {
+    /// Stable member id.
+    pub id: NodeId,
+    /// Virtual clock (seconds since cluster epoch).
+    pub clock: f64,
+    /// Accumulated busy (compute) time — drives the health monitor's
+    /// process-CPU-load signal.
+    pub busy: f64,
+    /// Simulated heap bytes currently used by grid storage on this node.
+    pub heap_used: u64,
+    /// Deterministic per-node random stream.
+    pub rng: Pcg32,
+    /// Logical access tick (LRU/LFU bookkeeping).
+    pub tick: u64,
+}
+
+impl NodeState {
+    fn new(id: NodeId, seed: u64) -> Self {
+        Self {
+            id,
+            clock: 0.0,
+            busy: 0.0,
+            heap_used: 0,
+            rng: Pcg32::new(seed, id.0),
+            tick: 0,
+        }
+    }
+}
+
+/// The cluster: one tenant's grid.
+pub struct GridCluster {
+    /// Immutable configuration.
+    pub cfg: GridConfig,
+    pub(crate) membership: Membership,
+    pub(crate) nodes: BTreeMap<NodeId, NodeState>,
+    pub(crate) table: PartitionTable,
+    pub(crate) maps: BTreeMap<String, DistMapState>,
+    pub(crate) atomics: BTreeMap<String, i64>,
+    /// Cached member list in join order (hot paths avoid re-allocating;
+    /// refreshed on every membership change).
+    pub(crate) member_cache: Vec<NodeId>,
+    pub(crate) queues: BTreeMap<String, std::collections::VecDeque<Vec<u8>>>,
+    pub(crate) replicated:
+        BTreeMap<String, std::collections::HashMap<crate::grid::serialize::GridKey, Vec<u8>>>,
+    /// Network model + counters.
+    pub net: NetModel,
+    /// Substrate metrics (puts, gets, tasks, migrations...).
+    pub metrics: Metrics,
+}
+
+impl GridCluster {
+    /// Create a cluster with `n` members already joined.
+    ///
+    /// Each join charges the backend's instance-initialization cost `F`
+    /// (§3.3) to the joining node's clock.
+    pub fn with_members(cfg: GridConfig, n: usize) -> Self {
+        let mut c = Self::new(cfg);
+        for _ in 0..n {
+            c.join();
+        }
+        c
+    }
+
+    /// Create an empty cluster.
+    pub fn new(cfg: GridConfig) -> Self {
+        let net = NetModel::for_topology(cfg.topology);
+        Self {
+            table: PartitionTable::new(1, cfg.partition_count, cfg.backup_count),
+            membership: Membership::new(),
+            nodes: BTreeMap::new(),
+            maps: BTreeMap::new(),
+            atomics: BTreeMap::new(),
+            member_cache: Vec::new(),
+            queues: BTreeMap::new(),
+            replicated: BTreeMap::new(),
+            net,
+            metrics: Metrics::new(),
+            cfg,
+        }
+    }
+
+    // ---------------- membership ----------------
+
+    /// Join a new member; recomputes the partition table and charges
+    /// migration + init costs. Returns the new member's id.
+    pub fn join(&mut self) -> NodeId {
+        let id = self.membership.join();
+        let mut st = NodeState::new(id, self.cfg.seed);
+        // F term: instance initialization.
+        st.clock += self.cfg.backend.init_cost;
+        // New members start no earlier than the cluster's current frontier:
+        // they join an already-running system.
+        let frontier = self.max_clock();
+        st.clock = st.clock.max(frontier);
+        self.nodes.insert(id, st);
+        self.metrics.incr("membership.joins");
+        self.rebuild_partition_table();
+        id
+    }
+
+    /// Remove a member (scale-in / crash). Entries it owned survive only
+    /// through backups; with `backup_count == 0` the data held by the node
+    /// is lost (the paper mandates synchronous backups for elastic runs,
+    /// §3.4.3). Returns the number of entries lost.
+    pub fn leave(&mut self, id: NodeId) -> Result<u64> {
+        let Some(offset) = self.membership.offset_of(id) else {
+            return Err(C2SError::Cluster(format!("{id} is not a member")));
+        };
+        if self.membership.len() == 1 {
+            return Err(C2SError::Cluster(
+                "cannot remove the last member of a running cluster".into(),
+            ));
+        }
+        let mut lost = 0u64;
+        if self.table.backup_count() == 0 {
+            // entries in partitions owned by the leaver are lost
+            let owned: Vec<u32> = (0..self.table.partition_count())
+                .filter(|&p| self.table.owner(p) == offset)
+                .collect();
+            for m in self.maps.values_mut() {
+                lost += m.drop_partitions(&owned);
+            }
+        }
+        self.membership.leave(id);
+        self.nodes.remove(&id);
+        self.metrics.incr("membership.leaves");
+        self.metrics.add("map.entries_lost", lost);
+        self.rebuild_partition_table();
+        Ok(lost)
+    }
+
+    /// Recompute the partition table after membership change; charges the
+    /// migration cost (moved partitions × per-partition payload) to every
+    /// member and refreshes heap accounting.
+    fn rebuild_partition_table(&mut self) {
+        self.member_cache = self.membership.members().to_vec();
+        let members = self.membership.len().max(1);
+        let next = PartitionTable::new(members, self.cfg.partition_count, self.cfg.backup_count);
+        let moved = if members > 0 {
+            self.table.moved_partitions(&next)
+        } else {
+            0
+        };
+        self.table = next;
+        self.metrics.add("partition.migrations", moved as u64);
+        // Migration cost: proportional to moved data volume.
+        if moved > 0 && !self.maps.is_empty() {
+            let total_bytes: u64 = self.maps.values().map(|m| m.total_bytes()).sum();
+            let frac = moved as f64 / self.cfg.partition_count as f64;
+            let migrate_cost = self.net.transfer((total_bytes as f64 * frac) as u64);
+            for st in self.nodes.values_mut() {
+                st.clock += migrate_cost;
+            }
+        }
+        self.recompute_heap_usage();
+    }
+
+    /// Recompute per-node heap usage from map contents + backups.
+    pub(crate) fn recompute_heap_usage(&mut self) {
+        for st in self.nodes.values_mut() {
+            st.heap_used = 0;
+        }
+        let member_ids: Vec<NodeId> = self.membership.members().to_vec();
+        for m in self.maps.values() {
+            for (p, bytes) in m.partition_bytes() {
+                let owner = member_ids[self.table.owner(p)];
+                if let Some(st) = self.nodes.get_mut(&owner) {
+                    st.heap_used += bytes;
+                }
+                for &b in self.table.backups(p) {
+                    let bid = member_ids[b];
+                    if let Some(st) = self.nodes.get_mut(&bid) {
+                        st.heap_used += bytes;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Current master, or an error for an empty cluster.
+    pub fn master(&self) -> Result<NodeId> {
+        self.membership
+            .master()
+            .ok_or_else(|| C2SError::Cluster("cluster has no members".into()))
+    }
+
+    /// Member ids in join order.
+    pub fn members(&self) -> Vec<NodeId> {
+        self.member_cache.clone()
+    }
+
+    /// Borrowed member list (allocation-free hot-path view).
+    #[inline]
+    pub fn members_ref(&self) -> &[NodeId] {
+        &self.member_cache
+    }
+
+    /// Number of live members.
+    pub fn size(&self) -> usize {
+        self.membership.len()
+    }
+
+    /// Member-list offset of a node (its PartitionUtil offset).
+    pub fn offset_of(&self, id: NodeId) -> Result<usize> {
+        self.membership
+            .offset_of(id)
+            .ok_or_else(|| C2SError::Cluster(format!("{id} is not a member")))
+    }
+
+    /// Drain membership events (listeners).
+    pub fn drain_membership_events(&mut self) -> Vec<MembershipEvent> {
+        self.membership.drain_events()
+    }
+
+    /// Partition-table view (tests, Fig 5.8 stats).
+    pub fn partition_table(&self) -> &PartitionTable {
+        &self.table
+    }
+
+    // ---------------- virtual time ----------------
+
+    /// Clock of a node.
+    pub fn clock(&self, id: NodeId) -> f64 {
+        self.nodes.get(&id).map(|n| n.clock).unwrap_or(0.0)
+    }
+
+    /// Max clock over all members (the makespan so far).
+    pub fn max_clock(&self) -> f64 {
+        self.nodes.values().map(|n| n.clock).fold(0.0, f64::max)
+    }
+
+    /// Advance a node's clock by idle (non-busy) time.
+    pub fn advance(&mut self, id: NodeId, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative time advance: {dt}");
+        if let Some(st) = self.nodes.get_mut(&id) {
+            st.clock += dt;
+        }
+    }
+
+    /// Advance a node's clock by *busy* (compute) time.
+    pub fn advance_busy(&mut self, id: NodeId, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        if let Some(st) = self.nodes.get_mut(&id) {
+            st.clock += dt;
+            st.busy += dt;
+        }
+    }
+
+    /// Accumulated busy time of a node.
+    pub fn busy(&self, id: NodeId) -> f64 {
+        self.nodes.get(&id).map(|n| n.busy).unwrap_or(0.0)
+    }
+
+    /// Synchronize all member clocks to the maximum (a coordination
+    /// barrier), charging the per-member coordination cost `γ` (§3.3).
+    /// Returns the barrier time.
+    pub fn barrier(&mut self) -> f64 {
+        let n = self.size();
+        let gamma = self.cfg.backend.coordination_cost_per_member;
+        // γ grows with cluster size: pairwise heartbeat/ack traffic.
+        let sync_cost = if n > 1 {
+            gamma * (n as f64).ln().max(0.0) * 0.1 + self.net.control() * (n as f64 - 1.0)
+        } else {
+            0.0
+        };
+        let t = self.max_clock() + sync_cost;
+        for st in self.nodes.values_mut() {
+            st.clock = t;
+        }
+        self.metrics.incr("cluster.barriers");
+        t
+    }
+
+    /// Make `target`'s clock at least `caller`'s clock plus one control
+    /// message — the happens-before edge of a dispatch.
+    pub fn sync_from(&mut self, caller: NodeId, target: NodeId) {
+        if caller == target {
+            return;
+        }
+        let lat = self.net.control();
+        let t0 = self.clock(caller) + lat;
+        if let Some(st) = self.nodes.get_mut(&target) {
+            if st.clock < t0 {
+                st.clock = t0;
+            }
+        }
+    }
+
+    // ---------------- heap / memory model ----------------
+
+    /// Heap used on a node.
+    pub fn heap_used(&self, id: NodeId) -> u64 {
+        self.nodes.get(&id).map(|n| n.heap_used).unwrap_or(0)
+    }
+
+    /// Check that `extra` more bytes fit on `node`; models the paper's
+    /// single-node `OutOfMemoryError` failures (§5.2).
+    pub(crate) fn check_heap(&self, node: NodeId, extra: u64) -> Result<()> {
+        let used = self.heap_used(node);
+        if used + extra > self.cfg.node_heap_bytes {
+            return Err(C2SError::OutOfMemory {
+                node: node.0 as usize,
+                used_bytes: used,
+                requested_bytes: extra,
+                capacity_bytes: self.cfg.node_heap_bytes,
+            });
+        }
+        Ok(())
+    }
+
+    /// GC pressure multiplier: past 60% occupancy, simulated JVMs spend a
+    /// superlinear fraction of time collecting, reaching the "GC overhead
+    /// limit exceeded" regime of §5.2.1 near capacity. The curve is
+    /// calibrated so the paper's Table 5.1 single-node thrash (≈5.5× at
+    /// ~90% occupancy) reproduces — this is the θ term of §3.3: adding
+    /// nodes relieves pressure superlinearly.
+    pub fn gc_factor(&self, node: NodeId) -> f64 {
+        let used = self.heap_used(node) as f64;
+        let cap = self.cfg.node_heap_bytes as f64;
+        Self::gc_factor_for_occupancy(used / cap)
+    }
+
+    /// The occupancy→slowdown curve itself (also used by the grid-less
+    /// CloudSim baseline, which models the same single-JVM heap).
+    pub fn gc_factor_for_occupancy(occ: f64) -> f64 {
+        if occ <= 0.6 {
+            1.0
+        } else {
+            // 1.0 at 60% → ~5.5 at 90% → 9.0 at 100%, capped
+            1.0 + 8.0 * ((occ - 0.6) / 0.4).min(1.2).powi(2)
+        }
+    }
+
+    /// Reserve transient (non-map) heap on a node — e.g. the in-flight
+    /// cloudlet workload working set. Fails with OOM when it does not fit.
+    pub fn reserve_scratch(&mut self, node: NodeId, bytes: u64) -> Result<()> {
+        self.check_heap(node, bytes)?;
+        self.adjust_heap(node, bytes as i64);
+        Ok(())
+    }
+
+    /// Release previously reserved scratch heap.
+    pub fn release_scratch(&mut self, node: NodeId, bytes: u64) {
+        self.adjust_heap(node, -(bytes as i64));
+    }
+
+    // ---------------- diagnostics ----------------
+
+    /// Per-node `(member, entries, bytes)` for one map — the Fig 5.8
+    /// "Management Center" view of storage distribution.
+    pub fn map_distribution(&self, map: &str) -> Vec<(NodeId, u64, u64)> {
+        let member_ids: Vec<NodeId> = self.membership.members().to_vec();
+        let mut per: BTreeMap<NodeId, (u64, u64)> =
+            member_ids.iter().map(|&m| (m, (0, 0))).collect();
+        if let Some(m) = self.maps.get(map) {
+            for (p, entries, bytes) in m.partition_stats() {
+                let owner = member_ids[self.table.owner(p)];
+                let e = per.get_mut(&owner).unwrap();
+                e.0 += entries;
+                e.1 += bytes;
+            }
+        }
+        per.into_iter().map(|(k, (e, b))| (k, e, b)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(n: usize) -> GridCluster {
+        GridCluster::with_members(GridConfig::default(), n)
+    }
+
+    #[test]
+    fn join_charges_init_cost() {
+        let c = cluster(1);
+        let m = c.members()[0];
+        assert!(c.clock(m) >= c.cfg.backend.init_cost);
+    }
+
+    #[test]
+    fn barrier_syncs_clocks() {
+        let mut c = cluster(3);
+        let ms = c.members();
+        c.advance_busy(ms[0], 10.0);
+        c.advance_busy(ms[1], 3.0);
+        let t = c.barrier();
+        assert!(t >= 10.0);
+        for m in &ms {
+            assert_eq!(c.clock(*m), t);
+        }
+    }
+
+    #[test]
+    fn barrier_charges_coordination_on_multinode_only() {
+        let mut single = cluster(1);
+        let t0 = single.max_clock();
+        let t1 = single.barrier();
+        assert!((t1 - t0).abs() < 1e-12, "no γ on a single instance");
+
+        let mut multi = cluster(4);
+        let t0 = multi.max_clock();
+        let t1 = multi.barrier();
+        assert!(t1 > t0, "γ > 0 with multiple members");
+    }
+
+    #[test]
+    fn sync_from_orders_dispatch() {
+        let mut c = cluster(2);
+        let ms = c.members();
+        c.advance_busy(ms[0], 5.0);
+        let before = c.clock(ms[1]);
+        c.sync_from(ms[0], ms[1]);
+        assert!(c.clock(ms[1]) > before.max(5.0) - 1e-9);
+        // same-node sync is free
+        let t = c.clock(ms[0]);
+        c.sync_from(ms[0], ms[0]);
+        assert_eq!(c.clock(ms[0]), t);
+    }
+
+    #[test]
+    fn leave_last_member_rejected() {
+        let mut c = cluster(1);
+        let m = c.members()[0];
+        assert!(c.leave(m).is_err());
+    }
+
+    #[test]
+    fn master_failover_via_leave() {
+        let mut c = cluster(3);
+        let ms = c.members();
+        assert_eq!(c.master().unwrap(), ms[0]);
+        c.leave(ms[0]).unwrap();
+        assert_eq!(c.master().unwrap(), ms[1]);
+        assert_eq!(c.size(), 2);
+    }
+
+    #[test]
+    fn gc_factor_kicks_in_late() {
+        let mut c = cluster(1);
+        let m = c.members()[0];
+        assert_eq!(c.gc_factor(m), 1.0);
+        c.nodes.get_mut(&m).unwrap().heap_used = (c.cfg.node_heap_bytes as f64 * 0.99) as u64;
+        assert!(c.gc_factor(m) > 2.0);
+    }
+
+    #[test]
+    fn check_heap_rejects_overflow() {
+        let cfg = GridConfig {
+            node_heap_bytes: 1000,
+            ..GridConfig::default()
+        };
+        let mut c = GridCluster::with_members(cfg, 1);
+        let m = c.members()[0];
+        assert!(c.check_heap(m, 500).is_ok());
+        c.nodes.get_mut(&m).unwrap().heap_used = 900;
+        let e = c.check_heap(m, 500).unwrap_err();
+        assert!(e.is_oom());
+    }
+
+    #[test]
+    fn new_member_starts_at_frontier() {
+        let mut c = cluster(1);
+        let m0 = c.members()[0];
+        c.advance_busy(m0, 100.0);
+        let m1 = c.join();
+        assert!(c.clock(m1) >= 100.0, "joiner cannot start in the past");
+    }
+}

@@ -1,0 +1,214 @@
+//! The distributed executor service (`IExecutorService` analog, §4.1.1).
+//!
+//! Cloud²Sim "sends the logic to the data instead" of pulling data to the
+//! logic: tasks are dispatched to members and run against the member's local
+//! partition view. Dispatch costs (the backend's per-task overhead plus one
+//! control message) are charged to the calling member; compute performed
+//! inside the task is charged to the *executing* member via the cluster's
+//! clock primitives. Awaiting results synchronizes the caller to the
+//! slowest target — which is how distributed speedup (and its
+//! communication-cost erosion, §3.3) materializes in virtual time.
+
+use crate::error::Result;
+use crate::grid::cluster::{GridCluster, NodeId};
+use crate::grid::serialize::GridKey;
+use crate::grid::partition::partition_of;
+
+impl GridCluster {
+    /// Execute a task on one member and await its result.
+    ///
+    /// The closure receives the cluster and the executing member; any grid
+    /// operation it performs is charged to that member. The `caller` pays
+    /// dispatch + result-return messages and ends no earlier than the
+    /// target's completion.
+    pub fn execute_on_member<R>(
+        &mut self,
+        caller: NodeId,
+        target: NodeId,
+        f: impl FnOnce(&mut GridCluster, NodeId) -> R,
+    ) -> R {
+        self.dispatch(caller, target);
+        let r = f(self, target);
+        self.await_from(caller, target);
+        self.metrics.incr("executor.tasks");
+        r
+    }
+
+    /// Execute a task on the member owning `key`'s partition —
+    /// `executeOnKeyOwner` (§4.1.4): "execute the operation on the instance
+    /// that holds the distributed object, instead of accessing it remotely".
+    pub fn execute_on_key_owner<R>(
+        &mut self,
+        caller: NodeId,
+        key: &GridKey,
+        f: impl FnOnce(&mut GridCluster, NodeId) -> R,
+    ) -> R {
+        let p = partition_of(key.partition_key_bytes(), self.cfg.partition_count);
+        let owner = self.member_cache[self.table.owner(p)];
+        self.execute_on_member(caller, owner, f)
+    }
+
+    /// Dispatch one task per member ("uniform partition of the execution",
+    /// §3.1.1), run them at each member's own clock, then synchronize the
+    /// caller to the slowest completion. Returns `(member, result)` pairs in
+    /// member order.
+    pub fn execute_on_all<R>(
+        &mut self,
+        caller: NodeId,
+        mut f: impl FnMut(&mut GridCluster, NodeId) -> R,
+    ) -> Vec<(NodeId, R)> {
+        let members = self.members();
+        let mut out = Vec::with_capacity(members.len());
+        for &m in &members {
+            self.dispatch(caller, m);
+        }
+        for &m in &members {
+            let r = f(self, m);
+            out.push((m, r));
+            self.metrics.incr("executor.tasks");
+        }
+        // await all
+        let mut latest = self.clock(caller);
+        for &m in &members {
+            let done = if m == caller {
+                self.clock(m)
+            } else {
+                self.clock(m) + self.net.control()
+            };
+            latest = latest.max(done);
+        }
+        self.set_clock_at_least(caller, latest);
+        out
+    }
+
+    /// Fallible variant of [`Self::execute_on_all`]: stops at the first
+    /// task error (the supervisor's failure behaviour in §5.2.2).
+    pub fn try_execute_on_all<R>(
+        &mut self,
+        caller: NodeId,
+        mut f: impl FnMut(&mut GridCluster, NodeId) -> Result<R>,
+    ) -> Result<Vec<(NodeId, R)>> {
+        let members = self.members();
+        let mut out = Vec::with_capacity(members.len());
+        for &m in &members {
+            self.dispatch(caller, m);
+        }
+        for &m in &members {
+            let r = f(self, m)?;
+            out.push((m, r));
+            self.metrics.incr("executor.tasks");
+        }
+        let mut latest = self.clock(caller);
+        for &m in &members {
+            let done = if m == caller {
+                self.clock(m)
+            } else {
+                self.clock(m) + self.net.control()
+            };
+            latest = latest.max(done);
+        }
+        self.set_clock_at_least(caller, latest);
+        Ok(out)
+    }
+
+    /// Charge dispatch costs and establish the happens-before edge.
+    fn dispatch(&mut self, caller: NodeId, target: NodeId) {
+        let overhead = self.cfg.backend.dispatch_overhead;
+        self.advance_busy(caller, overhead * 0.25); // submit bookkeeping
+        self.sync_from(caller, target);
+        self.advance_busy(target, overhead * 0.75); // task decode + queue
+    }
+
+    /// Caller blocks until target's current clock + result message.
+    fn await_from(&mut self, caller: NodeId, target: NodeId) {
+        if caller == target {
+            return;
+        }
+        let done = self.clock(target) + self.net.control();
+        self.set_clock_at_least(caller, done);
+    }
+
+    fn set_clock_at_least(&mut self, node: NodeId, t: f64) {
+        if let Some(st) = self.nodes.get_mut(&node) {
+            if st.clock < t {
+                st.clock = t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::cluster::GridConfig;
+
+    fn cluster(n: usize) -> GridCluster {
+        GridCluster::with_members(GridConfig::default(), n)
+    }
+
+    #[test]
+    fn task_runs_on_target_and_caller_awaits() {
+        let mut c = cluster(2);
+        let [a, b]: [NodeId; 2] = c.members().try_into().unwrap();
+        let r = c.execute_on_member(a, b, |cl, me| {
+            assert_eq!(me, b);
+            cl.advance_busy(me, 2.0);
+            "done"
+        });
+        assert_eq!(r, "done");
+        assert!(c.busy(b) >= 2.0, "compute landed on the target");
+        assert!(c.clock(a) >= c.clock(b), "caller awaited the result");
+    }
+
+    #[test]
+    fn execute_on_all_parallel_in_virtual_time() {
+        // 4 tasks of 1s each on 4 members: caller finishes at ~1s + overheads,
+        // NOT 4s — the virtual-time model runs members in parallel.
+        let mut c = cluster(4);
+        let master = c.master().unwrap();
+        c.barrier();
+        let t0 = c.clock(master);
+        c.execute_on_all(master, |cl, me| {
+            cl.advance_busy(me, 1.0);
+        });
+        let elapsed = c.clock(master) - t0;
+        assert!(elapsed >= 1.0, "at least the task time: {elapsed}");
+        assert!(elapsed < 2.0, "parallel, not serial: {elapsed}");
+    }
+
+    #[test]
+    fn execute_on_key_owner_is_local() {
+        let mut c = cluster(3);
+        let master = c.master().unwrap();
+        let key = GridKey::new("some-key");
+        let p = partition_of(key.partition_key_bytes(), c.cfg.partition_count);
+        let expect = c.members()[c.partition_table().owner(p)];
+        let ran_on = c.execute_on_key_owner(master, &key, |_, me| me);
+        assert_eq!(ran_on, expect);
+    }
+
+    #[test]
+    fn try_execute_stops_on_error() {
+        let mut c = cluster(3);
+        let master = c.master().unwrap();
+        let mut count = 0;
+        let res: Result<Vec<(NodeId, ())>> = c.try_execute_on_all(master, |_, _| {
+            count += 1;
+            if count == 2 {
+                Err(crate::error::C2SError::Executor("boom".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(res.is_err());
+        assert_eq!(count, 2, "third task never ran");
+    }
+
+    #[test]
+    fn dispatch_counts_tasks() {
+        let mut c = cluster(2);
+        let master = c.master().unwrap();
+        c.execute_on_all(master, |_, _| ());
+        assert_eq!(c.metrics.counter("executor.tasks"), 2);
+    }
+}

@@ -1,0 +1,775 @@
+//! The distributed map (`IMap` analog): partitioned key-value storage with
+//! synchronous/asynchronous backups, LRU/LFU/TTL eviction and near-caching.
+//!
+//! Storage is byte-true: values are really serialized (see
+//! [`crate::grid::serialize`]) and partition placement follows the
+//! 271-partition consistent hash with `key@partitionKey` affinity
+//! (§2.3.1). Costs charged to the calling member's virtual clock:
+//!
+//! * serialization `S` — per-byte codec cost (skipped for local access in
+//!   `OBJECT` format, §4.1.2),
+//! * communication `C` — network transfer when the caller is not the
+//!   partition owner,
+//! * backup replication — synchronous backups block the caller (§3.2),
+//! * GC pressure — multiplier when the owner's heap runs hot.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::error::Result;
+use crate::grid::cluster::{GridCluster, NodeId};
+use crate::grid::partition::{partition_of, PartitionId};
+use crate::grid::serialize::{GridKey, GridSerialize, InMemoryFormat};
+
+/// Eviction policy for a distributed map (§2.3.1: LRU, LFU, or TTL-based;
+/// Cloud²Sim disables eviction by default, §3.4.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EvictionPolicy {
+    /// No eviction (the Cloud²Sim default — user simulations own object
+    /// lifetime).
+    None,
+    /// Evict least-recently-used beyond `max_entries`.
+    Lru { max_entries: usize },
+    /// Evict least-frequently-used beyond `max_entries`.
+    Lfu { max_entries: usize },
+    /// Entries expire `ttl` virtual seconds after last write.
+    Ttl { ttl: f64 },
+}
+
+/// One stored entry.
+#[derive(Debug, Clone)]
+pub(crate) struct Entry {
+    pub bytes: Vec<u8>,
+    pub partition: PartitionId,
+    pub last_access_tick: u64,
+    pub access_count: u64,
+    pub written_at: f64,
+}
+
+impl Entry {
+    /// Approximate heap footprint: payload + object header overhead.
+    pub fn heap_bytes(&self, key: &GridKey) -> u64 {
+        self.bytes.len() as u64 + key.heap_bytes() + 48
+    }
+}
+
+/// Server-side state of one named distributed map.
+#[derive(Debug, Default)]
+pub struct DistMapState {
+    pub(crate) entries: HashMap<GridKey, Entry>,
+    pub(crate) eviction: Option<EvictionPolicy>,
+    /// Near-cache contents per member (key → cached bytes len), modeling
+    /// which member has which entry cached locally.
+    pub(crate) near_cache: HashMap<NodeId, HashMap<GridKey, usize>>,
+    pub(crate) hits: u64,
+    pub(crate) near_cache_hits: u64,
+}
+
+impl DistMapState {
+    /// Total serialized bytes stored.
+    pub fn total_bytes(&self) -> u64 {
+        self.entries
+            .iter()
+            .map(|(k, e)| e.heap_bytes(k))
+            .sum()
+    }
+
+    /// `(partition, bytes)` aggregation.
+    pub fn partition_bytes(&self) -> BTreeMap<PartitionId, u64> {
+        let mut out = BTreeMap::new();
+        for (k, e) in &self.entries {
+            *out.entry(e.partition).or_insert(0) += e.heap_bytes(k);
+        }
+        out
+    }
+
+    /// `(partition, entry_count, bytes)` triples.
+    pub fn partition_stats(&self) -> Vec<(PartitionId, u64, u64)> {
+        let mut out: BTreeMap<PartitionId, (u64, u64)> = BTreeMap::new();
+        for (k, e) in &self.entries {
+            let s = out.entry(e.partition).or_insert((0, 0));
+            s.0 += 1;
+            s.1 += e.heap_bytes(k);
+        }
+        out.into_iter().map(|(p, (n, b))| (p, n, b)).collect()
+    }
+
+    /// Drop all entries living in the given partitions; returns how many
+    /// were lost (backup-less member departure).
+    pub fn drop_partitions(&mut self, parts: &[PartitionId]) -> u64 {
+        let before = self.entries.len();
+        self.entries.retain(|_, e| !parts.contains(&e.partition));
+        (before - self.entries.len()) as u64
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl GridCluster {
+    /// Configure eviction for a named map (must be set before first use to
+    /// mirror `hazelcast.xml` semantics; re-configuring is allowed and
+    /// simply replaces the policy).
+    pub fn map_configure_eviction(&mut self, map: &str, policy: EvictionPolicy) {
+        self.maps
+            .entry(map.to_string())
+            .or_default()
+            .eviction = Some(policy);
+    }
+
+    /// Put a serializable value. Charges `S`/`C`/backup costs to `caller`'s
+    /// clock; fails with [`crate::error::C2SError::OutOfMemory`] when the
+    /// owner (or a backup) cannot hold the entry.
+    pub fn map_put<V: GridSerialize>(
+        &mut self,
+        caller: NodeId,
+        map: &str,
+        key: impl Into<GridKey>,
+        value: &V,
+    ) -> Result<()> {
+        let key: GridKey = key.into();
+        let bytes = value.to_bytes();
+        self.map_put_bytes(caller, map, key, bytes)
+    }
+
+    /// Byte-level put (the primitive everything else uses).
+    pub fn map_put_bytes(
+        &mut self,
+        caller: NodeId,
+        map: &str,
+        key: GridKey,
+        bytes: Vec<u8>,
+    ) -> Result<()> {
+        let partition = partition_of(key.partition_key_bytes(), self.cfg.partition_count);
+        let owner_off = self.table.owner(partition);
+        let owner = self.member_cache[owner_off];
+        let nbytes = bytes.len() as u64;
+
+        // --- serialization cost (S term) ---
+        let local = owner == caller;
+        let mut cost = match self.cfg.in_memory_format {
+            InMemoryFormat::Binary => {
+                self.cfg.backend.ser_fixed_cost + nbytes as f64 * self.cfg.backend.ser_cost_per_byte
+            }
+            InMemoryFormat::Object if local => 0.0,
+            InMemoryFormat::Object => {
+                self.cfg.backend.ser_fixed_cost + nbytes as f64 * self.cfg.backend.ser_cost_per_byte
+            }
+        };
+
+        // --- communication cost (C term) ---
+        if !local {
+            cost += self.net.transfer(nbytes);
+            self.metrics.incr("map.put.remote");
+        } else {
+            self.net.local();
+            self.metrics.incr("map.put.local");
+        }
+
+        // --- heap admission on owner + synchronous backups ---
+        let entry_heap = nbytes + key.heap_bytes() + 48;
+        let prev_heap = self
+            .maps
+            .get(map)
+            .and_then(|m| m.entries.get(&key))
+            .map(|e| e.heap_bytes(&key))
+            .unwrap_or(0);
+        if entry_heap > prev_heap {
+            self.check_heap(owner, entry_heap - prev_heap)?;
+        }
+        let backup_offsets: Vec<usize> = self.table.backups(partition).to_vec();
+        for &b in &backup_offsets {
+            let bid = self.member_cache[b];
+            if entry_heap > prev_heap {
+                self.check_heap(bid, entry_heap - prev_heap)?;
+            }
+            if self.cfg.sync_backups {
+                // synchronous backup: caller waits for replication ack
+                cost += self.net.transfer(nbytes);
+                self.metrics.incr("map.backup.sync");
+            } else {
+                // asynchronous: replicate in the background — passive
+                // replication, "may be outdated" (§2.3.1)
+                let _ = self.net.transfer(nbytes); // bytes still move
+                self.metrics.incr("map.backup.async");
+            }
+        }
+
+        // GC pressure on the owner inflates the operation.
+        cost *= self.gc_factor(owner);
+
+        // --- store ---
+        let now = self.clock(caller);
+        let tick = {
+            let st = self.nodes.get_mut(&owner).expect("owner state");
+            st.tick += 1;
+            st.tick
+        };
+        if !self.maps.contains_key(map) {
+            self.maps.insert(map.to_string(), DistMapState::default());
+        }
+        let state = self.maps.get_mut(map).expect("just ensured");
+        state.entries.insert(
+            key.clone(),
+            Entry {
+                bytes,
+                partition,
+                last_access_tick: tick,
+                access_count: 0,
+                written_at: now,
+            },
+        );
+        // near-cache invalidation on write (§4.1.1 consistency discussion)
+        for cache in state.near_cache.values_mut() {
+            cache.remove(&key);
+        }
+        self.metrics.incr("map.put");
+        self.apply_eviction(map, owner);
+
+        // heap accounting (owner + backups)
+        let delta = entry_heap as i64 - prev_heap as i64;
+        self.adjust_heap(owner, delta);
+        for &b in &backup_offsets {
+            let bid = self.member_cache[b];
+            self.adjust_heap(bid, delta);
+        }
+
+        self.advance_busy(caller, cost);
+        Ok(())
+    }
+
+    pub(crate) fn adjust_heap(&mut self, node: NodeId, delta: i64) {
+        if let Some(st) = self.nodes.get_mut(&node) {
+            st.heap_used = (st.heap_used as i64 + delta).max(0) as u64;
+        }
+    }
+
+    /// Get + deserialize. Charges deserialization and (for remote keys)
+    /// transfer costs; near-cache short-circuits remote reads when enabled.
+    pub fn map_get<V: GridSerialize>(
+        &mut self,
+        caller: NodeId,
+        map: &str,
+        key: impl Into<GridKey>,
+    ) -> Result<Option<V>> {
+        let key: GridKey = key.into();
+        match self.map_get_bytes(caller, map, &key)? {
+            None => Ok(None),
+            Some(bytes) => Ok(Some(V::from_bytes(&bytes)?)),
+        }
+    }
+
+    /// Byte-level get.
+    pub fn map_get_bytes(
+        &mut self,
+        caller: NodeId,
+        map: &str,
+        key: &GridKey,
+    ) -> Result<Option<Vec<u8>>> {
+        let partition = partition_of(key.partition_key_bytes(), self.cfg.partition_count);
+        let owner_off = self.table.owner(partition);
+        let owner = self.member_cache[owner_off];
+        let local = owner == caller;
+        let near = self.cfg.near_cache;
+
+        let Some(state) = self.maps.get_mut(map) else {
+            return Ok(None);
+        };
+        let Some(entry) = state.entries.get_mut(key) else {
+            return Ok(None);
+        };
+        entry.access_count += 1;
+        let nbytes = entry.bytes.len() as u64;
+        let bytes = entry.bytes.clone();
+        state.hits += 1;
+
+        // near-cache hit?
+        if near && !local {
+            if state
+                .near_cache
+                .get(&caller)
+                .map(|c| c.contains_key(key))
+                .unwrap_or(false)
+            {
+                state.near_cache_hits += 1;
+                self.metrics.incr("map.get.near_cache");
+                // cached deserialized copy: free access
+                return Ok(Some(bytes));
+            }
+            state
+                .near_cache
+                .entry(caller)
+                .or_default()
+                .insert(key.clone(), bytes.len());
+        }
+
+        let mut cost = 0.0;
+        if !local {
+            cost += self.net.transfer(nbytes);
+            self.metrics.incr("map.get.remote");
+        } else {
+            self.metrics.incr("map.get.local");
+        }
+        cost += match self.cfg.in_memory_format {
+            InMemoryFormat::Binary => nbytes as f64 * self.cfg.backend.deser_cost_per_byte,
+            InMemoryFormat::Object if local => 0.0,
+            InMemoryFormat::Object => nbytes as f64 * self.cfg.backend.deser_cost_per_byte,
+        };
+        // bump LRU tick on the owner
+        let tick = {
+            let st = self.nodes.get_mut(&owner).expect("owner state");
+            st.tick += 1;
+            st.tick
+        };
+        if let Some(state) = self.maps.get_mut(map) {
+            if let Some(e) = state.entries.get_mut(key) {
+                e.last_access_tick = tick;
+            }
+        }
+        self.advance_busy(caller, cost);
+        Ok(Some(bytes))
+    }
+
+    /// Remove a key; returns whether it existed.
+    pub fn map_remove(&mut self, caller: NodeId, map: &str, key: impl Into<GridKey>) -> bool {
+        let key: GridKey = key.into();
+        let partition = partition_of(key.partition_key_bytes(), self.cfg.partition_count);
+        let owner = self.member_cache[self.table.owner(partition)];
+        let backups: Vec<usize> = self.table.backups(partition).to_vec();
+        let removed = self
+            .maps
+            .get_mut(map)
+            .and_then(|m| {
+                for cache in m.near_cache.values_mut() {
+                    cache.remove(&key);
+                }
+                m.entries.remove(&key)
+            });
+        if let Some(e) = removed {
+            let heap = e.heap_bytes(&key) as i64;
+            self.adjust_heap(owner, -heap);
+            for b in backups {
+                let bid = self.member_cache[b];
+                self.adjust_heap(bid, -heap);
+            }
+            if owner != caller {
+                let c = self.net.transfer(64);
+                self.advance_busy(caller, c);
+            }
+            self.metrics.incr("map.remove");
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Number of entries in a map.
+    pub fn map_len(&self, map: &str) -> usize {
+        self.maps.get(map).map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// All keys of a map whose partition is owned by `member` — the
+    /// data-locality view a partition-aware task iterates (§4.1.1).
+    pub fn map_local_keys(&self, member: NodeId, map: &str) -> Vec<GridKey> {
+        let Ok(off) = self.offset_of(member) else {
+            return Vec::new();
+        };
+        let Some(state) = self.maps.get(map) else {
+            return Vec::new();
+        };
+        let mut keys: Vec<GridKey> = state
+            .entries
+            .iter()
+            .filter(|(_, e)| self.table.owner(e.partition) == off)
+            .map(|(k, _)| k.clone())
+            .collect();
+        keys.sort();
+        keys
+    }
+
+    /// All keys (sorted for determinism).
+    pub fn map_keys(&self, map: &str) -> Vec<GridKey> {
+        let Some(state) = self.maps.get(map) else {
+            return Vec::new();
+        };
+        let mut keys: Vec<GridKey> = state.entries.keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+
+    /// Clear all distributed objects of a map (simulation teardown, §3.4.3:
+    /// "Distributed objects are removed by the user simulations ... at the
+    /// end of simulations").
+    pub fn map_clear(&mut self, map: &str) {
+        if let Some(state) = self.maps.get_mut(map) {
+            state.entries.clear();
+            state.near_cache.clear();
+        }
+        self.recompute_heap_usage();
+    }
+
+    /// Map-level statistics `(hits, near_cache_hits)`.
+    pub fn map_stats(&self, map: &str) -> (u64, u64) {
+        self.maps
+            .get(map)
+            .map(|m| (m.hits, m.near_cache_hits))
+            .unwrap_or((0, 0))
+    }
+
+    /// Apply the configured eviction policy after a put.
+    fn apply_eviction(&mut self, map: &str, owner: NodeId) {
+        let now = self.clock(owner);
+        let Some(state) = self.maps.get_mut(map) else {
+            return;
+        };
+        let Some(policy) = state.eviction else {
+            return;
+        };
+        let victims: Vec<GridKey> = match policy {
+            EvictionPolicy::None => Vec::new(),
+            EvictionPolicy::Lru { max_entries } => {
+                if state.entries.len() <= max_entries {
+                    Vec::new()
+                } else {
+                    let excess = state.entries.len() - max_entries;
+                    let mut by_tick: Vec<(&GridKey, u64)> = state
+                        .entries
+                        .iter()
+                        .map(|(k, e)| (k, e.last_access_tick))
+                        .collect();
+                    by_tick.sort_by_key(|&(k, t)| (t, k.raw.clone()));
+                    by_tick
+                        .into_iter()
+                        .take(excess)
+                        .map(|(k, _)| k.clone())
+                        .collect()
+                }
+            }
+            EvictionPolicy::Lfu { max_entries } => {
+                if state.entries.len() <= max_entries {
+                    Vec::new()
+                } else {
+                    let excess = state.entries.len() - max_entries;
+                    let mut by_freq: Vec<(&GridKey, u64)> = state
+                        .entries
+                        .iter()
+                        .map(|(k, e)| (k, e.access_count))
+                        .collect();
+                    by_freq.sort_by_key(|&(k, c)| (c, k.raw.clone()));
+                    by_freq
+                        .into_iter()
+                        .take(excess)
+                        .map(|(k, _)| k.clone())
+                        .collect()
+                }
+            }
+            EvictionPolicy::Ttl { ttl } => state
+                .entries
+                .iter()
+                .filter(|(_, e)| now - e.written_at > ttl)
+                .map(|(k, _)| k.clone())
+                .collect(),
+        };
+        if !victims.is_empty() {
+            for k in &victims {
+                state.entries.remove(k);
+                for cache in state.near_cache.values_mut() {
+                    cache.remove(k);
+                }
+            }
+            self.metrics.add("map.evictions", victims.len() as u64);
+            self.recompute_heap_usage();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::cluster::GridConfig;
+
+    fn cluster(n: usize) -> GridCluster {
+        GridCluster::with_members(GridConfig::default(), n)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut c = cluster(3);
+        let m = c.members()[0];
+        c.map_put(m, "vms", "vm-1", &42u64).unwrap();
+        let v: Option<u64> = c.map_get(m, "vms", "vm-1").unwrap();
+        assert_eq!(v, Some(42));
+        let missing: Option<u64> = c.map_get(m, "vms", "vm-2").unwrap();
+        assert_eq!(missing, None);
+    }
+
+    #[test]
+    fn put_charges_caller_clock() {
+        let mut c = cluster(2);
+        let m = c.members()[0];
+        let t0 = c.clock(m);
+        for i in 0..100 {
+            c.map_put(m, "xs", format!("k{i}"), &vec![0u8; 1000]).unwrap();
+        }
+        assert!(c.clock(m) > t0, "puts must cost time");
+    }
+
+    #[test]
+    fn heap_accounting_tracks_puts_and_removes() {
+        let mut c = cluster(1);
+        let m = c.members()[0];
+        assert_eq!(c.heap_used(m), 0);
+        c.map_put(m, "xs", "a", &vec![0u8; 4096]).unwrap();
+        let used = c.heap_used(m);
+        assert!(used > 4096);
+        // overwrite with smaller value shrinks usage
+        c.map_put(m, "xs", "a", &vec![0u8; 16]).unwrap();
+        assert!(c.heap_used(m) < used);
+        assert!(c.map_remove(m, "xs", "a"));
+        assert_eq!(c.heap_used(m), 0);
+        assert!(!c.map_remove(m, "xs", "a"));
+    }
+
+    #[test]
+    fn oom_on_overflow_fixed_by_more_nodes() {
+        let cfg = GridConfig {
+            node_heap_bytes: 200 * 1024,
+            ..GridConfig::default()
+        };
+        // 1 node: 100 × 4KB entries ≈ 410KB > 200KB → OOM
+        let mut c1 = GridCluster::with_members(cfg.clone(), 1);
+        let m = c1.members()[0];
+        let mut failed = false;
+        for i in 0..100 {
+            if c1
+                .map_put(m, "big", format!("k{i}"), &vec![0u8; 4096])
+                .is_err()
+            {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "single node must OOM");
+        // 4 nodes: same data fits
+        let mut c4 = GridCluster::with_members(cfg, 4);
+        let m = c4.members()[0];
+        for i in 0..100 {
+            c4.map_put(m, "big", format!("k{i}"), &vec![0u8; 4096])
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn backups_replicate_and_cost() {
+        let cfg = GridConfig {
+            backup_count: 1,
+            ..GridConfig::default()
+        };
+        let mut c = GridCluster::with_members(cfg, 3);
+        let m = c.members()[0];
+        c.map_put(m, "xs", "a", &7u64).unwrap();
+        assert!(c.metrics.counter("map.backup.sync") >= 1);
+        // entry survives the owner leaving
+        let total_before: u64 = c.members().iter().map(|&n| c.heap_used(n)).sum();
+        assert!(total_before > 0);
+    }
+
+    #[test]
+    fn data_lost_without_backups_on_leave() {
+        let mut c = cluster(3);
+        let m = c.members()[0];
+        for i in 0..200 {
+            c.map_put(m, "xs", format!("k{i}"), &(i as u64)).unwrap();
+        }
+        let victim = c.members()[2];
+        let lost = c.leave(victim).unwrap();
+        assert!(lost > 0, "backup-less leave loses the departed node's partitions");
+        assert!(c.map_len("xs") < 200);
+    }
+
+    #[test]
+    fn no_data_lost_with_backups_on_leave() {
+        let cfg = GridConfig {
+            backup_count: 1,
+            ..GridConfig::default()
+        };
+        let mut c = GridCluster::with_members(cfg, 3);
+        let m = c.members()[0];
+        for i in 0..200 {
+            c.map_put(m, "xs", format!("k{i}"), &(i as u64)).unwrap();
+        }
+        let victim = c.members()[2];
+        let lost = c.leave(victim).unwrap();
+        assert_eq!(lost, 0, "synchronous backups prevent loss (§3.4.3)");
+        assert_eq!(c.map_len("xs"), 200);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut c = cluster(1);
+        let m = c.members()[0];
+        c.map_configure_eviction("xs", EvictionPolicy::Lru { max_entries: 10 });
+        for i in 0..20 {
+            c.map_put(m, "xs", format!("k{i:02}"), &(i as u64)).unwrap();
+        }
+        assert_eq!(c.map_len("xs"), 10);
+        // oldest entries evicted
+        let v: Option<u64> = c.map_get(m, "xs", "k00").unwrap();
+        assert_eq!(v, None);
+        let v: Option<u64> = c.map_get(m, "xs", "k19").unwrap();
+        assert_eq!(v, Some(19));
+    }
+
+    #[test]
+    fn ttl_eviction() {
+        let mut c = cluster(1);
+        let m = c.members()[0];
+        c.map_configure_eviction("xs", EvictionPolicy::Ttl { ttl: 10.0 });
+        c.map_put(m, "xs", "old", &1u64).unwrap();
+        c.advance(m, 100.0);
+        c.map_put(m, "xs", "new", &2u64).unwrap(); // triggers sweep
+        assert_eq!(c.map_len("xs"), 1);
+        assert_eq!(c.map_get::<u64>(m, "xs", "new").unwrap(), Some(2));
+    }
+
+    #[test]
+    fn near_cache_hits_are_free() {
+        let cfg = GridConfig {
+            near_cache: true,
+            ..GridConfig::default()
+        };
+        let mut c = GridCluster::with_members(cfg, 2);
+        let members = c.members();
+        // find a key owned by member 1, accessed from member 0
+        let mut key = None;
+        for i in 0..100 {
+            let k = GridKey::new(format!("probe{i}"));
+            let p = partition_of(k.partition_key_bytes(), c.cfg.partition_count);
+            if c.partition_table().owner(p) == 1 {
+                key = Some(k);
+                break;
+            }
+        }
+        let key = key.expect("some key must land on member 1");
+        c.map_put(members[1], "xs", key.clone(), &vec![0u8; 10_000])
+            .unwrap();
+        let _: Option<Vec<u8>> = c.map_get(members[0], "xs", key.clone()).unwrap(); // populates cache
+        let t0 = c.clock(members[0]);
+        let _: Option<Vec<u8>> = c.map_get(members[0], "xs", key.clone()).unwrap(); // cache hit
+        assert_eq!(c.clock(members[0]), t0, "near-cache hit is free");
+        let (_, nc) = c.map_stats("xs");
+        assert!(nc >= 1);
+        // a put invalidates the cache
+        c.map_put(members[1], "xs", key.clone(), &vec![1u8; 10_000])
+            .unwrap();
+        let t1 = c.clock(members[0]);
+        let _: Option<Vec<u8>> = c.map_get(members[0], "xs", key).unwrap();
+        assert!(c.clock(members[0]) > t1, "invalidated entry refetches");
+    }
+
+    #[test]
+    fn local_keys_partition_aware() {
+        let mut c = cluster(3);
+        let m = c.members()[0];
+        for i in 0..300 {
+            c.map_put(m, "xs", format!("k{i}"), &(i as u64)).unwrap();
+        }
+        let mut total = 0;
+        for node in c.members() {
+            total += c.map_local_keys(node, "xs").len();
+        }
+        assert_eq!(total, 300, "every key is local to exactly one member");
+    }
+
+    #[test]
+    fn distribution_roughly_uniform() {
+        let mut c = cluster(4);
+        let m = c.members()[0];
+        for i in 0..1000 {
+            c.map_put(m, "xs", format!("key-{i}"), &(i as u64)).unwrap();
+        }
+        let dist = c.map_distribution("xs");
+        assert_eq!(dist.len(), 4);
+        let counts: Vec<u64> = dist.iter().map(|(_, n, _)| *n).collect();
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        assert!(
+            (max as f64) < (min as f64) * 1.6 + 16.0,
+            "Fig 5.8: near-uniform distribution, got {counts:?}"
+        );
+    }
+
+    #[test]
+    fn object_format_local_access_free_of_codec() {
+        let cfg = GridConfig {
+            in_memory_format: InMemoryFormat::Object,
+            ..GridConfig::default()
+        };
+        let mut c = GridCluster::with_members(cfg, 1);
+        let m = c.members()[0];
+        let t0 = c.clock(m);
+        c.map_put(m, "xs", "k", &vec![0u8; 1_000_000]).unwrap();
+        assert_eq!(c.clock(m), t0, "OBJECT-format local put has no codec cost");
+    }
+
+    #[test]
+    fn clear_resets_heap() {
+        let mut c = cluster(2);
+        let m = c.members()[0];
+        for i in 0..50 {
+            c.map_put(m, "xs", format!("k{i}"), &vec![0u8; 1024]).unwrap();
+        }
+        c.map_clear("xs");
+        assert_eq!(c.map_len("xs"), 0);
+        for node in c.members() {
+            assert_eq!(c.heap_used(node), 0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod backup_mode_tests {
+    use super::*;
+    use crate::grid::cluster::{GridCluster, GridConfig};
+
+    #[test]
+    fn async_backups_cheaper_for_writer_but_bytes_still_move() {
+        let mk = |sync| {
+            GridCluster::with_members(
+                GridConfig {
+                    backup_count: 1,
+                    sync_backups: sync,
+                    ..GridConfig::default()
+                },
+                3,
+            )
+        };
+        let mut sync_c = mk(true);
+        let mut async_c = mk(false);
+        let (ms, ma) = (sync_c.members()[0], async_c.members()[0]);
+        let t0s = sync_c.clock(ms);
+        let t0a = async_c.clock(ma);
+        for i in 0..200 {
+            sync_c.map_put(ms, "xs", format!("k{i}"), &vec![0u8; 2048]).unwrap();
+            async_c.map_put(ma, "xs", format!("k{i}"), &vec![0u8; 2048]).unwrap();
+        }
+        let cost_sync = sync_c.clock(ms) - t0s;
+        let cost_async = async_c.clock(ma) - t0a;
+        assert!(
+            cost_async < cost_sync,
+            "async backups must not block the writer: {cost_async} vs {cost_sync}"
+        );
+        assert_eq!(async_c.metrics.counter("map.backup.async"), 200);
+        // replication still happened: bytes moved, heap charged on backups
+        assert!(async_c.net.bytes >= sync_c.net.bytes / 2);
+        let total_async: u64 = async_c.members().iter().map(|&m| async_c.heap_used(m)).sum();
+        let total_sync: u64 = sync_c.members().iter().map(|&m| sync_c.heap_used(m)).sum();
+        assert_eq!(total_async, total_sync, "same replica volume");
+    }
+}

@@ -1,0 +1,194 @@
+//! Cluster membership: joins, leaves, first-joiner master election, and
+//! membership listeners.
+//!
+//! The paper's "multiple Simulator instances" strategy (§3.1.1) relies on
+//! run-time master election — "the instance that joins the cluster as the
+//! first instance becomes the master" — with fail-over to the next-oldest
+//! member when the master leaves (possible because, unlike the static
+//! strategies, every instance runs the same code).
+
+/// Stable node identifier: assigned at join time, never reused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MemberId(pub u64);
+
+impl std::fmt::Display for MemberId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "member-{}", self.0)
+    }
+}
+
+/// Membership change events delivered to listeners.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// A member joined the cluster.
+    Joined(MemberId),
+    /// A member left (scale-in, crash, or shutdown).
+    Left(MemberId),
+    /// Mastership moved to this member.
+    MasterChanged(MemberId),
+}
+
+/// The membership view of one cluster (tenant).
+#[derive(Debug, Default)]
+pub struct Membership {
+    /// Members in join order — index 0 is the master.
+    members: Vec<MemberId>,
+    next_id: u64,
+    /// Event log (listeners poll it; keeps the substrate single-threaded
+    /// and deterministic).
+    events: Vec<MembershipEvent>,
+}
+
+impl Membership {
+    /// Empty cluster.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Join a new member; returns its id. First joiner becomes master.
+    pub fn join(&mut self) -> MemberId {
+        let id = MemberId(self.next_id);
+        self.next_id += 1;
+        self.members.push(id);
+        self.events.push(MembershipEvent::Joined(id));
+        if self.members.len() == 1 {
+            self.events.push(MembershipEvent::MasterChanged(id));
+        }
+        id
+    }
+
+    /// Remove a member. When the master leaves, mastership falls over to
+    /// the next-oldest member (run-time election, §3.1.1).
+    pub fn leave(&mut self, id: MemberId) -> bool {
+        let Some(pos) = self.members.iter().position(|m| *m == id) else {
+            return false;
+        };
+        let was_master = pos == 0;
+        self.members.remove(pos);
+        self.events.push(MembershipEvent::Left(id));
+        if was_master {
+            if let Some(&new_master) = self.members.first() {
+                self.events.push(MembershipEvent::MasterChanged(new_master));
+            }
+        }
+        true
+    }
+
+    /// Current master (the oldest member), if any.
+    pub fn master(&self) -> Option<MemberId> {
+        self.members.first().copied()
+    }
+
+    /// True when `id` is the current master.
+    pub fn is_master(&self, id: MemberId) -> bool {
+        self.master() == Some(id)
+    }
+
+    /// Members in join order.
+    pub fn members(&self) -> &[MemberId] {
+        &self.members
+    }
+
+    /// Number of live members.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True when the cluster has no members.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Member-list position of `id` (its "offset" for PartitionUtil).
+    pub fn offset_of(&self, id: MemberId) -> Option<usize> {
+        self.members.iter().position(|m| *m == id)
+    }
+
+    /// The "primary worker" of the Simulator–SimulatorSub strategy: the
+    /// first instance that is *not* the master (§3.1.1, used to delegate
+    /// unparallelizable tasks off the master).
+    pub fn primary_worker(&self) -> Option<MemberId> {
+        self.members.get(1).copied()
+    }
+
+    /// Drain pending membership events.
+    pub fn drain_events(&mut self) -> Vec<MembershipEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_joiner_is_master() {
+        let mut m = Membership::new();
+        let a = m.join();
+        let b = m.join();
+        assert!(m.is_master(a));
+        assert!(!m.is_master(b));
+        assert_eq!(m.primary_worker(), Some(b));
+    }
+
+    #[test]
+    fn master_failover() {
+        let mut m = Membership::new();
+        let a = m.join();
+        let b = m.join();
+        let c = m.join();
+        assert!(m.leave(a));
+        assert!(m.is_master(b), "next-oldest takes over");
+        let ev = m.drain_events();
+        assert!(ev.contains(&MembershipEvent::MasterChanged(b)));
+        m.leave(b);
+        assert!(m.is_master(c));
+        m.leave(c);
+        assert!(m.master().is_none());
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn ids_never_reused() {
+        let mut m = Membership::new();
+        let a = m.join();
+        m.leave(a);
+        let b = m.join();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn leave_unknown_is_noop() {
+        let mut m = Membership::new();
+        m.join();
+        assert!(!m.leave(MemberId(99)));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn offsets_follow_join_order() {
+        let mut m = Membership::new();
+        let a = m.join();
+        let b = m.join();
+        let c = m.join();
+        assert_eq!(m.offset_of(a), Some(0));
+        assert_eq!(m.offset_of(c), Some(2));
+        m.leave(b);
+        assert_eq!(m.offset_of(c), Some(1), "offsets compact after leave");
+    }
+
+    #[test]
+    fn events_logged_in_order() {
+        let mut m = Membership::new();
+        let a = m.join();
+        let ev = m.drain_events();
+        assert_eq!(
+            ev,
+            vec![
+                MembershipEvent::Joined(a),
+                MembershipEvent::MasterChanged(a)
+            ]
+        );
+        assert!(m.drain_events().is_empty(), "drained");
+    }
+}

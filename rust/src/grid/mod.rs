@@ -1,0 +1,35 @@
+//! The in-memory data grid (IMDG) substrate.
+//!
+//! The paper distributes CloudSim over Hazelcast (and the MapReduce layer
+//! additionally over Infinispan). Neither JVM data grid exists here, so this
+//! module implements the grid *from scratch* as a deterministic simulated
+//! cluster: `N` logical nodes, each with its own virtual clock, heap
+//! accounting, partition store and executor queue. Remote operations really
+//! serialize payloads to bytes and charge latency/bandwidth from a calibrated
+//! network model — which is what makes the paper's §3.3 cost terms
+//! (`S`, `C`, `γ`, `F`, `θ`) *emerge* from execution instead of being
+//! hard-coded.
+//!
+//! Module map:
+//! * [`backend`] — Hazelcast-like vs Infinispan-like cost/semantic profiles.
+//! * [`net`] — latency/bandwidth model and message accounting.
+//! * [`serialize`] — byte-true serialization with BINARY/OBJECT formats.
+//! * [`partition`] — 271-partition consistent hashing and ownership.
+//! * [`member`] — membership, first-joiner master election, listeners.
+//! * [`map`] — the distributed map (backups, eviction, near-cache).
+//! * [`atomics`] — `IAtomicLong`, the scaling-flag primitive.
+//! * [`executor`] — the distributed executor service.
+//! * [`cluster`] — the facade tying it all together (`HazelSim` analog).
+
+pub mod atomics;
+pub mod backend;
+pub mod cluster;
+pub mod executor;
+pub mod map;
+pub mod member;
+pub mod net;
+pub mod partition;
+pub mod serialize;
+pub mod structures;
+
+pub use cluster::{GridCluster, GridConfig, NodeId};

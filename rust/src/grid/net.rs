@@ -1,0 +1,114 @@
+//! Simulated cluster network: the `C = f2(n, d, w, s)` communication-cost
+//! term of the paper's §3.3 model.
+//!
+//! The model is deliberately simple and fully observable: a remote operation
+//! between two members costs `base_latency + bytes / bandwidth`, where the
+//! base latency depends on the deployment topology (instances co-located in
+//! one machine, a LAN research-lab cluster, or geo-distributed — §3.3
+//! discusses all three). Message and byte counters feed Fig 5.8-style
+//! distribution statistics and the perf pass.
+
+/// Deployment topology presets (§3.3: "If all the Hazelcast or Infinispan
+/// instances reside inside a single computer, latency will be lower...").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Multiple instances inside a single machine (loopback).
+    SingleMachine,
+    /// A research-lab LAN cluster (the paper's 6-node testbed).
+    LanCluster,
+    /// Geo-distributed deployment (EC2 across zones).
+    GeoDistributed,
+}
+
+/// Network cost model.
+#[derive(Debug, Clone)]
+pub struct NetModel {
+    /// One-way base latency between distinct members (s).
+    pub base_latency: f64,
+    /// Bandwidth between distinct members (bytes/s).
+    pub bandwidth: f64,
+    /// Messages sent (counter).
+    pub messages: u64,
+    /// Payload bytes moved (counter).
+    pub bytes: u64,
+}
+
+impl NetModel {
+    /// Build a model from a topology preset.
+    pub fn for_topology(t: Topology) -> Self {
+        let (lat, bw) = match t {
+            Topology::SingleMachine => (25.0e-6, 4.0e9), // loopback
+            Topology::LanCluster => (120.0e-6, 117.0e6), // GbE research lab
+            Topology::GeoDistributed => (35.0e-3, 20.0e6),
+        };
+        Self {
+            base_latency: lat,
+            bandwidth: bw,
+            messages: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Cost of moving `bytes` between two *distinct* members, and record it.
+    pub fn transfer(&mut self, bytes: u64) -> f64 {
+        self.messages += 1;
+        self.bytes += bytes;
+        self.base_latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Cost of a local (same-member) access: free at this model's
+    /// granularity, but still counted as an operation for statistics.
+    pub fn local(&mut self) -> f64 {
+        0.0
+    }
+
+    /// Cost of a small control message (heartbeat, flag update).
+    pub fn control(&mut self) -> f64 {
+        self.transfer(64)
+    }
+
+    /// Reset counters (benches reuse models across repetitions).
+    pub fn reset_counters(&mut self) {
+        self.messages = 0;
+        self.bytes = 0;
+    }
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        Self::for_topology(Topology::LanCluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_ordering() {
+        let single = NetModel::for_topology(Topology::SingleMachine);
+        let lan = NetModel::for_topology(Topology::LanCluster);
+        let geo = NetModel::for_topology(Topology::GeoDistributed);
+        assert!(single.base_latency < lan.base_latency);
+        assert!(lan.base_latency < geo.base_latency);
+        assert!(single.bandwidth > lan.bandwidth);
+    }
+
+    #[test]
+    fn transfer_counts_and_costs() {
+        let mut net = NetModel::for_topology(Topology::LanCluster);
+        let c1 = net.transfer(1_000);
+        let c2 = net.transfer(1_000_000);
+        assert!(c2 > c1, "bigger payloads cost more");
+        assert_eq!(net.messages, 2);
+        assert_eq!(net.bytes, 1_001_000);
+        net.reset_counters();
+        assert_eq!(net.messages, 0);
+    }
+
+    #[test]
+    fn local_is_free() {
+        let mut net = NetModel::default();
+        assert_eq!(net.local(), 0.0);
+    }
+}

@@ -1,0 +1,229 @@
+//! Partitioning: Hazelcast-style `hash(key) % partitionCount` with 271
+//! partitions by default (§2.3.1), plus the partition table mapping
+//! partitions to owner members and backup members.
+//!
+//! Partition → owner assignment is round-robin over the member list (which
+//! is how Hazelcast's uniform partition distribution appears to the
+//! application; Fig 5.8 shows the paper observing near-equal entry counts
+//! per member). On membership change the table is recomputed and the number
+//! of partitions that *move* is tracked — the migration cost charged by the
+//! cluster facade.
+
+use crate::util::rng::fnv1a64;
+
+/// Default Hazelcast partition count.
+pub const DEFAULT_PARTITION_COUNT: u32 = 271;
+
+/// A partition id in `[0, partition_count)`.
+pub type PartitionId = u32;
+
+/// Compute the partition of a routing-key byte string.
+pub fn partition_of(partition_key: &[u8], partition_count: u32) -> PartitionId {
+    debug_assert!(partition_count > 0);
+    (fnv1a64(partition_key) % partition_count as u64) as u32
+}
+
+/// The partition table: owner and backup members per partition.
+#[derive(Debug, Clone)]
+pub struct PartitionTable {
+    partition_count: u32,
+    /// `owners[p]` = member index owning partition `p`.
+    owners: Vec<usize>,
+    /// `backups[p]` = ordered backup member indices for partition `p`.
+    backups: Vec<Vec<usize>>,
+    backup_count: u32,
+}
+
+impl PartitionTable {
+    /// Build a table for `members` member ids with `backup_count` backups.
+    ///
+    /// `members` are *member list positions* (0..m); the cluster facade maps
+    /// them to stable node ids.
+    pub fn new(member_count: usize, partition_count: u32, backup_count: u32) -> Self {
+        assert!(member_count > 0, "partition table needs at least one member");
+        let mut owners = Vec::with_capacity(partition_count as usize);
+        let mut backups = Vec::with_capacity(partition_count as usize);
+        for p in 0..partition_count {
+            let owner = (p as usize) % member_count;
+            owners.push(owner);
+            let nb = (backup_count as usize).min(member_count.saturating_sub(1));
+            let mut bs = Vec::with_capacity(nb);
+            for k in 1..=nb {
+                bs.push((owner + k) % member_count);
+            }
+            backups.push(bs);
+        }
+        Self {
+            partition_count,
+            owners,
+            backups,
+            backup_count,
+        }
+    }
+
+    /// Partition count.
+    pub fn partition_count(&self) -> u32 {
+        self.partition_count
+    }
+
+    /// Configured backup count (effective count may be lower on small clusters).
+    pub fn backup_count(&self) -> u32 {
+        self.backup_count
+    }
+
+    /// Owner member of a partition.
+    pub fn owner(&self, p: PartitionId) -> usize {
+        self.owners[p as usize]
+    }
+
+    /// Backup members of a partition.
+    pub fn backups(&self, p: PartitionId) -> &[usize] {
+        &self.backups[p as usize]
+    }
+
+    /// Owner member of a routing key.
+    pub fn owner_of_key(&self, partition_key: &[u8]) -> usize {
+        self.owner(partition_of(partition_key, self.partition_count))
+    }
+
+    /// Number of partitions each member owns (Fig 5.8-style distribution).
+    pub fn ownership_histogram(&self, member_count: usize) -> Vec<u32> {
+        let mut h = vec![0u32; member_count];
+        for &o in &self.owners {
+            h[o] += 1;
+        }
+        h
+    }
+
+    /// Count of partitions whose owner differs between `self` and `next`
+    /// — the migration volume of a membership change.
+    pub fn moved_partitions(&self, next: &PartitionTable) -> u32 {
+        assert_eq!(self.partition_count, next.partition_count);
+        self.owners
+            .iter()
+            .zip(next.owners.iter())
+            .filter(|(a, b)| a != b)
+            .count() as u32
+    }
+}
+
+/// The paper's `PartitionUtil` (§4.1.3): contiguous-range partitioning of a
+/// data structure of `no_of_params` elements across
+/// `NO_OF_PARALLEL_EXECUTIONS` instances; instance `offset` handles
+/// `[init, fin)`. Ported with identical ceiling semantics.
+pub fn partition_init(no_of_params: usize, offset: usize, parallel: usize) -> usize {
+    assert!(parallel > 0);
+    let per = (no_of_params as f64 / parallel as f64).ceil();
+    (offset as f64 * per) as usize
+}
+
+/// Final (exclusive) index of the `offset`-th instance's range; clamped to
+/// `no_of_params` exactly as the Java implementation does.
+pub fn partition_final(no_of_params: usize, offset: usize, parallel: usize) -> usize {
+    assert!(parallel > 0);
+    let per = (no_of_params as f64 / parallel as f64).ceil();
+    let temp = ((offset + 1) as f64 * per) as usize;
+    temp.min(no_of_params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn partition_of_stable_and_bounded() {
+        for pc in [1u32, 2, 271, 1024] {
+            for key in [&b"a"[..], b"cloudlet-400", b"", b"vm-7"] {
+                let p = partition_of(key, pc);
+                assert!(p < pc);
+                assert_eq!(p, partition_of(key, pc), "stable");
+            }
+        }
+    }
+
+    #[test]
+    fn table_round_robin_uniform() {
+        let t = PartitionTable::new(6, 271, 0);
+        let h = t.ownership_histogram(6);
+        assert_eq!(h.iter().sum::<u32>(), 271);
+        // 271 = 6*45 + 1: five members own 45, one owns 46
+        assert!(h.iter().all(|&c| c == 45 || c == 46), "{h:?}");
+    }
+
+    #[test]
+    fn backups_never_owner() {
+        let t = PartitionTable::new(4, 271, 2);
+        for p in 0..271 {
+            let o = t.owner(p);
+            let bs = t.backups(p);
+            assert_eq!(bs.len(), 2);
+            assert!(!bs.contains(&o), "backup must not be the owner");
+        }
+    }
+
+    #[test]
+    fn backup_clamped_on_small_cluster() {
+        let t = PartitionTable::new(1, 16, 1);
+        for p in 0..16 {
+            assert!(t.backups(p).is_empty(), "single member cannot back up");
+        }
+    }
+
+    #[test]
+    fn migration_counted() {
+        let a = PartitionTable::new(3, 271, 0);
+        let b = PartitionTable::new(4, 271, 0);
+        let moved = a.moved_partitions(&b);
+        assert!(moved > 0 && moved < 271, "some but not all partitions move: {moved}");
+    }
+
+    // ---- PartitionUtil semantics (paper §4.1.3) ----
+
+    #[test]
+    fn partition_util_matches_paper_example() {
+        // 10 elements over 3 instances, ceil(10/3)=4 → [0,4) [4,8) [8,10)
+        assert_eq!(partition_init(10, 0, 3), 0);
+        assert_eq!(partition_final(10, 0, 3), 4);
+        assert_eq!(partition_init(10, 1, 3), 4);
+        assert_eq!(partition_final(10, 1, 3), 8);
+        assert_eq!(partition_init(10, 2, 3), 8);
+        assert_eq!(partition_final(10, 2, 3), 10);
+    }
+
+    #[test]
+    fn partition_util_covers_exactly() {
+        // Note: with parallel > n the Java semantics yield init > final for
+        // trailing instances; consumers iterate `init..final`, which is then
+        // empty. The invariant is exact single coverage by the union.
+        forall("partition-ranges-cover", 500, |g| {
+            let n = g.usize(1..5000);
+            let parallel = g.usize(1..16);
+            let mut covered = vec![0u8; n];
+            for off in 0..parallel {
+                let i = partition_init(n, off, parallel);
+                let f = partition_final(n, off, parallel);
+                for x in i..f.min(n) {
+                    covered[x] += 1;
+                }
+            }
+            assert!(
+                covered.iter().all(|&c| c == 1),
+                "every element covered exactly once (n={n}, parallel={parallel})"
+            );
+        });
+    }
+
+    #[test]
+    fn ownership_uniformity_property() {
+        forall("table-uniform", 200, |g| {
+            let members = g.usize(1..12);
+            let pc = 271;
+            let t = PartitionTable::new(members, pc, 0);
+            let h = t.ownership_histogram(members);
+            let min = *h.iter().min().unwrap();
+            let max = *h.iter().max().unwrap();
+            assert!(max - min <= 1, "round-robin must be maximally uniform: {h:?}");
+        });
+    }
+}

@@ -1,0 +1,268 @@
+//! Byte-true serialization for distributed objects.
+//!
+//! The paper stresses that distributing CloudSim's complex objects
+//! (`HzVm`, `HzCloudlet`, `Host`, `Datacenter`…) required custom
+//! `StreamSerializer`s and that serialization is one of the dominant costs
+//! (`S = f1(s)` in §3.3). We keep that honest: every value stored in the
+//! grid is *actually encoded to bytes* by a small self-describing format,
+//! so the `S` term is measured from real byte counts rather than invented.
+//!
+//! The paper's two in-memory formats (§2.3.1) are modeled by
+//! [`InMemoryFormat`]: `BINARY` always pays serialization on store and
+//! deserialization on load; `OBJECT` skips those costs for local access
+//! (used by the MapReduce simulator, §4.1.2).
+
+use crate::error::{C2SError, Result};
+
+/// Hazelcast-style in-memory storage format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InMemoryFormat {
+    /// Store serialized bytes; every access pays codec costs.
+    Binary,
+    /// Store deserialized objects; local access is free of codec costs.
+    Object,
+}
+
+/// A value that can live in the grid. Implementations must round-trip.
+pub trait GridSerialize: Sized {
+    /// Encode to bytes (appends to `out`).
+    fn write_bytes(&self, out: &mut Vec<u8>);
+    /// Decode from bytes, advancing `cursor`.
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self>;
+
+    /// Convenience: encode to a fresh buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut v = Vec::new();
+        self.write_bytes(&mut v);
+        v
+    }
+
+    /// Convenience: decode a full buffer.
+    fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut cursor = 0;
+        let v = Self::read_bytes(buf, &mut cursor)?;
+        if cursor != buf.len() {
+            return Err(C2SError::Serialization(format!(
+                "trailing {} bytes after decode",
+                buf.len() - cursor
+            )));
+        }
+        Ok(v)
+    }
+}
+
+fn take<'a>(buf: &'a [u8], cursor: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *cursor + n > buf.len() {
+        return Err(C2SError::Serialization(format!(
+            "buffer underrun: need {n} bytes at offset {cursor}, have {}",
+            buf.len()
+        )));
+    }
+    let s = &buf[*cursor..*cursor + n];
+    *cursor += n;
+    Ok(s)
+}
+
+macro_rules! impl_num {
+    ($t:ty) => {
+        impl GridSerialize for $t {
+            fn write_bytes(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+                let n = std::mem::size_of::<$t>();
+                let s = take(buf, cursor, n)?;
+                Ok(<$t>::from_le_bytes(s.try_into().unwrap()))
+            }
+        }
+    };
+}
+
+impl_num!(u8);
+impl_num!(u16);
+impl_num!(u32);
+impl_num!(u64);
+impl_num!(i32);
+impl_num!(i64);
+impl_num!(f32);
+impl_num!(f64);
+
+impl GridSerialize for usize {
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        (*self as u64).write_bytes(out);
+    }
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+        Ok(u64::read_bytes(buf, cursor)? as usize)
+    }
+}
+
+impl GridSerialize for bool {
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        out.push(*self as u8);
+    }
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+        Ok(take(buf, cursor, 1)?[0] != 0)
+    }
+}
+
+impl GridSerialize for String {
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).write_bytes(out);
+        out.extend_from_slice(self.as_bytes());
+    }
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+        let n = u64::read_bytes(buf, cursor)? as usize;
+        let s = take(buf, cursor, n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|e| C2SError::Serialization(format!("invalid utf8: {e}")))
+    }
+}
+
+impl<T: GridSerialize> GridSerialize for Vec<T> {
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).write_bytes(out);
+        for item in self {
+            item.write_bytes(out);
+        }
+    }
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+        let n = u64::read_bytes(buf, cursor)? as usize;
+        // guard against absurd lengths from corrupt buffers
+        if n > buf.len().saturating_sub(*cursor).saturating_add(1) * 8 {
+            return Err(C2SError::Serialization(format!("implausible vec len {n}")));
+        }
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(T::read_bytes(buf, cursor)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<A: GridSerialize, B: GridSerialize> GridSerialize for (A, B) {
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        self.0.write_bytes(out);
+        self.1.write_bytes(out);
+    }
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+        Ok((A::read_bytes(buf, cursor)?, B::read_bytes(buf, cursor)?))
+    }
+}
+
+impl<T: GridSerialize> GridSerialize for Option<T> {
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        match self {
+            None => out.push(0),
+            Some(v) => {
+                out.push(1);
+                v.write_bytes(out);
+            }
+        }
+    }
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+        match take(buf, cursor, 1)?[0] {
+            0 => Ok(None),
+            1 => Ok(Some(T::read_bytes(buf, cursor)?)),
+            t => Err(C2SError::Serialization(format!("bad Option tag {t}"))),
+        }
+    }
+}
+
+/// Keys for the distributed map. The paper controls placement with
+/// `key@partitionKey` (§2.3.1); [`GridKey::partition_key_bytes`] reproduces
+/// that affinity mechanism.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GridKey {
+    /// The logical key text (e.g. `"cloudlet-42"` or `"vm-7@part-3"`).
+    pub raw: String,
+}
+
+impl GridKey {
+    /// Build from any displayable id.
+    pub fn new(raw: impl Into<String>) -> Self {
+        Self { raw: raw.into() }
+    }
+
+    /// The bytes used for partition routing: everything after `@` when the
+    /// key uses `key@partitionKey` affinity syntax, the whole key otherwise.
+    pub fn partition_key_bytes(&self) -> &[u8] {
+        match self.raw.split_once('@') {
+            Some((_, pk)) if !pk.is_empty() => pk.as_bytes(),
+            _ => self.raw.as_bytes(),
+        }
+    }
+
+    /// Approximate heap footprint of the key itself.
+    pub fn heap_bytes(&self) -> u64 {
+        (self.raw.len() + 24) as u64
+    }
+}
+
+impl<T: Into<String>> From<T> for GridKey {
+    fn from(s: T) -> Self {
+        GridKey::new(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: GridSerialize + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = v.to_bytes();
+        let back = T::from_bytes(&bytes).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(42u64);
+        roundtrip(-7i64);
+        roundtrip(3.25f64);
+        roundtrip(true);
+        roundtrip(false);
+        roundtrip("héllo wörld".to_string());
+        roundtrip(1234usize);
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        roundtrip(vec![1u32, 2, 3]);
+        roundtrip(Vec::<u64>::new());
+        roundtrip((7u32, "x".to_string()));
+        roundtrip(Some(9u64));
+        roundtrip(Option::<u64>::None);
+        roundtrip(vec![("a".to_string(), 1u64), ("b".to_string(), 2u64)]);
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = 5u32.to_bytes();
+        bytes.push(0xFF);
+        assert!(u32::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn underrun_rejected() {
+        assert!(u64::from_bytes(&[1, 2, 3]).is_err());
+        // corrupt vec length
+        let mut b = Vec::new();
+        (u64::MAX).write_bytes(&mut b);
+        assert!(Vec::<u64>::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn partition_key_affinity() {
+        let plain = GridKey::new("cloudlet-42");
+        assert_eq!(plain.partition_key_bytes(), b"cloudlet-42");
+        let affine = GridKey::new("cloudlet-42@vm-7");
+        assert_eq!(affine.partition_key_bytes(), b"vm-7");
+        let degenerate = GridKey::new("weird@");
+        assert_eq!(degenerate.partition_key_bytes(), b"weird@");
+    }
+
+    #[test]
+    fn bad_option_tag() {
+        assert!(Option::<u64>::from_bytes(&[9]).is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! Additional distributed data structures from the paper's IMDG feature
+//! comparison (Table 2.2): multimaps, distributed queues, and replicated
+//! maps. Hazelcast offers all three; Infinispan lacks multimaps and
+//! queues — the cluster enforces the same feature matrix.
+
+use crate::error::{C2SError, Result};
+use crate::grid::backend::BackendKind;
+use crate::grid::cluster::{GridCluster, NodeId};
+use crate::grid::partition::partition_of;
+use crate::grid::serialize::{GridKey, GridSerialize};
+use std::collections::VecDeque;
+
+/// Feature gates per backend (Table 2.2).
+fn require_feature(cluster: &GridCluster, feature: &str) -> Result<()> {
+    // Infinispan 6.0: no multimap, no distributed queue (Table 2.2)
+    if cluster.cfg.backend.kind == BackendKind::InfinispanLike
+        && matches!(feature, "multimap" | "queue")
+    {
+        return Err(C2SError::Cluster(format!(
+            "the {} backend does not provide distributed {feature}s (Table 2.2)",
+            cluster.cfg.backend.kind
+        )));
+    }
+    Ok(())
+}
+
+impl GridCluster {
+    // ---------------- multimap ----------------
+
+    /// Append a value under a multimap key ("each key can contain multiple
+    /// values", §2.3.4 — a Hazelcast-only feature).
+    pub fn multimap_put<V: GridSerialize>(
+        &mut self,
+        caller: NodeId,
+        map: &str,
+        key: impl Into<GridKey>,
+        value: &V,
+    ) -> Result<()> {
+        require_feature(self, "multimap")?;
+        let key: GridKey = key.into();
+        let mut values: Vec<Vec<u8>> = self
+            .map_get(caller, &format!("__mm_{map}"), key.clone())?
+            .unwrap_or_default();
+        values.push(value.to_bytes());
+        self.map_put(caller, &format!("__mm_{map}"), key, &values)
+    }
+
+    /// All values under a multimap key.
+    pub fn multimap_get<V: GridSerialize>(
+        &mut self,
+        caller: NodeId,
+        map: &str,
+        key: impl Into<GridKey>,
+    ) -> Result<Vec<V>> {
+        require_feature(self, "multimap")?;
+        let raw: Option<Vec<Vec<u8>>> = self.map_get(caller, &format!("__mm_{map}"), key)?;
+        raw.unwrap_or_default()
+            .iter()
+            .map(|b| V::from_bytes(b))
+            .collect()
+    }
+
+    // ---------------- distributed queue ----------------
+
+    /// Offer to the tail of a distributed FIFO queue. The queue lives on
+    /// the partition owner of its name; remote offers pay a round trip.
+    pub fn queue_offer<V: GridSerialize>(
+        &mut self,
+        caller: NodeId,
+        queue: &str,
+        value: &V,
+    ) -> Result<()> {
+        require_feature(self, "queue")?;
+        let owner = self.queue_owner(queue);
+        let bytes = value.to_bytes();
+        let cost = if owner == caller {
+            0.0
+        } else {
+            self.net.transfer(bytes.len() as u64)
+        };
+        self.advance_busy(caller, cost);
+        self.check_heap(owner, bytes.len() as u64 + 32)?;
+        let q = self.queues.entry(queue.to_string()).or_default();
+        q.push_back(bytes);
+        self.metrics.incr("queue.offer");
+        Ok(())
+    }
+
+    /// Poll the head of the queue (None when empty).
+    pub fn queue_poll<V: GridSerialize>(
+        &mut self,
+        caller: NodeId,
+        queue: &str,
+    ) -> Result<Option<V>> {
+        require_feature(self, "queue")?;
+        let owner = self.queue_owner(queue);
+        let Some(bytes) = self.queues.get_mut(queue).and_then(VecDeque::pop_front) else {
+            return Ok(None);
+        };
+        let cost = if owner == caller {
+            0.0
+        } else {
+            self.net.transfer(bytes.len() as u64)
+        };
+        self.advance_busy(caller, cost);
+        self.metrics.incr("queue.poll");
+        Ok(Some(V::from_bytes(&bytes)?))
+    }
+
+    /// Queue length.
+    pub fn queue_len(&self, queue: &str) -> usize {
+        self.queues.get(queue).map(VecDeque::len).unwrap_or(0)
+    }
+
+    fn queue_owner(&self, queue: &str) -> NodeId {
+        let p = partition_of(queue.as_bytes(), self.cfg.partition_count);
+        self.member_cache[self.partition_table().owner(p)]
+    }
+
+    // ---------------- replicated map ----------------
+
+    /// Put into a replicated map: every member holds a full copy, so the
+    /// writer pays `n−1` transfers (active replication, §2.3.1) and every
+    /// member's heap is charged.
+    pub fn replicated_put<V: GridSerialize>(
+        &mut self,
+        caller: NodeId,
+        map: &str,
+        key: impl Into<GridKey>,
+        value: &V,
+    ) -> Result<()> {
+        let key: GridKey = key.into();
+        let bytes = value.to_bytes();
+        let entry_heap = bytes.len() as u64 + key.heap_bytes() + 48;
+        let members = self.members();
+        for &m in &members {
+            self.check_heap(m, entry_heap)?;
+        }
+        let mut cost = 0.0;
+        for &m in &members {
+            if m != caller {
+                cost += self.net.transfer(bytes.len() as u64);
+            }
+        }
+        self.advance_busy(caller, cost);
+        let prev = self
+            .replicated
+            .entry(map.to_string())
+            .or_default()
+            .insert(key, bytes);
+        let delta = entry_heap as i64
+            - prev.map(|p| p.len() as u64 + 48).unwrap_or(0) as i64;
+        for &m in &members {
+            self.adjust_heap(m, delta);
+        }
+        self.metrics.incr("replicated.put");
+        Ok(())
+    }
+
+    /// Read from a replicated map — always local, always free: "the first
+    /// response from any of the instances can be considered" (§2.3.1).
+    pub fn replicated_get<V: GridSerialize>(
+        &mut self,
+        _caller: NodeId,
+        map: &str,
+        key: impl Into<GridKey>,
+    ) -> Result<Option<V>> {
+        let key: GridKey = key.into();
+        self.metrics.incr("replicated.get");
+        match self.replicated.get(map).and_then(|m| m.get(&key)) {
+            None => Ok(None),
+            Some(b) => Ok(Some(V::from_bytes(b)?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::backend::BackendProfile;
+    use crate::grid::cluster::GridConfig;
+
+    fn hz(n: usize) -> GridCluster {
+        GridCluster::with_members(GridConfig::default(), n)
+    }
+
+    fn inf(n: usize) -> GridCluster {
+        GridCluster::with_members(
+            GridConfig {
+                backend: BackendProfile::infinispan_like(),
+                ..GridConfig::default()
+            },
+            n,
+        )
+    }
+
+    #[test]
+    fn multimap_accumulates_values() {
+        let mut c = hz(2);
+        let m = c.members()[0];
+        c.multimap_put(m, "tags", "vm-1", &"fast".to_string()).unwrap();
+        c.multimap_put(m, "tags", "vm-1", &"cheap".to_string()).unwrap();
+        let vals: Vec<String> = c.multimap_get(m, "tags", "vm-1").unwrap();
+        assert_eq!(vals, vec!["fast".to_string(), "cheap".to_string()]);
+        let empty: Vec<String> = c.multimap_get(m, "tags", "vm-2").unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn multimap_denied_on_infinispan() {
+        // Table 2.2: Infinispan has no multimaps
+        let mut c = inf(1);
+        let m = c.members()[0];
+        let err = c.multimap_put(m, "tags", "k", &1u64).unwrap_err();
+        assert!(err.to_string().contains("Table 2.2"));
+    }
+
+    #[test]
+    fn queue_fifo_semantics() {
+        let mut c = hz(3);
+        let m = c.members()[0];
+        for i in 0..5u64 {
+            c.queue_offer(m, "work", &i).unwrap();
+        }
+        assert_eq!(c.queue_len("work"), 5);
+        let order: Vec<u64> = (0..5)
+            .map(|_| c.queue_poll::<u64>(m, "work").unwrap().unwrap())
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+        assert_eq!(c.queue_poll::<u64>(m, "work").unwrap(), None);
+    }
+
+    #[test]
+    fn queue_denied_on_infinispan() {
+        let mut c = inf(2);
+        let m = c.members()[0];
+        assert!(c.queue_offer(m, "q", &1u64).is_err());
+    }
+
+    #[test]
+    fn replicated_map_reads_free_everywhere() {
+        let mut c = hz(4);
+        let members = c.members();
+        c.replicated_put(members[0], "conf", "threshold", &0.8f64).unwrap();
+        for &m in &members {
+            let t0 = c.clock(m);
+            let v: Option<f64> = c.replicated_get(m, "conf", "threshold").unwrap();
+            assert_eq!(v, Some(0.8));
+            assert_eq!(c.clock(m), t0, "replicated reads are local + free");
+        }
+        // writer paid n-1 transfers
+        assert!(c.metrics.counter("replicated.put") == 1);
+    }
+
+    #[test]
+    fn replicated_put_charges_every_heap() {
+        let mut c = hz(3);
+        let m = c.members()[0];
+        c.replicated_put(m, "conf", "k", &vec![0u8; 1000]).unwrap();
+        for node in c.members() {
+            assert!(c.heap_used(node) >= 1000, "every member stores the copy");
+        }
+        // overwrite does not leak heap
+        c.replicated_put(m, "conf", "k", &vec![0u8; 1000]).unwrap();
+        let used: Vec<u64> = c.members().iter().map(|&n| c.heap_used(n)).collect();
+        assert!(used.iter().all(|&u| u < 2500), "{used:?}");
+    }
+}

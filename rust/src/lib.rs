@@ -1,0 +1,39 @@
+//! # Cloud²Sim — an elastic middleware platform for concurrent and distributed
+//! cloud and MapReduce simulations.
+//!
+//! Reproduction of Kathiravelu & Veiga's Cloud²Sim (MASCOTS'14 / UCC'14 /
+//! MSc thesis 2014) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3** (this crate) — the coordination contribution: a simulated
+//!   in-memory data grid ([`grid`]), a CloudSim-style discrete-event cloud
+//!   simulator ([`sim`]), the Cloud²Sim distribution layer ([`dist`]), the
+//!   MapReduce simulation layer ([`mapreduce`]) and the elastic middleware
+//!   ([`elastic`]).
+//! * **L2/L1** (build-time Python, `python/compile/`) — the cloudlet-workload
+//!   and matchmaking compute hot-spots as JAX graphs calling Pallas kernels,
+//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+
+pub mod bench;
+pub mod config;
+pub mod dist;
+pub mod elastic;
+pub mod error;
+pub mod grid;
+pub mod mapreduce;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Commonly used types, re-exported for examples and benches.
+pub mod prelude {
+    pub use crate::config::{Properties, SimConfig, WorkloadKind};
+    pub use crate::dist::{run_cloudsim_baseline, run_distributed, DistReport};
+    pub use crate::error::{C2SError, Result};
+    pub use crate::grid::backend::BackendProfile;
+    pub use crate::grid::cluster::{GridCluster, GridConfig};
+    pub use crate::util::rng::SplitMix64;
+}

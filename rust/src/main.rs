@@ -1,0 +1,243 @@
+//! Cloud²Sim command-line launcher.
+//!
+//! ```text
+//! cloud2sim simulate    [--nodes N] [--vms V] [--cloudlets C] [--loaded]
+//!                       [--strategy s] [--config cloud2sim.properties]
+//! cloud2sim matchmaking [--nodes N] [--vms V] [--cloudlets C] [--pjrt]
+//! cloud2sim mapreduce   [--backend hazelcast|infinispan] [--files F]
+//!                       [--lines L] [--instances N] [--verbose]
+//! cloud2sim elastic     [--available N] [--config file]
+//! cloud2sim info
+//! ```
+//!
+//! (clap is not in the offline vendor set; flags are parsed by hand, and
+//! `--config` loads the paper-style `cloud2sim.properties`.)
+
+use cloud2sim::config::{Properties, SimConfig};
+use cloud2sim::dist::matchmaking::{run_matchmaking_baseline, run_matchmaking_distributed};
+use cloud2sim::dist::{run_cloudsim_baseline, run_distributed_full, Strategy};
+use cloud2sim::elastic::{run_adaptive, HealthMeasure};
+use cloud2sim::error::{C2SError, Result};
+use cloud2sim::mapreduce::{run_hz_wordcount, run_inf_wordcount, Corpus, CorpusConfig, JobConfig};
+use cloud2sim::runtime::registry::{default_artifacts_dir, PjrtRuntime};
+use cloud2sim::runtime::workload::NativeBurnModel;
+
+struct Args {
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = argv.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                flags.push((name.to_string(), value));
+            }
+            i += 1;
+        }
+        Self { flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| C2SError::Config(format!("--{name} wants an integer, got {v}"))),
+        }
+    }
+}
+
+fn base_config(args: &Args) -> Result<SimConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SimConfig::from_properties(&Properties::load(path)?)?,
+        None => SimConfig::default(),
+    };
+    cfg.no_of_vms = args.usize_or("vms", cfg.no_of_vms)?;
+    cfg.no_of_cloudlets = args.usize_or("cloudlets", cfg.no_of_cloudlets)?;
+    if args.has("loaded") {
+        cfg.workload = cloud2sim::config::WorkloadKind::NativeBurn;
+    }
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let nodes = args.usize_or("nodes", 3)?;
+    let strategy = match args.get("strategy").unwrap_or("multiple-simulator") {
+        "simulator-initiator" => Strategy::SimulatorInitiator,
+        "simulator-sub" => Strategy::SimulatorSub,
+        "multiple-simulator" => Strategy::MultipleSimulator,
+        other => {
+            return Err(C2SError::Config(format!("unknown strategy {other}")));
+        }
+    };
+    println!(
+        "simulate: {} VMs, {} cloudlets, loaded={}, {nodes} node(s), strategy={strategy}",
+        cfg.no_of_vms,
+        cfg.no_of_cloudlets,
+        cfg.workload.is_loaded()
+    );
+    let base = run_cloudsim_baseline(&cfg)?;
+    let mut model = NativeBurnModel::default();
+    let dist = run_distributed_full(&cfg, nodes, strategy, &mut model, false)?;
+    println!("CloudSim baseline: {:.3}s", base.sim_time_s);
+    println!(
+        "Cloud2Sim ({nodes}):   {:.3}s  (speedup {:.2}x, {} grid msgs, max load {:.2})",
+        dist.sim_time_s,
+        base.sim_time_s / dist.sim_time_s,
+        dist.grid_messages,
+        dist.max_process_cpu_load
+    );
+    Ok(())
+}
+
+fn cmd_matchmaking(args: &Args) -> Result<()> {
+    let mut cfg = base_config(args)?;
+    if !args.has("vms") {
+        cfg.no_of_vms = 100;
+    }
+    if !args.has("cloudlets") {
+        cfg.no_of_cloudlets = 1200;
+    }
+    let nodes = args.usize_or("nodes", 3)?;
+    let mut pjrt = if args.has("pjrt") {
+        Some(PjrtRuntime::load(default_artifacts_dir())?)
+    } else {
+        None
+    };
+    let base = run_matchmaking_baseline(&cfg)?;
+    let r = run_matchmaking_distributed(&cfg, nodes, pjrt.as_mut())?;
+    println!(
+        "matchmaking: serial {:.1}s, {nodes} node(s) {:.1}s ({:.1}x), kernel wall {:?}",
+        base.sim_time_s,
+        r.sim_time_s,
+        base.sim_time_s / r.sim_time_s,
+        r.workload_wall
+    );
+    Ok(())
+}
+
+fn cmd_mapreduce(args: &Args) -> Result<()> {
+    let files = args.usize_or("files", 3)?;
+    let lines = args.usize_or("lines", 10_000)?;
+    let instances = args.usize_or("instances", 1)?;
+    let corpus = Corpus::new(CorpusConfig {
+        files,
+        distinct_files: files.min(3),
+        lines_per_file: lines,
+        ..CorpusConfig::default()
+    });
+    let job = JobConfig {
+        verbose: args.has("verbose"),
+        ..JobConfig::default()
+    };
+    let heap = 64 * 1024 * 1024;
+    let backend = args.get("backend").unwrap_or("infinispan");
+    let r = match backend {
+        "hazelcast" => run_hz_wordcount(corpus, job, instances, heap)?,
+        "infinispan" => run_inf_wordcount(corpus, job, instances, heap)?,
+        other => return Err(C2SError::Config(format!("unknown backend {other}"))),
+    };
+    println!(
+        "{backend} MR: map()={} reduce()={} time={:.2}s instances={} conserved={}",
+        r.map_invocations,
+        r.reduce_invocations,
+        r.sim_time_s,
+        r.nodes,
+        r.is_conserved()
+    );
+    for (w, c) in r.top_words.iter().take(5) {
+        println!("  {w}: {c}");
+    }
+    Ok(())
+}
+
+fn cmd_elastic(args: &Args) -> Result<()> {
+    let mut cfg = base_config(args)?;
+    cfg.backup_count = cfg.backup_count.max(1);
+    if !args.has("vms") {
+        cfg.no_of_vms = 200;
+    }
+    if !args.has("cloudlets") {
+        cfg.no_of_cloudlets = 400;
+    }
+    cfg.workload = cloud2sim::config::WorkloadKind::NativeBurn;
+    cfg.max_threshold = 0.20;
+    cfg.min_threshold = 0.01;
+    let available = args.usize_or("available", 5)?;
+    let mut model = NativeBurnModel::default();
+    let r = run_adaptive(&cfg, available, HealthMeasure::LoadAverage, &mut model)?;
+    println!(
+        "elastic: {:.1}s, peak {} instances, {} scale-outs, {} scale-ins",
+        r.sim_time_s, r.peak_instances, r.scale_outs, r.scale_ins
+    );
+    for row in r.rows.iter().filter(|r| r.event.contains("Spawning")) {
+        println!("  t={:.0}s {} (loads: {:?})", row.at, row.event, row.loads);
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!(
+        "cloud2sim {} — Cloud²Sim reproduction",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("artifacts dir: {}", default_artifacts_dir().display());
+    match PjrtRuntime::load(default_artifacts_dir()) {
+        Ok(rt) => {
+            println!("PJRT: {} ({} artifacts)", rt.platform(), rt.manifest.len());
+            for e in &rt.manifest {
+                println!(
+                    "  {:?} {} dims=({},{},{}) file={}",
+                    e.kind, e.name, e.d1, e.d2, e.d3, e.file
+                );
+            }
+        }
+        Err(e) => println!("PJRT: unavailable — {e}"),
+    }
+    println!("benches: cargo bench   (one target per paper table/figure)");
+    println!("examples: quickstart, matchmaking, mapreduce_wordcount, elastic_scaling, e2e_paper");
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let result = match cmd {
+        "simulate" => cmd_simulate(&args),
+        "matchmaking" => cmd_matchmaking(&args),
+        "mapreduce" => cmd_mapreduce(&args),
+        "elastic" => cmd_elastic(&args),
+        "info" => cmd_info(),
+        _ => {
+            println!(
+                "usage: cloud2sim <simulate|matchmaking|mapreduce|elastic|info> [flags]\n\
+                 see `cloud2sim info` and README.md"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

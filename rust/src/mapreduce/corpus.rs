@@ -1,0 +1,217 @@
+//! Synthetic USENET-like corpus generator.
+//!
+//! The paper's word-count benchmarks read "huge text files such as the
+//! files collected from USENET Corpus" — 6–8 MB each, ≥125 000 lines
+//! (§4.2.2, §5.2). That corpus is not available here, so this module
+//! generates a deterministic equivalent: Zipf-distributed words over a
+//! large vocabulary, so distinct-word counts (= `reduce()` invocations)
+//! grow sublinearly with lines read, exactly the axis the paper sweeps.
+//!
+//! Generation is lazy — `line(file, line)` materializes one line at a time
+//! — so "9.4 GB" sweeps never hold a corpus in (real) memory. Duplicated
+//! file contents (`file % distinct_files`) reproduce the paper's trick of
+//! increasing `map()` invocations while keeping `reduce()` constant
+//! (§4.2.3: "By using duplicate files, invocations of map() are
+//! increased, keeping the reduce() invocations constant").
+
+use crate::util::rng::Pcg32;
+
+/// Corpus shape parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    /// Total files presented to the job (`map()` invocations).
+    pub files: usize,
+    /// Distinct file contents; `files > distinct_files` duplicates.
+    pub distinct_files: usize,
+    /// Lines read per file (the paper's "MapReduce size").
+    pub lines_per_file: usize,
+    /// Words per line.
+    pub words_per_line: usize,
+    /// Vocabulary size (distinct possible words).
+    pub vocab: usize,
+    /// Zipf exponent for word frequencies.
+    pub zipf_s: f64,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self {
+            files: 3,
+            distinct_files: 3,
+            lines_per_file: 10_000,
+            words_per_line: 12,
+            vocab: 1_200_000,
+            zipf_s: 0.9,
+            seed: 0xC0DE_C0DE,
+        }
+    }
+}
+
+/// The generator.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    /// Shape parameters.
+    pub cfg: CorpusConfig,
+}
+
+impl Corpus {
+    /// New corpus from config.
+    pub fn new(cfg: CorpusConfig) -> Self {
+        assert!(cfg.distinct_files >= 1);
+        assert!(cfg.vocab >= 2);
+        Self { cfg }
+    }
+
+    /// Word ids of one line. Deterministic in `(file % distinct_files,
+    /// line)`.
+    pub fn line_words(&self, file: usize, line: usize) -> Vec<u32> {
+        let content_id = (file % self.cfg.distinct_files) as u64;
+        let mut rng = Pcg32::new(
+            self.cfg.seed ^ content_id.wrapping_mul(0x9E3779B97F4A7C15),
+            line as u64,
+        );
+        (0..self.cfg.words_per_line)
+            .map(|_| self.zipf_word(&mut rng))
+            .collect()
+    }
+
+    fn zipf_word(&self, rng: &mut Pcg32) -> u32 {
+        // inverse-CDF continuous approximation (see util::rng::gen_zipf)
+        let n = self.cfg.vocab as f64;
+        let s = self.cfg.zipf_s;
+        let u = rng.next_f64().max(1e-12);
+        let e = 1.0 - s;
+        let x = if (s - 1.0).abs() < 1e-9 {
+            (u * n.ln()).exp_m1()
+        } else {
+            let h = (n.powf(e) - 1.0) / e;
+            (u * h * e + 1.0).powf(1.0 / e) - 1.0
+        };
+        (x.min(n - 1.0).max(0.0)) as u32
+    }
+
+    /// Render a line as text (the word-count mapper tokenizes this).
+    pub fn line_text(&self, file: usize, line: usize) -> String {
+        let mut s = String::new();
+        self.line_text_into(file, line, &mut s);
+        s
+    }
+
+    /// Allocation-light variant: render into a reusable buffer (the MR
+    /// engine's map loop reuses one buffer per member — perf pass §L3).
+    pub fn line_text_into(&self, file: usize, line: usize, out: &mut String) {
+        out.clear();
+        out.reserve(self.cfg.words_per_line * 9);
+        let content_id = (file % self.cfg.distinct_files) as u64;
+        let mut rng = Pcg32::new(
+            self.cfg.seed ^ content_id.wrapping_mul(0x9E3779B97F4A7C15),
+            line as u64,
+        );
+        let mut digits = [0u8; 10];
+        for i in 0..self.cfg.words_per_line {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push('w');
+            // manual integer formatting: no per-word String allocation
+            let mut w = self.zipf_word(&mut rng);
+            let mut n = 0;
+            loop {
+                digits[n] = b'0' + (w % 10) as u8;
+                w /= 10;
+                n += 1;
+                if w == 0 {
+                    break;
+                }
+            }
+            for d in (0..n).rev() {
+                out.push(digits[d] as char);
+            }
+        }
+    }
+
+    /// Approximate bytes of one file at the configured size — matches the
+    /// paper's 6–8 MB per 125k-line file.
+    pub fn file_bytes(&self) -> u64 {
+        (self.cfg.lines_per_file * self.cfg.words_per_line * 7) as u64
+    }
+
+    /// Total corpus bytes across all files.
+    pub fn total_bytes(&self) -> u64 {
+        self.file_bytes() * self.cfg.files as u64
+    }
+
+    /// Total token count across all files.
+    pub fn total_tokens(&self) -> u64 {
+        (self.cfg.files * self.cfg.lines_per_file * self.cfg.words_per_line) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn deterministic_lines() {
+        let c = Corpus::new(CorpusConfig::default());
+        assert_eq!(c.line_words(0, 42), c.line_words(0, 42));
+        assert_ne!(c.line_words(0, 42), c.line_words(0, 43));
+    }
+
+    #[test]
+    fn duplicate_files_share_content() {
+        let c = Corpus::new(CorpusConfig {
+            files: 6,
+            distinct_files: 3,
+            ..CorpusConfig::default()
+        });
+        assert_eq!(c.line_words(0, 7), c.line_words(3, 7), "file 3 duplicates file 0");
+        assert_ne!(c.line_words(0, 7), c.line_words(1, 7));
+    }
+
+    #[test]
+    fn distinct_words_grow_sublinearly() {
+        let c = Corpus::new(CorpusConfig::default());
+        let distinct_at = |lines: usize| {
+            let mut seen = HashSet::new();
+            for l in 0..lines {
+                for w in c.line_words(0, l) {
+                    seen.insert(w);
+                }
+            }
+            seen.len()
+        };
+        let d1 = distinct_at(500);
+        let d4 = distinct_at(2000);
+        assert!(d4 > d1, "more lines, more distinct words");
+        assert!(
+            (d4 as f64) < (d1 as f64) * 4.0,
+            "sublinear: {d1} -> {d4} (zipf reuse)"
+        );
+        // reduce() invocations must be a large fraction of tokens at small
+        // sizes (paper: 68k reduces from 360k tokens at size 10k)
+        let tokens = 500 * 12;
+        assert!(d1 * 3 > tokens / 4, "d1={d1} tokens={tokens}");
+    }
+
+    #[test]
+    fn file_size_matches_paper_scale() {
+        let c = Corpus::new(CorpusConfig {
+            lines_per_file: 125_000,
+            ..CorpusConfig::default()
+        });
+        let mb = c.file_bytes() as f64 / (1024.0 * 1024.0);
+        assert!(mb > 5.0 && mb < 12.0, "paper: 6-8MB files, got {mb:.1}MB");
+    }
+
+    #[test]
+    fn line_text_tokenizable() {
+        let c = Corpus::new(CorpusConfig::default());
+        let t = c.line_text(0, 0);
+        assert_eq!(t.split_whitespace().count(), 12);
+        assert!(t.split_whitespace().all(|w| w.starts_with('w')));
+    }
+}

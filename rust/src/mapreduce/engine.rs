@@ -1,0 +1,481 @@
+//! The MapReduce supervisor/engine shared by both backend profiles
+//! (§3.4.2, Fig 3.11/3.12: same design, two implementations).
+//!
+//! Phases, all priced on the grid's virtual clocks:
+//!
+//! 1. **Input assignment** — files round-robin over members; each member
+//!    reserves heap for its input buffers (the Fig 5.10 OOM mechanism).
+//! 2. **Map** — members tokenize their files chunk-by-chunk through the
+//!    user `Mapper`, paying the backend's per-chunk supervision overhead
+//!    and retaining emitted-pair heap per the backend profile (the
+//!    Fig 5.11 OOM mechanism — Hazelcast buffers unaggregated pairs).
+//!    Word counting is *really performed* on the synthetic corpus.
+//! 3. **Shuffle** — distinct keys move to their partition owners; the
+//!    young-Hazelcast profile pays a per-key supervisor round-trip here
+//!    (Table 5.3's 1→2-instance collapse).
+//! 4. **Reduce** — owners fold their keys through the user `Reducer`.
+//! 5. **Collect** — the supervisor (master) gathers the result;
+//!    `reduce()` invocations = distinct keys, `map()` invocations = files.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::error::{C2SError, Result};
+use crate::grid::cluster::{GridCluster, NodeId};
+use crate::grid::partition::partition_of;
+use crate::mapreduce::corpus::Corpus;
+use crate::mapreduce::job::{top_n, JobConfig, JobResult, Mapper, Reducer};
+
+/// CPU cost of mapping one token (tokenize + emit) on the JVM (s).
+const TOKEN_CPU_COST: f64 = 0.8e-6;
+/// CPU cost of folding one value in a reducer (s).
+const REDUCE_VALUE_CPU_COST: f64 = 0.1e-6;
+/// Serialized bytes per shuffled key entry.
+const SHUFFLE_ENTRY_BYTES: u64 = 24;
+
+/// The engine: corpus + job config + user code.
+pub struct MapReduceEngine<'a> {
+    /// Input corpus.
+    pub corpus: Corpus,
+    /// Job parameters.
+    pub job: JobConfig,
+    mapper: &'a dyn Mapper,
+    reducer: &'a dyn Reducer,
+}
+
+impl<'a> MapReduceEngine<'a> {
+    /// Build an engine.
+    pub fn new(
+        corpus: Corpus,
+        job: JobConfig,
+        mapper: &'a dyn Mapper,
+        reducer: &'a dyn Reducer,
+    ) -> Self {
+        Self {
+            corpus,
+            job,
+            mapper,
+            reducer,
+        }
+    }
+
+    /// Run the job on the cluster. The master is the supervisor ("the
+    /// master node hosts the supervisor of the MapReduce job", §3.4.2).
+    pub fn run(&self, cluster: &mut GridCluster) -> Result<JobResult> {
+        let members = cluster.members();
+        let n = members.len();
+        if n == 0 {
+            return Err(C2SError::MapReduce("cluster has no members".into()));
+        }
+        let master = cluster.master()?;
+        let t_start = cluster.barrier();
+        let backend = cluster.cfg.backend.clone();
+        // Infinispan "operates better as a local cache" (§5.2): local-mode
+        // compute discount on a single instance.
+        let local_factor = if n == 1 { backend.local_mode_factor } else { 1.0 };
+
+        // ---- Phase 1: input assignment + admission ----
+        // Work is split at *chunk* granularity (file, line-range) — like
+        // the real grids' partition-based splits — so parallelism is not
+        // capped by the file count. Each member buffers its chunk share.
+        let files = self.corpus.cfg.files;
+        let lines = self.corpus.cfg.lines_per_file;
+        let chunk = self.job.chunk_lines.max(1);
+        let mut chunks: Vec<(usize, usize, usize)> = Vec::new();
+        for f in 0..files {
+            let mut l = 0;
+            while l < lines {
+                chunks.push((f, l, (l + chunk).min(lines)));
+                l += chunk;
+            }
+        }
+        let file_bytes = self.corpus.file_bytes();
+        let total_input = file_bytes * files as u64;
+        let mut reserved: Vec<u64> = vec![0; n];
+        for (i, m) in members.iter().enumerate() {
+            let share = chunks.iter().skip(i).step_by(n).count() as u64;
+            let input = total_input * share / chunks.len().max(1) as u64;
+            cluster
+                .reserve_scratch(*m, input)
+                .map_err(|e| self.release_on_err(cluster, &members, &reserved, e))?;
+            reserved[i] = input;
+        }
+
+        // ---- Phase 2: map (+ combine) ----
+        let mut partials: Vec<HashMap<String, i64>> = vec![HashMap::new(); n];
+        let mut emitted_total: u64 = 0;
+        let mut text = String::new(); // reused line buffer (perf pass §L3)
+        for (i, m) in members.iter().enumerate() {
+            let mut retained: u64 = 0;
+            for &(f, l0, l1) in chunks.iter().skip(i).step_by(n) {
+                let gc = cluster.gc_factor(*m);
+                let mut tokens_in_chunk: u64 = 0;
+                for line in l0..l1 {
+                    self.corpus.line_text_into(f, line, &mut text);
+                    self.mapper.map(f, line, &text, &mut |k, v| {
+                        *partials[i].entry(k).or_insert(0) += v;
+                        tokens_in_chunk += 1;
+                    });
+                }
+                emitted_total += tokens_in_chunk;
+                // pair-retention heap (the Hazelcast OOM mechanism)
+                let pair_bytes = tokens_in_chunk * backend.mr_pair_retained_bytes;
+                cluster
+                    .reserve_scratch(*m, pair_bytes)
+                    .map_err(|e| self.release_on_err(cluster, &members, &reserved, e))?;
+                retained += pair_bytes;
+                let mut cost = backend.mr_chunk_overhead
+                    + tokens_in_chunk as f64 * TOKEN_CPU_COST * local_factor;
+                if self.job.verbose {
+                    // verbose mode logs per-chunk progress (§5.2:
+                    // "executions were slower in verbose mode")
+                    cost += backend.mr_chunk_overhead * 0.5;
+                }
+                cluster.advance_busy(*m, cost * gc);
+            }
+            reserved[i] += retained;
+        }
+        cluster.barrier();
+
+        // ---- Phase 3: shuffle ----
+        // Keys move to their partition owner. The *owner* pays the
+        // per-key merge/accounting cost (distinct/n keys each, in
+        // parallel): Hazelcast 3.2's young MR does a supervisor round-trip
+        // per keyed result — the Table 5.3 collapse when a single-node job
+        // (no shuffle at all) becomes distributed.
+        let mut grouped: Vec<HashMap<String, Vec<i64>>> = vec![HashMap::new(); n];
+        for (i, m) in members.iter().enumerate() {
+            if n > 1 {
+                let d_i = partials[i].len() as u64;
+                let wire = cluster.net.transfer(d_i * SHUFFLE_ENTRY_BYTES);
+                cluster.advance_busy(*m, wire);
+            }
+            for (k, v) in partials[i].drain() {
+                let owner =
+                    (partition_of(k.as_bytes(), cluster.cfg.partition_count) as usize) % n;
+                grouped[owner].entry(k).or_default().push(v);
+            }
+        }
+        if n > 1 {
+            for (i, m) in members.iter().enumerate() {
+                let gc = cluster.gc_factor(*m);
+                let merge_cpu = grouped[i].len() as f64 * backend.mr_shuffle_per_key;
+                cluster.advance_busy(*m, merge_cpu * gc);
+            }
+        }
+        cluster.barrier();
+
+        // ---- Phase 4: reduce ----
+        let mut final_counts: BTreeMap<String, i64> = BTreeMap::new();
+        let mut reduce_invocations: u64 = 0;
+        for (i, m) in members.iter().enumerate() {
+            let gc = cluster.gc_factor(*m);
+            let mut cost = 0.0;
+            for (k, vals) in &grouped[i] {
+                cost += backend.mr_reduce_overhead + vals.len() as f64 * REDUCE_VALUE_CPU_COST;
+                reduce_invocations += 1;
+                let folded = self.reducer.reduce(k, vals);
+                final_counts.insert(k.clone(), folded);
+            }
+            if self.job.verbose {
+                cost *= 1.15;
+            }
+            cluster.advance_busy(*m, cost * local_factor * gc);
+        }
+        cluster.barrier();
+
+        // ---- Phase 5: collect at the supervisor ----
+        let result_bytes = reduce_invocations * SHUFFLE_ENTRY_BYTES;
+        if n > 1 {
+            let wire = cluster.net.transfer(result_bytes);
+            cluster.advance_busy(master, wire);
+        }
+        let peak_heap = members.iter().map(|&m| cluster.heap_used(m)).max().unwrap_or(0);
+
+        // Split-brain under long heavy distributed jobs (§4.3.3,
+        // hazelcast#2359): sub-clusters form and later re-merge; each
+        // incident costs a recovery/re-merge pause. Synchronous backups
+        // keep the data safe, but wall time suffers — which is what
+        // limited Hazelcast MR to shorter jobs in the paper.
+        let provisional = cluster.max_clock() - t_start;
+        let mut split_brain_events = 0u32;
+        if n > 1 && backend.split_brain_under_load && provisional > 600.0 {
+            split_brain_events = (provisional / 600.0) as u32;
+            let penalty = split_brain_events as f64 * 15.0;
+            for m in &members {
+                cluster.advance(*m, penalty);
+            }
+            cluster.metrics.add("cluster.split_brain", split_brain_events as u64);
+        }
+
+        // teardown
+        for (i, m) in members.iter().enumerate() {
+            cluster.release_scratch(*m, reserved[i]);
+        }
+        let t_end = cluster.barrier();
+
+        let total_count: i64 = final_counts.values().sum();
+        Ok(JobResult {
+            map_invocations: files as u64,
+            reduce_invocations,
+            sim_time_s: t_end - t_start,
+            emitted_pairs: emitted_total,
+            top_words: top_n(&final_counts, 10),
+            total_count,
+            nodes: n,
+            peak_heap,
+            split_brain_events,
+        })
+    }
+
+    fn release_on_err(
+        &self,
+        cluster: &mut GridCluster,
+        members: &[NodeId],
+        reserved: &[u64],
+        e: C2SError,
+    ) -> C2SError {
+        for (i, m) in members.iter().enumerate() {
+            cluster.release_scratch(*m, reserved.get(i).copied().unwrap_or(0));
+        }
+        e
+    }
+
+    /// Simulate a member joining while the job runs. Hazelcast 3.2 crashed
+    /// the running job (hazelcast#2354, §5.2.2: "a newly joined instance
+    /// not knowing the supervisor of the job"); Infinispan migrates
+    /// partitions and continues.
+    pub fn simulate_midjob_join(&self, cluster: &mut GridCluster) -> Result<NodeId> {
+        if cluster.cfg.backend.join_crashes_running_mr {
+            return Err(C2SError::MapReduce(
+                "newly joined instance crashed the running MapReduce job \
+                 (missing supervisor null-check — hazelcast#2354). \
+                 Work-around: join all Initiators before starting the master."
+                    .into(),
+            ));
+        }
+        Ok(cluster.join())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::backend::BackendProfile;
+    use crate::grid::cluster::GridConfig;
+    use crate::grid::serialize::InMemoryFormat;
+    use crate::mapreduce::corpus::CorpusConfig;
+    use crate::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
+
+    fn grid(backend: BackendProfile, n: usize, heap_mb: u64) -> GridCluster {
+        GridCluster::with_members(
+            GridConfig {
+                backend,
+                in_memory_format: InMemoryFormat::Object, // §4.1.2: MR uses OBJECT
+                node_heap_bytes: heap_mb * 1024 * 1024,
+                ..GridConfig::default()
+            },
+            n,
+        )
+    }
+
+    fn small_corpus(files: usize, lines: usize) -> Corpus {
+        Corpus::new(CorpusConfig {
+            files,
+            distinct_files: files.min(3),
+            lines_per_file: lines,
+            ..CorpusConfig::default()
+        })
+    }
+
+    fn engine(corpus: Corpus) -> (WordCountMapper, WordCountReducer, Corpus) {
+        (WordCountMapper, WordCountReducer, corpus)
+    }
+
+    #[test]
+    fn word_count_is_correct_and_conserved() {
+        let (m, r, c) = engine(small_corpus(3, 200));
+        let eng = MapReduceEngine::new(c, JobConfig::default(), &m, &r);
+        let mut cluster = grid(BackendProfile::infinispan_like(), 2, 64);
+        let res = eng.run(&mut cluster).unwrap();
+        assert_eq!(res.map_invocations, 3);
+        assert!(res.reduce_invocations > 100);
+        assert!(res.is_conserved(), "Σcounts == tokens");
+        assert_eq!(res.emitted_pairs, 3 * 200 * 12);
+        assert!(!res.top_words.is_empty());
+    }
+
+    #[test]
+    fn same_answer_on_any_cluster_size() {
+        // §3.1.1: "the output is consistent as if simulating in a single
+        // instance"
+        let (m, r, c) = engine(small_corpus(3, 150));
+        let run = |n: usize| {
+            let eng = MapReduceEngine::new(c.clone(), JobConfig::default(), &m, &r);
+            let mut cluster = grid(BackendProfile::infinispan_like(), n, 64);
+            eng.run(&mut cluster).unwrap()
+        };
+        let r1 = run(1);
+        let r4 = run(4);
+        assert_eq!(r1.reduce_invocations, r4.reduce_invocations);
+        assert_eq!(r1.total_count, r4.total_count);
+        assert_eq!(r1.top_words, r4.top_words);
+    }
+
+    #[test]
+    fn infinispan_much_faster_than_hazelcast_single_node() {
+        // Fig 5.9: "Infinispan outperforming Hazelcast by 10 to 100 folds"
+        let (m, r, c) = engine(small_corpus(3, 1000));
+        let eng = MapReduceEngine::new(c.clone(), JobConfig::default(), &m, &r);
+        let mut hz = grid(BackendProfile::hazelcast_like(), 1, 64);
+        let t_hz = eng.run(&mut hz).unwrap().sim_time_s;
+        let eng = MapReduceEngine::new(c, JobConfig::default(), &m, &r);
+        let mut inf = grid(BackendProfile::infinispan_like(), 1, 64);
+        let t_inf = eng.run(&mut inf).unwrap().sim_time_s;
+        let fold = t_hz / t_inf;
+        assert!(fold > 10.0, "expected ≥10×, got {fold:.1}× ({t_hz} vs {t_inf})");
+    }
+
+    #[test]
+    fn hazelcast_two_instances_slower_than_one() {
+        // Table 5.3: 416s on 1 instance → 2580s on 2
+        let (m, r, c) = engine(small_corpus(3, 1500));
+        let run = |n: usize| {
+            let eng = MapReduceEngine::new(c.clone(), JobConfig::default(), &m, &r);
+            let mut cluster = grid(BackendProfile::hazelcast_like(), n, 64);
+            eng.run(&mut cluster).unwrap().sim_time_s
+        };
+        let t1 = run(1);
+        let t2 = run(2);
+        let t4 = run(4);
+        assert!(t2 > t1 * 2.0, "distribution collapse: {t1} -> {t2}");
+        assert!(t4 < t2, "then improves with more instances: {t4} vs {t2}");
+    }
+
+    #[test]
+    fn infinispan_scales_positively() {
+        // needs a job big enough that map+reduce work dominates the
+        // distribution overheads (Fig 5.10 uses 159k reduce invocations)
+        let (m, r, c) = engine(small_corpus(12, 4000));
+        let run = |n: usize| {
+            let eng = MapReduceEngine::new(c.clone(), JobConfig::default(), &m, &r);
+            let mut cluster = grid(BackendProfile::infinispan_like(), n, 64);
+            eng.run(&mut cluster).unwrap().sim_time_s
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        assert!(t4 < t1, "Fig 5.10 positive scalability: {t1} -> {t4}");
+    }
+
+    #[test]
+    fn oom_on_one_node_fixed_by_more_nodes() {
+        // Fig 5.10: large jobs fail on one instance, run on more
+        let (m, r, c) = engine(small_corpus(12, 30_000));
+        let eng = MapReduceEngine::new(c.clone(), JobConfig::default(), &m, &r);
+        let mut one = grid(BackendProfile::infinispan_like(), 1, 16);
+        let err = eng.run(&mut one).expect_err("must OOM on one small node");
+        assert!(err.is_oom(), "{err}");
+        let eng = MapReduceEngine::new(c, JobConfig::default(), &m, &r);
+        let mut four = grid(BackendProfile::infinispan_like(), 4, 16);
+        let res = eng.run(&mut four).unwrap();
+        assert!(res.is_conserved());
+    }
+
+    #[test]
+    fn verbose_mode_is_slower() {
+        let (m, r, c) = engine(small_corpus(3, 500));
+        let eng = MapReduceEngine::new(c.clone(), JobConfig::default(), &m, &r);
+        let mut a = grid(BackendProfile::infinispan_like(), 2, 64);
+        let quiet = eng.run(&mut a).unwrap().sim_time_s;
+        let eng = MapReduceEngine::new(
+            c,
+            JobConfig {
+                verbose: true,
+                ..JobConfig::default()
+            },
+            &m,
+            &r,
+        );
+        let mut b = grid(BackendProfile::infinispan_like(), 2, 64);
+        let verbose = eng.run(&mut b).unwrap().sim_time_s;
+        assert!(verbose > quiet, "{verbose} vs {quiet}");
+    }
+
+    #[test]
+    fn midjob_join_crashes_hazelcast_not_infinispan() {
+        let (m, r, c) = engine(small_corpus(3, 100));
+        let eng = MapReduceEngine::new(c, JobConfig::default(), &m, &r);
+        let mut hz = grid(BackendProfile::hazelcast_like(), 2, 64);
+        assert!(eng.simulate_midjob_join(&mut hz).is_err());
+        let mut inf = grid(BackendProfile::infinispan_like(), 2, 64);
+        let joined = eng.simulate_midjob_join(&mut inf).unwrap();
+        assert_eq!(inf.size(), 3);
+        assert!(inf.members().contains(&joined));
+    }
+}
+
+#[cfg(test)]
+mod split_brain_tests {
+    use super::*;
+    use crate::grid::backend::BackendProfile;
+    use crate::grid::cluster::GridConfig;
+    use crate::grid::serialize::InMemoryFormat;
+    use crate::mapreduce::corpus::CorpusConfig;
+    use crate::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
+
+    fn grid(backend: BackendProfile, n: usize) -> GridCluster {
+        GridCluster::with_members(
+            GridConfig {
+                backend,
+                in_memory_format: InMemoryFormat::Object,
+                node_heap_bytes: 64 * 1024 * 1024,
+                ..GridConfig::default()
+            },
+            n,
+        )
+    }
+
+    fn long_corpus() -> Corpus {
+        Corpus::new(CorpusConfig {
+            lines_per_file: 3000, // distributed hz job runs well past 600s
+            ..CorpusConfig::default()
+        })
+    }
+
+    #[test]
+    fn long_hazelcast_jobs_split_brain() {
+        let (m, r) = (WordCountMapper, WordCountReducer);
+        let eng = MapReduceEngine::new(long_corpus(), JobConfig::default(), &m, &r);
+        let mut hz = grid(BackendProfile::hazelcast_like(), 3);
+        let res = eng.run(&mut hz).unwrap();
+        assert!(res.sim_time_s > 600.0, "needs a long job: {}", res.sim_time_s);
+        assert!(
+            res.split_brain_events >= 1,
+            "hazelcast#2359: long heavy jobs split-brain"
+        );
+        assert!(hz.metrics.counter("cluster.split_brain") >= 1);
+        assert!(res.is_conserved(), "synchronous backups keep results intact");
+    }
+
+    #[test]
+    fn infinispan_never_split_brains() {
+        let (m, r) = (WordCountMapper, WordCountReducer);
+        let eng = MapReduceEngine::new(long_corpus(), JobConfig::default(), &m, &r);
+        let mut inf = grid(BackendProfile::infinispan_like(), 3);
+        let res = eng.run(&mut inf).unwrap();
+        assert_eq!(res.split_brain_events, 0);
+    }
+
+    #[test]
+    fn short_jobs_are_safe_on_hazelcast() {
+        // the paper's work-around: keep Hazelcast MR jobs short
+        let (m, r) = (WordCountMapper, WordCountReducer);
+        let corpus = Corpus::new(CorpusConfig {
+            lines_per_file: 100,
+            ..CorpusConfig::default()
+        });
+        let eng = MapReduceEngine::new(corpus, JobConfig::default(), &m, &r);
+        let mut hz = grid(BackendProfile::hazelcast_like(), 3);
+        let res = eng.run(&mut hz).unwrap();
+        assert_eq!(res.split_brain_events, 0);
+    }
+}

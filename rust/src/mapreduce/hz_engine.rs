@@ -1,0 +1,75 @@
+//! Hazelcast-profile MapReduce simulator (`HzMapReduceSimulator`, §4.2).
+//!
+//! Uses the Simulator–Initiator strategy: "One node starts the MapReduce
+//! simulator, where other nodes start the Initiator class, which just
+//! connects to the cluster and executes the logic fractions sent by the
+//! master" (§5.2.2). The work-around for hazelcast#2354 is encoded here:
+//! all Initiators must join *before* the supervisor starts.
+
+use crate::error::Result;
+use crate::grid::backend::BackendProfile;
+use crate::grid::cluster::{GridCluster, GridConfig};
+use crate::grid::serialize::InMemoryFormat;
+use crate::mapreduce::corpus::Corpus;
+use crate::mapreduce::engine::MapReduceEngine;
+use crate::mapreduce::job::{JobConfig, JobResult};
+use crate::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
+
+/// Grid configuration for Hazelcast-profile MR: OBJECT in-memory format
+/// ("Hazelcast is configured with OBJECT in-memory format for MapReduce
+/// simulations. This eliminates most serialization costs", §4.1.2).
+pub fn hz_mr_grid_config(node_heap_bytes: u64, seed: u64) -> GridConfig {
+    GridConfig {
+        backend: BackendProfile::hazelcast_like(),
+        in_memory_format: InMemoryFormat::Object,
+        node_heap_bytes,
+        seed,
+        ..GridConfig::default()
+    }
+}
+
+/// Run the default word-count job on a Hazelcast-profile cluster of
+/// `instances` members. `instances` may exceed physical nodes — the paper
+/// ran "up to 2 Hazelcast instances ... from each of the nodes" (§5.2.2).
+pub fn run_hz_wordcount(
+    corpus: Corpus,
+    job: JobConfig,
+    instances: usize,
+    node_heap_bytes: u64,
+) -> Result<JobResult> {
+    let mapper = WordCountMapper;
+    let reducer = WordCountReducer;
+    let engine = MapReduceEngine::new(corpus, job, &mapper, &reducer);
+    // work-around hazelcast#2354: form the whole cluster BEFORE the
+    // supervisor starts (all Initiators first, master last)
+    let mut cluster = GridCluster::with_members(
+        hz_mr_grid_config(node_heap_bytes, 0xC10D ^ instances as u64),
+        instances,
+    );
+    engine.run(&mut cluster)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::corpus::CorpusConfig;
+
+    #[test]
+    fn hz_wordcount_runs() {
+        let corpus = Corpus::new(CorpusConfig {
+            lines_per_file: 300,
+            ..CorpusConfig::default()
+        });
+        let r = run_hz_wordcount(corpus, JobConfig::default(), 2, 64 * 1024 * 1024).unwrap();
+        assert_eq!(r.map_invocations, 3);
+        assert!(r.is_conserved());
+        assert_eq!(r.nodes, 2);
+    }
+
+    #[test]
+    fn object_format_configured() {
+        let cfg = hz_mr_grid_config(1024, 1);
+        assert_eq!(cfg.in_memory_format, InMemoryFormat::Object);
+        assert!(cfg.backend.is_hazelcast_like());
+    }
+}

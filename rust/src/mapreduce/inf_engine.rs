@@ -1,0 +1,85 @@
+//! Infinispan-profile MapReduce simulator (`InfMapReduceSimulator`, §4.2.1).
+//!
+//! "Infinisim in the compatibility layer configures the
+//! DefaultCacheManager ... A transactional cache is created from the cache
+//! manager. An instance of cache in Infinispan is similar to an instance
+//! in Hazelcast" — same engine, Infinispan cost/semantic profile
+//! (JGroups-clustered, mature MR, efficient local mode).
+
+use crate::error::Result;
+use crate::grid::backend::BackendProfile;
+use crate::grid::cluster::{GridCluster, GridConfig};
+use crate::grid::serialize::InMemoryFormat;
+use crate::mapreduce::corpus::Corpus;
+use crate::mapreduce::engine::MapReduceEngine;
+use crate::mapreduce::job::{JobConfig, JobResult};
+use crate::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
+
+/// Grid configuration for Infinispan-profile MR.
+pub fn inf_mr_grid_config(node_heap_bytes: u64, seed: u64) -> GridConfig {
+    GridConfig {
+        backend: BackendProfile::infinispan_like(),
+        in_memory_format: InMemoryFormat::Object,
+        node_heap_bytes,
+        seed,
+        ..GridConfig::default()
+    }
+}
+
+/// Run the default word-count job on an Infinispan-profile cluster.
+pub fn run_inf_wordcount(
+    corpus: Corpus,
+    job: JobConfig,
+    instances: usize,
+    node_heap_bytes: u64,
+) -> Result<JobResult> {
+    let mapper = WordCountMapper;
+    let reducer = WordCountReducer;
+    let engine = MapReduceEngine::new(corpus, job, &mapper, &reducer);
+    let mut cluster = GridCluster::with_members(
+        inf_mr_grid_config(node_heap_bytes, 0x1F5 ^ instances as u64),
+        instances,
+    );
+    engine.run(&mut cluster)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::corpus::CorpusConfig;
+
+    #[test]
+    fn inf_wordcount_runs_fast_locally() {
+        let corpus = Corpus::new(CorpusConfig {
+            lines_per_file: 300,
+            ..CorpusConfig::default()
+        });
+        let r = run_inf_wordcount(corpus, JobConfig::default(), 1, 64 * 1024 * 1024).unwrap();
+        assert!(r.is_conserved());
+        // mature local mode: the whole small job takes well under a minute
+        assert!(r.sim_time_s < 60.0, "t={}", r.sim_time_s);
+    }
+
+    #[test]
+    fn hz_and_inf_agree_on_results() {
+        // identical design/tasks ⇒ identical outputs (§4: "the same
+        // simulation code will run in both implementations")
+        let mk = || {
+            Corpus::new(CorpusConfig {
+                lines_per_file: 250,
+                ..CorpusConfig::default()
+            })
+        };
+        let a = run_inf_wordcount(mk(), JobConfig::default(), 3, 64 * 1024 * 1024).unwrap();
+        let b = crate::mapreduce::hz_engine::run_hz_wordcount(
+            mk(),
+            JobConfig::default(),
+            3,
+            64 * 1024 * 1024,
+        )
+        .unwrap();
+        assert_eq!(a.reduce_invocations, b.reduce_invocations);
+        assert_eq!(a.top_words, b.top_words);
+        assert_eq!(a.total_count, b.total_count);
+    }
+}

@@ -1,0 +1,107 @@
+//! MapReduce job abstractions (§4.2.2): user-replaceable `Mapper` and
+//! `Reducer` traits plus job configuration and results.
+
+use std::collections::BTreeMap;
+
+/// Emits intermediate `(key, value)` pairs from one input record.
+pub trait Mapper {
+    /// Map one record (a corpus line) to zero or more `(word, count)`
+    /// pairs via `emit`.
+    fn map(&self, file: usize, line: usize, value: &str, emit: &mut dyn FnMut(String, i64));
+}
+
+/// Folds all values of one key.
+pub trait Reducer {
+    /// Reduce the accumulated values of `key`.
+    fn reduce(&self, key: &str, values: &[i64]) -> i64;
+}
+
+/// Job parameters (`cloud2sim.properties` MapReduce section, §4.2.3).
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Lines processed per supervisor chunk.
+    pub chunk_lines: usize,
+    /// Verbose mode: per-instance progress accounting (§3.4.2) — slower.
+    pub verbose: bool,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        Self {
+            chunk_lines: 1000,
+            verbose: false,
+        }
+    }
+}
+
+/// Result of one MapReduce job run.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// `map()` invocations (= input files).
+    pub map_invocations: u64,
+    /// `reduce()` invocations (= distinct keys).
+    pub reduce_invocations: u64,
+    /// Virtual execution time (s) — the paper's measured quantity.
+    pub sim_time_s: f64,
+    /// Total emitted pairs (tokens for word count).
+    pub emitted_pairs: u64,
+    /// Final aggregate (word → count), truncated to the top entries for
+    /// reporting; the full count is `reduce_invocations`.
+    pub top_words: Vec<(String, i64)>,
+    /// Sum over all counts (equals emitted pairs for word count).
+    pub total_count: i64,
+    /// Instances that participated.
+    pub nodes: usize,
+    /// Peak per-node heap used (bytes).
+    pub peak_heap: u64,
+    /// Split-brain incidents observed during the job (§4.3.3: long heavy
+    /// Hazelcast jobs saw instances leave and the cluster split/merge —
+    /// hazelcast#2359 — "limiting the usability ... to shorter jobs").
+    pub split_brain_events: u32,
+}
+
+impl JobResult {
+    /// Cross-check invariant for word count: Σ counts == emitted tokens.
+    pub fn is_conserved(&self) -> bool {
+        self.total_count as u64 == self.emitted_pairs
+    }
+}
+
+/// Deterministically pick the top-`n` entries of a count map (ties by key).
+pub fn top_n(counts: &BTreeMap<String, i64>, n: usize) -> Vec<(String, i64)> {
+    let mut v: Vec<(String, i64)> = counts.iter().map(|(k, c)| (k.clone(), *c)).collect();
+    v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    v.truncate(n);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_n_orders_and_truncates() {
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), 5);
+        m.insert("b".to_string(), 9);
+        m.insert("c".to_string(), 5);
+        let t = top_n(&m, 2);
+        assert_eq!(t, vec![("b".to_string(), 9), ("a".to_string(), 5)]);
+    }
+
+    #[test]
+    fn conservation_check() {
+        let r = JobResult {
+            map_invocations: 3,
+            reduce_invocations: 10,
+            sim_time_s: 1.0,
+            emitted_pairs: 100,
+            top_words: vec![],
+            total_count: 100,
+            nodes: 1,
+            peak_heap: 0,
+            split_brain_events: 0,
+        };
+        assert!(r.is_conserved());
+    }
+}

@@ -1,0 +1,23 @@
+//! The MapReduce simulation layer (§3.4.2, §4.2): a real word-count
+//! MapReduce engine running over the grid substrate, with the two backend
+//! profiles the paper benchmarks against each other.
+//!
+//! * [`corpus`] — synthetic USENET-like corpus (lazy, deterministic).
+//! * [`job`] — `Mapper`/`Reducer` traits, job config/results.
+//! * [`wordcount`] — the default application (§4.2.2).
+//! * [`engine`] — the shared supervisor/engine (map → shuffle → reduce).
+//! * [`hz_engine`] / [`inf_engine`] — the two implementations
+//!   (`HzMapReduceSimulator` / `InfMapReduceSimulator`).
+
+pub mod corpus;
+pub mod engine;
+pub mod hz_engine;
+pub mod inf_engine;
+pub mod job;
+pub mod wordcount;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use engine::MapReduceEngine;
+pub use hz_engine::run_hz_wordcount;
+pub use inf_engine::run_inf_wordcount;
+pub use job::{JobConfig, JobResult, Mapper, Reducer};

@@ -1,0 +1,75 @@
+//! The default word-count application (§4.2.2): "a simple word count
+//! application, which lets the user visualize different MapReduce
+//! scenarios. This default implementation can be replaced by custom
+//! MapReduce implementations."
+
+use crate::mapreduce::job::{Mapper, Reducer};
+
+/// Tokenizes lines into lowercase words and emits `(word, 1)`.
+#[derive(Debug, Default, Clone)]
+pub struct WordCountMapper;
+
+impl Mapper for WordCountMapper {
+    fn map(&self, _file: usize, _line: usize, value: &str, emit: &mut dyn FnMut(String, i64)) {
+        for token in value.split_whitespace() {
+            // single-pass normalize: filter to alphanumerics + lowercase
+            let mut w = String::with_capacity(token.len());
+            for c in token.chars() {
+                if c.is_alphanumeric() {
+                    for lc in c.to_lowercase() {
+                        w.push(lc);
+                    }
+                }
+            }
+            if !w.is_empty() {
+                emit(w, 1);
+            }
+        }
+    }
+}
+
+/// Sums the counts of one word.
+#[derive(Debug, Default, Clone)]
+pub struct WordCountReducer;
+
+impl Reducer for WordCountReducer {
+    fn reduce(&self, _key: &str, values: &[i64]) -> i64 {
+        values.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapper_tokenizes_and_normalizes() {
+        let m = WordCountMapper;
+        let mut out = Vec::new();
+        m.map(0, 0, "Hello, hello WORLD!  w42", &mut |k, v| out.push((k, v)));
+        assert_eq!(
+            out,
+            vec![
+                ("hello".to_string(), 1),
+                ("hello".to_string(), 1),
+                ("world".to_string(), 1),
+                ("w42".to_string(), 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn mapper_skips_punctuation_only() {
+        let m = WordCountMapper;
+        let mut out = Vec::new();
+        m.map(0, 0, "... --- !!!", &mut |k, v| out.push((k, v)));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn reducer_sums() {
+        let r = WordCountReducer;
+        assert_eq!(r.reduce("w", &[1, 1, 3]), 5);
+        assert_eq!(r.reduce("w", &[]), 0);
+    }
+}

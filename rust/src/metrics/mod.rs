@@ -1,0 +1,193 @@
+//! Metrics registry: counters, gauges and timers used across the grid, the
+//! simulator, the MapReduce engines and the bench harness, plus a renderer
+//! for paper-style result tables.
+
+use std::collections::BTreeMap;
+
+/// A named bag of counters/gauges. Cheap, deterministic iteration order.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter by `n`. Allocation-free for existing keys
+    /// (this sits on the grid's per-operation hot path).
+    pub fn add(&mut self, key: &str, n: u64) {
+        if let Some(v) = self.counters.get_mut(key) {
+            *v += n;
+        } else {
+            self.counters.insert(key.to_string(), n);
+        }
+    }
+
+    /// Increment by one.
+    pub fn incr(&mut self, key: &str) {
+        self.add(key, 1);
+    }
+
+    /// Read a counter (0 if absent).
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge.
+    pub fn set_gauge(&mut self, key: &str, v: f64) {
+        self.gauges.insert(key.to_string(), v);
+    }
+
+    /// Add to a gauge (accumulating timers).
+    pub fn add_gauge(&mut self, key: &str, v: f64) {
+        if let Some(g) = self.gauges.get_mut(key) {
+            *g += v;
+        } else {
+            self.gauges.insert(key.to_string(), v);
+        }
+    }
+
+    /// Read a gauge (0.0 if absent).
+    pub fn gauge(&self, key: &str) -> f64 {
+        self.gauges.get(key).copied().unwrap_or(0.0)
+    }
+
+    /// Merge another registry into this one (counters add, gauges add).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0.0) += v;
+        }
+    }
+
+    /// All counters, in key order.
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// All gauges, in key order.
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+/// Render a markdown-ish table with right-aligned numeric columns, the
+/// format every bench harness prints (mirrors the paper's tables).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: row from displayable items.
+    pub fn rowd<D: std::fmt::Display>(&mut self, cells: &[D]) {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v);
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = Metrics::new();
+        m.incr("puts");
+        m.add("puts", 4);
+        m.set_gauge("t", 1.5);
+        m.add_gauge("t", 0.5);
+        assert_eq!(m.counter("puts"), 5);
+        assert_eq!(m.counter("absent"), 0);
+        assert!((m.gauge("t") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Metrics::new();
+        a.add("x", 1);
+        a.set_gauge("g", 1.0);
+        let mut b = Metrics::new();
+        b.add("x", 2);
+        b.set_gauge("g", 2.0);
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3);
+        assert!((a.gauge("g") - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["nodes", "time"]);
+        t.rowd(&["1", "3.678"]);
+        t.rowd(&["6", "104.440"]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| nodes |"));
+        assert!(s.contains("104.440"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

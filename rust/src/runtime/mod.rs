@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text**; see DESIGN.md) and executes them
+//! from the coordinator's hot path. Python never runs here.
+//!
+//! * [`registry`] — manifest parsing + lazy compile + executable cache.
+//! * [`pjrt`] — thin wrapper over the `xla` crate (client, literals,
+//!   timed execution).
+//! * [`workload`] — the cloudlet-workload cost model: PJRT-backed (real
+//!   kernel executions, measured) or native (deterministic calibrated
+//!   constants for benches and artifact-less test runs).
+
+pub mod pjrt;
+pub mod registry;
+pub mod workload;
+
+pub use registry::{ArtifactKind, ManifestEntry, PjrtRuntime};
+pub use workload::{NativeBurnModel, PjrtBurnModel, WorkloadModel};

@@ -1,0 +1,103 @@
+//! Thin wrapper over the `xla` crate: CPU PJRT client, HLO-text loading,
+//! timed execution. Pattern follows /opt/xla-example/load_hlo.rs.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::error::{C2SError, Result};
+
+/// A compiled executable plus execution statistics.
+pub struct CompiledKernel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of executions so far.
+    pub executions: u64,
+    /// Total wall time spent executing.
+    pub total_time: Duration,
+}
+
+/// The CPU PJRT client + compilation services.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    /// Bring up the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| C2SError::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Self { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    ///
+    /// HLO text — not serialized protos — is the interchange format: jax ≥
+    /// 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+    /// the text parser reassigns ids.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<CompiledKernel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| C2SError::Runtime(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(|e| C2SError::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| C2SError::Runtime(format!("compile {}: {e}", path.display())))?;
+        Ok(CompiledKernel {
+            exe,
+            executions: 0,
+            total_time: Duration::ZERO,
+        })
+    }
+}
+
+impl CompiledKernel {
+    /// Execute with literal inputs; returns the (tuple) output literal and
+    /// the wall time of this execution.
+    pub fn execute(&mut self, inputs: &[xla::Literal]) -> Result<(xla::Literal, Duration)> {
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| C2SError::Runtime(format!("execute: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| C2SError::Runtime(format!("to_literal: {e}")))?;
+        let dt = t0.elapsed();
+        self.executions += 1;
+        self.total_time += dt;
+        Ok((lit, dt))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if expect as usize != data.len() {
+        return Err(C2SError::Runtime(format!(
+            "literal shape {dims:?} wants {expect} elements, got {}",
+            data.len()
+        )));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| C2SError::Runtime(format!("reshape: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_check() {
+        assert!(literal_f32(&[1.0, 2.0], &[2, 2]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+    }
+}

@@ -1,0 +1,242 @@
+//! Artifact registry: parses `artifacts/manifest.tsv`, lazily compiles HLO
+//! artifacts on first use, and exposes typed execution entry points for the
+//! two L2 graphs (`burn` and `matchmake`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::error::{C2SError, Result};
+use crate::runtime::pjrt::{literal_f32, CompiledKernel, PjrtContext};
+
+/// Artifact kinds emitted by `python/compile/aot.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `workload_step` variant: dims = (batch, state_dim, iterations).
+    Burn,
+    /// `matchmake` variant: dims = (cloudlets, vms, _).
+    Matchmake,
+}
+
+/// One manifest line.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Artifact kind.
+    pub kind: ArtifactKind,
+    /// Variant name (e.g. `burn_b256_d128_t64`).
+    pub name: String,
+    /// File name within the artifacts directory.
+    pub file: String,
+    /// First dim (batch / cloudlets).
+    pub d1: usize,
+    /// Second dim (state dim / vms).
+    pub d2: usize,
+    /// Third dim (iterations / unused).
+    pub d3: usize,
+}
+
+/// The runtime: PJRT context + manifest + compiled-executable cache.
+pub struct PjrtRuntime {
+    ctx: PjrtContext,
+    dir: PathBuf,
+    /// Parsed manifest entries.
+    pub manifest: Vec<ManifestEntry>,
+    cache: HashMap<String, CompiledKernel>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest from an artifacts directory and bring up PJRT.
+    /// Fails fast when the directory or manifest is missing (callers fall
+    /// back to the native workload model).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            C2SError::Runtime(format!(
+                "no artifacts at {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let mut manifest = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('\t').collect();
+            if parts.len() != 6 {
+                return Err(C2SError::Runtime(format!(
+                    "manifest line {} malformed: {line:?}",
+                    ln + 1
+                )));
+            }
+            let kind = match parts[0] {
+                "burn" => ArtifactKind::Burn,
+                "matchmake" => ArtifactKind::Matchmake,
+                other => {
+                    return Err(C2SError::Runtime(format!("unknown artifact kind {other}")))
+                }
+            };
+            let parse = |s: &str| -> Result<usize> {
+                s.parse()
+                    .map_err(|e| C2SError::Runtime(format!("manifest dim {s}: {e}")))
+            };
+            manifest.push(ManifestEntry {
+                kind,
+                name: parts[1].to_string(),
+                file: parts[2].to_string(),
+                d1: parse(parts[3])?,
+                d2: parse(parts[4])?,
+                d3: parse(parts[5])?,
+            });
+        }
+        if manifest.is_empty() {
+            return Err(C2SError::Runtime("manifest is empty".into()));
+        }
+        Ok(Self {
+            ctx: PjrtContext::cpu()?,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform (diagnostics).
+    pub fn platform(&self) -> String {
+        self.ctx.platform()
+    }
+
+    /// Entries of one kind.
+    pub fn entries(&self, kind: ArtifactKind) -> Vec<ManifestEntry> {
+        self.manifest
+            .iter()
+            .filter(|e| e.kind == kind)
+            .cloned()
+            .collect()
+    }
+
+    /// Find the burn variant with the given batch size (largest iterations
+    /// first when several match), or the smallest batch ≥ requested.
+    pub fn pick_burn(&self, batch: usize) -> Result<ManifestEntry> {
+        let mut burns = self.entries(ArtifactKind::Burn);
+        burns.sort_by_key(|e| (e.d1, e.d3));
+        burns
+            .iter()
+            .find(|e| e.d1 >= batch)
+            .or_else(|| burns.last())
+            .cloned()
+            .ok_or_else(|| C2SError::Runtime("no burn artifacts in manifest".into()))
+    }
+
+    /// Find a matchmake variant fitting `(cloudlets, vms)`.
+    pub fn pick_matchmake(&self, cloudlets: usize, vms: usize) -> Result<ManifestEntry> {
+        let mut mm = self.entries(ArtifactKind::Matchmake);
+        mm.sort_by_key(|e| (e.d1, e.d2));
+        mm.iter()
+            .find(|e| e.d1 >= cloudlets && e.d2 >= vms)
+            .or_else(|| mm.last())
+            .cloned()
+            .ok_or_else(|| C2SError::Runtime("no matchmake artifacts in manifest".into()))
+    }
+
+    fn kernel(&mut self, entry: &ManifestEntry) -> Result<&mut CompiledKernel> {
+        if !self.cache.contains_key(&entry.name) {
+            let path = self.dir.join(&entry.file);
+            let k = self.ctx.compile_hlo_file(&path)?;
+            self.cache.insert(entry.name.clone(), k);
+        }
+        Ok(self.cache.get_mut(&entry.name).expect("just inserted"))
+    }
+
+    /// Execute a burn variant on a full batch. `x` is row-major
+    /// `(d1, d2)`; returns the post-burn state and the wall time.
+    pub fn execute_burn(
+        &mut self,
+        entry: &ManifestEntry,
+        x: &[f32],
+    ) -> Result<(Vec<f32>, Duration)> {
+        debug_assert_eq!(entry.kind, ArtifactKind::Burn);
+        let dims = [entry.d1 as i64, entry.d2 as i64];
+        let input = literal_f32(x, &dims)?;
+        let kernel = self.kernel(entry)?;
+        let (lit, dt) = kernel.execute(&[input])?;
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| C2SError::Runtime(format!("untuple: {e}")))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| C2SError::Runtime(format!("to_vec: {e}")))?;
+        Ok((data, dt))
+    }
+
+    /// Execute a matchmake variant. Inputs are padded by the caller to the
+    /// artifact's `(d1, d2)`. Returns `(assignment, best_score, wall)`.
+    pub fn execute_matchmake(
+        &mut self,
+        entry: &ManifestEntry,
+        req: &[f32],
+        cap: &[f32],
+        load: &[f32],
+    ) -> Result<(Vec<i32>, Vec<f32>, Duration)> {
+        debug_assert_eq!(entry.kind, ArtifactKind::Matchmake);
+        if req.len() != entry.d1 || cap.len() != entry.d2 || load.len() != entry.d2 {
+            return Err(C2SError::Runtime(format!(
+                "matchmake inputs ({},{},{}) do not match artifact ({},{})",
+                req.len(),
+                cap.len(),
+                load.len(),
+                entry.d1,
+                entry.d2
+            )));
+        }
+        let r = literal_f32(req, &[entry.d1 as i64])?;
+        let c = literal_f32(cap, &[entry.d2 as i64])?;
+        let l = literal_f32(load, &[entry.d2 as i64])?;
+        let kernel = self.kernel(entry)?;
+        let (lit, dt) = kernel.execute(&[r, c, l])?;
+        let (a, b) = lit
+            .to_tuple2()
+            .map_err(|e| C2SError::Runtime(format!("untuple2: {e}")))?;
+        let assign = a
+            .to_vec::<i32>()
+            .map_err(|e| C2SError::Runtime(format!("assign to_vec: {e}")))?;
+        let best = b
+            .to_vec::<f32>()
+            .map_err(|e| C2SError::Runtime(format!("best to_vec: {e}")))?;
+        Ok((assign, best, dt))
+    }
+
+    /// Total wall time spent in kernels (perf accounting).
+    pub fn total_kernel_time(&self) -> Duration {
+        self.cache.values().map(|k| k.total_time).sum()
+    }
+
+    /// Total kernel executions.
+    pub fn total_executions(&self) -> u64 {
+        self.cache.values().map(|k| k.executions).sum()
+    }
+}
+
+/// Default artifacts directory: `$C2S_ARTIFACTS` or `artifacts/` relative
+/// to the workspace root.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("C2S_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_fails_cleanly() {
+        let err = match PjrtRuntime::load("/nonexistent/dir") {
+            Err(e) => e,
+            Ok(_) => panic!("load must fail for a missing directory"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    // Full load/execute paths are covered by rust/tests/runtime_pjrt.rs,
+    // which skips gracefully when artifacts are absent.
+}

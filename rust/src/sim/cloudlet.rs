@@ -1,0 +1,199 @@
+//! Cloudlet: the application unit that runs on a VM (§2.1.1: "cloudlets
+//! represent the applications that share these resources"). The distributed
+//! counterpart `HzCloudlet` (§3.4.1) is this struct stored in the grid via
+//! its XML-style serializer.
+
+use crate::error::Result;
+use crate::grid::serialize::GridSerialize;
+
+/// Lifecycle status of a cloudlet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloudletStatus {
+    /// Created, not yet bound to a VM.
+    Created,
+    /// Bound to a VM, waiting in its scheduler queue.
+    Queued,
+    /// Executing on a VM.
+    InExec,
+    /// Finished successfully.
+    Success,
+    /// Failed (e.g. no VM could accept it).
+    Failed,
+}
+
+impl CloudletStatus {
+    fn code(self) -> u8 {
+        match self {
+            CloudletStatus::Created => 0,
+            CloudletStatus::Queued => 1,
+            CloudletStatus::InExec => 2,
+            CloudletStatus::Success => 3,
+            CloudletStatus::Failed => 4,
+        }
+    }
+    fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => CloudletStatus::Created,
+            1 => CloudletStatus::Queued,
+            2 => CloudletStatus::InExec,
+            3 => CloudletStatus::Success,
+            4 => CloudletStatus::Failed,
+            other => {
+                return Err(crate::error::C2SError::Serialization(format!(
+                    "bad cloudlet status code {other}"
+                )))
+            }
+        })
+    }
+}
+
+/// An application/workload unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cloudlet {
+    /// Global cloudlet id.
+    pub id: usize,
+    /// Owning user/broker.
+    pub user_id: usize,
+    /// Length in million instructions (MI).
+    pub length_mi: u64,
+    /// PEs required.
+    pub pes: usize,
+    /// Status.
+    pub status: CloudletStatus,
+    /// Bound VM (scheduling decision output).
+    pub vm_id: Option<usize>,
+    /// Simulated submission time.
+    pub submit_time: f64,
+    /// Simulated execution start.
+    pub start_time: f64,
+    /// Simulated completion time.
+    pub finish_time: f64,
+}
+
+impl Cloudlet {
+    /// New unbound cloudlet.
+    pub fn new(id: usize, user_id: usize, length_mi: u64, pes: usize) -> Self {
+        Self {
+            id,
+            user_id,
+            length_mi,
+            pes,
+            status: CloudletStatus::Created,
+            vm_id: None,
+            submit_time: 0.0,
+            start_time: 0.0,
+            finish_time: 0.0,
+        }
+    }
+
+    /// True when terminal (success or failed).
+    pub fn is_done(&self) -> bool {
+        matches!(self.status, CloudletStatus::Success | CloudletStatus::Failed)
+    }
+
+    /// Simulated turnaround time (finish − submit); 0 before completion.
+    pub fn turnaround(&self) -> f64 {
+        if self.is_done() {
+            self.finish_time - self.submit_time
+        } else {
+            0.0
+        }
+    }
+}
+
+impl GridSerialize for Cloudlet {
+    // XML-style payload mirroring CloudletXmlSerializer (§4.1.2).
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        let xml = format!(
+            "<cloudlet id=\"{}\" user=\"{}\" length=\"{}\" pes=\"{}\" status=\"{}\" vm=\"{}\" submit=\"{}\" start=\"{}\" finish=\"{}\"/>",
+            self.id,
+            self.user_id,
+            self.length_mi,
+            self.pes,
+            self.status.code(),
+            self.vm_id.map(|v| v as i64).unwrap_or(-1),
+            self.submit_time,
+            self.start_time,
+            self.finish_time,
+        );
+        xml.write_bytes(out);
+    }
+
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+        let xml = String::read_bytes(buf, cursor)?;
+        let raw = |name: &str| -> Result<String> {
+            let pat = format!("{name}=\"");
+            let start = xml.find(&pat).ok_or_else(|| {
+                crate::error::C2SError::Serialization(format!("missing attr {name} in {xml}"))
+            })? + pat.len();
+            let end = xml[start..].find('"').unwrap_or(0) + start;
+            Ok(xml[start..end].to_string())
+        };
+        let int = |name: &str| -> Result<i64> {
+            raw(name)?.parse::<i64>().map_err(|e| {
+                crate::error::C2SError::Serialization(format!("bad attr {name}: {e}"))
+            })
+        };
+        let fl = |name: &str| -> Result<f64> {
+            raw(name)?.parse::<f64>().map_err(|e| {
+                crate::error::C2SError::Serialization(format!("bad attr {name}: {e}"))
+            })
+        };
+        Ok(Cloudlet {
+            id: int("id")? as usize,
+            user_id: int("user")? as usize,
+            length_mi: int("length")? as u64,
+            pes: int("pes")? as usize,
+            status: CloudletStatus::from_code(int("status")? as u8)?,
+            vm_id: match int("vm")? {
+                -1 => None,
+                v => Some(v as usize),
+            },
+            submit_time: fl("submit")?,
+            start_time: fl("start")?,
+            finish_time: fl("finish")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut c = Cloudlet::new(1, 0, 40_000, 1);
+        assert!(!c.is_done());
+        assert_eq!(c.turnaround(), 0.0);
+        c.status = CloudletStatus::Success;
+        c.submit_time = 1.0;
+        c.finish_time = 11.0;
+        assert!(c.is_done());
+        assert!((c.turnaround() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xml_roundtrip_all_statuses() {
+        for status in [
+            CloudletStatus::Created,
+            CloudletStatus::Queued,
+            CloudletStatus::InExec,
+            CloudletStatus::Success,
+            CloudletStatus::Failed,
+        ] {
+            let mut c = Cloudlet::new(9, 1, 123, 2);
+            c.status = status;
+            c.vm_id = Some(4);
+            c.submit_time = 0.5;
+            c.start_time = 1.25;
+            c.finish_time = 9.75;
+            let back = Cloudlet::from_bytes(&c.to_bytes()).unwrap();
+            assert_eq!(c, back);
+        }
+    }
+
+    #[test]
+    fn bad_status_code_rejected() {
+        assert!(CloudletStatus::from_code(99).is_err());
+    }
+}

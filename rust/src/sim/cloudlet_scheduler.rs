@@ -1,0 +1,259 @@
+//! Cloudlet schedulers: how a VM's MIPS capacity is shared among the
+//! cloudlets bound to it (CloudSim's `CloudletSchedulerSpaceShared` /
+//! `CloudletSchedulerTimeShared`).
+
+use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
+use std::collections::VecDeque;
+
+/// Sharing discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Cloudlets run one-at-a-time per PE set; later arrivals queue.
+    SpaceShared,
+    /// All bound cloudlets progress simultaneously, splitting capacity.
+    TimeShared,
+}
+
+#[derive(Debug, Clone)]
+struct Running {
+    cloudlet: Cloudlet,
+    remaining_mi: f64,
+}
+
+/// Per-VM scheduler state.
+#[derive(Debug, Clone)]
+pub struct VmScheduler {
+    kind: SchedulerKind,
+    /// Total VM capacity in MIPS (mips × pes).
+    capacity_mips: f64,
+    /// PE count (space-shared concurrency limit: one cloudlet per PE).
+    pes: usize,
+    running: Vec<Running>,
+    waiting: VecDeque<Cloudlet>,
+    last_update: f64,
+    /// Version counter guarding stale `VmProcessingUpdate` events.
+    pub version: u64,
+    /// Cloudlets finished during `submit`-triggered updates, parked until
+    /// the datacenter drains them.
+    pending_finished: Vec<Cloudlet>,
+}
+
+impl VmScheduler {
+    /// New scheduler for a VM with the given capacity.
+    pub fn new(kind: SchedulerKind, capacity_mips: f64, pes: usize) -> Self {
+        Self {
+            kind,
+            capacity_mips,
+            pes: pes.max(1),
+            running: Vec::new(),
+            waiting: VecDeque::new(),
+            last_update: 0.0,
+            version: 0,
+            pending_finished: Vec::new(),
+        }
+    }
+
+    /// Per-cloudlet execution rate (MIPS) under the current load.
+    fn rate(&self) -> f64 {
+        match self.kind {
+            SchedulerKind::SpaceShared => self.capacity_mips / self.pes as f64,
+            SchedulerKind::TimeShared => {
+                if self.running.is_empty() {
+                    self.capacity_mips
+                } else {
+                    self.capacity_mips / self.running.len() as f64
+                }
+            }
+        }
+    }
+
+    /// Advance all running cloudlets to `now`, moving finished ones out.
+    /// Returns finished cloudlets (status set, finish time stamped).
+    pub fn update(&mut self, now: f64) -> Vec<Cloudlet> {
+        let dt = (now - self.last_update).max(0.0);
+        self.last_update = now;
+        let rate = self.rate();
+        let mut finished = Vec::new();
+        if dt > 0.0 {
+            for r in &mut self.running {
+                r.remaining_mi -= rate * dt;
+            }
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].remaining_mi <= 1e-6 {
+                let mut r = self.running.swap_remove(i);
+                r.cloudlet.status = CloudletStatus::Success;
+                r.cloudlet.finish_time = now;
+                finished.push(r.cloudlet);
+            } else {
+                i += 1;
+            }
+        }
+        // space-shared: admit queued work onto freed PEs
+        if self.kind == SchedulerKind::SpaceShared {
+            while self.running.len() < self.pes {
+                let Some(mut c) = self.waiting.pop_front() else {
+                    break;
+                };
+                c.status = CloudletStatus::InExec;
+                c.start_time = now;
+                self.running.push(Running {
+                    remaining_mi: c.length_mi as f64,
+                    cloudlet: c,
+                });
+            }
+        }
+        self.version += 1;
+        finished.sort_by_key(|c| c.id);
+        finished
+    }
+
+    /// Submit a cloudlet at time `now`; it starts immediately if capacity
+    /// allows (or always, for time-shared).
+    pub fn submit(&mut self, mut cloudlet: Cloudlet, now: f64) {
+        // bring existing work up to date first so shares are fair
+        let done = self.update(now);
+        self.pending_finished.extend(done);
+        cloudlet.submit_time = now;
+        match self.kind {
+            SchedulerKind::TimeShared => {
+                cloudlet.status = CloudletStatus::InExec;
+                cloudlet.start_time = now;
+                self.running.push(Running {
+                    remaining_mi: cloudlet.length_mi as f64,
+                    cloudlet,
+                });
+            }
+            SchedulerKind::SpaceShared => {
+                if self.running.len() < self.pes {
+                    cloudlet.status = CloudletStatus::InExec;
+                    cloudlet.start_time = now;
+                    self.running.push(Running {
+                        remaining_mi: cloudlet.length_mi as f64,
+                        cloudlet,
+                    });
+                } else {
+                    cloudlet.status = CloudletStatus::Queued;
+                    self.waiting.push_back(cloudlet);
+                }
+            }
+        }
+        self.version += 1;
+    }
+
+    /// Time until the next cloudlet completes, from `now` (None when idle).
+    pub fn next_completion_delay(&self, _now: f64) -> Option<f64> {
+        let rate = self.rate();
+        self.running
+            .iter()
+            .map(|r| (r.remaining_mi / rate).max(0.0))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Number of cloudlets currently running or queued.
+    pub fn load(&self) -> usize {
+        self.running.len() + self.waiting.len()
+    }
+
+    /// True when nothing is running or queued.
+    pub fn is_idle(&self) -> bool {
+        self.running.is_empty() && self.waiting.is_empty()
+    }
+}
+
+// finished cloudlets produced as a side effect of `submit` (an update ran)
+// are parked here until the datacenter collects them.
+impl VmScheduler {
+    /// Drain cloudlets finished during `submit`-triggered updates.
+    pub fn drain_pending_finished(&mut self) -> Vec<Cloudlet> {
+        std::mem::take(&mut self.pending_finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cl(id: usize, mi: u64) -> Cloudlet {
+        Cloudlet::new(id, 0, mi, 1)
+    }
+
+    #[test]
+    fn space_shared_runs_per_pe() {
+        // 1 PE, 1000 MIPS: two 1000-MI cloudlets run back-to-back
+        let mut s = VmScheduler::new(SchedulerKind::SpaceShared, 1000.0, 1);
+        s.submit(cl(0, 1000), 0.0);
+        s.submit(cl(1, 1000), 0.0);
+        assert_eq!(s.next_completion_delay(0.0), Some(1.0));
+        let fin = s.update(1.0);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].id, 0);
+        // second admitted at t=1, finishes at t=2
+        let fin = s.update(2.0);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].id, 1);
+        assert!((fin[0].finish_time - 2.0).abs() < 1e-9);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn time_shared_splits_capacity() {
+        // 1000 MIPS shared by two 1000-MI cloudlets: both finish at t=2
+        let mut s = VmScheduler::new(SchedulerKind::TimeShared, 1000.0, 1);
+        s.submit(cl(0, 1000), 0.0);
+        s.submit(cl(1, 1000), 0.0);
+        let d = s.next_completion_delay(0.0).unwrap();
+        assert!((d - 2.0).abs() < 1e-9, "shared rate halves progress: {d}");
+        let fin = s.update(2.0);
+        assert_eq!(fin.len(), 2);
+    }
+
+    #[test]
+    fn time_shared_dynamic_arrival() {
+        // c0 alone for 1s (1000 MI done of 2000), then c1 arrives;
+        // both at 500 MIPS: c0 needs 2 more seconds, c1 needs 2.
+        let mut s = VmScheduler::new(SchedulerKind::TimeShared, 1000.0, 1);
+        s.submit(cl(0, 2000), 0.0);
+        s.submit(cl(1, 1000), 1.0);
+        let d = s.next_completion_delay(1.0).unwrap();
+        assert!((d - 2.0).abs() < 1e-9, "{d}");
+        let fin = s.update(3.0);
+        assert_eq!(fin.len(), 2, "both complete at t=3");
+    }
+
+    #[test]
+    fn space_shared_multi_pe_concurrency() {
+        // 2 PEs, 2000 total MIPS → 1000 per PE: two cloudlets in parallel
+        let mut s = VmScheduler::new(SchedulerKind::SpaceShared, 2000.0, 2);
+        s.submit(cl(0, 1000), 0.0);
+        s.submit(cl(1, 1000), 0.0);
+        s.submit(cl(2, 1000), 0.0); // queued
+        assert_eq!(s.load(), 3);
+        let fin = s.update(1.0);
+        assert_eq!(fin.len(), 2);
+        let fin = s.update(2.0);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].id, 2);
+    }
+
+    #[test]
+    fn version_increments_on_change() {
+        let mut s = VmScheduler::new(SchedulerKind::TimeShared, 1000.0, 1);
+        let v0 = s.version;
+        s.submit(cl(0, 100), 0.0);
+        assert!(s.version > v0);
+    }
+
+    #[test]
+    fn start_times_stamped() {
+        let mut s = VmScheduler::new(SchedulerKind::SpaceShared, 1000.0, 1);
+        s.submit(cl(0, 1000), 5.0);
+        s.submit(cl(1, 1000), 5.0);
+        let fin = s.update(6.0);
+        assert!((fin[0].start_time - 5.0).abs() < 1e-9);
+        assert!((fin[0].submit_time - 5.0).abs() < 1e-9);
+        let fin = s.update(7.0);
+        assert!((fin[0].start_time - 6.0).abs() < 1e-9, "queued start when PE freed");
+    }
+}

@@ -1,0 +1,105 @@
+//! Simulation events: the scheduling operations of CloudSim's Fig 2.1.
+
+use crate::sim::cloudlet::Cloudlet;
+use crate::sim::vm::Vm;
+
+/// Entity address inside one simulation.
+pub type EntityId = usize;
+
+/// Event tags (the CloudSim `CloudSimTags` analog).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventTag {
+    /// Broker asks a datacenter to create a VM.
+    VmCreate,
+    /// Datacenter replies with creation success/failure.
+    VmCreateAck,
+    /// Broker submits a cloudlet to the datacenter hosting its VM.
+    CloudletSubmit,
+    /// Datacenter returns a finished cloudlet to its broker.
+    CloudletReturn,
+    /// Internal datacenter timer: re-evaluate VM processing (time-shared
+    /// scheduler updates).
+    VmProcessingUpdate,
+    /// Entity bring-up.
+    Start,
+    /// End of simulation marker.
+    End,
+}
+
+/// Event payloads.
+#[derive(Debug, Clone)]
+pub enum EventData {
+    /// No payload.
+    None,
+    /// VM creation request.
+    Vm(Vm),
+    /// VM creation acknowledgement `(vm, success)`.
+    VmAck(Vm, bool),
+    /// Cloudlet submission / return.
+    Cloudlet(Cloudlet),
+    /// Scheduler update version guard `(vm_id, version)`.
+    UpdateToken(usize, u64),
+}
+
+/// A scheduled simulation event.
+#[derive(Debug, Clone)]
+pub struct SimEvent {
+    /// Absolute simulated time.
+    pub time: f64,
+    /// Monotonic sequence number (FIFO tie-break at equal times).
+    pub seq: u64,
+    /// Source entity.
+    pub src: EntityId,
+    /// Destination entity.
+    pub dst: EntityId,
+    /// Operation.
+    pub tag: EventTag,
+    /// Payload.
+    pub data: EventData,
+}
+
+impl PartialEq for SimEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for SimEvent {}
+
+impl PartialOrd for SimEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for SimEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap usage: earlier time first, then FIFO by sequence
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(time: f64, seq: u64) -> SimEvent {
+        SimEvent {
+            time,
+            seq,
+            src: 0,
+            dst: 0,
+            tag: EventTag::Start,
+            data: EventData::None,
+        }
+    }
+
+    #[test]
+    fn ordering_by_time_then_seq() {
+        assert!(ev(1.0, 5) < ev(2.0, 1));
+        assert!(ev(1.0, 1) < ev(1.0, 2), "FIFO at equal time");
+        assert_eq!(ev(1.0, 1), ev(1.0, 1));
+    }
+}

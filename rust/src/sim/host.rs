@@ -1,0 +1,131 @@
+//! Host: a physical machine inside a datacenter, aggregating PEs and RAM,
+//! and hosting VMs (§2.1.1: "Multiple hosts are created inside data
+//! centers").
+
+use crate::sim::pe::{Pe, PeStatus};
+use crate::sim::vm::Vm;
+
+/// A physical host.
+#[derive(Debug, Clone)]
+pub struct Host {
+    /// Id within its datacenter.
+    pub id: usize,
+    /// Processing elements (uniform MIPS per §2.1.1).
+    pub pes: Vec<Pe>,
+    /// Total RAM (MB).
+    pub ram_mb: u64,
+    /// RAM currently allocated to VMs.
+    pub used_ram_mb: u64,
+    /// VM ids placed here.
+    pub vms: Vec<usize>,
+}
+
+impl Host {
+    /// A host with `n_pes` PEs of `mips` each and `ram_mb` of memory.
+    pub fn new(id: usize, n_pes: usize, mips: u64, ram_mb: u64) -> Self {
+        Self {
+            id,
+            pes: (0..n_pes).map(|i| Pe::new(i, mips)).collect(),
+            ram_mb,
+            used_ram_mb: 0,
+            vms: Vec::new(),
+        }
+    }
+
+    /// Number of free PEs.
+    pub fn free_pes(&self) -> usize {
+        self.pes.iter().filter(|p| p.is_free()).count()
+    }
+
+    /// MIPS rating of this host's PEs.
+    pub fn mips_per_pe(&self) -> u64 {
+        self.pes.first().map(|p| p.mips).unwrap_or(0)
+    }
+
+    /// Whether the host can accept the VM (PEs, MIPS rating, RAM).
+    pub fn is_suitable_for(&self, vm: &Vm) -> bool {
+        self.free_pes() >= vm.pes
+            && self.mips_per_pe() >= vm.mips
+            && self.ram_mb - self.used_ram_mb >= vm.ram_mb
+    }
+
+    /// Allocate the VM; returns false when unsuitable.
+    pub fn allocate(&mut self, vm: &Vm) -> bool {
+        if !self.is_suitable_for(vm) {
+            return false;
+        }
+        let mut need = vm.pes;
+        for pe in &mut self.pes {
+            if need == 0 {
+                break;
+            }
+            if pe.is_free() {
+                pe.status = PeStatus::Busy;
+                need -= 1;
+            }
+        }
+        self.used_ram_mb += vm.ram_mb;
+        self.vms.push(vm.id);
+        true
+    }
+
+    /// Release the VM's resources; returns false when the VM is not here.
+    pub fn deallocate(&mut self, vm: &Vm) -> bool {
+        let Some(pos) = self.vms.iter().position(|&v| v == vm.id) else {
+            return false;
+        };
+        self.vms.remove(pos);
+        self.used_ram_mb = self.used_ram_mb.saturating_sub(vm.ram_mb);
+        let mut free = vm.pes;
+        for pe in &mut self.pes {
+            if free == 0 {
+                break;
+            }
+            if pe.status == PeStatus::Busy {
+                pe.status = PeStatus::Free;
+                free -= 1;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_deallocate() {
+        let mut h = Host::new(0, 8, 3400, 12_288);
+        let vm = Vm::new(0, 0, 1000, 2, 1024, 1000);
+        assert!(h.is_suitable_for(&vm));
+        assert!(h.allocate(&vm));
+        assert_eq!(h.free_pes(), 6);
+        assert_eq!(h.used_ram_mb, 1024);
+        assert!(h.deallocate(&vm));
+        assert_eq!(h.free_pes(), 8);
+        assert_eq!(h.used_ram_mb, 0);
+        assert!(!h.deallocate(&vm), "double-free rejected");
+    }
+
+    #[test]
+    fn rejects_oversized_vm() {
+        let mut h = Host::new(0, 2, 1000, 2048);
+        let too_many_pes = Vm::new(0, 0, 500, 4, 512, 1);
+        assert!(!h.allocate(&too_many_pes));
+        let too_fast = Vm::new(1, 0, 2000, 1, 512, 1);
+        assert!(!h.allocate(&too_fast));
+        let too_big = Vm::new(2, 0, 500, 1, 4096, 1);
+        assert!(!h.allocate(&too_big));
+    }
+
+    #[test]
+    fn fills_up() {
+        let mut h = Host::new(0, 4, 1000, 4096);
+        for i in 0..4 {
+            assert!(h.allocate(&Vm::new(i, 0, 1000, 1, 1024, 1)));
+        }
+        assert!(!h.allocate(&Vm::new(9, 0, 1000, 1, 1, 1)), "no PEs left");
+        assert_eq!(h.vms.len(), 4);
+    }
+}

@@ -1,0 +1,36 @@
+//! The CloudSim substrate: a from-scratch discrete-event cloud simulator
+//! with the entity model of CloudSim 3.x (§2.1.1, Fig 2.1).
+//!
+//! * [`des`] — the discrete-event engine (future event queue, clock).
+//! * [`event`] — event tags and payloads (Fig 2.1 scheduling operations).
+//! * [`pe`], [`host`], [`vm`], [`cloudlet`] — the entity model: processing
+//!   elements with MIPS ratings, hosts aggregating PEs, VMs placed on
+//!   hosts, cloudlets (applications) running on VMs.
+//! * [`vm_allocation`] — `VmAllocationPolicySimple` (most free PEs first).
+//! * [`cloudlet_scheduler`] — space-shared and time-shared cloudlet
+//!   schedulers.
+//! * [`datacenter`] — the IaaS resource provider entity.
+//! * [`broker`] — `DatacenterBroker`: VM creation and round-robin
+//!   application scheduling; the extension point the paper's distributed
+//!   brokers subclass.
+//! * [`scenario`] — glue: build + run a whole scenario, producing the
+//!   scheduling decisions and accounting data the distribution layer
+//!   consumes.
+
+pub mod broker;
+pub mod cloudlet;
+pub mod cloudlet_scheduler;
+pub mod datacenter;
+pub mod des;
+pub mod event;
+pub mod host;
+pub mod pe;
+pub mod scenario;
+pub mod vm;
+pub mod vm_allocation;
+
+pub use cloudlet::{Cloudlet, CloudletStatus};
+pub use host::Host;
+pub use pe::{Pe, PeStatus};
+pub use scenario::{run_scenario, ScenarioResult};
+pub use vm::Vm;

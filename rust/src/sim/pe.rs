@@ -1,0 +1,62 @@
+//! Processing Element (Pe): the CPU-core unit, rated in MIPS (§2.1.1:
+//! "CPU unit is defined by Pe in terms of millions of instructions per
+//! second"; all PEs of one machine share the same rating).
+
+/// Availability of a PE for cloudlets (§2.1.1: FREE=1, BUSY=2, FAILED=3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeStatus {
+    /// Available for allocation.
+    Free,
+    /// Allocated to a VM.
+    Busy,
+    /// Failed (host fault injection).
+    Failed,
+}
+
+/// A processing element.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    /// Id within its host.
+    pub id: usize,
+    /// Rating in million instructions per second.
+    pub mips: u64,
+    /// Current status.
+    pub status: PeStatus,
+}
+
+impl Pe {
+    /// A free PE with the given rating.
+    pub fn new(id: usize, mips: u64) -> Self {
+        Self {
+            id,
+            mips,
+            status: PeStatus::Free,
+        }
+    }
+
+    /// True when the PE can be allocated.
+    pub fn is_free(&self) -> bool {
+        self.status == PeStatus::Free
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_pe_is_free() {
+        let pe = Pe::new(0, 3400);
+        assert!(pe.is_free());
+        assert_eq!(pe.mips, 3400);
+    }
+
+    #[test]
+    fn busy_pe_not_free() {
+        let mut pe = Pe::new(0, 1000);
+        pe.status = PeStatus::Busy;
+        assert!(!pe.is_free());
+        pe.status = PeStatus::Failed;
+        assert!(!pe.is_free());
+    }
+}

@@ -1,0 +1,232 @@
+//! Scenario builder + runner: wires datacenters, hosts, a broker and the
+//! entity dispatcher together, producing the scheduling outcome and the
+//! cost-accounting data the distribution layer consumes.
+
+use crate::config::SimConfig;
+use crate::sim::broker::{Broker, CloudletBinder, RoundRobinBinder};
+use crate::sim::cloudlet::Cloudlet;
+use crate::sim::cloudlet_scheduler::SchedulerKind;
+use crate::sim::datacenter::Datacenter;
+use crate::sim::des::{Entity, SimCtx, Simulation};
+use crate::sim::event::{EntityId, SimEvent};
+use crate::sim::host::Host;
+use crate::sim::vm::Vm;
+use crate::util::rng::SplitMix64;
+
+/// The closed entity set of a CloudSim scenario.
+pub enum CloudEntity {
+    /// An IaaS datacenter.
+    Dc(Datacenter),
+    /// The application broker.
+    Broker(Broker),
+}
+
+impl Entity for CloudEntity {
+    fn start(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
+        if let CloudEntity::Broker(b) = self {
+            b.start(self_id, ctx);
+        }
+    }
+    fn process(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
+        match self {
+            CloudEntity::Dc(d) => d.process(self_id, ev, ctx),
+            CloudEntity::Broker(b) => b.process(self_id, ev, ctx),
+        }
+    }
+}
+
+/// Outcome of one scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    /// Finished cloudlets (success + failed), sorted by id.
+    pub cloudlets: Vec<Cloudlet>,
+    /// Successfully created VMs, sorted by id.
+    pub vms: Vec<Vm>,
+    /// Final simulated (in-world) clock.
+    pub sim_clock: f64,
+    /// Total DES events dispatched — the unparallelizable core work.
+    pub events_processed: u64,
+    /// Binding search steps (parallelizable scheduling workload).
+    pub bind_steps: u64,
+}
+
+impl ScenarioResult {
+    /// Number of successfully finished cloudlets.
+    pub fn successes(&self) -> usize {
+        self.cloudlets
+            .iter()
+            .filter(|c| c.status == crate::sim::cloudlet::CloudletStatus::Success)
+            .count()
+    }
+}
+
+/// Deterministically generate the VM set of a scenario.
+///
+/// With `variable` sizing (matchmaking scenarios, §5.1.2: "Each cloudlet
+/// and VM has a variable length or size"), MIPS and image size vary per VM;
+/// otherwise all VMs are uniform.
+pub fn make_vms(cfg: &SimConfig, variable: bool) -> Vec<Vm> {
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x56AD);
+    (0..cfg.no_of_vms)
+        .map(|i| {
+            let (mips, size) = if variable {
+                (rng.gen_range(500, 2500), rng.gen_range(1_000, 20_000))
+            } else {
+                (1000, 10_000)
+            };
+            Vm::new(i, i % cfg.no_of_users.max(1), mips, 1, 512, size)
+        })
+        .collect()
+}
+
+/// Deterministically generate the cloudlet set.
+pub fn make_cloudlets(cfg: &SimConfig, variable: bool) -> Vec<Cloudlet> {
+    let mut rng = SplitMix64::new(cfg.seed ^ 0xC10D1E7);
+    (0..cfg.no_of_cloudlets)
+        .map(|i| {
+            let len = if variable {
+                rng.gen_range(cfg.cloudlet_length_mi / 2, cfg.cloudlet_length_mi * 3 / 2 + 1)
+            } else {
+                cfg.cloudlet_length_mi
+            };
+            Cloudlet::new(i, i % cfg.no_of_users.max(1), len, 1)
+        })
+        .collect()
+}
+
+/// Build the hosts of one datacenter.
+pub fn make_hosts(cfg: &SimConfig) -> Vec<Host> {
+    (0..cfg.hosts_per_datacenter)
+        .map(|h| Host::new(h, cfg.pes_per_host, cfg.mips_per_pe, cfg.host_ram_mb))
+        .collect()
+}
+
+/// Run a full scenario with the given binder; this is "pure CloudSim" —
+/// the single-JVM semantics both Table 5.1 columns share. The distribution
+/// layer reuses the outputs and re-prices execution on the grid.
+pub fn run_scenario_with_binder(
+    cfg: &SimConfig,
+    variable: bool,
+    binder: Box<dyn CloudletBinder>,
+) -> ScenarioResult {
+    let mut sim: Simulation<CloudEntity> = Simulation::new();
+    let mut dc_ids = Vec::new();
+    for d in 0..cfg.no_of_datacenters {
+        let dc = Datacenter::new(d, make_hosts(cfg), SchedulerKind::TimeShared);
+        dc_ids.push(sim.add_entity(CloudEntity::Dc(dc)));
+    }
+    let vms = make_vms(cfg, variable);
+    let cloudlets = make_cloudlets(cfg, variable);
+    let n_cloudlets = cloudlets.len();
+    let broker = Broker::new(0, dc_ids.clone(), vms, cloudlets, binder);
+    let broker_id = sim.add_entity(CloudEntity::Broker(broker));
+
+    let stats = sim.run(50_000_000);
+
+    let CloudEntity::Broker(b) = sim.entity(broker_id) else {
+        unreachable!()
+    };
+    let mut cloudlets = b.finished.clone();
+    cloudlets.sort_by_key(|c| c.id);
+    let mut vms = b.created_vms.clone();
+    vms.sort_by_key(|v| v.id);
+    debug_assert!(
+        cloudlets.len() == n_cloudlets,
+        "all cloudlets must terminate: {}/{}",
+        cloudlets.len(),
+        n_cloudlets
+    );
+    ScenarioResult {
+        cloudlets,
+        vms,
+        sim_clock: stats.clock,
+        events_processed: stats.events_processed,
+        bind_steps: b.bind_steps,
+    }
+}
+
+/// Run the default round-robin scheduling scenario (§5.1.1).
+pub fn run_scenario(cfg: &SimConfig) -> ScenarioResult {
+    run_scenario_with_binder(cfg, false, Box::<RoundRobinBinder>::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SimConfig {
+        SimConfig {
+            no_of_datacenters: 2,
+            hosts_per_datacenter: 2,
+            pes_per_host: 4,
+            no_of_vms: 8,
+            no_of_cloudlets: 16,
+            cloudlet_length_mi: 1000,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn all_cloudlets_finish() {
+        let r = run_scenario(&small_cfg());
+        assert_eq!(r.cloudlets.len(), 16);
+        assert_eq!(r.successes(), 16);
+        assert!(r.sim_clock > 0.0);
+        assert!(r.events_processed > 16);
+        assert_eq!(r.bind_steps, 16);
+    }
+
+    #[test]
+    fn vm_placement_capacity_respected() {
+        let r = run_scenario(&small_cfg());
+        // 2 DCs × 2 hosts × 4 PEs = 16 PE capacity ≥ 8 single-PE VMs
+        assert_eq!(r.vms.len(), 8);
+        assert!(r.vms.iter().all(|v| v.is_created()));
+    }
+
+    #[test]
+    fn overload_fails_gracefully() {
+        let cfg = SimConfig {
+            no_of_datacenters: 1,
+            hosts_per_datacenter: 1,
+            pes_per_host: 2,
+            no_of_vms: 5, // only 2 fit
+            no_of_cloudlets: 10,
+            ..SimConfig::default()
+        };
+        let r = run_scenario(&cfg);
+        assert_eq!(r.vms.len(), 2, "only capacity-many VMs created");
+        assert_eq!(r.cloudlets.len(), 10, "every cloudlet terminates");
+        assert_eq!(r.successes(), 10, "RR binder re-targets created VMs only");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_scenario(&small_cfg());
+        let b = run_scenario(&small_cfg());
+        assert_eq!(a.sim_clock, b.sim_clock);
+        assert_eq!(a.events_processed, b.events_processed);
+        let fa: Vec<f64> = a.cloudlets.iter().map(|c| c.finish_time).collect();
+        let fb: Vec<f64> = b.cloudlets.iter().map(|c| c.finish_time).collect();
+        assert_eq!(fa, fb);
+    }
+
+    #[test]
+    fn variable_sizes_vary() {
+        let cfg = small_cfg();
+        let vms = make_vms(&cfg, true);
+        let mips: std::collections::HashSet<u64> = vms.iter().map(|v| v.mips).collect();
+        assert!(mips.len() > 1, "variable sizing must differ");
+        let uniform = make_vms(&cfg, false);
+        assert!(uniform.iter().all(|v| v.mips == 1000));
+    }
+
+    #[test]
+    fn more_cloudlets_longer_makespan() {
+        let mut cfg = small_cfg();
+        let r1 = run_scenario(&cfg);
+        cfg.no_of_cloudlets = 64;
+        let r2 = run_scenario(&cfg);
+        assert!(r2.sim_clock > r1.sim_clock);
+    }
+}

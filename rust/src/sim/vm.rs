@@ -1,0 +1,133 @@
+//! Virtual machine model. Each VM is assigned to a host; cloudlets are
+//! assigned to VMs (§2.1.1). The distributed counterpart `HzVm` (§3.4.1) is
+//! this struct stored in the grid via its XML-style serializer.
+
+use crate::error::Result;
+use crate::grid::serialize::GridSerialize;
+
+/// A virtual machine request/instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Vm {
+    /// Global VM id.
+    pub id: usize,
+    /// Owning user/broker id.
+    pub user_id: usize,
+    /// Requested MIPS per PE.
+    pub mips: u64,
+    /// Number of PEs.
+    pub pes: usize,
+    /// RAM in MB.
+    pub ram_mb: u64,
+    /// Image size in MB (used by matchmaking as the VM "size").
+    pub size_mb: u64,
+    /// Host the VM is placed on (`None` until created).
+    pub host: Option<usize>,
+    /// Datacenter the VM is placed in (`None` until created).
+    pub datacenter: Option<usize>,
+}
+
+impl Vm {
+    /// A VM request (unplaced).
+    pub fn new(id: usize, user_id: usize, mips: u64, pes: usize, ram_mb: u64, size_mb: u64) -> Self {
+        Self {
+            id,
+            user_id,
+            mips,
+            pes,
+            ram_mb,
+            size_mb,
+            host: None,
+            datacenter: None,
+        }
+    }
+
+    /// Total requested MIPS.
+    pub fn total_mips(&self) -> u64 {
+        self.mips * self.pes as u64
+    }
+
+    /// True once placed on a host.
+    pub fn is_created(&self) -> bool {
+        self.host.is_some()
+    }
+}
+
+impl GridSerialize for Vm {
+    // XML-style encoding mirroring the paper's VmXmlSerializer (§4.1.2):
+    // self-describing, human-readable, deliberately larger than a packed
+    // binary format — serialization cost S is a first-class measured term.
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        let xml = format!(
+            "<vm id=\"{}\" user=\"{}\" mips=\"{}\" pes=\"{}\" ram=\"{}\" size=\"{}\" host=\"{}\" dc=\"{}\"/>",
+            self.id,
+            self.user_id,
+            self.mips,
+            self.pes,
+            self.ram_mb,
+            self.size_mb,
+            self.host.map(|h| h as i64).unwrap_or(-1),
+            self.datacenter.map(|d| d as i64).unwrap_or(-1),
+        );
+        xml.write_bytes(out);
+    }
+
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+        let xml = String::read_bytes(buf, cursor)?;
+        let attr = |name: &str| -> Result<i64> {
+            let pat = format!("{name}=\"");
+            let start = xml.find(&pat).ok_or_else(|| {
+                crate::error::C2SError::Serialization(format!("missing attr {name} in {xml}"))
+            })? + pat.len();
+            let end = xml[start..].find('"').unwrap_or(0) + start;
+            xml[start..end].parse::<i64>().map_err(|e| {
+                crate::error::C2SError::Serialization(format!("bad attr {name}: {e}"))
+            })
+        };
+        Ok(Vm {
+            id: attr("id")? as usize,
+            user_id: attr("user")? as usize,
+            mips: attr("mips")? as u64,
+            pes: attr("pes")? as usize,
+            ram_mb: attr("ram")? as u64,
+            size_mb: attr("size")? as u64,
+            host: match attr("host")? {
+                -1 => None,
+                h => Some(h as usize),
+            },
+            datacenter: match attr("dc")? {
+                -1 => None,
+                d => Some(d as usize),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vm_basics() {
+        let vm = Vm::new(3, 0, 1000, 2, 512, 10_000);
+        assert_eq!(vm.total_mips(), 2000);
+        assert!(!vm.is_created());
+    }
+
+    #[test]
+    fn xml_serializer_roundtrip() {
+        let mut vm = Vm::new(7, 2, 2500, 4, 1024, 2500);
+        vm.host = Some(5);
+        vm.datacenter = Some(1);
+        let bytes = vm.to_bytes();
+        // the XML form is intentionally verbose — S term realism
+        assert!(bytes.len() > 60);
+        let back = Vm::from_bytes(&bytes).unwrap();
+        assert_eq!(vm, back);
+    }
+
+    #[test]
+    fn unplaced_roundtrip() {
+        let vm = Vm::new(0, 0, 1, 1, 1, 1);
+        assert_eq!(Vm::from_bytes(&vm.to_bytes()).unwrap(), vm);
+    }
+}

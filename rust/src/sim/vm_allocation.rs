@@ -1,0 +1,101 @@
+//! VM→Host allocation policies.
+//!
+//! `VmAllocationPolicySimple` is CloudSim's default: place each VM on the
+//! suitable host with the most free PEs (load balancing by core count).
+
+use crate::sim::host::Host;
+use crate::sim::vm::Vm;
+
+/// Strategy for placing VMs on hosts.
+pub trait VmAllocationPolicy {
+    /// Choose a host index for `vm`, or `None` when no host fits.
+    fn select_host(&self, hosts: &[Host], vm: &Vm) -> Option<usize>;
+}
+
+/// CloudSim's `VmAllocationPolicySimple`: most free PEs first.
+#[derive(Debug, Default, Clone)]
+pub struct VmAllocationPolicySimple;
+
+impl VmAllocationPolicy for VmAllocationPolicySimple {
+    fn select_host(&self, hosts: &[Host], vm: &Vm) -> Option<usize> {
+        hosts
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| h.is_suitable_for(vm))
+            .max_by_key(|(i, h)| (h.free_pes(), usize::MAX - i)) // stable tie-break: lowest index
+            .map(|(i, _)| i)
+    }
+}
+
+/// First-fit policy (used by ablation benches: cheaper but less balanced).
+#[derive(Debug, Default, Clone)]
+pub struct VmAllocationFirstFit;
+
+impl VmAllocationPolicy for VmAllocationFirstFit {
+    fn select_host(&self, hosts: &[Host], vm: &Vm) -> Option<usize> {
+        hosts.iter().position(|h| h.is_suitable_for(vm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hosts() -> Vec<Host> {
+        vec![
+            Host::new(0, 4, 1000, 4096),
+            Host::new(1, 8, 1000, 4096),
+            Host::new(2, 2, 1000, 4096),
+        ]
+    }
+
+    #[test]
+    fn simple_prefers_most_free_pes() {
+        let hs = hosts();
+        let vm = Vm::new(0, 0, 1000, 1, 512, 1);
+        let p = VmAllocationPolicySimple;
+        assert_eq!(p.select_host(&hs, &vm), Some(1));
+    }
+
+    #[test]
+    fn simple_balances_over_time() {
+        let mut hs = hosts();
+        let p = VmAllocationPolicySimple;
+        let mut placements = Vec::new();
+        for i in 0..6 {
+            let vm = Vm::new(i, 0, 1000, 2, 256, 1);
+            let h = p.select_host(&hs, &vm).unwrap();
+            assert!(hs[h].allocate(&vm));
+            placements.push(h);
+        }
+        // 8-PE host absorbs more VMs but others get used as it drains
+        assert!(placements.contains(&0));
+        assert!(placements.contains(&1));
+    }
+
+    #[test]
+    fn first_fit_takes_first_suitable() {
+        let hs = hosts();
+        let vm = Vm::new(0, 0, 1000, 1, 512, 1);
+        assert_eq!(VmAllocationFirstFit.select_host(&hs, &vm), Some(0));
+    }
+
+    #[test]
+    fn none_when_nothing_fits() {
+        let hs = hosts();
+        let vm = Vm::new(0, 0, 9999, 1, 512, 1);
+        assert_eq!(VmAllocationPolicySimple.select_host(&hs, &vm), None);
+        assert_eq!(VmAllocationFirstFit.select_host(&hs, &vm), None);
+    }
+
+    #[test]
+    fn stable_tie_break() {
+        let hs = vec![Host::new(0, 4, 1000, 4096), Host::new(1, 4, 1000, 4096)];
+        let vm = Vm::new(0, 0, 1000, 1, 512, 1);
+        assert_eq!(
+            VmAllocationPolicySimple.select_host(&hs, &vm),
+            Some(0),
+            "equal free PEs → lowest index"
+        );
+    }
+}

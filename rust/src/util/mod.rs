@@ -1,0 +1,8 @@
+//! Small shared utilities: deterministic RNG, statistics helpers, a
+//! lightweight property-based testing harness (proptest is unavailable in the
+//! offline vendor set) and time formatting.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timefmt;

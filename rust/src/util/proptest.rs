@@ -1,0 +1,182 @@
+//! A lightweight property-based testing harness.
+//!
+//! The offline vendor set does not include the `proptest` crate, so the
+//! repository carries its own minimal equivalent: seeded random case
+//! generation, a fixed case budget, and shrink-by-halving for integer-vector
+//! inputs. It is deliberately tiny — enough to express the coordinator
+//! invariants (partition coverage, routing, batching, scaler state machine)
+//! the test suite checks.
+//!
+//! Usage:
+//! ```no_run
+//! use cloud2sim::util::proptest::{forall, Gen};
+//! forall("sum-nonneg", 256, |g: &mut Gen| {
+//!     let xs = g.vec_u64(0..64, 0..1000);
+//!     let s: u64 = xs.iter().sum();
+//!     assert!(s as i64 >= 0);
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Random input generator handed to property closures.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Case index, available for diagnostics.
+    pub case: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, case: usize) -> Self {
+        Self {
+            rng: SplitMix64::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            case,
+        }
+    }
+
+    /// Uniform u64 in the given range.
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        self.rng.gen_range(range.start, range.end.max(range.start + 1))
+    }
+
+    /// Uniform usize in the given range.
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    /// Uniform f64 in the given range.
+    pub fn f64(&mut self, range: std::ops::Range<f64>) -> f64 {
+        self.rng.gen_range_f64(range.start, range.end)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    /// Vector of u64 with random length from `len` and values from `vals`.
+    pub fn vec_u64(
+        &mut self,
+        len: std::ops::Range<usize>,
+        vals: std::ops::Range<u64>,
+    ) -> Vec<u64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.u64(vals.clone())).collect()
+    }
+
+    /// Random ASCII-ish key of length 1..=16, useful for map keys.
+    pub fn key(&mut self) -> String {
+        let n = self.usize(1..17);
+        (0..n)
+            .map(|_| (b'a' + (self.u64(0..26) as u8)) as char)
+            .collect()
+    }
+}
+
+/// Environment-variable override for the case budget (`C2S_PROPTEST_CASES`).
+fn case_budget(default_cases: usize) -> usize {
+    std::env::var("C2S_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Run `prop` against `cases` random inputs derived from a fixed seed.
+///
+/// On failure (panic inside the closure), re-raises with the failing case
+/// index and seed so the exact input can be replayed.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let seed: u64 = 0xC10D_25B1_7EA5_0001;
+    let cases = case_budget(cases);
+    for case in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, case);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Shrink a failing integer-vector input by repeatedly halving it while the
+/// predicate still fails; returns the smallest failing vector found.
+pub fn shrink_vec<T: Clone, F: Fn(&[T]) -> bool>(input: &[T], fails: F) -> Vec<T> {
+    let mut best: Vec<T> = input.to_vec();
+    loop {
+        let mut improved = false;
+        let n = best.len();
+        if n <= 1 {
+            break;
+        }
+        // try first half, second half, then dropping single elements
+        let halves = [best[..n / 2].to_vec(), best[n / 2..].to_vec()];
+        for cand in halves {
+            if !cand.is_empty() && fails(&cand) && cand.len() < best.len() {
+                best = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            for i in 0..best.len() {
+                let mut cand = best.clone();
+                cand.remove(i);
+                if !cand.is_empty() && fails(&cand) {
+                    best = cand;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes() {
+        forall("tautology", 64, |g| {
+            let x = g.u64(0..100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn forall_reports_failure() {
+        forall("falsum", 64, |g| {
+            let x = g.u64(0..100);
+            assert!(x > 100, "hit {x}"); // never true
+        });
+    }
+
+    #[test]
+    fn shrink_finds_minimal() {
+        // predicate fails when vector contains a 7
+        let input: Vec<u64> = vec![1, 2, 7, 3, 4, 5, 6];
+        let small = shrink_vec(&input, |v| v.contains(&7));
+        assert_eq!(small, vec![7]);
+    }
+
+    #[test]
+    fn gen_key_wellformed() {
+        let mut g = Gen::new(1, 0);
+        for _ in 0..100 {
+            let k = g.key();
+            assert!(!k.is_empty() && k.len() <= 16);
+            assert!(k.bytes().all(|b| b.is_ascii_lowercase()));
+        }
+    }
+}

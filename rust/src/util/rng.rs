@@ -1,0 +1,198 @@
+//! Deterministic pseudo-random number generators.
+//!
+//! The offline vendor set has no `rand` crate, so the simulator carries its
+//! own small, well-known generators. Determinism matters more than quality
+//! here: every experiment in `EXPERIMENTS.md` is reproducible from a seed.
+
+/// SplitMix64 — the standard 64-bit mixer (Steele, Lea, Flood 2014).
+///
+/// Used both as a standalone generator and to seed [`Pcg32`].
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a seed. Any seed (including 0) is fine.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in `[lo, hi)`. Panics when `lo >= hi`.
+    pub fn gen_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "gen_range: empty range [{lo},{hi})");
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn gen_range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Sample an approximately-Zipfian rank in `[0, n)` with exponent `s`.
+    ///
+    /// Uses inverse-CDF of the continuous approximation; good enough for the
+    /// synthetic word-count corpus where only the heavy-tail *shape* matters.
+    pub fn gen_zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        if n == 1 {
+            return 0;
+        }
+        let u = self.next_f64().max(1e-12);
+        if (s - 1.0).abs() < 1e-9 {
+            let h = (n as f64).ln();
+            ((u * h).exp_m1().min(n as f64 - 1.0)) as usize
+        } else {
+            let e = 1.0 - s;
+            let h = ((n as f64).powf(e) - 1.0) / e;
+            let x = (u * h * e + 1.0).powf(1.0 / e) - 1.0;
+            (x.min(n as f64 - 1.0)).max(0.0) as usize
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(0, (i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// PCG-XSH-RR 32-bit output generator (O'Neill 2014): used where many small
+/// independent streams are needed (one per simulated node).
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create a stream from `(seed, stream_id)`.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ stream.wrapping_mul(0xDA94_2042_E4DD_58B5));
+        let mut g = Self {
+            state: 0,
+            inc: (sm.next_u64() << 1) | 1,
+        };
+        g.state = sm.next_u64();
+        g.next_u32();
+        g
+    }
+
+    /// Next 32-bit value.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform in `[0,1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        self.next_u32() as f64 / (1u64 << 32) as f64
+    }
+}
+
+/// Stable 64-bit FNV-1a hash, used by the grid's consistent partitioning so
+/// that partition assignment is identical across runs and platforms.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..10_000 {
+            let x = r.gen_range(5, 15);
+            assert!((5..15).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_heavy_head() {
+        let mut r = SplitMix64::new(3);
+        let n = 1000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..50_000 {
+            counts[r.gen_zipf(n, 1.1)] += 1;
+        }
+        // rank 0 must dominate rank 100 heavily
+        assert!(counts[0] > counts[100] * 3, "head {} tail {}", counts[0], counts[100]);
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg32::new(1, 0);
+        let mut b = Pcg32::new(1, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn fnv_stable() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), fnv1a64(b"a"));
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(11);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+}

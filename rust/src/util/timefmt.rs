@@ -1,0 +1,59 @@
+//! Human-friendly duration formatting for bench/table output.
+
+/// Format seconds adaptively: `412ms`, `3.678s`, `2m08s`, `1h04m`.
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "inf".into();
+    }
+    if s < 0.0 {
+        return format!("-{}", fmt_secs(-s));
+    }
+    if s < 1.0 {
+        format!("{:.0}ms", s * 1000.0)
+    } else if s < 120.0 {
+        format!("{s:.3}s")
+    } else if s < 7200.0 {
+        let m = (s / 60.0).floor();
+        format!("{}m{:02.0}s", m as u64, s - m * 60.0)
+    } else {
+        let h = (s / 3600.0).floor();
+        format!("{}h{:02.0}m", h as u64, (s - h * 3600.0) / 60.0)
+    }
+}
+
+/// Format a byte count: `123B`, `4.5KB`, `1.2MB`, `9.4GB`.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf < K {
+        format!("{b}B")
+    } else if bf < K * K {
+        format!("{:.1}KB", bf / K)
+    } else if bf < K * K * K {
+        format!("{:.1}MB", bf / (K * K))
+    } else {
+        format!("{:.1}GB", bf / (K * K * K))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs() {
+        assert_eq!(fmt_secs(0.412), "412ms");
+        assert_eq!(fmt_secs(3.678), "3.678s");
+        assert_eq!(fmt_secs(128.0), "2m08s");
+        assert_eq!(fmt_secs(3840.0), "64m00s");
+        assert_eq!(fmt_secs(7500.0), "2h05m");
+        assert_eq!(fmt_secs(f64::INFINITY), "inf");
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(123), "123B");
+        assert_eq!(fmt_bytes(4608), "4.5KB");
+        assert_eq!(fmt_bytes(10_093_173_145), "9.4GB");
+    }
+}

@@ -1,0 +1,161 @@
+//! Integration tests over the full distributed simulation stack:
+//! config → scenario → grid → report, across strategies and backends.
+
+use cloud2sim::config::{Properties, SimConfig, WorkloadKind};
+use cloud2sim::dist::matchmaking::{run_matchmaking_baseline, run_matchmaking_distributed};
+use cloud2sim::dist::speedup::SpeedupModel;
+use cloud2sim::dist::{
+    run_cloudsim_baseline, run_distributed, run_distributed_full, Strategy,
+};
+use cloud2sim::runtime::workload::NativeBurnModel;
+
+#[test]
+fn table_5_1_shape_end_to_end() {
+    let simple = SimConfig::default_round_robin(200, 400, false);
+    let loaded = SimConfig::default_round_robin(200, 400, true);
+
+    let base_simple = run_cloudsim_baseline(&simple).unwrap().sim_time_s;
+    let base_loaded = run_cloudsim_baseline(&loaded).unwrap().sim_time_s;
+    // the paper's anchors, loose bands (order-of-magnitude correctness)
+    assert!((2.0..8.0).contains(&base_simple), "paper 3.678s, got {base_simple}");
+    assert!((800.0..2000.0).contains(&base_loaded), "paper 1247s, got {base_loaded}");
+
+    let t: Vec<f64> = [1, 2, 3, 6]
+        .iter()
+        .map(|&n| run_distributed(&loaded, n).unwrap().sim_time_s)
+        .collect();
+    // the full Table 5.1 loaded shape
+    assert!(t[0] > base_loaded * 0.9, "1-node Cloud2Sim ≥ baseline");
+    assert!(t[0] / t[1] > 5.0, "~10x at 2 nodes");
+    assert!(t[2] < t[1], "3 beats 2");
+    assert!(t[3] > t[2] && t[3] < t[1], "6 between 3 and 2");
+}
+
+#[test]
+fn config_file_drives_the_run() {
+    let props = Properties::parse(
+        "noOfVMs=40\nnoOfCloudlets=80\nisLoaded=native\ngridBackend=infinispan\nnodeHeapBytes=67108864\n",
+    )
+    .unwrap();
+    let cfg = SimConfig::from_properties(&props).unwrap();
+    assert_eq!(cfg.workload, WorkloadKind::NativeBurn);
+    let r = run_distributed(&cfg, 2).unwrap();
+    assert_eq!(r.cloudlets_ok, 80);
+    assert!(r.sim_time_s > 0.0);
+}
+
+#[test]
+fn all_strategies_agree_on_results() {
+    let cfg = SimConfig::default_round_robin(60, 120, false);
+    let mut outcomes = Vec::new();
+    for s in Strategy::all() {
+        let mut model = NativeBurnModel::default();
+        let r = run_distributed_full(&cfg, 3, s, &mut model, false).unwrap();
+        outcomes.push((s, r.cloudlets_ok, r.events));
+    }
+    // accuracy invariant (§3.1.1): identical outputs regardless of strategy
+    assert!(outcomes.windows(2).all(|w| w[0].1 == w[1].1 && w[0].2 == w[1].2));
+}
+
+#[test]
+fn backend_swap_works_for_cloud_sims() {
+    // "Infinispan based Cloud Simulations" (§6.2 future work) — supported
+    // by the compatibility layer: same run, Infinispan profile
+    let props = Properties::parse("gridBackend=infinispan\n").unwrap();
+    let mut cfg = SimConfig::from_properties(&props).unwrap();
+    cfg.no_of_vms = 50;
+    cfg.no_of_cloudlets = 100;
+    cfg.workload = WorkloadKind::NativeBurn;
+    let inf = run_distributed(&cfg, 3).unwrap();
+    cfg.backend = cloud2sim::grid::backend::BackendProfile::hazelcast_like();
+    let hz = run_distributed(&cfg, 3).unwrap();
+    assert_eq!(inf.cloudlets_ok, hz.cloudlets_ok, "same decisions");
+    assert!(
+        inf.sim_time_s < hz.sim_time_s,
+        "infinispan's cheaper serializers should win: {} vs {}",
+        inf.sim_time_s,
+        hz.sim_time_s
+    );
+}
+
+#[test]
+fn workload_actually_executes_when_real() {
+    let cfg = SimConfig::default_round_robin(16, 32, true);
+    let mut model = NativeBurnModel::default();
+    let r = run_distributed_full(&cfg, 2, Strategy::MultipleSimulator, &mut model, true).unwrap();
+    assert_eq!(model.executed(), 32, "every cloudlet's burn ran");
+    assert!(r.workload_wall.as_nanos() > 0);
+}
+
+#[test]
+fn matchmaking_matches_analytic_model_ordering() {
+    let cfg = SimConfig {
+        no_of_vms: 100,
+        no_of_cloudlets: 1200,
+        ..SimConfig::default()
+    };
+    let t1 = run_matchmaking_distributed(&cfg, 1, None).unwrap().sim_time_s;
+    let measured: Vec<f64> = (1..=6)
+        .map(|n| run_matchmaking_distributed(&cfg, n, None).unwrap().sim_time_s)
+        .collect();
+    // fit a §3.3 model and check it predicts the measured ordering
+    let model = SpeedupModel {
+        t1,
+        k: 0.9,
+        ser_cost: 0.5,
+        comm_base: 1.0,
+        coord_base: 1.0,
+        fixed: 0.5,
+        theta_full: t1 * 0.5,
+        relief_nodes: 2,
+    };
+    for n in 2..=6usize {
+        let predicted_faster = model.t_n(n) < model.t_n(1);
+        let measured_faster = measured[n - 1] < measured[0];
+        assert_eq!(
+            predicted_faster, measured_faster,
+            "analytic and measured disagree at n={n}"
+        );
+    }
+}
+
+#[test]
+fn matchmaking_baseline_close_to_single_node_distributed() {
+    // §5.1.2: "Execution time for CloudSim was almost the same as the
+    // simulation time in a single node in Cloud2Sim"
+    let cfg = SimConfig {
+        no_of_vms: 100,
+        no_of_cloudlets: 1000,
+        ..SimConfig::default()
+    };
+    let base = run_matchmaking_baseline(&cfg).unwrap().sim_time_s;
+    let one = run_matchmaking_distributed(&cfg, 1, None).unwrap().sim_time_s;
+    let ratio = one / base;
+    assert!(
+        (0.8..2.5).contains(&ratio),
+        "single-node distributed ~ baseline: {base} vs {one}"
+    );
+}
+
+#[test]
+fn grid_traffic_grows_with_nodes() {
+    let cfg = SimConfig::default_round_robin(60, 120, false);
+    let r1 = run_distributed(&cfg, 1).unwrap();
+    let r4 = run_distributed(&cfg, 4).unwrap();
+    assert!(
+        r4.grid_bytes > r1.grid_bytes,
+        "remote placement moves real bytes: {} vs {}",
+        r4.grid_bytes,
+        r1.grid_bytes
+    );
+    assert!(r4.distribution.len() == 4);
+}
+
+#[test]
+fn failed_scale_is_reported_not_panicked() {
+    // tiny heap: the loaded workload's working set cannot be reserved
+    let mut cfg = SimConfig::default_round_robin(50, 400, true);
+    cfg.node_heap_bytes = 1024 * 1024;
+    let err = run_distributed(&cfg, 1).unwrap_err();
+    assert!(err.is_oom(), "{err}");
+}

@@ -1,0 +1,219 @@
+//! Integration tests across the elastic middleware and the MapReduce
+//! layer: full adaptive runs, multi-tenant coordination, MR correctness
+//! under scaling and failure behaviours.
+
+use cloud2sim::config::SimConfig;
+use cloud2sim::elastic::{
+    run_adaptive, Coordinator, HealthMeasure, IntelligentAdaptiveScaler,
+};
+use cloud2sim::elastic::probe::AdaptiveScalerProbe;
+use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+use cloud2sim::mapreduce::{
+    run_hz_wordcount, run_inf_wordcount, Corpus, CorpusConfig, JobConfig,
+};
+use cloud2sim::runtime::workload::NativeBurnModel;
+
+fn loaded_cfg() -> SimConfig {
+    SimConfig {
+        backup_count: 1,
+        max_threshold: 0.20,
+        min_threshold: 0.01,
+        time_between_scaling: 40.0,
+        ..SimConfig::default_round_robin(200, 400, true)
+    }
+}
+
+#[test]
+fn adaptive_full_run_scales_and_completes() {
+    let mut model = NativeBurnModel::default();
+    let r = run_adaptive(&loaded_cfg(), 5, HealthMeasure::LoadAverage, &mut model).unwrap();
+    assert_eq!(r.cloudlets_ok, 400);
+    assert!(r.scale_outs >= 1 && r.peak_instances >= 2);
+    // Table 5.2 shape: spawn events appear in the log with load columns
+    let spawns: Vec<_> = r.rows.iter().filter(|x| x.event.contains("Spawning")).collect();
+    assert_eq!(spawns.len(), r.scale_outs);
+    // the paper's loads sit in a sub-1.0 band after per-core normalization
+    assert!(r.rows.iter().flat_map(|x| &x.loads).all(|&l| (0.0..=1.5).contains(&l)));
+}
+
+#[test]
+fn adaptive_monotone_in_available_nodes() {
+    let mut m1 = NativeBurnModel::default();
+    let mut m2 = NativeBurnModel::default();
+    let none = run_adaptive(&loaded_cfg(), 0, HealthMeasure::LoadAverage, &mut m1)
+        .unwrap()
+        .sim_time_s;
+    let five = run_adaptive(&loaded_cfg(), 5, HealthMeasure::LoadAverage, &mut m2)
+        .unwrap()
+        .sim_time_s;
+    assert!(
+        five < none,
+        "spare capacity must help: 0 spares {none} vs 5 spares {five}"
+    );
+}
+
+#[test]
+fn process_cpu_measure_also_works() {
+    let mut model = NativeBurnModel::default();
+    let mut cfg = loaded_cfg();
+    cfg.max_threshold = 0.5; // process CPU load runs hot (≈1.0) under load
+    let r = run_adaptive(&cfg, 3, HealthMeasure::ProcessCpuLoad, &mut model).unwrap();
+    assert!(r.scale_outs >= 1);
+}
+
+#[test]
+fn coordinator_runs_tenants_and_renders_matrix() {
+    let mut c = Coordinator::new();
+    c.add_tenant("cloud-exp", SimConfig::default_round_robin(60, 120, true), 3);
+    c.add_tenant("sched-exp", SimConfig::default_round_robin(40, 80, false), 2);
+    c.run_all().unwrap();
+    assert_eq!(c.results.len(), 2);
+    let matrix = c.deployment_matrix();
+    assert!(matrix.contains("cloud-exp") && matrix.contains("sched-exp"));
+    let combined = c.combined_report();
+    assert!(combined.contains("cloud-exp"));
+    assert!(c.makespan() >= c.results.iter().map(|(_, r)| r.sim_time_s).fold(0.0, f64::max));
+}
+
+#[test]
+fn ias_race_is_exclusive_across_many_probes() {
+    // stress Algorithm 6's atomic protocol: many repeated races, always
+    // exactly one winner per flag
+    let mut sub = GridCluster::with_members(GridConfig::default(), 6);
+    let mut main = GridCluster::with_members(
+        GridConfig {
+            backup_count: 1,
+            ..GridConfig::default()
+        },
+        1,
+    );
+    let subs = sub.members();
+    let mut probe = AdaptiveScalerProbe::new();
+    let mut iases: Vec<_> = subs
+        .iter()
+        .map(|&s| IntelligentAdaptiveScaler::new(s, "t", 0.0))
+        .collect();
+    for round in 0..4 {
+        probe.add_instance();
+        probe.probe(&mut sub, subs[0], "t").unwrap();
+        let mut spawned = 0;
+        for ias in iases.iter_mut() {
+            if matches!(
+                ias.probe(&mut sub, &mut main).unwrap(),
+                cloud2sim::elastic::IasAction::Spawned
+            ) {
+                spawned += 1;
+            }
+        }
+        assert_eq!(spawned, 1, "round {round}: exactly one spawner");
+    }
+    assert_eq!(main.size(), 5, "master + 4 spawned Initiators");
+}
+
+// ---------------- MapReduce integration ----------------
+
+fn corpus(files: usize, lines: usize) -> Corpus {
+    Corpus::new(CorpusConfig {
+        files,
+        distinct_files: files.min(3),
+        lines_per_file: lines,
+        ..CorpusConfig::default()
+    })
+}
+
+const HEAP: u64 = 64 * 1024 * 1024;
+
+#[test]
+fn mr_results_identical_across_backends_and_sizes() {
+    let reference = run_inf_wordcount(corpus(3, 400), JobConfig::default(), 1, HEAP).unwrap();
+    for instances in [2usize, 3, 5] {
+        let inf = run_inf_wordcount(corpus(3, 400), JobConfig::default(), instances, HEAP).unwrap();
+        let hz = run_hz_wordcount(corpus(3, 400), JobConfig::default(), instances, HEAP).unwrap();
+        assert_eq!(inf.reduce_invocations, reference.reduce_invocations);
+        assert_eq!(hz.reduce_invocations, reference.reduce_invocations);
+        assert_eq!(inf.top_words, reference.top_words);
+        assert_eq!(hz.top_words, reference.top_words);
+        assert!(inf.is_conserved() && hz.is_conserved());
+    }
+}
+
+#[test]
+fn mr_reduce_invocations_grow_with_size() {
+    // Fig 5.9's x-axis relationship
+    let r1 = run_inf_wordcount(corpus(3, 250), JobConfig::default(), 1, HEAP).unwrap();
+    let r2 = run_inf_wordcount(corpus(3, 1000), JobConfig::default(), 1, HEAP).unwrap();
+    assert!(r2.reduce_invocations > r1.reduce_invocations);
+    assert_eq!(r1.map_invocations, 3);
+    assert_eq!(r2.map_invocations, 3);
+}
+
+#[test]
+fn mr_oom_gate_is_monotone_in_nodes() {
+    // if it fails at n nodes, it must not fail at larger heap-per-job
+    let heavy = || corpus(12, 20_000);
+    let small_heap = 12 * 1024 * 1024;
+    let one = run_inf_wordcount(heavy(), JobConfig::default(), 1, small_heap);
+    assert!(one.is_err() && one.unwrap_err().is_oom());
+    let six = run_inf_wordcount(heavy(), JobConfig::default(), 6, small_heap);
+    assert!(six.is_ok(), "more instances must admit the same job");
+}
+
+#[test]
+fn mr_hazelcast_collapse_and_recovery_shape() {
+    // Table 5.3's fingerprint at test scale
+    let run = |n| {
+        run_hz_wordcount(corpus(3, 800), JobConfig::default(), n, HEAP)
+            .unwrap()
+            .sim_time_s
+    };
+    let t1 = run(1);
+    let t2 = run(2);
+    let t6 = run(6);
+    let t12 = run(12);
+    assert!(t2 > t1 * 1.5, "1→2 collapse: {t1} vs {t2}");
+    assert!(t6 < t2 && t12 < t6, "monotone recovery: {t2} {t6} {t12}");
+}
+
+// ---------------- custom MapReduce jobs (§4.2.2) ----------------
+// "This default implementation can be replaced by custom MapReduce
+// implementations" — exercise the public Mapper/Reducer extension point
+// with a line-length histogram job.
+
+struct LengthHistogramMapper;
+impl cloud2sim::mapreduce::Mapper for LengthHistogramMapper {
+    fn map(&self, _f: usize, _l: usize, value: &str, emit: &mut dyn FnMut(String, i64)) {
+        for token in value.split_whitespace() {
+            emit(format!("len{}", token.len()), 1);
+        }
+    }
+}
+
+struct MaxReducer;
+impl cloud2sim::mapreduce::Reducer for MaxReducer {
+    fn reduce(&self, _key: &str, values: &[i64]) -> i64 {
+        values.iter().copied().sum()
+    }
+}
+
+#[test]
+fn custom_mapreduce_job_via_public_api() {
+    use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+    use cloud2sim::grid::serialize::InMemoryFormat;
+    use cloud2sim::mapreduce::MapReduceEngine;
+
+    let mapper = LengthHistogramMapper;
+    let reducer = MaxReducer;
+    let engine = MapReduceEngine::new(corpus(3, 300), JobConfig::default(), &mapper, &reducer);
+    let mut cluster = GridCluster::with_members(
+        GridConfig {
+            in_memory_format: InMemoryFormat::Object,
+            ..GridConfig::default()
+        },
+        3,
+    );
+    let r = engine.run(&mut cluster).unwrap();
+    // token lengths are small: the key space collapses to a handful
+    assert!(r.reduce_invocations < 20, "{}", r.reduce_invocations);
+    assert!(r.is_conserved());
+    assert!(r.top_words.iter().all(|(k, _)| k.starts_with("len")));
+}

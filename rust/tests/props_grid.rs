@@ -1,0 +1,338 @@
+//! Property-based tests of the grid substrate's coordinator invariants:
+//! routing, partition coverage, heap-accounting conservation, scaler state
+//! machine, and membership/master-election laws.
+//!
+//! Uses the in-repo `util::proptest` harness (the offline vendor set has
+//! no proptest crate; see DESIGN.md).
+
+use cloud2sim::config::SimConfig;
+use cloud2sim::elastic::{DynamicScaler, ScaleDecision};
+use cloud2sim::grid::backend::BackendProfile;
+use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+use cloud2sim::grid::partition::{partition_final, partition_init, partition_of, PartitionTable};
+use cloud2sim::grid::serialize::GridKey;
+use cloud2sim::util::proptest::{forall, Gen};
+
+fn small_cluster(g: &mut Gen) -> GridCluster {
+    let n = g.usize(1..7);
+    let cfg = GridConfig {
+        backup_count: g.usize(0..3) as u32,
+        partition_count: 271,
+        ..GridConfig::default()
+    };
+    GridCluster::with_members(cfg, n)
+}
+
+#[test]
+fn prop_every_key_routes_to_exactly_one_live_member() {
+    forall("key-routing-total", 150, |g| {
+        let c = small_cluster(g);
+        let members = c.members();
+        for _ in 0..20 {
+            let key = GridKey::new(g.key());
+            let p = partition_of(key.partition_key_bytes(), c.cfg.partition_count);
+            let owner_off = c.partition_table().owner(p);
+            assert!(owner_off < members.len(), "owner is a live member offset");
+        }
+    });
+}
+
+#[test]
+fn prop_affinity_keys_colocate() {
+    forall("affinity-colocation", 100, |g| {
+        let pc = 271;
+        let anchor = g.key();
+        // any key with @anchor routes with the anchor's partition
+        let k1 = GridKey::new(format!("{}@{anchor}", g.key()));
+        let k2 = GridKey::new(format!("{}@{anchor}", g.key()));
+        assert_eq!(
+            partition_of(k1.partition_key_bytes(), pc),
+            partition_of(k2.partition_key_bytes(), pc),
+            "key@partitionKey affinity must colocate"
+        );
+    });
+}
+
+#[test]
+fn prop_partition_table_backups_disjoint_from_owner() {
+    forall("backups-disjoint", 200, |g| {
+        let members = g.usize(1..12);
+        let backups = g.usize(0..4) as u32;
+        let t = PartitionTable::new(members, 271, backups);
+        for p in 0..271 {
+            let o = t.owner(p);
+            let bs = t.backups(p);
+            assert!(!bs.contains(&o));
+            // backups are distinct members
+            let mut sorted = bs.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), bs.len());
+        }
+    });
+}
+
+#[test]
+fn prop_heap_accounting_conserves() {
+    forall("heap-conservation", 60, |g| {
+        let mut c = small_cluster(g);
+        let m = c.members()[0];
+        let ops = g.usize(1..60);
+        let mut keys = Vec::new();
+        for i in 0..ops {
+            let key = format!("k{i}");
+            let size = g.usize(1..2048);
+            if c.map_put(m, "xs", key.clone(), &vec![0u8; size]).is_ok() {
+                keys.push(key);
+            }
+        }
+        // remove everything: all heap must return to zero
+        for k in keys {
+            c.map_remove(m, "xs", k);
+        }
+        for node in c.members() {
+            assert_eq!(c.heap_used(node), 0, "heap must be conserved on {node}");
+        }
+    });
+}
+
+#[test]
+fn prop_put_get_roundtrip_any_member() {
+    forall("put-get-roundtrip", 80, |g| {
+        let mut c = small_cluster(g);
+        let members = c.members();
+        let writer = members[g.usize(0..members.len())];
+        let reader = members[g.usize(0..members.len())];
+        let key = g.key();
+        let value: Vec<u64> = (0..g.usize(0..16) as u64).collect();
+        c.map_put(writer, "xs", key.clone(), &value).unwrap();
+        let got: Option<Vec<u64>> = c.map_get(reader, "xs", key).unwrap();
+        assert_eq!(got, Some(value), "any member reads what any member wrote");
+    });
+}
+
+#[test]
+fn prop_partition_util_ranges_disjoint_cover() {
+    forall("partition-util-cover", 300, |g| {
+        let n = g.usize(1..2000);
+        let parallel = g.usize(1..20);
+        let mut seen = vec![false; n];
+        for off in 0..parallel {
+            let i = partition_init(n, off, parallel);
+            let f = partition_final(n, off, parallel);
+            for x in i..f.min(n) {
+                assert!(!seen[x], "element {x} assigned twice");
+                seen[x] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all elements covered");
+    });
+}
+
+#[test]
+fn prop_scaler_never_exceeds_bounds() {
+    forall("scaler-bounds", 150, |g| {
+        let max_instances = g.usize(1..6);
+        let mut s = DynamicScaler::new(0.8, 0.1, max_instances, 30.0, 5.0);
+        let mut instances = 1usize;
+        let mut t = 0.0;
+        for _ in 0..100 {
+            t += g.f64(1.0..20.0);
+            let load = g.f64(0.0..1.0);
+            match s.decide(t, load, instances) {
+                ScaleDecision::Out => instances += 1,
+                ScaleDecision::In => instances -= 1,
+                ScaleDecision::None => {}
+            }
+            assert!(instances >= 1, "never below one instance");
+            assert!(
+                instances <= max_instances + 1,
+                "never beyond master + maxInstancesToBeSpawned"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_scaler_actions_separated_by_buffer() {
+    forall("scaler-anti-jitter", 100, |g| {
+        let buffer = g.f64(10.0..100.0);
+        let mut s = DynamicScaler::new(0.8, 0.1, 10, buffer, 1.0);
+        let mut last_action_at: Option<f64> = None;
+        let mut t = 0.0;
+        let mut instances = 1;
+        for _ in 0..200 {
+            t += g.f64(0.5..5.0);
+            let load = if g.bool(0.5) { 0.95 } else { 0.01 };
+            let d = s.decide(t, load, instances);
+            if d != ScaleDecision::None {
+                if let Some(prev) = last_action_at {
+                    assert!(
+                        t - prev >= buffer - 1e-9,
+                        "actions at {prev} and {t} violate the {buffer}s buffer"
+                    );
+                }
+                last_action_at = Some(t);
+                match d {
+                    ScaleDecision::Out => instances += 1,
+                    ScaleDecision::In => instances -= 1,
+                    _ => {}
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_master_always_oldest_member() {
+    forall("master-oldest", 100, |g| {
+        let mut c = GridCluster::with_members(GridConfig::default(), 1);
+        for _ in 0..g.usize(0..20) {
+            if g.bool(0.6) || c.size() <= 1 {
+                c.join();
+            } else {
+                let victims = c.members();
+                let v = victims[g.usize(0..victims.len())];
+                let _ = c.leave(v);
+            }
+            let members = c.members();
+            assert_eq!(
+                c.master().unwrap(),
+                members[0],
+                "master is the oldest member"
+            );
+            // partition table always covers exactly the live members
+            let h = c.partition_table().ownership_histogram(members.len());
+            assert_eq!(h.iter().sum::<u32>(), 271);
+        }
+    });
+}
+
+#[test]
+fn prop_virtual_time_monotone_per_node() {
+    forall("clock-monotone", 60, |g| {
+        let mut c = small_cluster(g);
+        let members = c.members();
+        let mut last: Vec<f64> = members.iter().map(|&m| c.clock(m)).collect();
+        for _ in 0..30 {
+            let i = g.usize(0..members.len());
+            match g.usize(0..4) {
+                0 => {
+                    let _ = c.map_put(members[i], "xs", g.key(), &1u64);
+                }
+                1 => {
+                    let _: Option<u64> = c.map_get(members[i], "xs", g.key()).unwrap();
+                }
+                2 => {
+                    c.barrier();
+                }
+                _ => {
+                    c.execute_on_all(members[i], |cl, me| cl.advance_busy(me, 0.01));
+                }
+            }
+            for (j, &m) in members.iter().enumerate() {
+                let now = c.clock(m);
+                assert!(now + 1e-12 >= last[j], "clock ran backwards on {m}");
+                last[j] = now;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_distributed_run_deterministic() {
+    forall("dist-deterministic", 8, |g| {
+        let vms = g.usize(10..60);
+        let cls = g.usize(10..120);
+        let nodes = g.usize(1..5);
+        let cfg = SimConfig::default_round_robin(vms, cls, g.bool(0.5));
+        let a = cloud2sim::dist::run_distributed(&cfg, nodes).unwrap();
+        let b = cloud2sim::dist::run_distributed(&cfg, nodes).unwrap();
+        assert_eq!(a.sim_time_s, b.sim_time_s, "virtual time is deterministic");
+        assert_eq!(a.grid_messages, b.grid_messages);
+        assert_eq!(a.cloudlets_ok, b.cloudlets_ok);
+    });
+}
+
+#[test]
+fn prop_backend_profiles_preserve_comparative_order() {
+    // whatever else changes, the evaluation's comparative fingerprints hold
+    let hz = BackendProfile::hazelcast_like();
+    let inf = BackendProfile::infinispan_like();
+    assert!(hz.mr_chunk_overhead > inf.mr_chunk_overhead);
+    assert!(hz.mr_reduce_overhead > inf.mr_reduce_overhead);
+    assert!(hz.mr_shuffle_per_key > inf.mr_shuffle_per_key);
+    assert!(hz.mr_pair_retained_bytes > inf.mr_pair_retained_bytes);
+    assert!(inf.local_mode_factor < 1.0);
+}
+
+// ---------------- MapReduce + scenario properties ----------------
+
+#[test]
+fn prop_mr_conservation_any_corpus() {
+    use cloud2sim::mapreduce::{run_inf_wordcount, Corpus, CorpusConfig, JobConfig};
+    forall("mr-conservation", 8, |g| {
+        let files = g.usize(1..5);
+        let lines = g.usize(50..400);
+        let corpus = Corpus::new(CorpusConfig {
+            files,
+            distinct_files: files.min(3),
+            lines_per_file: lines,
+            words_per_line: g.usize(4..16),
+            ..CorpusConfig::default()
+        });
+        let expect_tokens = corpus.total_tokens();
+        let instances = g.usize(1..5);
+        let r = run_inf_wordcount(corpus, JobConfig::default(), instances, 256 * 1024 * 1024)
+            .unwrap();
+        assert!(r.is_conserved(), "Σcounts == tokens");
+        assert_eq!(r.emitted_pairs, expect_tokens);
+        assert_eq!(r.map_invocations as usize, files);
+        assert!(r.reduce_invocations <= r.emitted_pairs);
+    });
+}
+
+#[test]
+fn prop_scenario_every_cloudlet_terminates() {
+    use cloud2sim::sim::scenario::run_scenario;
+    forall("scenario-termination", 12, |g| {
+        let cfg = SimConfig {
+            no_of_datacenters: g.usize(1..5),
+            hosts_per_datacenter: g.usize(1..4),
+            pes_per_host: g.usize(1..9),
+            no_of_vms: g.usize(1..40),
+            no_of_cloudlets: g.usize(1..80),
+            cloudlet_length_mi: g.u64(100..50_000),
+            ..SimConfig::default()
+        };
+        let r = run_scenario(&cfg);
+        assert_eq!(
+            r.cloudlets.len(),
+            cfg.no_of_cloudlets,
+            "every cloudlet reaches a terminal state"
+        );
+        // created VMs never exceed physical PE capacity
+        let capacity = cfg.no_of_datacenters * cfg.hosts_per_datacenter * cfg.pes_per_host;
+        assert!(r.vms.len() <= capacity.min(cfg.no_of_vms));
+        // simulated clock is positive whenever something ran
+        if r.successes() > 0 {
+            assert!(r.sim_clock > 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_replicated_map_consistent_everywhere() {
+    forall("replicated-consistency", 40, |g| {
+        let mut c = GridCluster::with_members(GridConfig::default(), g.usize(1..6));
+        let members = c.members();
+        let writer = members[g.usize(0..members.len())];
+        let key = g.key();
+        let value = g.u64(0..1_000_000);
+        c.replicated_put(writer, "conf", key.clone(), &value).unwrap();
+        for &m in &members {
+            let got: Option<u64> = c.replicated_get(m, "conf", key.clone()).unwrap();
+            assert_eq!(got, Some(value), "every member reads the same copy");
+        }
+    });
+}

@@ -1,0 +1,88 @@
+//! PJRT runtime integration: load the AOT artifacts, execute both kernels,
+//! and check numerics against the native Rust implementations.
+//!
+//! Skips gracefully (with a message) when `artifacts/` has not been built;
+//! `make test` always builds artifacts first.
+
+use cloud2sim::dist::matchmaking::matchmake_native;
+use cloud2sim::runtime::registry::{default_artifacts_dir, ArtifactKind, PjrtRuntime};
+use cloud2sim::runtime::workload::{PjrtBurnModel, WorkloadModel};
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    match PjrtRuntime::load(default_artifacts_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_both_kernels() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(!rt.entries(ArtifactKind::Burn).is_empty());
+    assert!(!rt.entries(ArtifactKind::Matchmake).is_empty());
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn burn_kernel_executes_and_is_stable() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let entry = rt.pick_burn(64);
+    let entry = entry.unwrap();
+    let x = vec![0.25f32; entry.d1 * entry.d2];
+    let (out, dt) = rt.execute_burn(&entry, &x).unwrap();
+    assert_eq!(out.len(), entry.d1 * entry.d2);
+    assert!(dt.as_nanos() > 0);
+    // tanh chain keeps state bounded and finite
+    assert!(out.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+    // deterministic: same input, same output
+    let (out2, _) = rt.execute_burn(&entry, &x).unwrap();
+    assert_eq!(out, out2);
+}
+
+#[test]
+fn matchmake_kernel_agrees_with_native_scorer() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let entry = rt.pick_matchmake(64, 32).unwrap();
+    let reqs: Vec<f32> = (0..entry.d1).map(|i| 5.0 + (i % 41) as f32 * 0.7).collect();
+    let caps: Vec<f32> = (0..entry.d2).map(|v| 3.0 + (v % 29) as f32 * 2.1).collect();
+    let loads: Vec<f32> = (0..entry.d2).map(|v| (v % 7) as f32).collect();
+    let (k_assign, k_best, _) = rt.execute_matchmake(&entry, &reqs, &caps, &loads).unwrap();
+    let (n_assign, n_best) = matchmake_native(&reqs, &caps, &loads);
+    assert_eq!(k_assign, n_assign, "kernel and native binding decisions agree");
+    for (i, (a, b)) in k_best.iter().zip(n_best.iter()).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+            "score {i}: kernel {a} vs native {b}"
+        );
+    }
+}
+
+#[test]
+fn burn_model_counts_executions() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut model = PjrtBurnModel::new(rt, 64).unwrap();
+    let before = model.kernel_executions();
+    model.execute_batch(10).unwrap();
+    assert!(model.kernel_executions() > before);
+    assert!(model.kernel_time().as_nanos() > 0);
+    // virtual cost snaps to whole kernel iterations
+    let c = model.virtual_cost(40_000);
+    assert!(c > 0.0);
+    assert!((model.virtual_cost(40_001) - c).abs() < c * 0.05);
+}
+
+#[test]
+fn workload_costs_match_native_calibration() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let pjrt = PjrtBurnModel::new(rt, 256).unwrap();
+    let native = cloud2sim::runtime::workload::NativeBurnModel::default();
+    let a = pjrt.virtual_cost(40_000);
+    let b = native.virtual_cost(40_000);
+    assert!(
+        (a - b).abs() < b * 0.05,
+        "both models share the Table 5.1 calibration: {a} vs {b}"
+    );
+}
