@@ -9,8 +9,12 @@
 
 use cloud2sim::bench::BenchHarness;
 use cloud2sim::dist::run_distributed;
+use cloud2sim::mapreduce::{
+    run_inf_wordcount, run_inf_wordcount_with_workers, Corpus, CorpusConfig, JobConfig,
+};
 use cloud2sim::metrics::Table;
 use cloud2sim::prelude::*;
+use std::time::Instant;
 
 fn main() {
     BenchHarness::banner(
@@ -52,4 +56,76 @@ fn main() {
         "bigger sims gain more from distribution: 150cl {g150:.2}x vs 400cl {g400:.2}x"
     );
     println!("\nshape OK: best-case speedup grows with simulation size ({g150:.2}x -> {g400:.2}x)");
+
+    // ---- sequential vs threaded execution (the two-phase engine) ----
+    // Same scenario, workers = 1 vs all cores: virtual time must be
+    // bitwise-identical (the determinism contract); wall time is reported
+    // for both so the overhead/benefit of real threads is visible.
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let cfg_seq = SimConfig::default_round_robin(200, 400, true);
+    let cfg_par = SimConfig {
+        grid_workers: workers,
+        ..cfg_seq.clone()
+    };
+    let mut cmp = Table::new(
+        "Sequential vs threaded execution (400 loaded cloudlets, 4 grid nodes)",
+        &["mode", "virtual (s)", "wall (ms)"],
+    );
+    let w0 = Instant::now();
+    let seq = run_distributed(&cfg_seq, 4).unwrap();
+    let wall_seq = w0.elapsed();
+    let w1 = Instant::now();
+    let par = run_distributed(&cfg_par, 4).unwrap();
+    let wall_par = w1.elapsed();
+    cmp.row(&[
+        "sequential (workers=1)".into(),
+        format!("{:.3}", seq.sim_time_s),
+        format!("{:.1}", wall_seq.as_secs_f64() * 1e3),
+    ]);
+    cmp.row(&[
+        format!("threaded (workers={workers})"),
+        format!("{:.3}", par.sim_time_s),
+        format!("{:.1}", wall_par.as_secs_f64() * 1e3),
+    ]);
+    cmp.print();
+    assert_eq!(
+        seq.sim_time_s, par.sim_time_s,
+        "threaded mode must be bitwise-identical in virtual time"
+    );
+
+    // The scheduling bodies above are cheap; the MapReduce map phase does
+    // real tokenization per member, where extra cores genuinely pay off.
+    let corpus = || {
+        Corpus::new(CorpusConfig {
+            files: 6,
+            distinct_files: 3,
+            lines_per_file: 20_000,
+            ..CorpusConfig::default()
+        })
+    };
+    let heap = 256 * 1024 * 1024;
+    // same job, all cores vs forced single worker
+    let w2 = Instant::now();
+    let mr_par = run_inf_wordcount(corpus(), JobConfig::default(), 6, heap).unwrap();
+    let mr_wall_par = w2.elapsed();
+    let w3 = Instant::now();
+    let mr_seq =
+        run_inf_wordcount_with_workers(corpus(), JobConfig::default(), 6, heap, 1).unwrap();
+    let mr_wall_seq = w3.elapsed();
+    println!(
+        "\nMapReduce map phase (6 members, real tokenization): \
+         sequential {:.0}ms, threaded {:.0}ms ({}x{} cores), virtual {:.2}s == {:.2}s",
+        mr_wall_seq.as_secs_f64() * 1e3,
+        mr_wall_par.as_secs_f64() * 1e3,
+        workers,
+        if workers > 1 { " real" } else { "" },
+        mr_seq.sim_time_s,
+        mr_par.sim_time_s,
+    );
+    assert_eq!(
+        mr_seq.sim_time_s, mr_par.sim_time_s,
+        "map-phase threading must not change virtual time"
+    );
 }

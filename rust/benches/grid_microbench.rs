@@ -52,7 +52,7 @@ fn main() {
     table.row(&{
         let (a, b, d) = per_op("execute_on_all (4 members)", 10_000 * 4, || {
             for _ in 0..10_000 {
-                c.execute_on_all(m, |_, _| ());
+                c.execute_on_all(m, |_ctx| ());
             }
         });
         [a, b, d]

@@ -88,6 +88,10 @@ pub struct SimConfig {
     pub node_heap_bytes: u64,
     /// Minimum number of instances before a simulation starts.
     pub min_instances: usize,
+    /// OS worker threads for the grid's two-phase parallel executor
+    /// (`gridWorkers`). 1 = sequential; higher values run distributed task
+    /// bodies on real threads with bitwise-identical virtual-time results.
+    pub grid_workers: usize,
     /// Deterministic seed for the whole experiment.
     pub seed: u64,
 
@@ -133,6 +137,7 @@ impl Default for SimConfig {
             near_cache: false,
             node_heap_bytes: 64 * 1024 * 1024,
             min_instances: 1,
+            grid_workers: 1,
             seed: 0xC10D_25B1,
             scaling_mode: ScalingMode::Static,
             max_threshold: 0.8,
@@ -188,6 +193,7 @@ impl SimConfig {
         get!("nearCache", near_cache, get_bool);
         get!("nodeHeapBytes", node_heap_bytes, get_u64);
         get!("minInstances", min_instances, get_usize);
+        get!("gridWorkers", grid_workers, get_usize);
         get!("seed", seed, get_u64);
         get!("maxThreshold", max_threshold, get_f64);
         get!("minThreshold", min_threshold, get_f64);

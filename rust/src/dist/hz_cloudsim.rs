@@ -1,0 +1,447 @@
+//! The distributed CloudSim driver (`HzCloudSim` analog, §3.4.1).
+//!
+//! Runs the round-robin application-scheduling scenario (§5.1.1) on plain
+//! CloudSim (a single simulated JVM) and on Cloud²Sim over an `n`-member
+//! grid. The distributed run re-prices the same scenario on the cluster:
+//!
+//! * **accuracy invariant** (§3.1.1) — scheduling decisions, event counts
+//!   and finished cloudlets are identical on every deployment; only
+//!   *time* differs,
+//! * entities (`HzVm`/`HzCloudlet`) are really serialized into distributed
+//!   maps, partitioned over members via `PartitionUtil` ranges,
+//! * the unparallelizable DES core is charged to the master, the cloudlet
+//!   workload is split over members in rounds, and coordination costs grow
+//!   superlinearly with the member count — reproducing Table 5.1's
+//!   2-node ≈10× gain, 3-node optimum and 6-node erosion,
+//! * the single-JVM baseline keeps the whole working set resident (the θ
+//!   heap-pressure term); distribution relieves it superlinearly.
+//!
+//! Workload-round task bodies run through the two-phase parallel engine
+//! ([`crate::grid::parallel`]), so `gridWorkers > 1` executes them on real
+//! OS threads with identical virtual-time results.
+
+use std::time::Duration;
+
+use crate::config::SimConfig;
+use crate::dist::cost::*;
+use crate::elastic::health::HealthMonitor;
+use crate::error::Result;
+use crate::grid::cluster::{GridCluster, GridConfig};
+use crate::grid::net::Topology;
+use crate::grid::partition::{partition_final, partition_init};
+use crate::grid::serialize::{GridSerialize, InMemoryFormat};
+use crate::runtime::workload::{NativeBurnModel, WorkloadModel};
+use crate::sim::broker::RoundRobinBinder;
+use crate::sim::cloudlet::Cloudlet;
+use crate::sim::scenario::{make_vms, run_scenario_with_binder, ScenarioResult};
+use crate::sim::vm::Vm;
+
+/// Partitioning strategy for distributing the simulation logic (§3.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Static master: one Simulator node drives everything, Initiator
+    /// nodes only execute dispatched fractions. Simple, but the master
+    /// bottlenecks.
+    SimulatorInitiator,
+    /// The master delegates serial phases to a fixed primary worker
+    /// (`SimulatorSub`), halving — not removing — the bottleneck.
+    SimulatorSub,
+    /// Every node runs the same Simulator code with run-time master
+    /// election; work splits by `PartitionUtil` ranges. The paper's
+    /// preferred design.
+    MultipleSimulator,
+}
+
+impl Strategy {
+    /// All strategies, in §3.1.1 presentation order.
+    pub fn all() -> [Strategy; 3] {
+        [
+            Strategy::SimulatorInitiator,
+            Strategy::SimulatorSub,
+            Strategy::MultipleSimulator,
+        ]
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Strategy::SimulatorInitiator => write!(f, "simulator-initiator"),
+            Strategy::SimulatorSub => write!(f, "simulator-sub"),
+            Strategy::MultipleSimulator => write!(f, "multiple-simulator"),
+        }
+    }
+}
+
+/// Outcome of one (baseline or distributed) simulation run.
+#[derive(Debug, Clone)]
+pub struct DistReport {
+    /// Members that executed the simulation (1 for the baseline).
+    pub nodes: usize,
+    /// Virtual execution time (s) — the paper's measured quantity.
+    pub sim_time_s: f64,
+    /// Cloudlets that finished successfully.
+    pub cloudlets_ok: usize,
+    /// DES events dispatched (identical on every deployment).
+    pub events: u64,
+    /// Binding search steps performed by the scheduling policy.
+    pub bind_steps: u64,
+    /// Grid messages moved (0 for the baseline).
+    pub grid_messages: u64,
+    /// Grid payload bytes moved (0 for the baseline).
+    pub grid_bytes: u64,
+    /// Per-member `(entries, bytes)` of distributed cloudlet storage — the
+    /// Fig 5.8 "Management Center" view. Empty for the baseline.
+    pub distribution: Vec<(u64, u64)>,
+    /// Wall-clock time spent really executing workloads (kernels or the
+    /// native burn) when `real` execution was requested.
+    pub workload_wall: Duration,
+    /// Max process CPU load observed by the health monitor (Fig 5.5).
+    pub max_process_cpu_load: f64,
+}
+
+/// Grid configuration for distributed cloud simulations: BINARY in-memory
+/// format (§4.1.2), backend/heap/seed from the scenario config.
+pub fn grid_config(cfg: &SimConfig) -> GridConfig {
+    GridConfig {
+        backend: cfg.backend.clone(),
+        topology: Topology::LanCluster,
+        partition_count: cfg.partition_count,
+        backup_count: cfg.backup_count,
+        sync_backups: true,
+        in_memory_format: InMemoryFormat::Binary,
+        near_cache: cfg.near_cache,
+        node_heap_bytes: cfg.node_heap_bytes,
+        seed: cfg.seed,
+        workers: cfg.grid_workers,
+    }
+}
+
+/// Run the scenario on plain CloudSim (single simulated JVM) with the
+/// default native workload model and no real kernel execution.
+pub fn run_cloudsim_baseline(cfg: &SimConfig) -> Result<DistReport> {
+    let mut model = NativeBurnModel::default();
+    run_cloudsim_baseline_with(cfg, &mut model, false)
+}
+
+/// Baseline with an explicit workload model; `real` executes every
+/// cloudlet's workload for wall-clock accounting (kernels when the model
+/// is PJRT-backed).
+pub fn run_cloudsim_baseline_with(
+    cfg: &SimConfig,
+    model: &mut dyn WorkloadModel,
+    real: bool,
+) -> Result<DistReport> {
+    cfg.validate()?;
+    let scenario = run_scenario_with_binder(cfg, false, Box::<RoundRobinBinder>::default());
+    let mut t = scenario.events_processed as f64 * EVENT_COST
+        + scenario.bind_steps as f64 * BIND_STEP_COST;
+    let mut wall = Duration::ZERO;
+    if cfg.workload.is_loaded() {
+        // Single JVM: every cloudlet's working set stays resident for the
+        // whole run — the θ pressure regime of Table 5.1's loaded column.
+        let resident = model.working_set_bytes() * scenario.cloudlets.len() as u64;
+        let gc =
+            GridCluster::gc_factor_for_occupancy(resident as f64 / cfg.node_heap_bytes as f64);
+        let compute: f64 = scenario
+            .cloudlets
+            .iter()
+            .map(|c| model.virtual_cost(c.length_mi))
+            .sum();
+        t += compute * gc;
+        if real {
+            let mut left = scenario.cloudlets.len();
+            while left > 0 {
+                let batch = left.min(WORKLOAD_ROUND_BATCH);
+                wall += model.execute_batch(batch)?;
+                left -= batch;
+            }
+        }
+    }
+    Ok(DistReport {
+        nodes: 1,
+        sim_time_s: t,
+        cloudlets_ok: scenario.successes(),
+        events: scenario.events_processed,
+        bind_steps: scenario.bind_steps,
+        grid_messages: 0,
+        grid_bytes: 0,
+        distribution: Vec::new(),
+        workload_wall: wall,
+        max_process_cpu_load: 1.0,
+    })
+}
+
+/// Run the scenario on Cloud²Sim over `nodes` members with the preferred
+/// multiple-Simulator strategy and the calibrated native workload model.
+pub fn run_distributed(cfg: &SimConfig, nodes: usize) -> Result<DistReport> {
+    let mut model = NativeBurnModel::default();
+    run_distributed_full(cfg, nodes, Strategy::MultipleSimulator, &mut model, false)
+}
+
+/// Full-control distributed run: strategy, workload model, and whether
+/// workloads really execute (`real`) for wall-clock accounting.
+pub fn run_distributed_full(
+    cfg: &SimConfig,
+    nodes: usize,
+    strategy: Strategy,
+    model: &mut dyn WorkloadModel,
+    real: bool,
+) -> Result<DistReport> {
+    cfg.validate()?;
+    let n = nodes.max(1);
+    let mut cluster = GridCluster::with_members(grid_config(cfg), n);
+    let master = cluster.master()?;
+    let members = cluster.members();
+
+    // Pure-CloudSim pass: the semantics every deployment shares (§3.1.1's
+    // accuracy invariant — identical decisions regardless of n/strategy).
+    let scenario = run_scenario_with_binder(cfg, false, Box::<RoundRobinBinder>::default());
+
+    let t_start = cluster.barrier();
+    let mut monitor = HealthMonitor::new(cfg.pes_per_host);
+    monitor.sample(&cluster);
+
+    // --- distributed-object setup (measured window, paid in parallel) ---
+    cluster.execute_on_all(master, |ctx| ctx.advance(SETUP_COST_PER_NODE));
+
+    // --- entity distribution (shared with the matchmaking driver) ---
+    let vms = make_vms(cfg, false);
+    distribute_entities(&mut cluster, &scenario.cloudlets, &vms)?;
+
+    // --- the unparallelizable DES core runs on the master ---
+    cluster.advance_busy(master, scenario.events_processed as f64 * EVENT_COST);
+
+    // --- binding/search phase, split per strategy ---
+    let bind_cost = scenario.bind_steps as f64 * BIND_STEP_COST;
+    match strategy {
+        Strategy::SimulatorInitiator => cluster.advance_busy(master, bind_cost),
+        Strategy::SimulatorSub => {
+            let worker = members.get(1).copied().unwrap_or(master);
+            cluster.advance_busy(worker, bind_cost);
+        }
+        Strategy::MultipleSimulator => {
+            let share = bind_cost / n as f64;
+            cluster.execute_on_all(master, |ctx| ctx.advance_busy(share));
+        }
+    }
+
+    // --- workload rounds ---
+    let loaded = cfg.workload.is_loaded();
+    let ws = if loaded { model.working_set_bytes() } else { 0 };
+    let per_member = scenario.cloudlets.len().div_ceil(n);
+    let resident = per_member as u64 * ws;
+    if resident > 0 {
+        // admission: the member's share of cloudlet state must fit — the
+        // paper's single-node OutOfMemoryError gate (§5.2)
+        for (i, m) in members.iter().enumerate() {
+            if let Err(e) = cluster.reserve_scratch(*m, resident) {
+                for &prev in &members[..i] {
+                    cluster.release_scratch(prev, resident);
+                }
+                return Err(e);
+            }
+        }
+    }
+    let mut workload_wall = Duration::ZERO;
+    let mut remaining: Vec<u64> = scenario.cloudlets.iter().map(|c| c.length_mi).collect();
+    let coord = round_coordination_cost(n);
+    while !remaining.is_empty() {
+        let batch_total = (WORKLOAD_ROUND_BATCH * n).min(remaining.len());
+        let batch: Vec<u64> = remaining.drain(..batch_total).collect();
+        let shares: Vec<f64> = (0..n)
+            .map(|i| {
+                if loaded {
+                    batch
+                        .iter()
+                        .skip(i)
+                        .step_by(n)
+                        .map(|&mi| model.virtual_cost(mi))
+                        .sum()
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        if real && loaded {
+            workload_wall += model.execute_batch(batch.len())?;
+        }
+        // strategy bottleneck: centralized dispatch serializes on one node
+        match strategy {
+            Strategy::SimulatorInitiator => {
+                cluster.advance_busy(master, STRATEGY_MASTER_DISPATCH * n as f64);
+            }
+            Strategy::SimulatorSub => {
+                let worker = members.get(1).copied().unwrap_or(master);
+                cluster.advance_busy(worker, STRATEGY_MASTER_DISPATCH * n as f64 * 0.5);
+            }
+            Strategy::MultipleSimulator => {}
+        }
+        cluster.execute_gc_shares(master, &shares);
+        cluster.barrier();
+        if coord > 0.0 {
+            for &m in &members {
+                cluster.advance(m, coord);
+            }
+        }
+        monitor.sample(&cluster);
+    }
+    if resident > 0 {
+        for &m in &members {
+            cluster.release_scratch(m, resident);
+        }
+    }
+
+    // --- result collection at the supervisor ---
+    if n > 1 {
+        let result_bytes: u64 = scenario
+            .cloudlets
+            .iter()
+            .map(|c| c.to_bytes().len() as u64)
+            .sum();
+        for _ in 1..n {
+            let wire = cluster.net.transfer(result_bytes / n as u64);
+            cluster.advance_busy(master, wire);
+        }
+    }
+    let t_end = cluster.barrier();
+    monitor.sample(&cluster);
+
+    Ok(report(
+        &cluster,
+        &scenario,
+        n,
+        t_end - t_start,
+        workload_wall,
+        monitor.max_process_cpu_load,
+    ))
+}
+
+/// Distribute the scenario's entities into the grid: each member
+/// serializes + stores its `PartitionUtil` range of `HzCloudlet`s
+/// (`hzcloudlets` map), the master stores the `HzVm` list (`hzvms` map).
+/// Bodies run on the parallel engine — encoding happens on worker threads
+/// and the stores replay in `(node, seq)` order. Shared by the round-robin
+/// and matchmaking drivers so their grid contents stay consistent.
+pub(crate) fn distribute_entities(
+    cluster: &mut GridCluster,
+    cloudlets: &[Cloudlet],
+    vms: &[Vm],
+) -> Result<()> {
+    let n = cluster.size().max(1);
+    let master = cluster.master()?;
+    cluster.try_execute_on_all(master, |ctx| {
+        let lo = partition_init(cloudlets.len(), ctx.offset(), n);
+        let hi = partition_final(cloudlets.len(), ctx.offset(), n).min(cloudlets.len());
+        for c in &cloudlets[lo.min(hi)..hi] {
+            ctx.queue_put("hzcloudlets", format!("cloudlet-{}", c.id), c);
+        }
+        if ctx.offset() == 0 {
+            for v in vms {
+                ctx.queue_put("hzvms", format!("vm-{}", v.id), v);
+            }
+        }
+        Ok(())
+    })?;
+    Ok(())
+}
+
+/// Assemble a [`DistReport`] from a finished cluster + scenario.
+fn report(
+    cluster: &GridCluster,
+    scenario: &ScenarioResult,
+    n: usize,
+    sim_time_s: f64,
+    workload_wall: Duration,
+    max_process_cpu_load: f64,
+) -> DistReport {
+    DistReport {
+        nodes: n,
+        sim_time_s,
+        cloudlets_ok: scenario.successes(),
+        events: scenario.events_processed,
+        bind_steps: scenario.bind_steps,
+        grid_messages: cluster.net.messages,
+        grid_bytes: cluster.net.bytes,
+        distribution: cluster
+            .map_distribution("hzcloudlets")
+            .into_iter()
+            .map(|(_, e, b)| (e, b))
+            .collect(),
+        workload_wall,
+        max_process_cpu_load,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loaded() -> SimConfig {
+        SimConfig::default_round_robin(200, 400, true)
+    }
+
+    #[test]
+    fn accuracy_invariant_across_node_counts() {
+        let cfg = SimConfig::default_round_robin(40, 80, false);
+        let base = run_cloudsim_baseline(&cfg).unwrap();
+        let d3 = run_distributed(&cfg, 3).unwrap();
+        assert_eq!(base.cloudlets_ok, d3.cloudlets_ok);
+        assert_eq!(base.events, d3.events);
+        assert_eq!(base.bind_steps, d3.bind_steps);
+    }
+
+    #[test]
+    fn table_5_1_loaded_shape() {
+        let cfg = loaded();
+        let base = run_cloudsim_baseline(&cfg).unwrap().sim_time_s;
+        let t1 = run_distributed(&cfg, 1).unwrap().sim_time_s;
+        let t2 = run_distributed(&cfg, 2).unwrap().sim_time_s;
+        let t3 = run_distributed(&cfg, 3).unwrap().sim_time_s;
+        let t6 = run_distributed(&cfg, 6).unwrap().sim_time_s;
+        assert!(t1 > base, "grid overhead on one node: {t1} vs {base}");
+        assert!(t1 / t2 > 5.0, "≈10x at 2 nodes: {t1} vs {t2}");
+        assert!(t3 < t2, "3-node optimum");
+        assert!(t6 > t3 && t6 < t2, "6-node coordination erosion: {t3} {t6} {t2}");
+    }
+
+    #[test]
+    fn parallel_workers_preserve_virtual_time() {
+        let cfg = SimConfig::default_round_robin(60, 120, true);
+        let seq = run_distributed(&cfg, 3).unwrap();
+        let par = run_distributed(
+            &SimConfig {
+                grid_workers: 4,
+                ..cfg
+            },
+            3,
+        )
+        .unwrap();
+        assert_eq!(seq.sim_time_s, par.sim_time_s, "bitwise-identical virtual time");
+        assert_eq!(seq.grid_messages, par.grid_messages);
+        assert_eq!(seq.grid_bytes, par.grid_bytes);
+    }
+
+    #[test]
+    fn strategies_only_change_time() {
+        let cfg = SimConfig::default_round_robin(50, 100, false);
+        let mut times = Vec::new();
+        for s in Strategy::all() {
+            let mut model = NativeBurnModel::default();
+            let r = run_distributed_full(&cfg, 4, s, &mut model, false).unwrap();
+            assert_eq!(r.cloudlets_ok, 100);
+            times.push((s, r.sim_time_s));
+        }
+        let get = |s: Strategy| times.iter().find(|(x, _)| *x == s).unwrap().1;
+        assert!(
+            get(Strategy::MultipleSimulator) < get(Strategy::SimulatorInitiator),
+            "§3.1.1: the static master bottlenecks"
+        );
+    }
+
+    #[test]
+    fn strategy_display_roundtrip() {
+        assert_eq!(Strategy::MultipleSimulator.to_string(), "multiple-simulator");
+        assert_eq!(Strategy::all().len(), 3);
+    }
+}

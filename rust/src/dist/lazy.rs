@@ -1,0 +1,94 @@
+//! Compact entity codecs — the §6.2 "lazy loading" future-work direction.
+//!
+//! The paper serializes `HzVm`/`HzCloudlet` through verbose XML-style
+//! serializers (§4.1.2), making the `S` term heavy; §6.2 proposes loading
+//! objects "as required" with leaner representations. [`CompactVm`] is
+//! that direction: a fixed-width packed codec for the same entity, several
+//! times smaller than the XML form (measured by `benches/ablations.rs`).
+
+use crate::error::{C2SError, Result};
+use crate::grid::serialize::GridSerialize;
+use crate::sim::vm::Vm;
+
+/// A [`Vm`] wrapped with a packed fixed-width codec (30 bytes vs ~90 for
+/// the XML serializer). Field widths cover the paper's scenario ranges
+/// (ids/MIPS/RAM/size < 2³²; PEs < 2¹⁶); `host`/`datacenter` encode
+/// `None` as −1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompactVm(pub Vm);
+
+impl GridSerialize for CompactVm {
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        let v = &self.0;
+        (v.id as u32).write_bytes(out);
+        (v.user_id as u32).write_bytes(out);
+        (v.mips as u32).write_bytes(out);
+        (v.pes as u16).write_bytes(out);
+        (v.ram_mb as u32).write_bytes(out);
+        (v.size_mb as u32).write_bytes(out);
+        (v.host.map(|h| h as i32).unwrap_or(-1)).write_bytes(out);
+        (v.datacenter.map(|d| d as i32).unwrap_or(-1)).write_bytes(out);
+    }
+
+    fn read_bytes(buf: &[u8], cursor: &mut usize) -> Result<Self> {
+        let id = u32::read_bytes(buf, cursor)? as usize;
+        let user_id = u32::read_bytes(buf, cursor)? as usize;
+        let mips = u32::read_bytes(buf, cursor)? as u64;
+        let pes = u16::read_bytes(buf, cursor)? as usize;
+        let ram_mb = u32::read_bytes(buf, cursor)? as u64;
+        let size_mb = u32::read_bytes(buf, cursor)? as u64;
+        let host = match i32::read_bytes(buf, cursor)? {
+            -1 => None,
+            h if h >= 0 => Some(h as usize),
+            bad => {
+                return Err(C2SError::Serialization(format!(
+                    "bad compact host index {bad}"
+                )))
+            }
+        };
+        let datacenter = match i32::read_bytes(buf, cursor)? {
+            -1 => None,
+            d if d >= 0 => Some(d as usize),
+            bad => {
+                return Err(C2SError::Serialization(format!(
+                    "bad compact datacenter index {bad}"
+                )))
+            }
+        };
+        let mut vm = Vm::new(id, user_id, mips, pes, ram_mb, size_mb);
+        vm.host = host;
+        vm.datacenter = datacenter;
+        Ok(CompactVm(vm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_roundtrip() {
+        let mut vm = Vm::new(42, 7, 2500, 4, 1024, 15_000);
+        vm.host = Some(5);
+        vm.datacenter = Some(1);
+        let c = CompactVm(vm);
+        let bytes = c.to_bytes();
+        assert_eq!(bytes.len(), 30, "fixed-width packed form");
+        let back = CompactVm::from_bytes(&bytes).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn compact_beats_xml_by_2x() {
+        let vm = Vm::new(42, 7, 2500, 4, 1024, 15_000);
+        let xml = vm.to_bytes().len();
+        let compact = CompactVm(vm).to_bytes().len();
+        assert!(compact * 2 < xml, "compact {compact}B vs xml {xml}B");
+    }
+
+    #[test]
+    fn unplaced_roundtrip() {
+        let c = CompactVm(Vm::new(0, 0, 1, 1, 1, 1));
+        assert_eq!(CompactVm::from_bytes(&c.to_bytes()).unwrap(), c);
+    }
+}

@@ -1,0 +1,366 @@
+//! Fair matchmaking-based cloudlet scheduling (§5.1.2, after Raman et al.).
+//!
+//! Every cloudlet "searches the object space to find the best fit ...
+//! while ensuring that the minimal specifications are met, cloudlets also
+//! ensure fairness, by not binding to a VM that is much larger than their
+//! specification requirements". The O(C·V) score search is the dominant
+//! workload; its scoring function here is the *same math* as the Pallas
+//! `matchmake` kernel (`python/compile/kernels/matchmaking.py`), so the
+//! PJRT artifact and [`matchmake_native`] agree bit-for-bit on bindings.
+//!
+//! Distribution splits the cloudlet range over members (`PartitionUtil`),
+//! each scoring its slice against the replicated VM list. The per-cloudlet
+//! "match context" pins real heap: ≈1 600 contexts fill the default 64 MiB
+//! node heap — the superlinear single-instance growth of Fig 5.4 that
+//! distribution relieves (θ, §3.3).
+
+use std::time::Duration;
+
+use crate::config::SimConfig;
+use crate::dist::cost::*;
+use crate::dist::hz_cloudsim::{grid_config, DistReport};
+use crate::elastic::health::HealthMonitor;
+use crate::error::Result;
+use crate::grid::cluster::GridCluster;
+use crate::grid::partition::{partition_final, partition_init};
+use crate::runtime::registry::PjrtRuntime;
+use crate::sim::broker::CloudletBinder;
+use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
+use crate::sim::scenario::{run_scenario_with_binder, ScenarioResult};
+use crate::sim::vm::Vm;
+
+/// Load-balance weight (per queued cloudlet) — kernel parity constant.
+pub const ALPHA: f32 = 0.25;
+/// Oversize (unfairness) penalty slope — kernel parity constant.
+pub const BETA: f32 = 4.0;
+/// Waste beyond this fraction of the requirement is "unfair".
+pub const FAIR_WINDOW: f32 = 0.5;
+/// Score marking a VM below the cloudlet's minimal specification.
+pub const INFEASIBLE: f32 = 1.0e30;
+
+/// Minimal VM size a cloudlet of `length_mi` requires (§5.1.2's "minimal
+/// specifications" gate).
+pub fn required_size(length_mi: u64) -> u64 {
+    length_mi / 4
+}
+
+/// Score one `(cloudlet, VM)` pair — identical math to the Pallas kernel:
+/// `waste + ALPHA·load + BETA·relu(waste − FAIR_WINDOW·req)`, infeasible
+/// when the VM is below spec.
+#[inline]
+pub fn match_score(req: f32, cap: f32, load: f32) -> f32 {
+    let waste = cap - req;
+    if waste >= 0.0 {
+        let fair_excess = (waste - FAIR_WINDOW * req).max(0.0);
+        waste + ALPHA * load + BETA * fair_excess
+    } else {
+        INFEASIBLE
+    }
+}
+
+/// Native all-pairs matchmaking: per cloudlet, the argmin-score VM (first
+/// minimum wins, like `jnp.argmin`) and its best score. The PJRT
+/// `matchmake` artifact must agree with this exactly (checked by
+/// `rust/tests/runtime_pjrt.rs`).
+pub fn matchmake_native(req: &[f32], cap: &[f32], load: &[f32]) -> (Vec<i32>, Vec<f32>) {
+    assert_eq!(cap.len(), load.len(), "cap/load must align");
+    let mut assign = Vec::with_capacity(req.len());
+    let mut best = Vec::with_capacity(req.len());
+    for &r in req {
+        let mut bi = 0i32;
+        let mut bs = f32::INFINITY;
+        for (v, (&c, &l)) in cap.iter().zip(load.iter()).enumerate() {
+            let s = match_score(r, c, l);
+            if s < bs {
+                bs = s;
+                bi = v as i32;
+            }
+        }
+        assign.push(bi);
+        best.push(bs);
+    }
+    (assign, best)
+}
+
+/// The matchmaking [`CloudletBinder`]: greedy in cloudlet order, updating
+/// per-VM load as bindings land (each bound cloudlet raises its VM's
+/// `load` by one, steering later cloudlets elsewhere).
+#[derive(Debug, Default)]
+pub struct MatchmakingBinder {
+    steps: u64,
+}
+
+impl CloudletBinder for MatchmakingBinder {
+    fn bind(&mut self, cloudlets: &mut [Cloudlet], vms: &[Vm]) {
+        if vms.is_empty() {
+            for c in cloudlets.iter_mut() {
+                c.status = CloudletStatus::Failed;
+            }
+            return;
+        }
+        let caps: Vec<f32> = vms.iter().map(|v| v.size_mb as f32).collect();
+        let mut loads: Vec<f32> = vec![0.0; vms.len()];
+        for c in cloudlets.iter_mut() {
+            let req = required_size(c.length_mi) as f32;
+            let mut bi = None;
+            let mut bs = f32::INFINITY;
+            for (v, (&cap, &load)) in caps.iter().zip(loads.iter()).enumerate() {
+                let s = match_score(req, cap, load);
+                if s < bs {
+                    bs = s;
+                    bi = Some(v);
+                }
+            }
+            self.steps += vms.len() as u64;
+            match bi {
+                Some(v) if bs < INFEASIBLE => {
+                    c.vm_id = Some(vms[v].id);
+                    c.status = CloudletStatus::Queued;
+                    loads[v] += 1.0;
+                }
+                _ => c.status = CloudletStatus::Failed,
+            }
+        }
+    }
+
+    fn search_steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// Matchmaking on plain CloudSim: one JVM runs the full O(C·V) search with
+/// every match context resident (the Fig 5.4 superlinear regime).
+pub fn run_matchmaking_baseline(cfg: &SimConfig) -> Result<DistReport> {
+    cfg.validate()?;
+    let scenario = run_scenario_with_binder(cfg, true, Box::<MatchmakingBinder>::default());
+    let resident = scenario.cloudlets.len() as u64 * MATCH_CONTEXT_BYTES;
+    let gc = GridCluster::gc_factor_for_occupancy(resident as f64 / cfg.node_heap_bytes as f64);
+    let t = scenario.events_processed as f64 * EVENT_COST
+        + scenario.bind_steps as f64 * MATCH_STEP_COST * gc;
+    Ok(mm_report(None, &scenario, 1, t, Duration::ZERO, 1.0))
+}
+
+/// Distributed matchmaking over `nodes` members. When a [`PjrtRuntime`] is
+/// supplied, each member's scoring pass really executes the AOT-compiled
+/// `matchmake` kernel over artifact-sized windows (wall time accounted in
+/// the report); bindings always come from the scenario's native search so
+/// results are deployment-independent (§3.1.1) — the parity of kernel and
+/// native scores is asserted separately by `rust/tests/runtime_pjrt.rs`.
+pub fn run_matchmaking_distributed(
+    cfg: &SimConfig,
+    nodes: usize,
+    mut pjrt: Option<&mut PjrtRuntime>,
+) -> Result<DistReport> {
+    cfg.validate()?;
+    let n = nodes.max(1);
+    let mut cluster = GridCluster::with_members(grid_config(cfg), n);
+    let master = cluster.master()?;
+    let members = cluster.members();
+
+    let scenario = run_scenario_with_binder(cfg, true, Box::<MatchmakingBinder>::default());
+    let t_start = cluster.barrier();
+    let mut monitor = HealthMonitor::new(cfg.pes_per_host);
+    monitor.sample(&cluster);
+
+    // setup + entity distribution (the searched object space lives in the
+    // grid; helper shared with the round-robin driver)
+    cluster.execute_on_all(master, |ctx| ctx.advance(SETUP_COST_PER_NODE));
+    crate::dist::hz_cloudsim::distribute_entities(&mut cluster, &scenario.cloudlets, &scenario.vms)?;
+
+    // the DES core (entity bookkeeping) stays on the master
+    cluster.advance_busy(master, scenario.events_processed as f64 * EVENT_COST);
+
+    // admission: each member pins its slice of match contexts
+    let per_member = scenario.cloudlets.len().div_ceil(n);
+    let resident = per_member as u64 * MATCH_CONTEXT_BYTES;
+    for (i, m) in members.iter().enumerate() {
+        if let Err(e) = cluster.reserve_scratch(*m, resident) {
+            for &prev in &members[..i] {
+                cluster.release_scratch(prev, resident);
+            }
+            return Err(e);
+        }
+    }
+
+    // the distributed O(C·V) search: each member scores its range
+    let v_count = scenario.vms.len().max(1);
+    let shares: Vec<f64> = (0..n)
+        .map(|i| {
+            let lo = partition_init(scenario.cloudlets.len(), i, n);
+            let hi = partition_final(scenario.cloudlets.len(), i, n)
+                .min(scenario.cloudlets.len());
+            (hi.saturating_sub(lo) * v_count) as f64 * MATCH_STEP_COST
+        })
+        .collect();
+    cluster.execute_gc_shares(master, &shares);
+
+    // really execute the kernel for the whole score matrix, windowed to the
+    // artifact's dims (wall-clock accounting)
+    let mut workload_wall = Duration::ZERO;
+    if let Some(rt) = pjrt.as_deref_mut() {
+        workload_wall += execute_kernel_windows(rt, &scenario)?;
+    }
+
+    // per-round coordination: scoring batches are large (one pass per range)
+    let rounds = scenario.cloudlets.len().div_ceil(MATCH_ROUND_BATCH * n);
+    let coord = rounds as f64 * round_coordination_cost(n);
+    if coord > 0.0 {
+        for &m in &members {
+            cluster.advance(m, coord);
+        }
+    }
+
+    for &m in &members {
+        cluster.release_scratch(m, resident);
+    }
+
+    // collect bindings at the supervisor
+    if n > 1 {
+        let result_bytes = (scenario.cloudlets.len() * 8) as u64;
+        for _ in 1..n {
+            let wire = cluster.net.transfer(result_bytes / n as u64);
+            cluster.advance_busy(master, wire);
+        }
+    }
+    let t_end = cluster.barrier();
+    monitor.sample(&cluster);
+
+    Ok(mm_report(
+        Some(&cluster),
+        &scenario,
+        n,
+        t_end - t_start,
+        workload_wall,
+        monitor.max_process_cpu_load,
+    ))
+}
+
+/// Run the `matchmake` artifact over the scenario's score matrix in
+/// windows of the artifact's `(d1, d2)` dims; returns kernel wall time.
+fn execute_kernel_windows(rt: &mut PjrtRuntime, scenario: &ScenarioResult) -> Result<Duration> {
+    let reqs: Vec<f32> = scenario
+        .cloudlets
+        .iter()
+        .map(|c| required_size(c.length_mi) as f32)
+        .collect();
+    let caps: Vec<f32> = scenario.vms.iter().map(|v| v.size_mb as f32).collect();
+    if reqs.is_empty() || caps.is_empty() {
+        return Ok(Duration::ZERO);
+    }
+    let entry = rt.pick_matchmake(reqs.len(), caps.len())?;
+    // pad VM rows to the artifact width; capacity 0 is infeasible for any
+    // real requirement, so padding never changes feasible scores
+    let mut caps_p = vec![0.0f32; entry.d2];
+    let take_v = entry.d2.min(caps.len());
+    caps_p[..take_v].copy_from_slice(&caps[..take_v]);
+    let loads_p = vec![0.0f32; entry.d2];
+    let mut wall = Duration::ZERO;
+    let mut i = 0;
+    while i < reqs.len() {
+        let take = entry.d1.min(reqs.len() - i);
+        // pad the request window with f32::MAX (infeasible everywhere)
+        let mut window = vec![f32::MAX; entry.d1];
+        window[..take].copy_from_slice(&reqs[i..i + take]);
+        let (_, _, dt) = rt.execute_matchmake(&entry, &window, &caps_p, &loads_p)?;
+        wall += dt;
+        i += take;
+    }
+    Ok(wall)
+}
+
+/// Assemble a matchmaking [`DistReport`].
+fn mm_report(
+    cluster: Option<&GridCluster>,
+    scenario: &ScenarioResult,
+    n: usize,
+    sim_time_s: f64,
+    workload_wall: Duration,
+    max_process_cpu_load: f64,
+) -> DistReport {
+    DistReport {
+        nodes: n,
+        sim_time_s,
+        cloudlets_ok: scenario.successes(),
+        events: scenario.events_processed,
+        bind_steps: scenario.bind_steps,
+        grid_messages: cluster.map(|c| c.net.messages).unwrap_or(0),
+        grid_bytes: cluster.map(|c| c.net.bytes).unwrap_or(0),
+        distribution: cluster
+            .map(|c| {
+                c.map_distribution("hzcloudlets")
+                    .into_iter()
+                    .map(|(_, e, b)| (e, b))
+                    .collect()
+            })
+            .unwrap_or_default(),
+        workload_wall,
+        max_process_cpu_load,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_matches_kernel_semantics() {
+        // feasible: waste + alpha*load + beta*relu(waste - 0.5*req)
+        let s = match_score(10.0, 12.0, 4.0);
+        assert!((s - (2.0 + 0.25 * 4.0 + 0.0)).abs() < 1e-6);
+        // unfair oversize kicks in past 50% waste
+        let s = match_score(10.0, 20.0, 0.0);
+        assert!((s - (10.0 + 4.0 * 5.0)).abs() < 1e-6);
+        // below spec is infeasible
+        assert_eq!(match_score(10.0, 9.0, 0.0), INFEASIBLE);
+    }
+
+    #[test]
+    fn native_argmin_first_minimum_wins() {
+        let (assign, best) = matchmake_native(&[10.0], &[12.0, 12.0], &[0.0, 0.0]);
+        assert_eq!(assign, vec![0], "ties resolve to the first index");
+        assert!((best[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn binder_spreads_load() {
+        let vms: Vec<Vm> = (0..4).map(|i| Vm::new(i, 0, 1000, 1, 512, 10_000)).collect();
+        let mut cls: Vec<Cloudlet> = (0..8).map(|i| Cloudlet::new(i, 0, 40_000, 1)).collect();
+        let mut b = MatchmakingBinder::default();
+        b.bind(&mut cls, &vms);
+        assert!(cls.iter().all(|c| c.vm_id.is_some()));
+        assert_eq!(b.search_steps(), 8 * 4);
+        // identical VMs + load penalty ⇒ round-robin-like spread
+        let mut counts = [0usize; 4];
+        for c in &cls {
+            counts[c.vm_id.unwrap()] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 2), "{counts:?}");
+    }
+
+    #[test]
+    fn infeasible_cloudlets_fail() {
+        let vms = vec![Vm::new(0, 0, 1000, 1, 512, 100)];
+        let mut cls = vec![Cloudlet::new(0, 0, 40_000, 1)]; // needs 10_000
+        let mut b = MatchmakingBinder::default();
+        b.bind(&mut cls, &vms);
+        assert_eq!(cls[0].status, CloudletStatus::Failed);
+    }
+
+    #[test]
+    fn distribution_relieves_pressure_superlinearly() {
+        let cfg = SimConfig {
+            no_of_vms: 100,
+            no_of_cloudlets: 1200,
+            ..SimConfig::default()
+        };
+        let t1 = run_matchmaking_distributed(&cfg, 1, None).unwrap().sim_time_s;
+        let t3 = run_matchmaking_distributed(&cfg, 3, None).unwrap().sim_time_s;
+        assert!(t1 / t3 > 3.0, "θ relief is superlinear: {t1} vs {t3}");
+    }
+
+    #[test]
+    fn required_size_monotone() {
+        assert!(required_size(40_000) >= required_size(20_000));
+        assert_eq!(required_size(40_000), 10_000);
+    }
+}

@@ -1,0 +1,23 @@
+//! The Cloud²Sim distribution layer (§3.1, §3.4): CloudSim scenarios
+//! re-priced on the simulated in-memory data grid.
+//!
+//! * [`hz_cloudsim`] — the distributed CloudSim driver (`HzCloudSim`):
+//!   baseline vs `n`-member runs, partitioning strategies, Table 5.1.
+//! * [`matchmaking`] — fair matchmaking-based scheduling (§5.1.2) with
+//!   kernel-parity scoring, Figs 5.4–5.7.
+//! * [`speedup`] — the analytic §3.3 execution-time model and the §5.1.1
+//!   scalability taxonomy.
+//! * [`cost`] — calibrated scenario-level cost constants (the knobs the
+//!   grid substrate does not measure from bytes).
+//! * [`lazy`] — compact entity codecs (§6.2 lazy-loading direction).
+
+pub mod cost;
+pub mod hz_cloudsim;
+pub mod lazy;
+pub mod matchmaking;
+pub mod speedup;
+
+pub use hz_cloudsim::{
+    grid_config, run_cloudsim_baseline, run_cloudsim_baseline_with, run_distributed,
+    run_distributed_full, DistReport, Strategy,
+};

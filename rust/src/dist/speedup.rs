@@ -1,0 +1,133 @@
+//! The analytic §3.3 speedup model and the §5.1.1 scalability taxonomy.
+//!
+//! The paper expresses distributed execution time as
+//! `T(n) = F + serial + parallel/n + S(n) + C(n) + γ(n) − θ(n)`:
+//! a fixed start-up cost, an unparallelizable core, the distributable
+//! work, growing serialization/communication/coordination overheads, and
+//! the superlinear *relief* term θ — heap pressure that disappears once
+//! enough nodes share the working set. [`SpeedupModel`] is that equation
+//! with explicit knobs; integration tests fit it against measured runs and
+//! check that both agree on *when* distribution wins.
+
+/// Parameters of the §3.3 execution-time model.
+#[derive(Debug, Clone)]
+pub struct SpeedupModel {
+    /// Measured single-node time the model is anchored to.
+    pub t1: f64,
+    /// Parallelizable fraction of the pressure-free work (Amdahl `k`).
+    pub k: f64,
+    /// Serialization cost slope per node (`S` term).
+    pub ser_cost: f64,
+    /// Base communication cost once distributed (`C` term).
+    pub comm_base: f64,
+    /// Coordination cost scale, growing with `ln n` (`γ` term).
+    pub coord_base: f64,
+    /// Fixed start-up cost (`F` term).
+    pub fixed: f64,
+    /// Full heap-pressure penalty paid at one node (`θ` term).
+    pub theta_full: f64,
+    /// Node count at which the working set fits and θ vanishes.
+    pub relief_nodes: usize,
+}
+
+impl SpeedupModel {
+    /// Predicted execution time on `n` nodes.
+    ///
+    /// At `n = 1` this reproduces `t1` exactly (the model is anchored);
+    /// distributed deployments split the parallelizable work `k·w` over
+    /// `n`, drop θ once `n ≥ relief_nodes`, and pay S/C/γ overheads.
+    pub fn t_n(&self, n: usize) -> f64 {
+        let nf = n as f64;
+        // pressure-free work at one node
+        let w = (self.t1 - self.fixed - self.theta_full).max(0.0);
+        let serial = w * (1.0 - self.k);
+        let parallel = w * self.k;
+        let theta = if n >= self.relief_nodes.max(1) {
+            0.0
+        } else {
+            self.theta_full
+        };
+        let overhead = if n > 1 {
+            self.ser_cost * nf + self.comm_base + self.coord_base * nf.ln()
+        } else {
+            0.0
+        };
+        self.fixed + serial + parallel / nf + theta + overhead
+    }
+
+    /// Predicted speedup over the single node.
+    pub fn speedup(&self, n: usize) -> f64 {
+        self.t_n(1) / self.t_n(n)
+    }
+}
+
+/// The four scalability patterns of §5.1.1 (Figs 5.2/5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalabilityCase {
+    /// Time falls monotonically with nodes (big loaded simulations).
+    Positive,
+    /// Time rises monotonically (coordination-dominated small/simple runs).
+    Negative,
+    /// One trend change (typically positive then negative).
+    Common,
+    /// Multiple trend changes (borderline workloads).
+    Complex,
+}
+
+impl std::fmt::Display for ScalabilityCase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScalabilityCase::Positive => write!(f, "positive"),
+            ScalabilityCase::Negative => write!(f, "negative"),
+            ScalabilityCase::Common => write!(f, "common"),
+            ScalabilityCase::Complex => write!(f, "complex"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(t1: f64) -> SpeedupModel {
+        SpeedupModel {
+            t1,
+            k: 0.9,
+            ser_cost: 0.5,
+            comm_base: 1.0,
+            coord_base: 1.0,
+            fixed: 0.5,
+            theta_full: t1 * 0.5,
+            relief_nodes: 2,
+        }
+    }
+
+    #[test]
+    fn anchored_at_one_node() {
+        let m = model(100.0);
+        assert!((m.t_n(1) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relief_makes_two_nodes_superlinear() {
+        let m = model(200.0);
+        // θ vanishes at n = 2: speedup beyond 2×
+        assert!(m.speedup(2) > 2.0, "speedup {}", m.speedup(2));
+    }
+
+    #[test]
+    fn overheads_eventually_dominate() {
+        let m = SpeedupModel {
+            theta_full: 0.0,
+            ..model(10.0)
+        };
+        // small job: distribution overheads exceed the parallel gain
+        assert!(m.t_n(6) > m.t_n(3) || m.t_n(6) > m.t_n(1) * 0.5);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(ScalabilityCase::Positive.to_string(), "positive");
+        assert_eq!(ScalabilityCase::Complex.to_string(), "complex");
+    }
+}

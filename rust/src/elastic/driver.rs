@@ -128,22 +128,31 @@ pub fn run_adaptive(
         }
         let batch_total = (WORKLOAD_ROUND_BATCH * n).min(remaining.len());
         let batch: Vec<u64> = remaining.drain(..batch_total).collect();
-        for (i, m) in members.iter().enumerate() {
-            let gc = main.gc_factor(*m);
-            let mine: f64 = batch
-                .iter()
-                .skip(i)
-                .step_by(n)
-                .map(|&mi| model.virtual_cost(mi) * gc)
-                .sum();
-            main.advance_busy(*m, mine);
-        }
+        // run the round's task bodies through the two-phase parallel
+        // engine: each member's share + GC factor comes from its own
+        // NodeCtx shard (real threads when the grid config asks for them,
+        // identical virtual time either way)
+        let shares: Vec<f64> = (0..n)
+            .map(|i| {
+                batch
+                    .iter()
+                    .skip(i)
+                    .step_by(n)
+                    .map(|&mi| model.virtual_cost(mi))
+                    .sum()
+            })
+            .collect();
+        main.execute_gc_shares(master, &shares);
         for m in &members {
             main.release_scratch(*m, per_node_ws);
         }
         main.barrier();
         if n > 1 {
-            let gamma = WORKLOAD_COORD_PER_NODE * (n - 1) as f64 / 8.0;
+            // shared (n−1)² coordination model from dist::cost — the same
+            // superlinear γ the static distributed runs pay, deliberately
+            // replacing the old linear per-round charge so adaptive and
+            // static deployments price cluster growth identically
+            let gamma = round_coordination_cost(n);
             for m in &members {
                 main.advance(*m, gamma);
             }

@@ -1,66 +1,114 @@
 //! Unified error type for the Cloud²Sim crate.
+//!
+//! Hand-rolled `Display`/`Error` impls — the offline vendor set has no
+//! `thiserror`, and the crate is dependency-free by design.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, C2SError>;
 
 /// All error conditions surfaced by the simulator, the grid substrate, the
 /// MapReduce engines and the elastic middleware.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum C2SError {
     /// A simulated node exhausted its configured heap capacity.
     ///
     /// Mirrors the paper's `java.lang.OutOfMemoryError: Java heap space`
     /// observed when large MapReduce jobs run on too few instances
     /// (§5.2, Figs 5.10/5.11, Table 5.3).
-    #[error("simulated OutOfMemory on node {node}: used {used_bytes}B + {requested_bytes}B requested > capacity {capacity_bytes}B")]
     OutOfMemory {
+        /// Node that ran out of simulated heap.
         node: usize,
+        /// Bytes already used on the node.
         used_bytes: u64,
+        /// Bytes the failing operation requested.
         requested_bytes: u64,
+        /// Configured node heap capacity.
         capacity_bytes: u64,
     },
 
     /// GC-overhead-limit analog: too large a fraction of virtual time spent
     /// in simulated memory management.
-    #[error("simulated GC overhead limit exceeded on node {node} (gc fraction {gc_fraction:.2})")]
-    GcOverheadLimit { node: usize, gc_fraction: f64 },
+    GcOverheadLimit {
+        /// Node that crossed the GC-overhead limit.
+        node: usize,
+        /// Fraction of virtual time spent collecting.
+        gc_fraction: f64,
+    },
 
     /// Cluster-level failures (no members, master missing, split-brain...).
-    #[error("cluster error: {0}")]
     Cluster(String),
 
     /// A distributed-executor task panicked or was rejected.
-    #[error("executor error: {0}")]
     Executor(String),
 
     /// The MapReduce supervisor lost a member mid-job (paper §5.2.2:
     /// Hazelcast instances joining a running MR job crashed it).
-    #[error("mapreduce job failed: {0}")]
     MapReduce(String),
 
     /// Configuration file / property parsing problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// PJRT / artifact problems (missing artifacts, compile failure...).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Serialization of a distributed object failed.
-    #[error("serialization error: {0}")]
     Serialization(String),
 
     /// Elastic scaling protocol violation (e.g. double scale-out).
-    #[error("scaling error: {0}")]
     Scaling(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Filesystem / IO failure.
+    Io(std::io::Error),
 
-    #[error("{0}")]
+    /// Anything else.
     Other(String),
+}
+
+impl fmt::Display for C2SError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            C2SError::OutOfMemory {
+                node,
+                used_bytes,
+                requested_bytes,
+                capacity_bytes,
+            } => write!(
+                f,
+                "simulated OutOfMemory on node {node}: used {used_bytes}B + \
+                 {requested_bytes}B requested > capacity {capacity_bytes}B"
+            ),
+            C2SError::GcOverheadLimit { node, gc_fraction } => write!(
+                f,
+                "simulated GC overhead limit exceeded on node {node} (gc fraction {gc_fraction:.2})"
+            ),
+            C2SError::Cluster(s) => write!(f, "cluster error: {s}"),
+            C2SError::Executor(s) => write!(f, "executor error: {s}"),
+            C2SError::MapReduce(s) => write!(f, "mapreduce job failed: {s}"),
+            C2SError::Config(s) => write!(f, "config error: {s}"),
+            C2SError::Runtime(s) => write!(f, "runtime error: {s}"),
+            C2SError::Serialization(s) => write!(f, "serialization error: {s}"),
+            C2SError::Scaling(s) => write!(f, "scaling error: {s}"),
+            C2SError::Io(e) => write!(f, "{e}"),
+            C2SError::Other(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for C2SError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            C2SError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for C2SError {
+    fn from(e: std::io::Error) -> Self {
+        C2SError::Io(e)
+    }
 }
 
 impl C2SError {
@@ -68,12 +116,6 @@ impl C2SError {
     /// resolves by adding nodes.
     pub fn is_oom(&self) -> bool {
         matches!(self, C2SError::OutOfMemory { .. })
-    }
-}
-
-impl From<anyhow::Error> for C2SError {
-    fn from(e: anyhow::Error) -> Self {
-        C2SError::Runtime(format!("{e:#}"))
     }
 }
 
@@ -96,9 +138,10 @@ mod tests {
     }
 
     #[test]
-    fn from_anyhow() {
-        let a = anyhow::anyhow!("boom");
-        let e: C2SError = a.into();
-        assert!(matches!(e, C2SError::Runtime(_)));
+    fn from_io() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: C2SError = io.into();
+        assert!(matches!(e, C2SError::Io(_)));
+        assert!(e.to_string().contains("gone"));
     }
 }

@@ -7,6 +7,11 @@
 //! control message per operation — which is why the paper uses *non-atomic*
 //! distributed objects for the rest of the scaling state "to avoid slowing
 //! down the scaling process with locks".
+//!
+//! Inside a parallel task body ([`crate::grid::parallel::NodeCtx`]) atomics
+//! are visible as a fork-time snapshot (`atomic_read`) plus queued
+//! `set`/`add` intents applied deterministically at merge — real-thread
+//! bodies never contend on the shared table.
 
 use crate::grid::cluster::{GridCluster, NodeId};
 use crate::grid::partition::partition_of;

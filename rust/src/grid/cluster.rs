@@ -7,10 +7,12 @@
 //!
 //! ### Virtual time
 //!
-//! This container exposes a single CPU core, so node-level parallelism is
-//! *virtualized*: each node carries its own clock, compute advances the
-//! executing node's clock, and cluster-wide phases synchronize with
-//! [`GridCluster::barrier`] (makespan = max of node clocks). Compute costs
+//! Node-level parallelism is *virtualized*: each node carries its own
+//! clock, compute advances the executing node's clock, and cluster-wide
+//! phases synchronize with [`GridCluster::barrier`] (makespan = max of node
+//! clocks). Task *bodies* may additionally run on real OS threads through
+//! the two-phase engine in [`crate::grid::parallel`] — virtual-time results
+//! are identical either way. Compute costs
 //! are calibrated against real PJRT kernel executions (see
 //! `runtime::workload`), serialization costs come from real byte encoding,
 //! and communication costs from [`crate::grid::net::NetModel`] — so the
@@ -55,6 +57,12 @@ pub struct GridConfig {
     pub node_heap_bytes: u64,
     /// Deterministic seed.
     pub seed: u64,
+    /// OS worker threads for the two-phase parallel executor
+    /// ([`crate::grid::parallel`]). `1` (the default) runs task bodies
+    /// inline; `> 1` runs `execute_on_all`-style batches on a scoped thread
+    /// pool. Virtual-time results are identical either way (the engine's
+    /// determinism contract).
+    pub workers: usize,
 }
 
 impl Default for GridConfig {
@@ -69,6 +77,7 @@ impl Default for GridConfig {
             near_cache: false,
             node_heap_bytes: 64 * 1024 * 1024,
             seed: 0xC10D,
+            workers: 1,
         }
     }
 }

@@ -8,11 +8,16 @@
 //! clock primitives. Awaiting results synchronizes the caller to the
 //! slowest target — which is how distributed speedup (and its
 //! communication-cost erosion, §3.3) materializes in virtual time.
+//!
+//! Single-target tasks ([`GridCluster::execute_on_member`],
+//! [`GridCluster::execute_on_key_owner`]) run inline with full cluster
+//! access. Batch tasks (`execute_on_all` and its fallible variant) live in
+//! [`crate::grid::parallel`]: their bodies receive a per-node
+//! [`crate::grid::parallel::NodeCtx`] shard and can run on real OS threads.
 
-use crate::error::Result;
 use crate::grid::cluster::{GridCluster, NodeId};
-use crate::grid::serialize::GridKey;
 use crate::grid::partition::partition_of;
+use crate::grid::serialize::GridKey;
 
 impl GridCluster {
     /// Execute a task on one member and await its result.
@@ -21,6 +26,19 @@ impl GridCluster {
     /// operation it performs is charged to that member. The `caller` pays
     /// dispatch + result-return messages and ends no earlier than the
     /// target's completion.
+    ///
+    /// ```
+    /// use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+    ///
+    /// let mut c = GridCluster::with_members(GridConfig::default(), 2);
+    /// let (a, b) = (c.members()[0], c.members()[1]);
+    /// let r = c.execute_on_member(a, b, |cl, me| {
+    ///     cl.advance_busy(me, 2.0); // compute lands on the target
+    ///     "done"
+    /// });
+    /// assert_eq!(r, "done");
+    /// assert!(c.clock(a) >= c.clock(b), "caller awaited the result");
+    /// ```
     pub fn execute_on_member<R>(
         &mut self,
         caller: NodeId,
@@ -37,6 +55,18 @@ impl GridCluster {
     /// Execute a task on the member owning `key`'s partition —
     /// `executeOnKeyOwner` (§4.1.4): "execute the operation on the instance
     /// that holds the distributed object, instead of accessing it remotely".
+    ///
+    /// ```
+    /// use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+    /// use cloud2sim::grid::serialize::GridKey;
+    ///
+    /// let mut c = GridCluster::with_members(GridConfig::default(), 3);
+    /// let master = c.master().unwrap();
+    /// let key = GridKey::new("vm-7");
+    /// let ran_on = c.execute_on_key_owner(master, &key, |_, me| me);
+    /// // the task ran on the partition owner of "vm-7"
+    /// assert!(c.members().contains(&ran_on));
+    /// ```
     pub fn execute_on_key_owner<R>(
         &mut self,
         caller: NodeId,
@@ -48,71 +78,8 @@ impl GridCluster {
         self.execute_on_member(caller, owner, f)
     }
 
-    /// Dispatch one task per member ("uniform partition of the execution",
-    /// §3.1.1), run them at each member's own clock, then synchronize the
-    /// caller to the slowest completion. Returns `(member, result)` pairs in
-    /// member order.
-    pub fn execute_on_all<R>(
-        &mut self,
-        caller: NodeId,
-        mut f: impl FnMut(&mut GridCluster, NodeId) -> R,
-    ) -> Vec<(NodeId, R)> {
-        let members = self.members();
-        let mut out = Vec::with_capacity(members.len());
-        for &m in &members {
-            self.dispatch(caller, m);
-        }
-        for &m in &members {
-            let r = f(self, m);
-            out.push((m, r));
-            self.metrics.incr("executor.tasks");
-        }
-        // await all
-        let mut latest = self.clock(caller);
-        for &m in &members {
-            let done = if m == caller {
-                self.clock(m)
-            } else {
-                self.clock(m) + self.net.control()
-            };
-            latest = latest.max(done);
-        }
-        self.set_clock_at_least(caller, latest);
-        out
-    }
-
-    /// Fallible variant of [`Self::execute_on_all`]: stops at the first
-    /// task error (the supervisor's failure behaviour in §5.2.2).
-    pub fn try_execute_on_all<R>(
-        &mut self,
-        caller: NodeId,
-        mut f: impl FnMut(&mut GridCluster, NodeId) -> Result<R>,
-    ) -> Result<Vec<(NodeId, R)>> {
-        let members = self.members();
-        let mut out = Vec::with_capacity(members.len());
-        for &m in &members {
-            self.dispatch(caller, m);
-        }
-        for &m in &members {
-            let r = f(self, m)?;
-            out.push((m, r));
-            self.metrics.incr("executor.tasks");
-        }
-        let mut latest = self.clock(caller);
-        for &m in &members {
-            let done = if m == caller {
-                self.clock(m)
-            } else {
-                self.clock(m) + self.net.control()
-            };
-            latest = latest.max(done);
-        }
-        self.set_clock_at_least(caller, latest);
-        Ok(out)
-    }
-
     /// Charge dispatch costs and establish the happens-before edge.
-    fn dispatch(&mut self, caller: NodeId, target: NodeId) {
+    pub(crate) fn dispatch(&mut self, caller: NodeId, target: NodeId) {
         let overhead = self.cfg.backend.dispatch_overhead;
         self.advance_busy(caller, overhead * 0.25); // submit bookkeeping
         self.sync_from(caller, target);
@@ -128,7 +95,7 @@ impl GridCluster {
         self.set_clock_at_least(caller, done);
     }
 
-    fn set_clock_at_least(&mut self, node: NodeId, t: f64) {
+    pub(crate) fn set_clock_at_least(&mut self, node: NodeId, t: f64) {
         if let Some(st) = self.nodes.get_mut(&node) {
             if st.clock < t {
                 st.clock = t;
@@ -140,7 +107,9 @@ impl GridCluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Result;
     use crate::grid::cluster::GridConfig;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn cluster(n: usize) -> GridCluster {
         GridCluster::with_members(GridConfig::default(), n)
@@ -168,8 +137,8 @@ mod tests {
         let master = c.master().unwrap();
         c.barrier();
         let t0 = c.clock(master);
-        c.execute_on_all(master, |cl, me| {
-            cl.advance_busy(me, 1.0);
+        c.execute_on_all(master, |ctx| {
+            ctx.advance_busy(1.0);
         });
         let elapsed = c.clock(master) - t0;
         assert!(elapsed >= 1.0, "at least the task time: {elapsed}");
@@ -191,24 +160,28 @@ mod tests {
     fn try_execute_stops_on_error() {
         let mut c = cluster(3);
         let master = c.master().unwrap();
-        let mut count = 0;
-        let res: Result<Vec<(NodeId, ())>> = c.try_execute_on_all(master, |_, _| {
-            count += 1;
-            if count == 2 {
+        let count = AtomicUsize::new(0);
+        let res: Result<Vec<(NodeId, ())>> = c.try_execute_on_all(master, |_ctx| {
+            let n = count.fetch_add(1, Ordering::SeqCst) + 1;
+            if n == 2 {
                 Err(crate::error::C2SError::Executor("boom".into()))
             } else {
                 Ok(())
             }
         });
         assert!(res.is_err());
-        assert_eq!(count, 2, "third task never ran");
+        assert_eq!(
+            count.load(Ordering::SeqCst),
+            2,
+            "sequential mode stops at the first error"
+        );
     }
 
     #[test]
     fn dispatch_counts_tasks() {
         let mut c = cluster(2);
         let master = c.master().unwrap();
-        c.execute_on_all(master, |_, _| ());
+        c.execute_on_all(master, |_ctx| ());
         assert_eq!(c.metrics.counter("executor.tasks"), 2);
     }
 }

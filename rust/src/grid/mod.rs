@@ -19,6 +19,8 @@
 //! * [`map`] — the distributed map (backups, eviction, near-cache).
 //! * [`atomics`] — `IAtomicLong`, the scaling-flag primitive.
 //! * [`executor`] — the distributed executor service.
+//! * [`parallel`] — the two-phase real-thread execution engine
+//!   ([`parallel::NodeCtx`] shards + deterministic merge).
 //! * [`cluster`] — the facade tying it all together (`HazelSim` analog).
 
 pub mod atomics;
@@ -28,8 +30,10 @@ pub mod executor;
 pub mod map;
 pub mod member;
 pub mod net;
+pub mod parallel;
 pub mod partition;
 pub mod serialize;
 pub mod structures;
 
 pub use cluster::{GridCluster, GridConfig, NodeId};
+pub use parallel::NodeCtx;

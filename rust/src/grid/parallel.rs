@@ -1,0 +1,634 @@
+//! The two-phase parallel execution engine.
+//!
+//! The paper's thesis is that simulators "fail to exploit" multi-core
+//! hardware; this module is where the reproduction stops merely *modeling*
+//! parallelism and starts *using* it. `execute_on_all`-style task batches
+//! run in two phases:
+//!
+//! 1. **Fork** — per-node state (virtual clock, busy time, heap accounting,
+//!    a partition/atomics snapshot, a metrics delta) is split into
+//!    independently owned [`NodeCtx`] shards, one per target member.
+//! 2. **Run + merge** — task bodies execute against their own `NodeCtx`
+//!    (on a scoped thread pool when [`GridConfig::workers`] > 1, inline
+//!    otherwise), then effects merge back into the cluster
+//!    deterministically: clocks max-join, busy/heap/metrics deltas sum,
+//!    and queued grid writes replay in `(node, seq)` order.
+//!
+//! ### Determinism contract
+//!
+//! Threaded and sequential execution produce **bitwise-identical** virtual
+//! time, metrics and map contents, because a body can only touch its own
+//! shard: cross-node effects are expressed as ordered write intents and
+//! applied at merge time in member order. The contract holds as long as
+//! bodies are pure functions of their `NodeCtx` (no shared mutable captures,
+//! no wall-clock reads feeding virtual time). Benches and property tests
+//! (`rust/tests/props_parallel.rs`) pin this down.
+//!
+//! [`GridConfig::workers`]: crate::grid::cluster::GridConfig
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::{C2SError, Result};
+use crate::grid::cluster::{GridCluster, NodeId};
+use crate::grid::serialize::{GridKey, GridSerialize};
+use crate::metrics::Metrics;
+
+/// A queued cross-node effect, applied at merge time in `(node, seq)` order
+/// (`seq` = position in the owning context's intent list).
+#[derive(Debug)]
+pub(crate) enum WriteIntent {
+    /// A distributed-map put (bytes already serialized by the task body, so
+    /// the real encoding work happens on the worker thread).
+    Put {
+        /// Target map name.
+        map: String,
+        /// Entry key.
+        key: GridKey,
+        /// Serialized value.
+        bytes: Vec<u8>,
+    },
+    /// Set an `IAtomicLong`.
+    AtomicSet {
+        /// Atomic name.
+        name: String,
+        /// New value.
+        value: i64,
+    },
+    /// Add to an `IAtomicLong`.
+    AtomicAdd {
+        /// Atomic name.
+        name: String,
+        /// Delta to apply.
+        delta: i64,
+    },
+}
+
+/// One member's independently borrowable execution shard.
+///
+/// A `NodeCtx` carries everything a distributed task body may observe or
+/// mutate about its executing member: the virtual clock, busy-time and
+/// heap accounting, a read snapshot of the cluster's atomics, a private
+/// metrics delta and an ordered write-intent queue. Because each body owns
+/// its shard exclusively, bodies for different members can run on real OS
+/// threads with no synchronization — and still merge back deterministically.
+///
+/// ```
+/// use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+///
+/// let mut c = GridCluster::with_members(GridConfig { workers: 2, ..GridConfig::default() }, 3);
+/// let master = c.master().unwrap();
+/// let out = c.execute_on_all(master, |ctx| {
+///     // charge one virtual second of compute to the executing member
+///     ctx.advance_busy(1.0);
+///     ctx.offset()
+/// });
+/// assert_eq!(out.len(), 3);
+/// assert!(c.busy(out[1].0) >= 1.0);
+/// ```
+#[derive(Debug)]
+pub struct NodeCtx {
+    id: NodeId,
+    offset: usize,
+    clock0: f64,
+    clock: f64,
+    busy0: f64,
+    busy: f64,
+    heap_used: u64,
+    heap_capacity: u64,
+    scratch_net: i64,
+    metrics: Metrics,
+    writes: Vec<WriteIntent>,
+    /// Fork-time atomics snapshot, shared (read-only) by every shard of
+    /// one batch.
+    atomics: Arc<BTreeMap<String, i64>>,
+}
+
+impl NodeCtx {
+    /// The executing member.
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    /// The member's position in the cluster's member list (its
+    /// `PartitionUtil` offset), handy for indexing precomputed work shares.
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// The member's current virtual clock.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Accumulated busy (compute) time, including this task's.
+    pub fn busy(&self) -> f64 {
+        self.busy
+    }
+
+    /// Advance the member's clock by idle (non-busy) time.
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative time advance: {dt}");
+        self.clock += dt;
+    }
+
+    /// Advance the member's clock by *busy* (compute) time.
+    pub fn advance_busy(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.clock += dt;
+        self.busy += dt;
+    }
+
+    /// Simulated heap currently used on the member (snapshot + this task's
+    /// scratch reservations).
+    pub fn heap_used(&self) -> u64 {
+        self.heap_used
+    }
+
+    /// Configured per-node heap capacity.
+    pub fn heap_capacity(&self) -> u64 {
+        self.heap_capacity
+    }
+
+    /// GC-pressure multiplier at the member's current occupancy — the θ
+    /// term of §3.3, identical to [`GridCluster::gc_factor`].
+    pub fn gc_factor(&self) -> f64 {
+        GridCluster::gc_factor_for_occupancy(self.heap_used as f64 / self.heap_capacity as f64)
+    }
+
+    /// Reserve transient heap on the member; fails with the simulated
+    /// `OutOfMemoryError` when the bytes do not fit.
+    pub fn reserve_scratch(&mut self, bytes: u64) -> Result<()> {
+        if self.heap_used + bytes > self.heap_capacity {
+            return Err(C2SError::OutOfMemory {
+                node: self.id.0 as usize,
+                used_bytes: self.heap_used,
+                requested_bytes: bytes,
+                capacity_bytes: self.heap_capacity,
+            });
+        }
+        self.heap_used += bytes;
+        self.scratch_net += bytes as i64;
+        Ok(())
+    }
+
+    /// Release previously reserved scratch heap.
+    pub fn release_scratch(&mut self, bytes: u64) {
+        self.heap_used = self.heap_used.saturating_sub(bytes);
+        self.scratch_net -= bytes as i64;
+    }
+
+    /// Increment a metrics counter (merged into the cluster registry).
+    pub fn incr_metric(&mut self, key: &str) {
+        self.metrics.incr(key);
+    }
+
+    /// Add to a metrics counter (merged into the cluster registry).
+    pub fn add_metric(&mut self, key: &str, n: u64) {
+        self.metrics.add(key, n);
+    }
+
+    /// Read an `IAtomicLong` from the fork-time snapshot (0 when unset).
+    /// Writes queued by *this* batch are not visible until merge.
+    pub fn atomic_read(&self, name: &str) -> i64 {
+        self.atomics.get(name).copied().unwrap_or(0)
+    }
+
+    /// Queue an `IAtomicLong` set, applied at merge in `(node, seq)` order.
+    pub fn queue_atomic_set(&mut self, name: &str, value: i64) {
+        self.writes.push(WriteIntent::AtomicSet {
+            name: name.to_string(),
+            value,
+        });
+    }
+
+    /// Queue an `IAtomicLong` add, applied at merge in `(node, seq)` order.
+    pub fn queue_atomic_add(&mut self, name: &str, delta: i64) {
+        self.writes.push(WriteIntent::AtomicAdd {
+            name: name.to_string(),
+            delta,
+        });
+    }
+
+    /// Queue a distributed-map put. Serialization happens immediately — on
+    /// the worker thread — so the real encoding cost parallelizes; the
+    /// store (and its virtual-cost charging) replays at merge in
+    /// `(node, seq)` order with this member as the caller.
+    pub fn queue_put<V: GridSerialize>(&mut self, map: &str, key: impl Into<GridKey>, value: &V) {
+        self.queue_put_bytes(map, key.into(), value.to_bytes());
+    }
+
+    /// Byte-level variant of [`NodeCtx::queue_put`].
+    pub fn queue_put_bytes(&mut self, map: &str, key: GridKey, bytes: Vec<u8>) {
+        self.writes.push(WriteIntent::Put {
+            map: map.to_string(),
+            key,
+            bytes,
+        });
+    }
+}
+
+impl GridCluster {
+    /// Fork one member's state into a [`NodeCtx`] shard (phase 1).
+    pub(crate) fn fork_ctx(&self, id: NodeId, offset: usize) -> NodeCtx {
+        self.fork_ctx_shared(id, offset, Arc::new(self.atomics.clone()))
+    }
+
+    /// Fork with a batch-shared atomics snapshot (one table clone per
+    /// batch, one `Arc` bump per member — keeps the per-member fork cheap
+    /// on hot paths like the workload-round loop).
+    fn fork_ctx_shared(
+        &self,
+        id: NodeId,
+        offset: usize,
+        atomics: Arc<BTreeMap<String, i64>>,
+    ) -> NodeCtx {
+        let st = self.nodes.get(&id).expect("fork of a live member");
+        NodeCtx {
+            id,
+            offset,
+            clock0: st.clock,
+            clock: st.clock,
+            busy0: st.busy,
+            busy: st.busy,
+            heap_used: st.heap_used,
+            heap_capacity: self.cfg.node_heap_bytes,
+            scratch_net: 0,
+            metrics: Metrics::new(),
+            writes: Vec::new(),
+            atomics,
+        }
+    }
+
+    /// Merge one shard's effects back into the cluster (phase 2): clock
+    /// max-join, busy/heap delta sums, metric sums, then queued writes in
+    /// `seq` order.
+    ///
+    /// Every intent is attempted: a map put that fails heap admission is
+    /// counted under `parallel.writes_rejected` and *skipped* — later
+    /// intents (including atomic set/add, which cannot fail) still apply,
+    /// so a full merge always happens. The first admission error is
+    /// returned so fallible callers can surface it.
+    pub(crate) fn merge_ctx(&mut self, ctx: NodeCtx) -> Result<()> {
+        let NodeCtx {
+            id,
+            clock0,
+            clock,
+            busy0,
+            busy,
+            scratch_net,
+            metrics,
+            writes,
+            ..
+        } = ctx;
+        if let Some(st) = self.nodes.get_mut(&id) {
+            // max-join: bodies only move their own clock forward, but a
+            // concurrent merge-ordered write may already have advanced it.
+            if clock > st.clock {
+                st.clock = clock;
+            }
+            st.busy += busy - busy0;
+            debug_assert!(clock >= clock0, "ctx clock ran backwards");
+        }
+        self.adjust_heap(id, scratch_net);
+        self.metrics.merge(&metrics);
+        let mut first_err = None;
+        for w in writes {
+            match w {
+                WriteIntent::Put { map, key, bytes } => {
+                    if let Err(e) = self.map_put_bytes(id, &map, key, bytes) {
+                        self.metrics.incr("parallel.writes_rejected");
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+                WriteIntent::AtomicSet { name, value } => {
+                    self.atomic_set(id, &name, value);
+                }
+                WriteIntent::AtomicAdd { name, delta } => {
+                    self.atomic_add(id, &name, delta);
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Dispatch one task per member ("uniform partition of the execution",
+    /// §3.1.1), run the bodies — on up to [`GridConfig::workers`] OS
+    /// threads — then synchronize the caller to the slowest completion.
+    /// Returns `(member, result)` pairs in member order.
+    ///
+    /// Queued writes that fail heap admission are dropped (counted under
+    /// `parallel.writes_rejected`); use [`GridCluster::try_execute_on_all`]
+    /// when write admission must abort the batch.
+    ///
+    /// [`GridConfig::workers`]: crate::grid::cluster::GridConfig
+    ///
+    /// ```
+    /// use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+    ///
+    /// let mut c = GridCluster::with_members(GridConfig::default(), 4);
+    /// let master = c.master().unwrap();
+    /// c.barrier();
+    /// let t0 = c.clock(master);
+    /// // 4 tasks of 1 virtual second run in parallel *virtual* time:
+    /// c.execute_on_all(master, |ctx| ctx.advance_busy(1.0));
+    /// let elapsed = c.clock(master) - t0;
+    /// assert!(elapsed >= 1.0 && elapsed < 2.0);
+    /// ```
+    pub fn execute_on_all<R: Send>(
+        &mut self,
+        caller: NodeId,
+        f: impl Fn(&mut NodeCtx) -> R + Sync,
+    ) -> Vec<(NodeId, R)> {
+        let members = self.members();
+        for &m in &members {
+            self.dispatch(caller, m);
+        }
+        let snapshot = Arc::new(self.atomics.clone());
+        let mut ctxs: Vec<NodeCtx> = members
+            .iter()
+            .enumerate()
+            .map(|(o, &m)| self.fork_ctx_shared(m, o, snapshot.clone()))
+            .collect();
+        let results = run_bodies(&mut ctxs, self.cfg.workers, &f);
+        for ctx in ctxs {
+            // rejected puts were already counted per-write inside merge_ctx
+            let _ = self.merge_ctx(ctx);
+            self.metrics.incr("executor.tasks");
+        }
+        self.await_all(caller, &members);
+        members.into_iter().zip(results).collect()
+    }
+
+    /// Fallible variant of [`GridCluster::execute_on_all`].
+    ///
+    /// *Body* errors make the batch atomic: the shard effects of the whole
+    /// batch are discarded and the first error in member order is returned
+    /// — identically in sequential and threaded mode. Sequential mode
+    /// additionally stops running bodies at the first error (the
+    /// supervisor's failure behaviour in §5.2.2); threaded mode may execute
+    /// later bodies whose effects are then discarded.
+    ///
+    /// *Merge-time write admission* errors do **not** unwind the batch:
+    /// every shard still merges fully (a rejected put is skipped and
+    /// counted, later intents still apply — see `merge_ctx`), and the
+    /// first admission error in `(node, seq)` order is returned so the
+    /// caller can abort its own flow. Merging is single-threaded in member
+    /// order, so this too is identical in both modes.
+    pub fn try_execute_on_all<R: Send>(
+        &mut self,
+        caller: NodeId,
+        f: impl Fn(&mut NodeCtx) -> Result<R> + Sync,
+    ) -> Result<Vec<(NodeId, R)>> {
+        let members = self.members();
+        for &m in &members {
+            self.dispatch(caller, m);
+        }
+        let snapshot = Arc::new(self.atomics.clone());
+        let mut ctxs: Vec<NodeCtx> = members
+            .iter()
+            .enumerate()
+            .map(|(o, &m)| self.fork_ctx_shared(m, o, snapshot.clone()))
+            .collect();
+        let results: Vec<Result<R>> = if self.cfg.workers <= 1 || ctxs.len() <= 1 {
+            // sequential: stop at the first failing body
+            let mut out = Vec::with_capacity(ctxs.len());
+            for ctx in ctxs.iter_mut() {
+                match f(ctx) {
+                    Ok(r) => out.push(Ok(r)),
+                    Err(e) => {
+                        out.push(Err(e));
+                        break;
+                    }
+                }
+            }
+            out
+        } else {
+            run_bodies(&mut ctxs, self.cfg.workers, &f)
+        };
+        // first body error in member order aborts the batch, nothing merged
+        let mut ok = Vec::with_capacity(results.len());
+        for r in results {
+            match r {
+                Ok(v) => ok.push(v),
+                Err(e) => return Err(e),
+            }
+        }
+        // merge every shard fully; report the first write-admission error
+        let mut first_err = None;
+        for ctx in ctxs {
+            if let Err(e) = self.merge_ctx(ctx) {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            self.metrics.incr("executor.tasks");
+        }
+        self.await_all(caller, &members);
+        match first_err {
+            None => Ok(members.into_iter().zip(ok).collect()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Charge each member its precomputed pressure-free work share,
+    /// inflated by the member's *own* GC factor — the common round body
+    /// every distributed workload loop (static cloud-sim, matchmaking and
+    /// the adaptive driver) prices through, so round pricing cannot
+    /// silently diverge between them. `shares[i]` belongs to the member at
+    /// offset `i`; the slice length must match the member count.
+    pub fn execute_gc_shares(&mut self, caller: NodeId, shares: &[f64]) {
+        assert_eq!(
+            shares.len(),
+            self.size(),
+            "one work share per live member"
+        );
+        self.execute_on_all(caller, |ctx| {
+            let gc = ctx.gc_factor();
+            ctx.advance_busy(shares[ctx.offset()] * gc);
+        });
+    }
+
+    /// Caller blocks until every target's completion + result message.
+    fn await_all(&mut self, caller: NodeId, members: &[NodeId]) {
+        let mut latest = self.clock(caller);
+        for &m in members {
+            let done = if m == caller {
+                self.clock(m)
+            } else {
+                self.clock(m) + self.net.control()
+            };
+            latest = latest.max(done);
+        }
+        self.set_clock_at_least(caller, latest);
+    }
+}
+
+/// Run bodies over the shards: inline when `workers <= 1`, otherwise on a
+/// scoped thread pool with deterministic contiguous chunk assignment (so
+/// results — and any floating-point evaluation order — never depend on
+/// thread timing).
+pub(crate) fn run_bodies<R: Send>(
+    ctxs: &mut [NodeCtx],
+    workers: usize,
+    f: &(impl Fn(&mut NodeCtx) -> R + Sync),
+) -> Vec<R> {
+    if workers <= 1 || ctxs.len() <= 1 {
+        return ctxs.iter_mut().map(|c| f(c)).collect();
+    }
+    let chunk = ctxs.len().div_ceil(workers.min(ctxs.len()));
+    let mut out = Vec::with_capacity(ctxs.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ctxs
+            .chunks_mut(chunk)
+            .map(|slice| s.spawn(move || slice.iter_mut().map(|c| f(c)).collect::<Vec<R>>()))
+            .collect();
+        for h in handles {
+            // re-raise the original panic payload so diagnostics match
+            // sequential mode
+            match h.join() {
+                Ok(rs) => out.extend(rs),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::cluster::GridConfig;
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+
+    fn cluster(n: usize, workers: usize) -> GridCluster {
+        GridCluster::with_members(
+            GridConfig {
+                workers,
+                ..GridConfig::default()
+            },
+            n,
+        )
+    }
+
+    #[test]
+    fn threaded_uses_multiple_os_threads() {
+        let mut c = cluster(4, 4);
+        let master = c.master().unwrap();
+        let seen: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        c.execute_on_all(master, |ctx| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+            ctx.advance_busy(0.5);
+        });
+        let distinct = seen.lock().unwrap().len();
+        assert!(
+            distinct >= 2,
+            "workers > 1 must run bodies on >= 2 OS threads, saw {distinct}"
+        );
+    }
+
+    #[test]
+    fn sequential_and_threaded_identical() {
+        let run = |workers: usize| {
+            let mut c = cluster(5, workers);
+            let master = c.master().unwrap();
+            c.execute_on_all(master, |ctx| {
+                let gc = ctx.gc_factor();
+                ctx.advance_busy(0.25 * (ctx.offset() + 1) as f64 * gc);
+                ctx.queue_put("out", format!("k{}", ctx.offset()), &(ctx.offset() as u64));
+                ctx.incr_metric("test.bodies");
+            });
+            let clocks: Vec<f64> = c.members().iter().map(|&m| c.clock(m)).collect();
+            let keys = c.map_keys("out");
+            (clocks, keys, c.metrics.counter("test.bodies"))
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.0, b.0, "virtual clocks must match bitwise");
+        assert_eq!(a.1, b.1, "map contents must match");
+        assert_eq!(a.2, b.2, "metrics must match");
+        assert_eq!(a.2, 5);
+    }
+
+    #[test]
+    fn queued_writes_apply_in_node_order() {
+        let mut c = cluster(3, 1);
+        let master = c.master().unwrap();
+        c.execute_on_all(master, |ctx| {
+            // every member writes the same key: last member (node order) wins
+            ctx.queue_put("race", "shared", &(ctx.offset() as u64));
+        });
+        let v: Option<u64> = c.map_get(master, "race", "shared").unwrap();
+        assert_eq!(v, Some(2), "merge order is (node, seq)");
+    }
+
+    #[test]
+    fn atomic_intents_apply_at_merge() {
+        let mut c = cluster(3, 1);
+        let master = c.master().unwrap();
+        c.atomic_set(master, "n", 5);
+        c.execute_on_all(master, |ctx| {
+            assert_eq!(ctx.atomic_read("n"), 5, "snapshot read");
+            ctx.queue_atomic_add("n", 1);
+        });
+        assert_eq!(c.atomic_get(master, "n"), 8, "three adds merged");
+    }
+
+    #[test]
+    fn try_batch_is_atomic_on_error() {
+        for workers in [1usize, 4] {
+            let mut c = cluster(4, workers);
+            let master = c.master().unwrap();
+            let clocks0: Vec<f64> = c.members().iter().map(|&m| c.clock(m)).collect();
+            let r: Result<Vec<(NodeId, ())>> = c.try_execute_on_all(master, |ctx| {
+                ctx.advance_busy(9.0);
+                if ctx.offset() == 2 {
+                    return Err(C2SError::Executor("boom".into()));
+                }
+                Ok(())
+            });
+            assert!(r.is_err());
+            for (i, &m) in c.members().iter().enumerate() {
+                // dispatch costs applied, but no body effects survive
+                assert!(
+                    c.clock(m) - clocks0[i] < 1.0,
+                    "workers={workers}: batch must discard on error"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ctx_scratch_oom_carries_node() {
+        let c = GridCluster::with_members(
+            GridConfig {
+                node_heap_bytes: 1000,
+                ..GridConfig::default()
+            },
+            1,
+        );
+        let m = c.members()[0];
+        let mut ctx = c.fork_ctx(m, 0);
+        assert!(ctx.reserve_scratch(800).is_ok());
+        let e = ctx.reserve_scratch(800).unwrap_err();
+        assert!(e.is_oom());
+        ctx.release_scratch(800);
+        assert_eq!(ctx.heap_used(), 0);
+    }
+
+    #[test]
+    fn ctx_gc_matches_cluster() {
+        let mut c = cluster(1, 1);
+        let m = c.members()[0];
+        c.reserve_scratch(m, (c.cfg.node_heap_bytes as f64 * 0.9) as u64)
+            .unwrap();
+        let ctx = c.fork_ctx(m, 0);
+        assert_eq!(ctx.gc_factor(), c.gc_factor(m));
+    }
+}

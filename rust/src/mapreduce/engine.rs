@@ -101,38 +101,56 @@ impl<'a> MapReduceEngine<'a> {
         }
 
         // ---- Phase 2: map (+ combine) ----
-        let mut partials: Vec<HashMap<String, i64>> = vec![HashMap::new(); n];
-        let mut emitted_total: u64 = 0;
-        let mut text = String::new(); // reused line buffer (perf pass §L3)
-        for (i, m) in members.iter().enumerate() {
+        // Member tasks run through the two-phase parallel engine: each body
+        // owns its NodeCtx shard, so with `workers > 1` the real
+        // tokenization work spreads over OS threads while virtual time
+        // stays bitwise-identical to sequential execution.
+        let chunks_ref = &chunks;
+        let corpus = &self.corpus;
+        let mapper = self.mapper;
+        let verbose = self.job.verbose;
+        let map_backend = &backend;
+        let map_out = cluster.try_execute_on_all(master, |ctx| {
+            let mut partial: HashMap<String, i64> = HashMap::new();
             let mut retained: u64 = 0;
-            for &(f, l0, l1) in chunks.iter().skip(i).step_by(n) {
-                let gc = cluster.gc_factor(*m);
+            let mut emitted: u64 = 0;
+            let mut text = String::new(); // reused line buffer (perf pass §L3)
+            for &(f, l0, l1) in chunks_ref.iter().skip(ctx.offset()).step_by(n) {
+                let gc = ctx.gc_factor();
                 let mut tokens_in_chunk: u64 = 0;
                 for line in l0..l1 {
-                    self.corpus.line_text_into(f, line, &mut text);
-                    self.mapper.map(f, line, &text, &mut |k, v| {
-                        *partials[i].entry(k).or_insert(0) += v;
+                    corpus.line_text_into(f, line, &mut text);
+                    mapper.map(f, line, &text, &mut |k, v| {
+                        *partial.entry(k).or_insert(0) += v;
                         tokens_in_chunk += 1;
                     });
                 }
-                emitted_total += tokens_in_chunk;
+                emitted += tokens_in_chunk;
                 // pair-retention heap (the Hazelcast OOM mechanism)
-                let pair_bytes = tokens_in_chunk * backend.mr_pair_retained_bytes;
-                cluster
-                    .reserve_scratch(*m, pair_bytes)
-                    .map_err(|e| self.release_on_err(cluster, &members, &reserved, e))?;
+                let pair_bytes = tokens_in_chunk * map_backend.mr_pair_retained_bytes;
+                ctx.reserve_scratch(pair_bytes)?;
                 retained += pair_bytes;
-                let mut cost = backend.mr_chunk_overhead
+                let mut cost = map_backend.mr_chunk_overhead
                     + tokens_in_chunk as f64 * TOKEN_CPU_COST * local_factor;
-                if self.job.verbose {
+                if verbose {
                     // verbose mode logs per-chunk progress (§5.2:
                     // "executions were slower in verbose mode")
-                    cost += backend.mr_chunk_overhead * 0.5;
+                    cost += map_backend.mr_chunk_overhead * 0.5;
                 }
-                cluster.advance_busy(*m, cost * gc);
+                ctx.advance_busy(cost * gc);
             }
+            Ok((partial, retained, emitted))
+        });
+        let map_out = match map_out {
+            Ok(r) => r,
+            Err(e) => return Err(self.release_on_err(cluster, &members, &reserved, e)),
+        };
+        let mut partials: Vec<HashMap<String, i64>> = Vec::with_capacity(n);
+        let mut emitted_total: u64 = 0;
+        for (i, (_member, (partial, retained, emitted))) in map_out.into_iter().enumerate() {
+            partials.push(partial);
             reserved[i] += retained;
+            emitted_total += emitted;
         }
         cluster.barrier();
 
@@ -142,7 +160,12 @@ impl<'a> MapReduceEngine<'a> {
         // parallel): Hazelcast 3.2's young MR does a supervisor round-trip
         // per keyed result — the Table 5.3 collapse when a single-node job
         // (no shuffle at all) becomes distributed.
-        let mut grouped: Vec<HashMap<String, Vec<i64>>> = vec![HashMap::new(); n];
+        //
+        // BTreeMap, not HashMap: phase 4 accumulates f64 costs while
+        // iterating this map, and f64 addition is order-sensitive — sorted
+        // iteration keeps sim_time_s bit-identical across runs (the
+        // parallel engine's determinism contract is asserted exactly).
+        let mut grouped: Vec<BTreeMap<String, Vec<i64>>> = vec![BTreeMap::new(); n];
         for (i, m) in members.iter().enumerate() {
             if n > 1 {
                 let d_i = partials[i].len() as u64;

@@ -18,6 +18,8 @@ use crate::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
 /// Grid configuration for Hazelcast-profile MR: OBJECT in-memory format
 /// ("Hazelcast is configured with OBJECT in-memory format for MapReduce
 /// simulations. This eliminates most serialization costs", §4.1.2).
+/// `workers` stays at the sequential default; the `run_hz_wordcount*`
+/// entry points choose the executor worker count.
 pub fn hz_mr_grid_config(node_heap_bytes: u64, seed: u64) -> GridConfig {
     GridConfig {
         backend: BackendProfile::hazelcast_like(),
@@ -37,13 +39,30 @@ pub fn run_hz_wordcount(
     instances: usize,
     node_heap_bytes: u64,
 ) -> Result<JobResult> {
+    let workers = crate::mapreduce::default_workers();
+    run_hz_wordcount_with_workers(corpus, job, instances, node_heap_bytes, workers)
+}
+
+/// [`run_hz_wordcount`] with an explicit executor worker count
+/// (`workers = 1` forces the sequential engine; virtual-time results are
+/// identical either way).
+pub fn run_hz_wordcount_with_workers(
+    corpus: Corpus,
+    job: JobConfig,
+    instances: usize,
+    node_heap_bytes: u64,
+    workers: usize,
+) -> Result<JobResult> {
     let mapper = WordCountMapper;
     let reducer = WordCountReducer;
     let engine = MapReduceEngine::new(corpus, job, &mapper, &reducer);
     // work-around hazelcast#2354: form the whole cluster BEFORE the
     // supervisor starts (all Initiators first, master last)
     let mut cluster = GridCluster::with_members(
-        hz_mr_grid_config(node_heap_bytes, 0xC10D ^ instances as u64),
+        GridConfig {
+            workers: workers.max(1),
+            ..hz_mr_grid_config(node_heap_bytes, 0xC10D ^ instances as u64)
+        },
         instances,
     );
     engine.run(&mut cluster)

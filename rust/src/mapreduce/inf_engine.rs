@@ -15,7 +15,9 @@ use crate::mapreduce::engine::MapReduceEngine;
 use crate::mapreduce::job::{JobConfig, JobResult};
 use crate::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
 
-/// Grid configuration for Infinispan-profile MR.
+/// Grid configuration for Infinispan-profile MR. `workers` stays at the
+/// sequential default; the `run_inf_wordcount*` entry points choose the
+/// executor worker count.
 pub fn inf_mr_grid_config(node_heap_bytes: u64, seed: u64) -> GridConfig {
     GridConfig {
         backend: BackendProfile::infinispan_like(),
@@ -26,18 +28,36 @@ pub fn inf_mr_grid_config(node_heap_bytes: u64, seed: u64) -> GridConfig {
     }
 }
 
-/// Run the default word-count job on an Infinispan-profile cluster.
+/// Run the default word-count job on an Infinispan-profile cluster,
+/// using every available core for the map phase.
 pub fn run_inf_wordcount(
     corpus: Corpus,
     job: JobConfig,
     instances: usize,
     node_heap_bytes: u64,
 ) -> Result<JobResult> {
+    let workers = crate::mapreduce::default_workers();
+    run_inf_wordcount_with_workers(corpus, job, instances, node_heap_bytes, workers)
+}
+
+/// [`run_inf_wordcount`] with an explicit executor worker count
+/// (`workers = 1` forces the sequential engine; virtual-time results are
+/// identical either way — used by the seq-vs-threaded wall-clock benches).
+pub fn run_inf_wordcount_with_workers(
+    corpus: Corpus,
+    job: JobConfig,
+    instances: usize,
+    node_heap_bytes: u64,
+    workers: usize,
+) -> Result<JobResult> {
     let mapper = WordCountMapper;
     let reducer = WordCountReducer;
     let engine = MapReduceEngine::new(corpus, job, &mapper, &reducer);
     let mut cluster = GridCluster::with_members(
-        inf_mr_grid_config(node_heap_bytes, 0x1F5 ^ instances as u64),
+        GridConfig {
+            workers: workers.max(1),
+            ..inf_mr_grid_config(node_heap_bytes, 0x1F5 ^ instances as u64)
+        },
         instances,
     );
     engine.run(&mut cluster)

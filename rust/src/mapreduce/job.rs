@@ -4,14 +4,18 @@
 use std::collections::BTreeMap;
 
 /// Emits intermediate `(key, value)` pairs from one input record.
-pub trait Mapper {
+///
+/// `Sync` is a supertrait: the engine's map phase runs member tasks on
+/// real OS threads (the two-phase parallel executor), sharing the mapper
+/// by reference. Stateless unit-struct mappers satisfy this for free.
+pub trait Mapper: Sync {
     /// Map one record (a corpus line) to zero or more `(word, count)`
     /// pairs via `emit`.
     fn map(&self, file: usize, line: usize, value: &str, emit: &mut dyn FnMut(String, i64));
 }
 
-/// Folds all values of one key.
-pub trait Reducer {
+/// Folds all values of one key. `Sync` for the same reason as [`Mapper`].
+pub trait Reducer: Sync {
     /// Reduce the accumulated values of `key`.
     fn reduce(&self, key: &str, values: &[i64]) -> i64;
 }

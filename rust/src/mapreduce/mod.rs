@@ -16,8 +16,17 @@ pub mod inf_engine;
 pub mod job;
 pub mod wordcount;
 
+/// Default executor worker count for MapReduce runs: every available core
+/// (map-phase tokenization is real CPU work; virtual-time results are
+/// identical at any worker count).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
 pub use corpus::{Corpus, CorpusConfig};
 pub use engine::MapReduceEngine;
-pub use hz_engine::run_hz_wordcount;
-pub use inf_engine::run_inf_wordcount;
+pub use hz_engine::{run_hz_wordcount, run_hz_wordcount_with_workers};
+pub use inf_engine::{run_inf_wordcount, run_inf_wordcount_with_workers};
 pub use job::{JobConfig, JobResult, Mapper, Reducer};

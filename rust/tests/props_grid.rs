@@ -227,7 +227,7 @@ fn prop_virtual_time_monotone_per_node() {
                     c.barrier();
                 }
                 _ => {
-                    c.execute_on_all(members[i], |cl, me| cl.advance_busy(me, 0.01));
+                    c.execute_on_all(members[i], |ctx| ctx.advance_busy(0.01));
                 }
             }
             for (j, &m) in members.iter().enumerate() {

@@ -1,0 +1,149 @@
+//! Property tests for the two-phase parallel executor's determinism
+//! contract: for any workload, member count and seed, threaded execution
+//! (`workers > 1`) must produce *identical* virtual clocks, metrics
+//! counters and map contents to sequential execution (`workers == 1`).
+//!
+//! Uses the in-repo `util::proptest` harness (the offline vendor set has
+//! no proptest crate).
+
+use cloud2sim::config::SimConfig;
+use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+use cloud2sim::util::proptest::{forall, Gen};
+
+/// Drive one cluster through a randomized batch-execution workload and
+/// fingerprint everything the determinism contract covers.
+fn drive(workers: usize, g_members: usize, g_rounds: usize, seed: u64) -> Fingerprint {
+    let cfg = GridConfig {
+        workers,
+        seed,
+        ..GridConfig::default()
+    };
+    let mut c = GridCluster::with_members(cfg, g_members);
+    let master = c.master().unwrap();
+    for round in 0..g_rounds {
+        c.execute_on_all(master, |ctx| {
+            let gc = ctx.gc_factor();
+            // deterministic per-(member, round) virtual compute
+            let dt = 0.01 * ((ctx.offset() + 1) * (round + 1)) as f64;
+            ctx.advance_busy(dt * gc);
+            // real serialization on the worker thread + ordered store
+            ctx.queue_put(
+                "state",
+                format!("r{round}-m{}", ctx.offset()),
+                &(round as u64 * 1000 + ctx.offset() as u64),
+            );
+            ctx.incr_metric("rounds.bodies");
+            ctx.queue_atomic_add("rounds.total", 1);
+        });
+        c.barrier();
+    }
+    Fingerprint {
+        clocks: c.members().iter().map(|&m| c.clock(m)).collect(),
+        busy: c.members().iter().map(|&m| c.busy(m)).collect(),
+        heap: c.members().iter().map(|&m| c.heap_used(m)).collect(),
+        keys: c.map_keys("state").len(),
+        bodies: c.metrics.counter("rounds.bodies"),
+        puts: c.metrics.counter("map.put"),
+        messages: c.net.messages,
+        bytes: c.net.bytes,
+        atomic_total: {
+            let m0 = c.members()[0];
+            c.atomic_get(m0, "rounds.total")
+        },
+    }
+}
+
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    clocks: Vec<f64>,
+    busy: Vec<f64>,
+    heap: Vec<u64>,
+    keys: usize,
+    bodies: u64,
+    puts: u64,
+    messages: u64,
+    bytes: u64,
+    atomic_total: i64,
+}
+
+#[test]
+fn prop_threaded_equals_sequential_grid() {
+    forall("parallel-grid-equivalence", 25, |g: &mut Gen| {
+        let members = g.usize(1..7);
+        let rounds = g.usize(1..5);
+        let workers = g.usize(2..9);
+        let seed = g.u64(0..u64::MAX - 1);
+        let seq = drive(1, members, rounds, seed);
+        let par = drive(workers, members, rounds, seed);
+        assert_eq!(
+            seq, par,
+            "workers={workers} members={members} rounds={rounds}: \
+             threaded execution must be bitwise-identical"
+        );
+    });
+}
+
+#[test]
+fn prop_threaded_equals_sequential_distributed_run() {
+    forall("parallel-dist-equivalence", 4, |g: &mut Gen| {
+        let vms = g.usize(10..40);
+        let cls = g.usize(20..80);
+        let nodes = g.usize(1..5);
+        let base = SimConfig::default_round_robin(vms, cls, true);
+        let seq = cloud2sim::dist::run_distributed(&base, nodes).unwrap();
+        let par = cloud2sim::dist::run_distributed(
+            &SimConfig {
+                grid_workers: 4,
+                ..base
+            },
+            nodes,
+        )
+        .unwrap();
+        assert_eq!(seq.sim_time_s, par.sim_time_s, "virtual time identical");
+        assert_eq!(seq.grid_messages, par.grid_messages);
+        assert_eq!(seq.grid_bytes, par.grid_bytes);
+        assert_eq!(seq.cloudlets_ok, par.cloudlets_ok);
+        assert_eq!(seq.distribution, par.distribution);
+    });
+}
+
+#[test]
+fn prop_threaded_equals_sequential_mapreduce() {
+    use cloud2sim::grid::backend::BackendProfile;
+    use cloud2sim::grid::serialize::InMemoryFormat;
+    use cloud2sim::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
+    use cloud2sim::mapreduce::{Corpus, CorpusConfig, JobConfig, MapReduceEngine};
+
+    forall("parallel-mr-equivalence", 4, |g: &mut Gen| {
+        let files = g.usize(1..4);
+        let lines = g.usize(50..250);
+        let instances = g.usize(1..5);
+        let run = |workers: usize| {
+            let corpus = Corpus::new(CorpusConfig {
+                files,
+                distinct_files: files,
+                lines_per_file: lines,
+                ..CorpusConfig::default()
+            });
+            let (m, r) = (WordCountMapper, WordCountReducer);
+            let engine = MapReduceEngine::new(corpus, JobConfig::default(), &m, &r);
+            let mut cluster = GridCluster::with_members(
+                GridConfig {
+                    workers,
+                    in_memory_format: InMemoryFormat::Object,
+                    backend: BackendProfile::infinispan_like(),
+                    ..GridConfig::default()
+                },
+                instances,
+            );
+            let res = engine.run(&mut cluster).unwrap();
+            (res.sim_time_s, res.reduce_invocations, res.total_count, res.top_words)
+        };
+        let seq = run(1);
+        let par = run(4);
+        assert_eq!(seq.0, par.0, "virtual time identical under real threads");
+        assert_eq!(seq.1, par.1);
+        assert_eq!(seq.2, par.2);
+        assert_eq!(seq.3, par.3);
+    });
+}
