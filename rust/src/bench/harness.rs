@@ -7,6 +7,7 @@
 //! measured over `reps` repetitions (`C2S_BENCH_REPS`, default 3) in
 //! criterion-style `mean ± stddev` form.
 
+use crate::bench::json::Json;
 use crate::util::stats::{mean, stddev};
 use crate::util::timefmt::fmt_secs;
 use std::time::Instant;
@@ -34,6 +35,16 @@ impl Measurement {
             fmt_secs(self.wall_mean),
             fmt_secs(self.wall_std),
         )
+    }
+
+    /// Machine-readable form (`virtual_s` is `null` for failed cases).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("virtual_s", Json::Num(self.virtual_s)),
+            ("wall_mean_s", Json::Num(self.wall_mean)),
+            ("wall_std_s", Json::Num(self.wall_std)),
+        ])
     }
 }
 
@@ -120,6 +131,18 @@ impl BenchHarness {
         println!("\n=== {title} ===");
         println!("    reproduces: {paper_ref}\n");
     }
+
+    /// All collected measurements as one JSON document, so any bench
+    /// target can emit a machine-readable sidecar next to its table.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("reps", Json::Num(self.reps as f64)),
+            (
+                "cases",
+                Json::Arr(self.results.iter().map(Measurement::to_json).collect()),
+            ),
+        ])
+    }
 }
 
 impl Default for BenchHarness {
@@ -168,5 +191,19 @@ mod tests {
             wall_std: 0.0,
         };
         assert!(m.render().contains('x'));
+    }
+
+    #[test]
+    fn harness_emits_json() {
+        let mut h = BenchHarness { reps: 1, results: vec![] };
+        h.case("demo", || 2.5);
+        let doc = h.to_json();
+        let cases = doc.get("cases").and_then(|c| c.as_array()).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("virtual_s").and_then(|v| v.as_f64()), Some(2.5));
+        // NaN (failed case) serializes as null and stays parseable
+        h.results[0].virtual_s = f64::NAN;
+        let text = h.to_json().render();
+        assert!(crate::bench::json::Json::parse(&text).is_ok());
     }
 }

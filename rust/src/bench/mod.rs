@@ -1,6 +1,13 @@
 //! Shared bench harness (criterion is unavailable in the offline vendor
-//! set; this provides warmup + repetition + stats with similar output).
+//! set; this provides warmup + repetition + stats with similar output),
+//! plus the machine-readable report pipeline: [`json`] is a minimal
+//! dependency-free JSON model and [`report`] the `BENCH_scenarios.json`
+//! schema with the CI determinism gate.
 
 pub mod harness;
+pub mod json;
+pub mod report;
 
 pub use harness::{BenchHarness, Measurement};
+pub use json::Json;
+pub use report::{compare, BenchReport, CompareOutcome, ScenarioOutcome};

@@ -1,0 +1,468 @@
+//! Machine-readable bench reports (`BENCH_scenarios.json`).
+//!
+//! A [`BenchReport`] is the JSON artifact the `bench` subcommand emits and
+//! CI consumes: one [`ScenarioOutcome`] per registered scenario with the
+//! deterministic virtual time, wall-clock statistics, speedup vs the
+//! sequential deployment and the elastic scale-event log. [`compare`]
+//! implements the determinism gate — virtual quantities must match a
+//! baseline bit-for-bit, wall-clock quantities are informational only.
+
+use crate::bench::json::Json;
+use crate::error::{C2SError, Result};
+
+/// Schema tag written into every report.
+pub const SCHEMA: &str = "cloud2sim-bench/1";
+
+/// One elastic membership change as serialized in the report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleEventOut {
+    /// Virtual time of the event, relative to run start.
+    pub at: f64,
+    /// `"out"` or `"in"`.
+    pub action: String,
+    /// Main-cluster size right after the event.
+    pub instances_after: u64,
+}
+
+/// Everything measured for one scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioOutcome {
+    /// Registry name (`fig5_1_cloudlet_scaling`, ...).
+    pub name: String,
+    /// Scenario kind tag (`distributed-sweep`, `mapreduce`, `elastic`...).
+    pub kind: String,
+    /// Headline deterministic virtual time (s). The determinism gate
+    /// compares this bit-for-bit against the baseline.
+    pub virtual_s: f64,
+    /// Wall-clock mean over the repetitions (s) — informational.
+    pub wall_mean_s: f64,
+    /// Wall-clock population stddev (s) — informational.
+    pub wall_std_s: f64,
+    /// Headline virtual time of the sequential / single-node deployment,
+    /// when the scenario has one.
+    pub sequential_virtual_s: Option<f64>,
+    /// `sequential_virtual_s / virtual_s`, when defined.
+    pub speedup_vs_sequential: Option<f64>,
+    /// Elastic scale-outs taken (0 for non-elastic scenarios).
+    pub scale_outs: u64,
+    /// Elastic scale-ins taken (0 for non-elastic scenarios).
+    pub scale_ins: u64,
+    /// Elastic scale events in order (empty for non-elastic scenarios).
+    pub scale_events: Vec<ScaleEventOut>,
+    /// Deterministic kind-specific extras (e.g. per-node-count virtual
+    /// times). Compared against the baseline like `virtual_s`.
+    pub extras: Vec<(String, f64)>,
+    /// Non-deterministic extras (wall-clock ratios etc.); excluded from
+    /// the determinism gate.
+    pub wall_extras: Vec<(String, f64)>,
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map_or(Json::Null, Json::Num)
+}
+
+impl ScenarioOutcome {
+    fn to_json(&self) -> Json {
+        let events = self
+            .scale_events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("at", Json::Num(e.at)),
+                    ("action", Json::Str(e.action.clone())),
+                    ("instances_after", Json::Num(e.instances_after as f64)),
+                ])
+            })
+            .collect();
+        let num_map = |pairs: &[(String, f64)]| {
+            Json::Obj(
+                pairs
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("kind", Json::Str(self.kind.clone())),
+            ("virtual_s", Json::Num(self.virtual_s)),
+            ("wall_mean_s", Json::Num(self.wall_mean_s)),
+            ("wall_std_s", Json::Num(self.wall_std_s)),
+            ("sequential_virtual_s", opt_num(self.sequential_virtual_s)),
+            ("speedup_vs_sequential", opt_num(self.speedup_vs_sequential)),
+            ("scale_outs", Json::Num(self.scale_outs as f64)),
+            ("scale_ins", Json::Num(self.scale_ins as f64)),
+            ("scale_events", Json::Arr(events)),
+            ("extras", num_map(&self.extras)),
+            ("wall_extras", num_map(&self.wall_extras)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ScenarioOutcome> {
+        let field_err = |what: &str| C2SError::Config(format!("bench report: bad {what}"));
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| field_err("scenario name"))?
+            .to_string();
+        let num = |key: &str| v.get(key).and_then(Json::as_f64);
+        let opt_field = |key: &str| match v.get(key) {
+            None | Some(Json::Null) => None,
+            Some(other) => other.as_f64(),
+        };
+        let mut scale_events = Vec::new();
+        if let Some(items) = v.get("scale_events").and_then(Json::as_array) {
+            for e in items {
+                let action = e.get("action").and_then(Json::as_str).unwrap_or("?");
+                scale_events.push(ScaleEventOut {
+                    at: e.get("at").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    action: action.to_string(),
+                    instances_after: e.get("instances_after").and_then(Json::as_u64).unwrap_or(0),
+                });
+            }
+        }
+        let pairs = |key: &str| -> Vec<(String, f64)> {
+            match v.get(key) {
+                Some(Json::Obj(kv)) => kv
+                    .iter()
+                    .filter_map(|(k, val)| val.as_f64().map(|n| (k.clone(), n)))
+                    .collect(),
+                _ => Vec::new(),
+            }
+        };
+        Ok(ScenarioOutcome {
+            name,
+            kind: v.get("kind").and_then(Json::as_str).unwrap_or("?").to_string(),
+            virtual_s: num("virtual_s").ok_or_else(|| field_err("virtual_s"))?,
+            wall_mean_s: num("wall_mean_s").unwrap_or(0.0),
+            wall_std_s: num("wall_std_s").unwrap_or(0.0),
+            sequential_virtual_s: opt_field("sequential_virtual_s"),
+            speedup_vs_sequential: opt_field("speedup_vs_sequential"),
+            scale_outs: v.get("scale_outs").and_then(Json::as_u64).unwrap_or(0),
+            scale_ins: v.get("scale_ins").and_then(Json::as_u64).unwrap_or(0),
+            scale_events,
+            extras: pairs("extras"),
+            wall_extras: pairs("wall_extras"),
+        })
+    }
+}
+
+/// A full bench run: schema tag, run mode, and per-scenario outcomes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// `true` when run with `--quick` (reduced workload shapes).
+    pub quick: bool,
+    /// Wall-clock repetitions per scenario.
+    pub reps: usize,
+    /// Outcomes in run order.
+    pub scenarios: Vec<ScenarioOutcome>,
+}
+
+impl BenchReport {
+    /// Serialize to the `BENCH_scenarios.json` document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("quick", Json::Bool(self.quick)),
+            ("reps", Json::Num(self.reps as f64)),
+            (
+                "scenarios",
+                Json::Arr(self.scenarios.iter().map(ScenarioOutcome::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Render the JSON text.
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Parse a report document.
+    pub fn parse(text: &str) -> Result<BenchReport> {
+        let v = Json::parse(text).map_err(|e| C2SError::Config(format!("bench report: {e}")))?;
+        match v.get("schema").and_then(Json::as_str) {
+            Some(SCHEMA) => {}
+            Some(other) => {
+                return Err(C2SError::Config(format!(
+                    "bench report schema mismatch: expected {SCHEMA}, got {other}"
+                )))
+            }
+            None => return Err(C2SError::Config("bench report: missing schema field".into())),
+        }
+        let mut scenarios = Vec::new();
+        if let Some(items) = v.get("scenarios").and_then(Json::as_array) {
+            for item in items {
+                scenarios.push(ScenarioOutcome::from_json(item)?);
+            }
+        }
+        Ok(BenchReport {
+            quick: v.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            reps: v.get("reps").and_then(Json::as_u64).unwrap_or(1) as usize,
+            scenarios,
+        })
+    }
+
+    /// Load a report from disk.
+    pub fn load(path: &std::path::Path) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path).map_err(C2SError::Io)?;
+        Self::parse(&text)
+    }
+
+    /// Write the report to disk.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.render()).map_err(C2SError::Io)
+    }
+
+    /// Outcome by scenario name.
+    pub fn find(&self, name: &str) -> Option<&ScenarioOutcome> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+}
+
+/// One deterministic quantity that differs from the baseline.
+#[derive(Debug, Clone)]
+pub struct Drift {
+    /// Scenario name.
+    pub scenario: String,
+    /// Which quantity drifted (`virtual_s`, `scale_outs`, `extras.x`...).
+    pub field: String,
+    /// Value in the current run.
+    pub current: f64,
+    /// Value in the baseline.
+    pub baseline: f64,
+}
+
+/// Result of comparing a run against a baseline report.
+#[derive(Debug, Clone, Default)]
+pub struct CompareOutcome {
+    /// Deterministic quantities that changed — these fail the gate.
+    pub drifts: Vec<Drift>,
+    /// Scenarios the baseline has but the current run is missing — these
+    /// fail the gate (a scenario silently dropping out is a regression).
+    pub missing: Vec<String>,
+    /// Scenarios in the current run with no baseline entry yet — reported
+    /// but not failing, so new scenarios can bootstrap.
+    pub unchecked: Vec<String>,
+}
+
+impl CompareOutcome {
+    /// True when the determinism gate passes.
+    pub fn is_ok(&self) -> bool {
+        self.drifts.is_empty() && self.missing.is_empty()
+    }
+
+    /// Human-readable summary, one line per finding.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for d in &self.drifts {
+            out.push_str(&format!(
+                "DRIFT {}: {} changed {} -> {}\n",
+                d.scenario, d.field, d.baseline, d.current
+            ));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("MISSING {m}: in baseline but not in this run\n"));
+        }
+        for u in &self.unchecked {
+            out.push_str(&format!("NEW {u}: no baseline entry yet (not gated)\n"));
+        }
+        if self.is_ok() {
+            out.push_str("determinism gate: OK\n");
+        }
+        out
+    }
+}
+
+/// Numeric encoding of a scale-event action so action changes surface
+/// through the same drift channel as the timing quantities.
+fn action_code(action: &str) -> f64 {
+    match action {
+        "out" => 1.0,
+        "in" => 2.0,
+        _ => 0.0,
+    }
+}
+
+/// Compare a run against a baseline: every deterministic quantity
+/// (virtual times, the full scale-event log, extras) must match
+/// bit-for-bit. Wall-clock statistics are never compared.
+pub fn compare(current: &BenchReport, baseline: &BenchReport) -> CompareOutcome {
+    let mut out = CompareOutcome::default();
+    for b in &baseline.scenarios {
+        let Some(c) = current.find(&b.name) else {
+            out.missing.push(b.name.clone());
+            continue;
+        };
+        let mut check = |field: &str, cur: f64, base: f64| {
+            // bit-level equality so -0.0 vs 0.0 and NaN patterns count as
+            // drift too; deterministic runs must agree exactly
+            if cur.to_bits() != base.to_bits() {
+                out.drifts.push(Drift {
+                    scenario: b.name.clone(),
+                    field: field.to_string(),
+                    current: cur,
+                    baseline: base,
+                });
+            }
+        };
+        check("virtual_s", c.virtual_s, b.virtual_s);
+        check("scale_outs", c.scale_outs as f64, b.scale_outs as f64);
+        check("scale_ins", c.scale_ins as f64, b.scale_ins as f64);
+        match (c.sequential_virtual_s, b.sequential_virtual_s) {
+            (Some(cv), Some(bv)) => check("sequential_virtual_s", cv, bv),
+            (None, None) => {}
+            (cv, bv) => check(
+                "sequential_virtual_s",
+                cv.unwrap_or(f64::NAN),
+                bv.unwrap_or(f64::NAN),
+            ),
+        }
+        for (k, bv) in &b.extras {
+            match c.extras.iter().find(|(ck, _)| ck == k) {
+                Some((_, cv)) => check(&format!("extras.{k}"), *cv, *bv),
+                None => check(&format!("extras.{k}"), f64::NAN, *bv),
+            }
+        }
+        // scale events are deterministic virtual quantities too: a shifted
+        // timestamp or a swapped out/in is drift even when the counts and
+        // the headline time agree
+        check(
+            "scale_events.len",
+            c.scale_events.len() as f64,
+            b.scale_events.len() as f64,
+        );
+        for (i, (ce, be)) in c.scale_events.iter().zip(&b.scale_events).enumerate() {
+            check(&format!("scale_events[{i}].at"), ce.at, be.at);
+            check(
+                &format!("scale_events[{i}].instances_after"),
+                ce.instances_after as f64,
+                be.instances_after as f64,
+            );
+            check(
+                &format!("scale_events[{i}].action"),
+                action_code(&ce.action),
+                action_code(&be.action),
+            );
+        }
+    }
+    for c in &current.scenarios {
+        if baseline.find(&c.name).is_none() {
+            out.unchecked.push(c.name.clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(name: &str, virt: f64) -> ScenarioOutcome {
+        ScenarioOutcome {
+            name: name.to_string(),
+            kind: "distributed-sweep".to_string(),
+            virtual_s: virt,
+            wall_mean_s: 0.01,
+            wall_std_s: 0.001,
+            sequential_virtual_s: Some(virt * 3.0),
+            speedup_vs_sequential: Some(3.0),
+            scale_outs: 0,
+            scale_ins: 0,
+            scale_events: vec![ScaleEventOut {
+                at: 12.5,
+                action: "out".to_string(),
+                instances_after: 2,
+            }],
+            extras: vec![("nodes_2".to_string(), virt * 1.5)],
+            wall_extras: vec![("wall_speedup".to_string(), 1.9)],
+        }
+    }
+
+    fn report(virt: f64) -> BenchReport {
+        BenchReport {
+            quick: true,
+            reps: 1,
+            scenarios: vec![outcome("s1", virt)],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_report() {
+        let r = report(96.05149999999999);
+        let back = BenchReport::parse(&r.render()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn identical_reports_pass_gate() {
+        let r = report(1.25);
+        let cmp = compare(&r, &r.clone());
+        assert!(cmp.is_ok(), "{}", cmp.describe());
+        assert!(cmp.describe().contains("OK"));
+    }
+
+    #[test]
+    fn virtual_drift_fails_gate() {
+        let cmp = compare(&report(1.25), &report(1.2500001));
+        assert!(!cmp.is_ok());
+        assert_eq!(cmp.drifts.len(), 1);
+        assert_eq!(cmp.drifts[0].field, "virtual_s");
+    }
+
+    #[test]
+    fn wall_clock_changes_are_ignored() {
+        let mut cur = report(2.0);
+        cur.scenarios[0].wall_mean_s = 99.0;
+        cur.scenarios[0].wall_extras = vec![("wall_speedup".to_string(), 0.5)];
+        assert!(compare(&cur, &report(2.0)).is_ok());
+    }
+
+    #[test]
+    fn missing_scenario_fails_new_scenario_passes() {
+        let mut base = report(1.0);
+        base.scenarios.push(outcome("s2", 5.0));
+        let cur = report(1.0);
+        let cmp = compare(&cur, &base);
+        assert!(!cmp.is_ok());
+        assert_eq!(cmp.missing, vec!["s2".to_string()]);
+
+        let cmp = compare(&base, &cur); // reversed: s2 is new
+        assert!(cmp.is_ok());
+        assert_eq!(cmp.unchecked, vec!["s2".to_string()]);
+    }
+
+    #[test]
+    fn scale_event_drift_detected() {
+        // a shifted timestamp is drift
+        let mut cur = report(2.0);
+        cur.scenarios[0].scale_events[0].at = 13.0;
+        let cmp = compare(&cur, &report(2.0));
+        assert!(!cmp.is_ok());
+        assert_eq!(cmp.drifts[0].field, "scale_events[0].at");
+        // a swapped action is drift even with identical timing
+        let mut cur = report(2.0);
+        cur.scenarios[0].scale_events[0].action = "in".to_string();
+        let cmp = compare(&cur, &report(2.0));
+        assert!(!cmp.is_ok());
+        assert_eq!(cmp.drifts[0].field, "scale_events[0].action");
+        // a dropped event is drift
+        let mut cur = report(2.0);
+        cur.scenarios[0].scale_events.clear();
+        assert!(!compare(&cur, &report(2.0)).is_ok());
+    }
+
+    #[test]
+    fn extras_drift_detected() {
+        let mut cur = report(2.0);
+        cur.scenarios[0].extras = vec![("nodes_2".to_string(), 7.0)];
+        let cmp = compare(&cur, &report(2.0));
+        assert!(!cmp.is_ok());
+        assert_eq!(cmp.drifts[0].field, "extras.nodes_2");
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        assert!(BenchReport::parse("{\"schema\": \"other/9\"}").is_err());
+        assert!(BenchReport::parse("{}").is_err());
+    }
+}

@@ -11,6 +11,7 @@ pub use properties::Properties;
 
 use crate::error::{C2SError, Result};
 use crate::grid::backend::BackendProfile;
+use crate::sim::cloudlet_scheduler::SchedulerKind;
 
 /// What each cloudlet executes once scheduled (`isLoaded` in the paper).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,6 +30,41 @@ impl WorkloadKind {
     /// True when cloudlets carry a workload (the paper's `isLoaded`).
     pub fn is_loaded(&self) -> bool {
         !matches!(self, WorkloadKind::None)
+    }
+}
+
+/// How cloudlet lengths are drawn when a scenario is generated.
+///
+/// The paper's evaluation sweeps uniform round-robin workloads (§5.1.1)
+/// and variable-size matchmaking workloads (§5.1.2); the bursty profile
+/// extends these with a heavy head followed by a light tail — the load
+/// shape that exercises the elastic middleware's full closed loop
+/// (scale-out under the burst, scale-in once the tail arrives).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CloudletDistribution {
+    /// Every cloudlet is exactly `cloudletLengthMI` long.
+    Uniform,
+    /// Lengths vary in `[L/2, 3L/2]` (the §5.1.2 "variable length" sizing).
+    Variable,
+    /// The first `head_pct`% of cloudlets are full-length, the rest are
+    /// `cloudletLengthMI / tail_divisor` long — a burst then a light tail.
+    BurstyTail {
+        /// Percentage (0–100) of cloudlets in the heavy head.
+        head_pct: u8,
+        /// Length divisor for the light tail (≥ 1).
+        tail_divisor: u64,
+    },
+}
+
+impl CloudletDistribution {
+    /// The default bursty shape: 27% heavy head, tail 200× lighter —
+    /// calibrated so the adaptive scaler both scales out (head) and back
+    /// in (tail) with the `elastic_closed_loop` scenario thresholds.
+    pub fn bursty_default() -> Self {
+        CloudletDistribution::BurstyTail {
+            head_pct: 27,
+            tail_divisor: 200,
+        }
     }
 }
 
@@ -69,6 +105,10 @@ pub struct SimConfig {
     pub no_of_cloudlets: usize,
     /// Cloudlet length in million instructions (MI).
     pub cloudlet_length_mi: u64,
+    /// How cloudlet lengths are drawn (`cloudletDistribution`).
+    pub cloudlet_distribution: CloudletDistribution,
+    /// Cloudlet scheduler discipline on every VM (`schedulerKind`).
+    pub scheduler: SchedulerKind,
     /// Cloudlet workload (`isLoaded`).
     pub workload: WorkloadKind,
     /// Workload intensity: iterations of the burn kernel per cloudlet.
@@ -90,7 +130,8 @@ pub struct SimConfig {
     pub min_instances: usize,
     /// OS worker threads for the grid's two-phase parallel executor
     /// (`gridWorkers`). 1 = sequential; higher values run distributed task
-    /// bodies on real threads with bitwise-identical virtual-time results.
+    /// bodies on real threads with bitwise-identical virtual-time results;
+    /// 0 = all available cores.
     pub grid_workers: usize,
     /// Deterministic seed for the whole experiment.
     pub seed: u64,
@@ -129,6 +170,8 @@ impl Default for SimConfig {
             no_of_vms: 200,
             no_of_cloudlets: 400,
             cloudlet_length_mi: 40_000,
+            cloudlet_distribution: CloudletDistribution::Uniform,
+            scheduler: SchedulerKind::TimeShared,
             workload: WorkloadKind::None,
             load_iterations: 64,
             backend: BackendProfile::hazelcast_like(),
@@ -235,6 +278,29 @@ impl SimConfig {
                 }
             };
         }
+        if let Some(v) = props.get("cloudletDistribution") {
+            c.cloudlet_distribution = match v.to_ascii_lowercase().as_str() {
+                "uniform" => CloudletDistribution::Uniform,
+                "variable" => CloudletDistribution::Variable,
+                "bursty" => CloudletDistribution::bursty_default(),
+                other => {
+                    return Err(C2SError::Config(format!(
+                        "cloudletDistribution must be uniform|variable|bursty, got {other}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = props.get("schedulerKind") {
+            c.scheduler = match v.to_ascii_lowercase().as_str() {
+                "timeshared" => SchedulerKind::TimeShared,
+                "spaceshared" => SchedulerKind::SpaceShared,
+                other => {
+                    return Err(C2SError::Config(format!(
+                        "schedulerKind must be timeShared|spaceShared, got {other}"
+                    )))
+                }
+            };
+        }
         if let Some(v) = props.get("scalingMode") {
             c.scaling_mode = match v.to_ascii_lowercase().as_str() {
                 "static" => ScalingMode::Static,
@@ -271,6 +337,18 @@ impl SimConfig {
             return Err(C2SError::Config(
                 "dynamic scaling requires synchronous backups (backupCount >= 1, §3.4.3)".into(),
             ));
+        }
+        if let CloudletDistribution::BurstyTail {
+            head_pct,
+            tail_divisor,
+        } = self.cloudlet_distribution
+        {
+            if head_pct > 100 || tail_divisor == 0 {
+                return Err(C2SError::Config(format!(
+                    "bursty distribution wants head_pct <= 100 and tail_divisor >= 1, \
+                     got {head_pct}/{tail_divisor}"
+                )));
+            }
         }
         Ok(())
     }
@@ -323,6 +401,42 @@ mod tests {
         assert!(SimConfig::from_properties(&p).is_err());
         let p = Properties::parse("isLoaded=maybe\n").unwrap();
         assert!(SimConfig::from_properties(&p).is_err());
+    }
+
+    #[test]
+    fn distribution_and_scheduler_parse() {
+        let p = Properties::parse("cloudletDistribution=bursty\nschedulerKind=spaceShared\n")
+            .unwrap();
+        let c = SimConfig::from_properties(&p).unwrap();
+        assert_eq!(
+            c.cloudlet_distribution,
+            CloudletDistribution::bursty_default()
+        );
+        assert_eq!(c.scheduler, SchedulerKind::SpaceShared);
+        let p = Properties::parse("cloudletDistribution=gaussian\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        let p = Properties::parse("schedulerKind=fairShare\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+    }
+
+    #[test]
+    fn bursty_shape_validated() {
+        let cfg = SimConfig {
+            cloudlet_distribution: CloudletDistribution::BurstyTail {
+                head_pct: 101,
+                tail_divisor: 1,
+            },
+            ..SimConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = SimConfig {
+            cloudlet_distribution: CloudletDistribution::BurstyTail {
+                head_pct: 30,
+                tail_divisor: 0,
+            },
+            ..SimConfig::default()
+        };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

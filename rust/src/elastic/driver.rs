@@ -35,6 +35,36 @@ pub struct LoadRow {
     pub event: String,
 }
 
+/// Direction of one membership change taken by the closed loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// An Initiator joined the main cluster.
+    Out,
+    /// An Initiator left the main cluster.
+    In,
+}
+
+impl std::fmt::Display for ScaleAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScaleAction::Out => write!(f, "out"),
+            ScaleAction::In => write!(f, "in"),
+        }
+    }
+}
+
+/// One membership change, as the bench pipeline and the anti-jitter
+/// integration tests consume it.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleEvent {
+    /// Virtual time of the event, relative to the run start.
+    pub at: f64,
+    /// Out (spawn) or In (shutdown).
+    pub action: ScaleAction,
+    /// Main-cluster size right after the event.
+    pub instances_after: usize,
+}
+
 /// Result of an adaptive run.
 #[derive(Debug, Clone)]
 pub struct ElasticReport {
@@ -50,6 +80,12 @@ pub struct ElasticReport {
     pub scale_ins: usize,
     /// The load/event log (Table 5.2).
     pub rows: Vec<LoadRow>,
+    /// Structured membership-change log: every scale-out/in with its
+    /// virtual timestamp, in order. The anti-jitter contract (§4.3.1) is
+    /// asserted over this log: consecutive events are at least
+    /// `timeBetweenScaling` apart, and `instances_after` never drops
+    /// below one.
+    pub events: Vec<ScaleEvent>,
     /// Cloudlets completed.
     pub cloudlets_ok: usize,
     /// Max process CPU load observed (Fig 5.5).
@@ -107,6 +143,7 @@ pub fn run_adaptive(
     main.advance_busy(master, scenario.events_processed as f64 * EVENT_COST);
 
     let mut rows: Vec<LoadRow> = Vec::new();
+    let mut events: Vec<ScaleEvent> = Vec::new();
     let mut scale_outs = 0;
     let mut scale_ins = 0;
     let mut peak = 1;
@@ -184,6 +221,11 @@ pub fn run_adaptive(
                     if ias.probe(&mut sub, &mut main)? == IasAction::Spawned {
                         scale_outs += 1;
                         event = format!("Spawning Instance - I{}", main.size() - 1);
+                        events.push(ScaleEvent {
+                            at: now - t_start,
+                            action: ScaleAction::Out,
+                            instances_after: main.size(),
+                        });
                         break;
                     }
                 }
@@ -195,6 +237,11 @@ pub fn run_adaptive(
                     if ias.probe(&mut sub, &mut main)? == IasAction::Shutdown {
                         scale_ins += 1;
                         event = "Scaling In".to_string();
+                        events.push(ScaleEvent {
+                            at: now - t_start,
+                            action: ScaleAction::In,
+                            instances_after: main.size(),
+                        });
                         break;
                     }
                 }
@@ -227,6 +274,7 @@ pub fn run_adaptive(
         scale_outs,
         scale_ins,
         rows,
+        events,
         cloudlets_ok: scenario.successes(),
         max_process_cpu_load: monitor.max_process_cpu_load,
     })
@@ -266,6 +314,15 @@ mod tests {
         assert_eq!(r.cloudlets_ok, 400);
         assert!(!r.rows.is_empty());
         assert!(r.rows.iter().any(|row| row.event.contains("Spawning")));
+        assert_eq!(
+            r.events
+                .iter()
+                .filter(|e| e.action == ScaleAction::Out)
+                .count(),
+            r.scale_outs,
+            "structured log mirrors the counters"
+        );
+        assert!(r.events.iter().all(|e| e.instances_after >= 1));
     }
 
     #[test]

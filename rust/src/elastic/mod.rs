@@ -16,7 +16,7 @@ pub mod provision;
 pub mod scaler;
 
 pub use coordinator::Coordinator;
-pub use driver::{run_adaptive, ElasticReport, LoadRow};
+pub use driver::{run_adaptive, ElasticReport, LoadRow, ScaleAction, ScaleEvent};
 pub use health::{HealthMeasure, HealthMonitor, HealthSample};
 pub use ias::{IasAction, IntelligentAdaptiveScaler};
 pub use probe::{AdaptiveScalerProbe, SCALING_KEY, TERMINATE_ALL_FLAG};

@@ -60,8 +60,9 @@ pub struct GridConfig {
     /// OS worker threads for the two-phase parallel executor
     /// ([`crate::grid::parallel`]). `1` (the default) runs task bodies
     /// inline; `> 1` runs `execute_on_all`-style batches on a scoped thread
-    /// pool. Virtual-time results are identical either way (the engine's
-    /// determinism contract).
+    /// pool; `0` resolves to all available cores
+    /// ([`crate::grid::parallel::resolve_workers`]). Virtual-time results
+    /// are identical at any setting (the engine's determinism contract).
     pub workers: usize,
 }
 

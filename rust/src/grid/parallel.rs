@@ -395,7 +395,8 @@ impl GridCluster {
             .enumerate()
             .map(|(o, &m)| self.fork_ctx_shared(m, o, snapshot.clone()))
             .collect();
-        let results: Vec<Result<R>> = if self.cfg.workers <= 1 || ctxs.len() <= 1 {
+        let run_inline = resolve_workers(self.cfg.workers) <= 1 || ctxs.len() <= 1;
+        let results: Vec<Result<R>> = if run_inline {
             // sequential: stop at the first failing body
             let mut out = Vec::with_capacity(ctxs.len());
             for ctx in ctxs.iter_mut() {
@@ -469,15 +470,32 @@ impl GridCluster {
     }
 }
 
+/// Resolve a configured executor worker count: `0` means "all available
+/// cores" (how the scenario registry's `seq_vs_threaded` and the MapReduce
+/// engines ask for maximum hardware), any other value is taken literally
+/// (`1` = sequential). Virtual-time results are identical at any worker
+/// count — only wall time changes.
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
 /// Run bodies over the shards: inline when `workers <= 1`, otherwise on a
 /// scoped thread pool with deterministic contiguous chunk assignment (so
 /// results — and any floating-point evaluation order — never depend on
-/// thread timing).
+/// thread timing). A `workers` of `0` resolves to all available cores via
+/// [`resolve_workers`].
 pub(crate) fn run_bodies<R: Send>(
     ctxs: &mut [NodeCtx],
     workers: usize,
     f: &(impl Fn(&mut NodeCtx) -> R + Sync),
 ) -> Vec<R> {
+    let workers = resolve_workers(workers);
     if workers <= 1 || ctxs.len() <= 1 {
         return ctxs.iter_mut().map(|c| f(c)).collect();
     }
@@ -515,6 +533,13 @@ mod tests {
             },
             n,
         )
+    }
+
+    #[test]
+    fn zero_workers_resolves_to_all_cores() {
+        assert!(resolve_workers(0) >= 1);
+        assert_eq!(resolve_workers(1), 1);
+        assert_eq!(resolve_workers(7), 7);
     }
 
     #[test]

@@ -25,15 +25,18 @@ pub mod grid;
 pub mod mapreduce;
 pub mod metrics;
 pub mod runtime;
+pub mod scenarios;
 pub mod sim;
 pub mod util;
 
 /// Commonly used types, re-exported for examples and benches.
 pub mod prelude {
-    pub use crate::config::{Properties, SimConfig, WorkloadKind};
+    pub use crate::bench::{BenchReport, ScenarioOutcome};
+    pub use crate::config::{CloudletDistribution, Properties, SimConfig, WorkloadKind};
     pub use crate::dist::{run_cloudsim_baseline, run_distributed, DistReport};
     pub use crate::error::{C2SError, Result};
     pub use crate::grid::backend::BackendProfile;
     pub use crate::grid::cluster::{GridCluster, GridConfig};
+    pub use crate::scenarios::{RunOptions, ScenarioSpec};
     pub use crate::util::rng::SplitMix64;
 }

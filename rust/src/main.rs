@@ -7,12 +7,15 @@
 //! cloud2sim mapreduce   [--backend hazelcast|infinispan] [--files F]
 //!                       [--lines L] [--instances N] [--verbose]
 //! cloud2sim elastic     [--available N] [--config file]
+//! cloud2sim bench       [--all] [--scenario name]... [--quick] [--reps N]
+//!                       [--json out.json] [--compare baseline.json] [--list]
 //! cloud2sim info
 //! ```
 //!
 //! (clap is not in the offline vendor set; flags are parsed by hand, and
 //! `--config` loads the paper-style `cloud2sim.properties`.)
 
+use cloud2sim::bench::{self, BenchReport};
 use cloud2sim::config::{Properties, SimConfig};
 use cloud2sim::dist::matchmaking::{run_matchmaking_baseline, run_matchmaking_distributed};
 use cloud2sim::dist::{run_cloudsim_baseline, run_distributed_full, Strategy};
@@ -21,6 +24,7 @@ use cloud2sim::error::{C2SError, Result};
 use cloud2sim::mapreduce::{run_hz_wordcount, run_inf_wordcount, Corpus, CorpusConfig, JobConfig};
 use cloud2sim::runtime::registry::{default_artifacts_dir, PjrtRuntime};
 use cloud2sim::runtime::workload::NativeBurnModel;
+use cloud2sim::scenarios::{self, RunOptions};
 
 struct Args {
     flags: Vec<(String, Option<String>)>,
@@ -49,6 +53,14 @@ impl Args {
             .iter()
             .find(|(n, _)| n == name)
             .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(n, _)| n == name)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
     }
 
     fn has(&self, name: &str) -> bool {
@@ -195,6 +207,83 @@ fn cmd_elastic(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cloud2sim bench`: run the scenario registry, emit the machine-readable
+/// `BENCH_scenarios.json`, and optionally gate against a baseline (the CI
+/// determinism gate — virtual times must match bit-for-bit).
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.has("list") {
+        println!("registered scenarios:");
+        for spec in scenarios::registry() {
+            println!("  {:<26} {}", spec.name, spec.summary);
+            println!("  {:<26}   reproduces: {}", "", spec.paper_ref);
+        }
+        return Ok(());
+    }
+    let quick = args.has("quick");
+    let mut opts = RunOptions::new(quick);
+    if let Some(r) = args.get("reps") {
+        opts.reps = r
+            .parse::<usize>()
+            .map_err(|_| C2SError::Config(format!("--reps wants an integer, got {r}")))?
+            .max(1);
+    }
+    // a value-carrying flag whose value was swallowed by the next flag
+    // must not silently disable what it controls (a bare `--compare`
+    // would switch the CI determinism gate off while staying green)
+    for flag in ["scenario", "json", "compare", "reps"] {
+        if args.flags.iter().any(|(n, v)| n == flag && v.is_none()) {
+            return Err(C2SError::Config(format!(
+                "--{flag} wants a value; see `cloud2sim bench --list` and README.md"
+            )));
+        }
+    }
+    let wanted = args.get_all("scenario");
+    let specs = if wanted.is_empty() {
+        // `--all` is the default; it exists so CI invocations read clearly
+        scenarios::registry()
+    } else {
+        let mut specs = Vec::with_capacity(wanted.len());
+        for name in wanted {
+            specs.push(scenarios::find(name).ok_or_else(|| {
+                C2SError::Config(format!(
+                    "unknown scenario {name}; see `cloud2sim bench --list`"
+                ))
+            })?);
+        }
+        specs
+    };
+    println!(
+        "running {} scenario(s), quick={quick}, reps={}\n",
+        specs.len(),
+        opts.reps
+    );
+    let report = scenarios::run_suite(&specs, &opts)?;
+    if let Some(path) = args.get("json") {
+        report.save(std::path::Path::new(path))?;
+        println!("\nwrote {path} ({} scenarios)", report.scenarios.len());
+    }
+    if let Some(path) = args.get("compare") {
+        let baseline = BenchReport::load(std::path::Path::new(path))?;
+        let cmp = bench::compare(&report, &baseline);
+        print!("\ncomparing against {path}:\n{}", cmp.describe());
+        if baseline.scenarios.is_empty() {
+            println!(
+                "note: baseline is empty — populate it with \
+                 `cloud2sim bench --all --quick --json {path}`"
+            );
+        }
+        if !cmp.is_ok() {
+            return Err(C2SError::Other(
+                "bench determinism gate failed: virtual times drifted from the baseline \
+                 (see DRIFT/MISSING lines above). If the change is intentional, regenerate \
+                 the baseline with `cloud2sim bench --all --quick --json <baseline>`"
+                    .into(),
+            ));
+        }
+    }
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     println!(
         "cloud2sim {} — Cloud²Sim reproduction",
@@ -214,6 +303,11 @@ fn cmd_info() -> Result<()> {
         Err(e) => println!("PJRT: unavailable — {e}"),
     }
     println!("benches: cargo bench   (one target per paper table/figure)");
+    println!(
+        "scenario suite: cloud2sim bench --all --json BENCH_scenarios.json \
+         ({} registered scenarios; --list to enumerate)",
+        scenarios::registry().len()
+    );
     println!("examples: quickstart, matchmaking, mapreduce_wordcount, elastic_scaling, e2e_paper");
     Ok(())
 }
@@ -227,10 +321,11 @@ fn main() {
         "matchmaking" => cmd_matchmaking(&args),
         "mapreduce" => cmd_mapreduce(&args),
         "elastic" => cmd_elastic(&args),
+        "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: cloud2sim <simulate|matchmaking|mapreduce|elastic|info> [flags]\n\
+                "usage: cloud2sim <simulate|matchmaking|mapreduce|elastic|bench|info> [flags]\n\
                  see `cloud2sim info` and README.md"
             );
             Ok(())

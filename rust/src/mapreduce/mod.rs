@@ -20,9 +20,7 @@ pub mod wordcount;
 /// (map-phase tokenization is real CPU work; virtual-time results are
 /// identical at any worker count).
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    crate::grid::parallel::resolve_workers(0)
 }
 
 pub use corpus::{Corpus, CorpusConfig};

@@ -1,0 +1,25 @@
+//! The declarative scenario registry and runner.
+//!
+//! The paper's contribution is a *platform* evaluated across many
+//! workloads — concurrent CloudSim rounds, Hazelcast/Infinispan MapReduce
+//! and adaptive scaling under load (§4–§5). This module makes that
+//! scenario diversity first-class:
+//!
+//! * [`spec`] — [`ScenarioSpec`](spec::ScenarioSpec): a scenario as data
+//!   (datacenter/host/VM shape, cloudlet distribution, scheduler kind,
+//!   MapReduce corpus size, elastic thresholds, node counts).
+//! * [`mod@registry`] — six named scenarios reproducing and extending §5,
+//!   including `elastic_closed_loop`, where the DynamicScaler's decisions
+//!   drive real grid membership changes round by round.
+//! * [`runner`] — interprets a spec end-to-end and emits the
+//!   machine-readable [`ScenarioOutcome`](crate::bench::ScenarioOutcome)
+//!   that `cloud2sim bench` collects into `BENCH_scenarios.json`, the
+//!   artifact CI's determinism gate diffs against its baseline.
+
+pub mod registry;
+pub mod runner;
+pub mod spec;
+
+pub use registry::{find, names, registry};
+pub use runner::{run_spec, run_suite, RunOptions};
+pub use spec::{ElasticShape, MrBackend, MrShape, ScenarioKind, ScenarioSpec};

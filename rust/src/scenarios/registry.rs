@@ -1,0 +1,204 @@
+//! The named scenario registry.
+//!
+//! Six scenarios reproduce and extend the paper's §5 evaluation; every one
+//! runs end-to-end through the real stack and lands in
+//! `BENCH_scenarios.json` as one point on the perf trajectory. Names are
+//! stable API: CI, the README and the baseline file refer to them.
+
+use crate::config::CloudletDistribution;
+use crate::scenarios::spec::{ElasticShape, MrBackend, MrShape, ScenarioKind, ScenarioSpec};
+use crate::sim::cloudlet_scheduler::SchedulerKind;
+
+/// All registered scenarios, in presentation order.
+pub fn registry() -> Vec<ScenarioSpec> {
+    vec![
+        ScenarioSpec {
+            name: "fig5_1_cloudlet_scaling",
+            summary: "loaded round-robin scheduling re-priced over 1..6 grid members",
+            paper_ref: "Fig 5.1 / Table 5.1 (200 VMs, 400 loaded cloudlets)",
+            kind: ScenarioKind::DistributedSweep,
+            datacenters: 15,
+            hosts_per_datacenter: 4,
+            pes_per_host: 8,
+            vms: 200,
+            cloudlets: 400,
+            loaded: true,
+            distribution: CloudletDistribution::Uniform,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1, 2, 3, 6],
+            grid_workers: 1,
+            mr: None,
+            elastic: None,
+        },
+        ScenarioSpec {
+            name: "mr_wordcount_skewed",
+            summary: "word count over a hard-Zipf corpus: few reducers own most keys",
+            paper_ref: "§4.2 / Fig 5.10 extended with key skew (zipf_s = 1.35)",
+            kind: ScenarioKind::MapReduce,
+            datacenters: 1,
+            hosts_per_datacenter: 1,
+            pes_per_host: 8,
+            vms: 1,
+            cloudlets: 1,
+            loaded: false,
+            distribution: CloudletDistribution::Uniform,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1, 4],
+            grid_workers: 0,
+            mr: Some(MrShape {
+                files: 6,
+                distinct_files: 3,
+                lines_per_file: 8000,
+                zipf_s: 1.35,
+                vocab: 50_000,
+                backend: MrBackend::Infinispan,
+            }),
+            elastic: None,
+        },
+        ScenarioSpec {
+            name: "heterogeneous_vms",
+            summary: "fair matchmaking with variable-size VMs and cloudlets",
+            paper_ref: "§5.1.2 / Figs 5.4-5.7 (100 VMs, 1200 cloudlets)",
+            kind: ScenarioKind::Matchmaking,
+            datacenters: 15,
+            hosts_per_datacenter: 4,
+            pes_per_host: 8,
+            vms: 100,
+            cloudlets: 1200,
+            loaded: false,
+            distribution: CloudletDistribution::Variable,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1, 3],
+            grid_workers: 1,
+            mr: None,
+            elastic: None,
+        },
+        ScenarioSpec {
+            name: "bursty_broker",
+            summary: "burst of heavy cloudlets then a light tail through the broker",
+            paper_ref: "§5.1.1 extended with a bursty arrival profile",
+            kind: ScenarioKind::DistributedSweep,
+            datacenters: 15,
+            hosts_per_datacenter: 4,
+            pes_per_host: 8,
+            vms: 200,
+            cloudlets: 600,
+            loaded: true,
+            distribution: CloudletDistribution::BurstyTail {
+                head_pct: 27,
+                tail_divisor: 200,
+            },
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1, 2, 4],
+            grid_workers: 1,
+            mr: None,
+            elastic: None,
+        },
+        ScenarioSpec {
+            name: "elastic_closed_loop",
+            summary: "adaptive scaling drives grid membership out AND back in, \
+                      round by round",
+            paper_ref: "§3.2.2 / Table 5.2 / Fig 5.2 adaptive overlay",
+            kind: ScenarioKind::Elastic,
+            datacenters: 15,
+            hosts_per_datacenter: 4,
+            pes_per_host: 8,
+            vms: 200,
+            // 27% heavy head saturates one node (scale-out); the light
+            // tail starves the cluster (scale-in). Calibrated against the
+            // driver's EWMA load dynamics — see the integration test
+            // `elastic_closed_loop_scales_out_and_back_in`.
+            cloudlets: 1100,
+            loaded: true,
+            distribution: CloudletDistribution::BurstyTail {
+                head_pct: 27,
+                tail_divisor: 200,
+            },
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1],
+            grid_workers: 1,
+            mr: None,
+            elastic: Some(ElasticShape {
+                max_threshold: 0.20,
+                min_threshold: 0.05,
+                time_between_scaling: 10.0,
+                time_between_health_checks: 1.0,
+                available_nodes: 3,
+                max_instances: 3,
+            }),
+        },
+        ScenarioSpec {
+            name: "seq_vs_threaded",
+            summary: "workers=1 vs all cores: identical virtual time, real wall delta",
+            paper_ref: "two-phase parallel engine determinism contract (PR 1)",
+            kind: ScenarioKind::SeqVsThreaded,
+            datacenters: 15,
+            hosts_per_datacenter: 4,
+            pes_per_host: 8,
+            vms: 200,
+            cloudlets: 400,
+            loaded: true,
+            distribution: CloudletDistribution::Uniform,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[4],
+            grid_workers: 0,
+            mr: None,
+            elastic: None,
+        },
+    ]
+}
+
+/// Look a scenario up by name.
+pub fn find(name: &str) -> Option<ScenarioSpec> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+/// All registered names, in presentation order.
+pub fn names() -> Vec<&'static str> {
+    registry().iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_least_six_unique_scenarios() {
+        let names = names();
+        assert!(names.len() >= 6, "registry shrank: {names:?}");
+        let set: std::collections::HashSet<_> = names.iter().collect();
+        assert_eq!(set.len(), names.len(), "duplicate scenario names");
+    }
+
+    #[test]
+    fn all_specs_materialize_valid_configs() {
+        for spec in registry() {
+            for quick in [false, true] {
+                spec.sim_config(quick)
+                    .validate()
+                    .unwrap_or_else(|e| panic!("{} invalid: {e}", spec.name));
+            }
+            assert!(!spec.nodes.is_empty(), "{} has no node counts", spec.name);
+        }
+    }
+
+    #[test]
+    fn find_is_exact() {
+        assert!(find("elastic_closed_loop").is_some());
+        assert!(find("elastic").is_none());
+    }
+
+    #[test]
+    fn issue_mandated_scenarios_present() {
+        for required in [
+            "fig5_1_cloudlet_scaling",
+            "mr_wordcount_skewed",
+            "heterogeneous_vms",
+            "bursty_broker",
+            "elastic_closed_loop",
+            "seq_vs_threaded",
+        ] {
+            assert!(find(required).is_some(), "missing {required}");
+        }
+    }
+}

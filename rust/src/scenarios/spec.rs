@@ -1,0 +1,261 @@
+//! Declarative scenario specifications.
+//!
+//! A [`ScenarioSpec`] names everything one evaluation scenario needs —
+//! datacenter/host/VM shape, cloudlet distribution, scheduler discipline,
+//! MapReduce corpus size, elastic thresholds, node counts — so a scenario
+//! is data, not code. The runner (`super::runner`) interprets a spec
+//! end-to-end through the real stack: DES scenario → grid pricing →
+//! MapReduce engines → elastic closed loop.
+
+use crate::config::{CloudletDistribution, ScalingMode, SimConfig, WorkloadKind};
+use crate::mapreduce::CorpusConfig;
+use crate::sim::cloudlet_scheduler::SchedulerKind;
+
+/// Which driver the runner sends a spec through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Round-robin scheduling re-priced over 1..n grid members
+    /// (Table 5.1 / Fig 5.1 family).
+    DistributedSweep,
+    /// Fair matchmaking with variable-size VMs and cloudlets (§5.1.2).
+    Matchmaking,
+    /// Word-count MapReduce over the grid engines (§4.2, Figs 5.9–5.11).
+    MapReduce,
+    /// The full elastic closed loop: DynamicScaler + health probes +
+    /// IAS-driven membership changes, round by round (§3.2.2, Table 5.2).
+    Elastic,
+    /// Same deployment run with `workers = 1` vs all cores; virtual time
+    /// must be identical, wall time is the payload.
+    SeqVsThreaded,
+}
+
+impl ScenarioKind {
+    /// Stable tag used in `BENCH_scenarios.json`.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ScenarioKind::DistributedSweep => "distributed-sweep",
+            ScenarioKind::Matchmaking => "matchmaking",
+            ScenarioKind::MapReduce => "mapreduce",
+            ScenarioKind::Elastic => "elastic",
+            ScenarioKind::SeqVsThreaded => "seq-vs-threaded",
+        }
+    }
+}
+
+/// MapReduce backend profile selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MrBackend {
+    /// Hazelcast-like profile (young MR: shuffle round-trips, split-brain).
+    Hazelcast,
+    /// Infinispan-like profile (local-mode discount, positive scaling).
+    Infinispan,
+}
+
+/// MapReduce corpus shape for [`ScenarioKind::MapReduce`] specs.
+#[derive(Debug, Clone)]
+pub struct MrShape {
+    /// Input files (`map()` invocations).
+    pub files: usize,
+    /// Distinct file contents (`files > distinct_files` duplicates).
+    pub distinct_files: usize,
+    /// Lines per file (the paper's "MapReduce size").
+    pub lines_per_file: usize,
+    /// Zipf exponent of the word distribution; > 1 skews hard, so few
+    /// reducers own most of the data.
+    pub zipf_s: f64,
+    /// Vocabulary size (distinct possible words).
+    pub vocab: usize,
+    /// Backend profile to run on.
+    pub backend: MrBackend,
+}
+
+impl MrShape {
+    /// Corpus configuration for this shape; `quick` divides the lines per
+    /// file by 4 (the scenario registry's smoke-test mode).
+    pub fn corpus_config(&self, quick: bool) -> CorpusConfig {
+        CorpusConfig {
+            files: self.files,
+            distinct_files: self.distinct_files.max(1),
+            lines_per_file: if quick {
+                (self.lines_per_file / 4).max(1)
+            } else {
+                self.lines_per_file
+            },
+            zipf_s: self.zipf_s,
+            vocab: self.vocab,
+            ..CorpusConfig::default()
+        }
+    }
+}
+
+/// Elastic-middleware knobs for [`ScenarioKind::Elastic`] specs.
+#[derive(Debug, Clone)]
+pub struct ElasticShape {
+    /// `maxThreshold` on the monitored health measure.
+    pub max_threshold: f64,
+    /// `minThreshold` for scale-in.
+    pub min_threshold: f64,
+    /// Anti-jitter buffer after a scaling action (virtual s, §4.3.1).
+    pub time_between_scaling: f64,
+    /// Poll period between health checks (virtual s).
+    pub time_between_health_checks: f64,
+    /// Spare nodes available to the IntelligentAdaptiveScalers.
+    pub available_nodes: usize,
+    /// `maxInstancesToBeSpawned`.
+    pub max_instances: usize,
+}
+
+/// One named, fully declarative scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Registry name (stable; used by `bench --scenario` and the JSON).
+    pub name: &'static str,
+    /// One-line human summary.
+    pub summary: &'static str,
+    /// Paper section / figure this reproduces or extends.
+    pub paper_ref: &'static str,
+    /// Which driver interprets the spec.
+    pub kind: ScenarioKind,
+    /// Datacenters in the cloud scenario.
+    pub datacenters: usize,
+    /// Hosts per datacenter.
+    pub hosts_per_datacenter: usize,
+    /// PEs (cores) per host.
+    pub pes_per_host: usize,
+    /// VMs requested.
+    pub vms: usize,
+    /// Cloudlets submitted.
+    pub cloudlets: usize,
+    /// Whether cloudlets carry the burn workload (`isLoaded`).
+    pub loaded: bool,
+    /// Cloudlet length distribution.
+    pub distribution: CloudletDistribution,
+    /// Cloudlet scheduler discipline on every VM.
+    pub scheduler: SchedulerKind,
+    /// Grid member counts to sweep (static kinds); for MapReduce these
+    /// are instance counts, for Elastic only the static comparison uses
+    /// them.
+    pub nodes: &'static [usize],
+    /// Executor worker threads (`0` = all available cores).
+    pub grid_workers: usize,
+    /// MapReduce shape (MapReduce kind only).
+    pub mr: Option<MrShape>,
+    /// Elastic knobs (Elastic kind only).
+    pub elastic: Option<ElasticShape>,
+}
+
+impl ScenarioSpec {
+    /// Materialize the [`SimConfig`] this spec describes. `quick` halves
+    /// the cloudlet count for the static kinds (the elastic closed loop
+    /// keeps its exact shape — its scale-out/scale-in choreography *is*
+    /// the scenario).
+    pub fn sim_config(&self, quick: bool) -> SimConfig {
+        let cloudlets = if quick && self.kind != ScenarioKind::Elastic {
+            (self.cloudlets / 2).max(16)
+        } else {
+            self.cloudlets
+        };
+        let mut cfg = SimConfig {
+            no_of_datacenters: self.datacenters,
+            hosts_per_datacenter: self.hosts_per_datacenter,
+            pes_per_host: self.pes_per_host,
+            no_of_vms: self.vms,
+            no_of_cloudlets: cloudlets,
+            cloudlet_distribution: self.distribution,
+            scheduler: self.scheduler,
+            workload: if self.loaded {
+                WorkloadKind::NativeBurn
+            } else {
+                WorkloadKind::None
+            },
+            grid_workers: self.grid_workers,
+            ..SimConfig::default()
+        };
+        if let Some(e) = &self.elastic {
+            cfg.scaling_mode = ScalingMode::Adaptive;
+            cfg.backup_count = cfg.backup_count.max(1);
+            cfg.max_threshold = e.max_threshold;
+            cfg.min_threshold = e.min_threshold;
+            cfg.time_between_scaling = e.time_between_scaling;
+            cfg.time_between_health_checks = e.time_between_health_checks;
+            cfg.max_instances_to_be_spawned = e.max_instances;
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "demo",
+            summary: "demo spec",
+            paper_ref: "§5",
+            kind: ScenarioKind::DistributedSweep,
+            datacenters: 2,
+            hosts_per_datacenter: 2,
+            pes_per_host: 4,
+            vms: 8,
+            cloudlets: 64,
+            loaded: true,
+            distribution: CloudletDistribution::Uniform,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1, 2],
+            grid_workers: 1,
+            mr: None,
+            elastic: None,
+        }
+    }
+
+    #[test]
+    fn sim_config_reflects_spec() {
+        let cfg = spec().sim_config(false);
+        assert_eq!(cfg.no_of_cloudlets, 64);
+        assert_eq!(cfg.no_of_vms, 8);
+        assert!(cfg.workload.is_loaded());
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn quick_mode_halves_static_kinds_only() {
+        assert_eq!(spec().sim_config(true).no_of_cloudlets, 32);
+        let mut e = spec();
+        e.kind = ScenarioKind::Elastic;
+        e.elastic = Some(ElasticShape {
+            max_threshold: 0.2,
+            min_threshold: 0.05,
+            time_between_scaling: 10.0,
+            time_between_health_checks: 1.0,
+            available_nodes: 3,
+            max_instances: 3,
+        });
+        let cfg = e.sim_config(true);
+        assert_eq!(cfg.no_of_cloudlets, 64, "elastic keeps its exact shape");
+        assert_eq!(cfg.scaling_mode, ScalingMode::Adaptive);
+        assert!(cfg.backup_count >= 1);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn mr_shape_quick_divides_lines() {
+        let shape = MrShape {
+            files: 6,
+            distinct_files: 3,
+            lines_per_file: 8000,
+            zipf_s: 1.35,
+            vocab: 50_000,
+            backend: MrBackend::Infinispan,
+        };
+        assert_eq!(shape.corpus_config(false).lines_per_file, 8000);
+        assert_eq!(shape.corpus_config(true).lines_per_file, 2000);
+        assert_eq!(shape.corpus_config(true).zipf_s, 1.35);
+    }
+
+    #[test]
+    fn kind_tags_stable() {
+        assert_eq!(ScenarioKind::Elastic.tag(), "elastic");
+        assert_eq!(ScenarioKind::SeqVsThreaded.tag(), "seq-vs-threaded");
+    }
+}

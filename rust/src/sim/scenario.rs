@@ -2,10 +2,9 @@
 //! entity dispatcher together, producing the scheduling outcome and the
 //! cost-accounting data the distribution layer consumes.
 
-use crate::config::SimConfig;
+use crate::config::{CloudletDistribution, SimConfig};
 use crate::sim::broker::{Broker, CloudletBinder, RoundRobinBinder};
 use crate::sim::cloudlet::Cloudlet;
-use crate::sim::cloudlet_scheduler::SchedulerKind;
 use crate::sim::datacenter::Datacenter;
 use crate::sim::des::{Entity, SimCtx, Simulation};
 use crate::sim::event::{EntityId, SimEvent};
@@ -80,14 +79,37 @@ pub fn make_vms(cfg: &SimConfig, variable: bool) -> Vec<Vm> {
 }
 
 /// Deterministically generate the cloudlet set.
+///
+/// `variable` (the matchmaking drivers' historical flag) forces the
+/// §5.1.2 variable sizing; otherwise lengths follow
+/// [`SimConfig::cloudlet_distribution`] — uniform, variable, or the
+/// bursty head-then-tail profile the elastic closed loop exercises.
 pub fn make_cloudlets(cfg: &SimConfig, variable: bool) -> Vec<Cloudlet> {
+    let dist = if variable {
+        CloudletDistribution::Variable
+    } else {
+        cfg.cloudlet_distribution
+    };
     let mut rng = SplitMix64::new(cfg.seed ^ 0xC10D1E7);
     (0..cfg.no_of_cloudlets)
         .map(|i| {
-            let len = if variable {
-                rng.gen_range(cfg.cloudlet_length_mi / 2, cfg.cloudlet_length_mi * 3 / 2 + 1)
-            } else {
-                cfg.cloudlet_length_mi
+            let len = match dist {
+                CloudletDistribution::Uniform => cfg.cloudlet_length_mi,
+                CloudletDistribution::Variable => rng.gen_range(
+                    cfg.cloudlet_length_mi / 2,
+                    cfg.cloudlet_length_mi * 3 / 2 + 1,
+                ),
+                CloudletDistribution::BurstyTail {
+                    head_pct,
+                    tail_divisor,
+                } => {
+                    let head = cfg.no_of_cloudlets * head_pct as usize / 100;
+                    if i < head {
+                        cfg.cloudlet_length_mi
+                    } else {
+                        (cfg.cloudlet_length_mi / tail_divisor).max(1)
+                    }
+                }
             };
             Cloudlet::new(i, i % cfg.no_of_users.max(1), len, 1)
         })
@@ -112,7 +134,7 @@ pub fn run_scenario_with_binder(
     let mut sim: Simulation<CloudEntity> = Simulation::new();
     let mut dc_ids = Vec::new();
     for d in 0..cfg.no_of_datacenters {
-        let dc = Datacenter::new(d, make_hosts(cfg), SchedulerKind::TimeShared);
+        let dc = Datacenter::new(d, make_hosts(cfg), cfg.scheduler);
         dc_ids.push(sim.add_entity(CloudEntity::Dc(dc)));
     }
     let vms = make_vms(cfg, variable);
@@ -153,6 +175,7 @@ pub fn run_scenario(cfg: &SimConfig) -> ScenarioResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::cloudlet_scheduler::SchedulerKind;
 
     fn small_cfg() -> SimConfig {
         SimConfig {
@@ -219,6 +242,50 @@ mod tests {
         assert!(mips.len() > 1, "variable sizing must differ");
         let uniform = make_vms(&cfg, false);
         assert!(uniform.iter().all(|v| v.mips == 1000));
+    }
+
+    #[test]
+    fn bursty_tail_shape() {
+        let cfg = SimConfig {
+            no_of_cloudlets: 100,
+            cloudlet_length_mi: 40_000,
+            cloudlet_distribution: crate::config::CloudletDistribution::BurstyTail {
+                head_pct: 30,
+                tail_divisor: 200,
+            },
+            ..small_cfg()
+        };
+        let cl = make_cloudlets(&cfg, false);
+        assert_eq!(cl.len(), 100);
+        assert!(cl[..30].iter().all(|c| c.length_mi == 40_000), "heavy head");
+        assert!(cl[30..].iter().all(|c| c.length_mi == 200), "light tail");
+        // the historical `variable` flag still overrides the distribution
+        let var = make_cloudlets(&cfg, true);
+        let lens: std::collections::HashSet<u64> = var.iter().map(|c| c.length_mi).collect();
+        assert!(lens.len() > 2);
+    }
+
+    #[test]
+    fn space_shared_scenario_completes() {
+        let cfg = SimConfig {
+            scheduler: SchedulerKind::SpaceShared,
+            ..small_cfg()
+        };
+        let r = run_scenario(&cfg);
+        assert_eq!(r.successes(), 16, "space-shared queues but finishes");
+        let ts = run_scenario(&small_cfg());
+        let first = |res: &ScenarioResult| {
+            res.cloudlets
+                .iter()
+                .map(|c| c.finish_time)
+                .fold(f64::INFINITY, f64::min)
+        };
+        assert!(
+            first(&r) < first(&ts),
+            "space-shared runs its first cloudlet alone, so it finishes earlier: {} vs {}",
+            first(&r),
+            first(&ts)
+        );
     }
 
     #[test]

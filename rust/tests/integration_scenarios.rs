@@ -1,0 +1,110 @@
+//! Scenario-suite integration tests: the registry runs end-to-end, the
+//! elastic closed loop really drives grid membership both directions, the
+//! anti-jitter contract holds through the full stack (not just in the
+//! DynamicScaler's unit tests), and the machine-readable report is
+//! deterministic and JSON-roundtrip-stable — the properties CI's
+//! determinism gate relies on.
+
+use cloud2sim::bench::{compare, BenchReport};
+use cloud2sim::scenarios::{find, registry, run_spec, run_suite, RunOptions};
+
+fn quick() -> RunOptions {
+    RunOptions {
+        quick: true,
+        reps: 1,
+    }
+}
+
+/// The §4.3.1 anti-jitter contract, asserted through the whole closed
+/// loop: health monitor → DynamicScaler → probe → IAS → grid membership.
+#[test]
+fn elastic_closed_loop_scales_out_and_back_in() {
+    let spec = find("elastic_closed_loop").expect("registered");
+    let tbs = spec
+        .elastic
+        .as_ref()
+        .expect("elastic shape")
+        .time_between_scaling;
+    let out = run_spec(&spec, &quick()).unwrap();
+
+    assert!(
+        out.scale_outs >= 1,
+        "the heavy head must trigger a scale-out: {out:?}"
+    );
+    assert!(
+        out.scale_ins >= 1,
+        "the light tail must trigger a scale-in: {out:?}"
+    );
+    assert_eq!(
+        out.scale_events.len() as u64,
+        out.scale_outs + out.scale_ins,
+        "every membership change is logged"
+    );
+
+    // no second scaling action within `time_between_scaling` of the first
+    for pair in out.scale_events.windows(2) {
+        let gap = pair[1].at - pair[0].at;
+        assert!(
+            gap >= tbs - 1e-6,
+            "anti-jitter violated: {} then {} only {gap:.3}s apart (buffer {tbs}s)",
+            pair[0].action,
+            pair[1].action,
+        );
+    }
+
+    // scale-in never drops the cluster below one member
+    assert!(
+        out.scale_events.iter().all(|e| e.instances_after >= 1),
+        "{:?}",
+        out.scale_events
+    );
+
+    // events are time-ordered and the first one is a scale-out
+    assert!(out.scale_events.windows(2).all(|p| p[1].at >= p[0].at));
+    assert_eq!(out.scale_events[0].action, "out");
+
+    // relieving the burst must beat the static single node
+    let speedup = out.speedup_vs_sequential.expect("static comparison run");
+    assert!(speedup > 1.0, "adaptive must pay off: {speedup}");
+}
+
+/// The full quick suite runs, covers all registered scenarios, and two
+/// runs agree bit-for-bit on every deterministic quantity — the exact
+/// check CI's run-twice determinism gate performs.
+#[test]
+fn quick_suite_is_deterministic_end_to_end() {
+    let specs = registry();
+    assert!(specs.len() >= 6);
+    let a = run_suite(&specs, &quick()).unwrap();
+    let b = run_suite(&specs, &quick()).unwrap();
+    assert_eq!(a.scenarios.len(), specs.len());
+    let cmp = compare(&a, &b);
+    assert!(cmp.is_ok(), "nondeterminism detected:\n{}", cmp.describe());
+    for s in &a.scenarios {
+        assert!(
+            s.virtual_s.is_finite() && s.virtual_s > 0.0,
+            "{} has no measurable virtual time",
+            s.name
+        );
+    }
+}
+
+/// Serializing a report and parsing it back must preserve every gated
+/// quantity exactly (shortest-roundtrip float formatting end to end).
+#[test]
+fn report_survives_json_roundtrip() {
+    let specs: Vec<_> = ["bursty_broker", "elastic_closed_loop"]
+        .iter()
+        .map(|n| find(n).unwrap())
+        .collect();
+    let report = run_suite(&specs, &quick()).unwrap();
+    let reparsed = BenchReport::parse(&report.render()).unwrap();
+    assert_eq!(report, reparsed);
+    let cmp = compare(&reparsed, &report);
+    assert!(cmp.is_ok(), "{}", cmp.describe());
+    // the elastic scenario is the one the acceptance criteria single out:
+    // its JSON must carry both directions of scaling
+    let elastic = reparsed.find("elastic_closed_loop").unwrap();
+    assert!(elastic.scale_outs >= 1 && elastic.scale_ins >= 1);
+    assert!(!elastic.scale_events.is_empty());
+}
