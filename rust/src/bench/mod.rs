@@ -10,4 +10,6 @@ pub mod report;
 
 pub use harness::{BenchHarness, Measurement};
 pub use json::Json;
-pub use report::{compare, BenchReport, CompareOutcome, ScenarioOutcome};
+pub use report::{
+    compare, compare_with_wall_tolerance, BenchReport, CompareOutcome, ScenarioOutcome,
+};

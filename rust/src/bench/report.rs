@@ -11,7 +11,11 @@ use crate::bench::json::Json;
 use crate::error::{C2SError, Result};
 
 /// Schema tag written into every report.
-pub const SCHEMA: &str = "cloud2sim-bench/1";
+pub const SCHEMA: &str = "cloud2sim-bench/2";
+
+/// Older schema still accepted on parse (reports lack `wall_clock_ms` /
+/// `events_per_sec`, which default sensibly).
+pub const SCHEMA_V1: &str = "cloud2sim-bench/1";
 
 /// One elastic membership change as serialized in the report.
 #[derive(Debug, Clone, PartialEq)]
@@ -38,6 +42,12 @@ pub struct ScenarioOutcome {
     pub wall_mean_s: f64,
     /// Wall-clock population stddev (s) — informational.
     pub wall_std_s: f64,
+    /// Wall-clock mean in milliseconds — the headline throughput figure
+    /// dashboards read; soft-gated (warn-only) by [`compare`].
+    pub wall_clock_ms: f64,
+    /// DES events dispatched per wall-clock second by the headline run,
+    /// when the scenario measures one — never hard-gated.
+    pub events_per_sec: Option<f64>,
     /// Headline virtual time of the sequential / single-node deployment,
     /// when the scenario has one.
     pub sequential_virtual_s: Option<f64>,
@@ -88,6 +98,8 @@ impl ScenarioOutcome {
             ("virtual_s", Json::Num(self.virtual_s)),
             ("wall_mean_s", Json::Num(self.wall_mean_s)),
             ("wall_std_s", Json::Num(self.wall_std_s)),
+            ("wall_clock_ms", Json::Num(self.wall_clock_ms)),
+            ("events_per_sec", opt_num(self.events_per_sec)),
             ("sequential_virtual_s", opt_num(self.sequential_virtual_s)),
             ("speedup_vs_sequential", opt_num(self.speedup_vs_sequential)),
             ("scale_outs", Json::Num(self.scale_outs as f64)),
@@ -130,12 +142,16 @@ impl ScenarioOutcome {
                 _ => Vec::new(),
             }
         };
+        let wall_mean_s = num("wall_mean_s").unwrap_or(0.0);
         Ok(ScenarioOutcome {
             name,
             kind: v.get("kind").and_then(Json::as_str).unwrap_or("?").to_string(),
             virtual_s: num("virtual_s").ok_or_else(|| field_err("virtual_s"))?,
-            wall_mean_s: num("wall_mean_s").unwrap_or(0.0),
+            wall_mean_s,
             wall_std_s: num("wall_std_s").unwrap_or(0.0),
+            // v1 reports lack the field; derive it so soft gates still work
+            wall_clock_ms: num("wall_clock_ms").unwrap_or(wall_mean_s * 1e3),
+            events_per_sec: opt_field("events_per_sec"),
             sequential_virtual_s: opt_field("sequential_virtual_s"),
             speedup_vs_sequential: opt_field("speedup_vs_sequential"),
             scale_outs: v.get("scale_outs").and_then(Json::as_u64).unwrap_or(0),
@@ -181,7 +197,7 @@ impl BenchReport {
     pub fn parse(text: &str) -> Result<BenchReport> {
         let v = Json::parse(text).map_err(|e| C2SError::Config(format!("bench report: {e}")))?;
         match v.get("schema").and_then(Json::as_str) {
-            Some(SCHEMA) => {}
+            Some(SCHEMA) | Some(SCHEMA_V1) => {}
             Some(other) => {
                 return Err(C2SError::Config(format!(
                     "bench report schema mismatch: expected {SCHEMA}, got {other}"
@@ -232,6 +248,14 @@ pub struct Drift {
     pub baseline: f64,
 }
 
+/// Default soft tolerance for wall-clock regressions: warn when a
+/// scenario's `wall_clock_ms` exceeds the baseline by more than 50%.
+pub const DEFAULT_WALL_TOLERANCE: f64 = 0.5;
+
+/// Below this baseline wall time (ms) the soft gate stays silent —
+/// sub-50ms scenarios are dominated by scheduler noise.
+const WALL_NOISE_FLOOR_MS: f64 = 50.0;
+
 /// Result of comparing a run against a baseline report.
 #[derive(Debug, Clone, Default)]
 pub struct CompareOutcome {
@@ -243,10 +267,15 @@ pub struct CompareOutcome {
     /// Scenarios in the current run with no baseline entry yet — reported
     /// but not failing, so new scenarios can bootstrap.
     pub unchecked: Vec<String>,
+    /// Wall-clock regressions beyond the soft tolerance — reported but
+    /// never failing: the hard gate stays bit-exact on virtual quantities
+    /// only.
+    pub wall_regressions: Vec<Drift>,
 }
 
 impl CompareOutcome {
-    /// True when the determinism gate passes.
+    /// True when the determinism gate passes. Wall-clock regressions are
+    /// soft: they warn, they never fail.
     pub fn is_ok(&self) -> bool {
         self.drifts.is_empty() && self.missing.is_empty()
     }
@@ -265,6 +294,12 @@ impl CompareOutcome {
         }
         for u in &self.unchecked {
             out.push_str(&format!("NEW {u}: no baseline entry yet (not gated)\n"));
+        }
+        for w in &self.wall_regressions {
+            out.push_str(&format!(
+                "WALL (soft) {}: {} regressed {:.1}ms -> {:.1}ms (warn only)\n",
+                w.scenario, w.field, w.baseline, w.current
+            ));
         }
         if self.is_ok() {
             out.push_str("determinism gate: OK\n");
@@ -285,8 +320,20 @@ fn action_code(action: &str) -> f64 {
 
 /// Compare a run against a baseline: every deterministic quantity
 /// (virtual times, the full scale-event log, extras) must match
-/// bit-for-bit. Wall-clock statistics are never compared.
+/// bit-for-bit. Wall-clock statistics are soft-checked only, with the
+/// default tolerance.
 pub fn compare(current: &BenchReport, baseline: &BenchReport) -> CompareOutcome {
+    compare_with_wall_tolerance(current, baseline, DEFAULT_WALL_TOLERANCE)
+}
+
+/// [`compare`] with an explicit soft tolerance for `wall_clock_ms`
+/// regressions (`0.5` = warn beyond +50%). The hard gate is unaffected:
+/// only bit-exact virtual quantities can fail it.
+pub fn compare_with_wall_tolerance(
+    current: &BenchReport,
+    baseline: &BenchReport,
+    wall_tolerance: f64,
+) -> CompareOutcome {
     let mut out = CompareOutcome::default();
     for b in &baseline.scenarios {
         let Some(c) = current.find(&b.name) else {
@@ -344,6 +391,18 @@ pub fn compare(current: &BenchReport, baseline: &BenchReport) -> CompareOutcome 
                 action_code(&be.action),
             );
         }
+        // soft gate: wall clock may regress up to the tolerance before a
+        // warning is even printed, and a warning never fails the compare
+        if b.wall_clock_ms > WALL_NOISE_FLOOR_MS
+            && c.wall_clock_ms > b.wall_clock_ms * (1.0 + wall_tolerance)
+        {
+            out.wall_regressions.push(Drift {
+                scenario: b.name.clone(),
+                field: "wall_clock_ms".to_string(),
+                current: c.wall_clock_ms,
+                baseline: b.wall_clock_ms,
+            });
+        }
     }
     for c in &current.scenarios {
         if baseline.find(&c.name).is_none() {
@@ -364,6 +423,8 @@ mod tests {
             virtual_s: virt,
             wall_mean_s: 0.01,
             wall_std_s: 0.001,
+            wall_clock_ms: 10.0,
+            events_per_sec: Some(125_000.5),
             sequential_virtual_s: Some(virt * 3.0),
             speedup_vs_sequential: Some(3.0),
             scale_outs: 0,
@@ -415,6 +476,53 @@ mod tests {
         cur.scenarios[0].wall_mean_s = 99.0;
         cur.scenarios[0].wall_extras = vec![("wall_speedup".to_string(), 0.5)];
         assert!(compare(&cur, &report(2.0)).is_ok());
+    }
+
+    #[test]
+    fn wall_regression_warns_but_never_fails() {
+        let mut base = report(2.0);
+        base.scenarios[0].wall_clock_ms = 200.0;
+        // +30% stays silent under the default 50% tolerance
+        let mut cur = base.clone();
+        cur.scenarios[0].wall_clock_ms = 260.0;
+        let cmp = compare(&cur, &base);
+        assert!(cmp.is_ok() && cmp.wall_regressions.is_empty());
+        // +100% warns, gate still passes
+        cur.scenarios[0].wall_clock_ms = 400.0;
+        let cmp = compare(&cur, &base);
+        assert!(cmp.is_ok(), "soft gate must not fail the compare");
+        assert_eq!(cmp.wall_regressions.len(), 1);
+        assert!(cmp.describe().contains("WALL (soft)"), "{}", cmp.describe());
+        // a tighter explicit tolerance catches the +30% too
+        cur.scenarios[0].wall_clock_ms = 260.0;
+        let cmp = compare_with_wall_tolerance(&cur, &base, 0.1);
+        assert!(cmp.is_ok());
+        assert_eq!(cmp.wall_regressions.len(), 1);
+        // sub-noise-floor baselines never warn
+        let mut tiny_base = report(2.0);
+        tiny_base.scenarios[0].wall_clock_ms = 5.0;
+        let mut tiny_cur = tiny_base.clone();
+        tiny_cur.scenarios[0].wall_clock_ms = 50.0;
+        assert!(compare(&tiny_cur, &tiny_base).wall_regressions.is_empty());
+    }
+
+    #[test]
+    fn v1_reports_still_parse() {
+        let text = r#"{
+  "schema": "cloud2sim-bench/1",
+  "quick": true,
+  "reps": 1,
+  "scenarios": [
+    {"name": "s1", "kind": "distributed-sweep", "virtual_s": 2.5,
+     "wall_mean_s": 0.25, "wall_std_s": 0.0}
+  ]
+}"#;
+        let r = BenchReport::parse(text).unwrap();
+        assert_eq!(r.scenarios[0].virtual_s, 2.5);
+        assert_eq!(r.scenarios[0].wall_clock_ms, 250.0, "derived from wall_mean_s");
+        assert_eq!(r.scenarios[0].events_per_sec, None);
+        // re-rendering upgrades the schema tag
+        assert!(r.render().contains(SCHEMA));
     }
 
     #[test]

@@ -12,6 +12,8 @@ pub use properties::Properties;
 use crate::error::{C2SError, Result};
 use crate::grid::backend::BackendProfile;
 use crate::sim::cloudlet_scheduler::SchedulerKind;
+use crate::sim::des::EngineMode;
+use crate::sim::queue::QueueKind;
 
 /// What each cloudlet executes once scheduled (`isLoaded` in the paper).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,6 +111,19 @@ pub struct SimConfig {
     pub cloudlet_distribution: CloudletDistribution,
     /// Cloudlet scheduler discipline on every VM (`schedulerKind`).
     pub scheduler: SchedulerKind,
+    /// Future-event-queue implementation for the DES (`eventQueue`):
+    /// the indexed calendar queue (default) or the seed binary heap.
+    /// Virtual-time results are bit-identical either way.
+    pub event_queue: QueueKind,
+    /// How the datacenter drives cloudlet progress (`desEngine`).
+    /// Virtual-time results are bit-identical between modes, but the
+    /// dispatched event *count* is not — and the §3.3 `k·T1` cost model
+    /// (`dist::cost::EVENT_COST`) is calibrated against the paper's
+    /// measured runs at the seed polling volume, so `Polling` stays the
+    /// config default. `NextCompletion` is the DES hot path: the
+    /// `megascale_broker` scenario drives it explicitly and gates its
+    /// ≥5× event reduction.
+    pub des_engine: EngineMode,
     /// Cloudlet workload (`isLoaded`).
     pub workload: WorkloadKind,
     /// Workload intensity: iterations of the burn kernel per cloudlet.
@@ -172,6 +187,8 @@ impl Default for SimConfig {
             cloudlet_length_mi: 40_000,
             cloudlet_distribution: CloudletDistribution::Uniform,
             scheduler: SchedulerKind::TimeShared,
+            event_queue: QueueKind::Indexed,
+            des_engine: EngineMode::Polling,
             workload: WorkloadKind::None,
             load_iterations: 64,
             backend: BackendProfile::hazelcast_like(),
@@ -301,6 +318,28 @@ impl SimConfig {
                 }
             };
         }
+        if let Some(v) = props.get("eventQueue") {
+            c.event_queue = match v.to_ascii_lowercase().as_str() {
+                "indexed" => QueueKind::Indexed,
+                "heap" => QueueKind::Heap,
+                other => {
+                    return Err(C2SError::Config(format!(
+                        "eventQueue must be indexed|heap, got {other}"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = props.get("desEngine") {
+            c.des_engine = match v.to_ascii_lowercase().as_str() {
+                "nextcompletion" => EngineMode::NextCompletion,
+                "polling" => EngineMode::Polling,
+                other => {
+                    return Err(C2SError::Config(format!(
+                        "desEngine must be nextCompletion|polling, got {other}"
+                    )))
+                }
+            };
+        }
         if let Some(v) = props.get("scalingMode") {
             c.scaling_mode = match v.to_ascii_lowercase().as_str() {
                 "static" => ScalingMode::Static,
@@ -400,6 +439,26 @@ mod tests {
         let p = Properties::parse("gridBackend=terracotta\n").unwrap();
         assert!(SimConfig::from_properties(&p).is_err());
         let p = Properties::parse("isLoaded=maybe\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+    }
+
+    #[test]
+    fn engine_and_queue_parse() {
+        let p = Properties::parse("eventQueue=heap\ndesEngine=polling\n").unwrap();
+        let c = SimConfig::from_properties(&p).unwrap();
+        assert_eq!(c.event_queue, QueueKind::Heap);
+        assert_eq!(c.des_engine, EngineMode::Polling);
+        let d = SimConfig::default();
+        assert_eq!(d.event_queue, QueueKind::Indexed);
+        // polling stays the config default: the §3.3 cost model is
+        // calibrated against the seed event volume
+        assert_eq!(d.des_engine, EngineMode::Polling);
+        let p = Properties::parse("desEngine=nextCompletion\n").unwrap();
+        let c = SimConfig::from_properties(&p).unwrap();
+        assert_eq!(c.des_engine, EngineMode::NextCompletion);
+        let p = Properties::parse("eventQueue=splaytree\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        let p = Properties::parse("desEngine=psychic\n").unwrap();
         assert!(SimConfig::from_properties(&p).is_err());
     }
 

@@ -8,7 +8,8 @@
 //!                       [--lines L] [--instances N] [--verbose]
 //! cloud2sim elastic     [--available N] [--config file]
 //! cloud2sim bench       [--all] [--scenario name]... [--quick] [--reps N]
-//!                       [--json out.json] [--compare baseline.json] [--list]
+//!                       [--json out.json] [--compare baseline.json]
+//!                       [--wall-tol 0.5] [--list]
 //! cloud2sim info
 //! ```
 //!
@@ -230,7 +231,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // a value-carrying flag whose value was swallowed by the next flag
     // must not silently disable what it controls (a bare `--compare`
     // would switch the CI determinism gate off while staying green)
-    for flag in ["scenario", "json", "compare", "reps"] {
+    for flag in ["scenario", "json", "compare", "reps", "wall-tol"] {
         if args.flags.iter().any(|(n, v)| n == flag && v.is_none()) {
             return Err(C2SError::Config(format!(
                 "--{flag} wants a value; see `cloud2sim bench --list` and README.md"
@@ -263,8 +264,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
         println!("\nwrote {path} ({} scenarios)", report.scenarios.len());
     }
     if let Some(path) = args.get("compare") {
+        let wall_tol = match args.get("wall-tol") {
+            None => bench::report::DEFAULT_WALL_TOLERANCE,
+            Some(v) => v.parse::<f64>().ok().filter(|t| *t >= 0.0).ok_or_else(|| {
+                C2SError::Config(format!("--wall-tol wants a fraction >= 0, got {v}"))
+            })?,
+        };
         let baseline = BenchReport::load(std::path::Path::new(path))?;
-        let cmp = bench::compare(&report, &baseline);
+        let cmp = bench::compare_with_wall_tolerance(&report, &baseline, wall_tol);
         print!("\ncomparing against {path}:\n{}", cmp.describe());
         if baseline.scenarios.is_empty() {
             println!(

@@ -24,6 +24,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             cloudlets: 400,
             loaded: true,
             distribution: CloudletDistribution::Uniform,
+            variable_vms: false,
             scheduler: SchedulerKind::TimeShared,
             nodes: &[1, 2, 3, 6],
             grid_workers: 1,
@@ -42,6 +43,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             cloudlets: 1,
             loaded: false,
             distribution: CloudletDistribution::Uniform,
+            variable_vms: false,
             scheduler: SchedulerKind::TimeShared,
             nodes: &[1, 4],
             grid_workers: 0,
@@ -67,6 +69,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             cloudlets: 1200,
             loaded: false,
             distribution: CloudletDistribution::Variable,
+            variable_vms: false,
             scheduler: SchedulerKind::TimeShared,
             nodes: &[1, 3],
             grid_workers: 1,
@@ -88,6 +91,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 head_pct: 27,
                 tail_divisor: 200,
             },
+            variable_vms: false,
             scheduler: SchedulerKind::TimeShared,
             nodes: &[1, 2, 4],
             grid_workers: 1,
@@ -114,6 +118,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 head_pct: 27,
                 tail_divisor: 200,
             },
+            variable_vms: false,
             scheduler: SchedulerKind::TimeShared,
             nodes: &[1],
             grid_workers: 1,
@@ -139,9 +144,31 @@ pub fn registry() -> Vec<ScenarioSpec> {
             cloudlets: 400,
             loaded: true,
             distribution: CloudletDistribution::Uniform,
+            variable_vms: false,
             scheduler: SchedulerKind::TimeShared,
             nodes: &[4],
             grid_workers: 0,
+            mr: None,
+            elastic: None,
+        },
+        ScenarioSpec {
+            name: "megascale_broker",
+            summary: "100k cloudlets on heterogeneous VMs: DES throughput, \
+                      next-completion vs polling, indexed vs heap queue",
+            paper_ref: "§3 \"as fast as the technology it simulates\" / \
+                        D'Angelo & Marzolla's event-list bottleneck",
+            kind: ScenarioKind::Megascale,
+            datacenters: 25,
+            hosts_per_datacenter: 2,
+            pes_per_host: 8,
+            vms: 250,
+            cloudlets: 100_000,
+            loaded: false,
+            distribution: CloudletDistribution::Uniform,
+            variable_vms: true,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1],
+            grid_workers: 1,
             mr: None,
             elastic: None,
         },
@@ -163,9 +190,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn at_least_six_unique_scenarios() {
+    fn at_least_seven_unique_scenarios() {
         let names = names();
-        assert!(names.len() >= 6, "registry shrank: {names:?}");
+        assert!(names.len() >= 7, "registry shrank: {names:?}");
         let set: std::collections::HashSet<_> = names.iter().collect();
         assert_eq!(set.len(), names.len(), "duplicate scenario names");
     }
@@ -197,8 +224,19 @@ mod tests {
             "bursty_broker",
             "elastic_closed_loop",
             "seq_vs_threaded",
+            "megascale_broker",
         ] {
             assert!(find(required).is_some(), "missing {required}");
         }
+    }
+
+    #[test]
+    fn megascale_shape_fits_capacity() {
+        let spec = find("megascale_broker").unwrap();
+        assert_eq!(spec.cloudlets, 100_000);
+        assert!(spec.variable_vms, "heterogeneous VMs are the point");
+        // every VM must place: one PE each against the PE pool
+        let pes = spec.datacenters * spec.hosts_per_datacenter * spec.pes_per_host;
+        assert!(pes >= spec.vms, "{pes} PEs for {} VMs", spec.vms);
     }
 }

@@ -19,6 +19,10 @@ use crate::mapreduce::{
 };
 use crate::runtime::workload::NativeBurnModel;
 use crate::scenarios::spec::{MrBackend, ScenarioKind, ScenarioSpec};
+use crate::sim::broker::RoundRobinBinder;
+use crate::sim::des::EngineMode;
+use crate::sim::queue::QueueKind;
+use crate::sim::scenario::{run_scenario_custom, ScenarioResult};
 use crate::util::stats::{mean, stddev};
 
 /// Runner options.
@@ -51,6 +55,9 @@ struct Measured {
     scale_outs: u64,
     scale_ins: u64,
     scale_events: Vec<ScaleEventOut>,
+    /// DES events dispatched by the headline run, when the driver knows
+    /// it (feeds the `events_per_sec` throughput figure).
+    events_dispatched: Option<u64>,
     extras: Vec<(String, f64)>,
     wall_extras: Vec<(String, f64)>,
 }
@@ -70,12 +77,20 @@ pub fn run_spec(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOutcom
         .sequential_virtual_s
         .map(|seq| seq / m.virtual_s)
         .filter(|s| s.is_finite());
+    let wall_mean = mean(&walls);
+    let events_per_sec = m
+        .events_dispatched
+        .filter(|_| wall_mean > 0.0)
+        .map(|e| e as f64 / wall_mean)
+        .filter(|r| r.is_finite());
     Ok(ScenarioOutcome {
         name: spec.name.to_string(),
         kind: spec.kind.tag().to_string(),
         virtual_s: m.virtual_s,
-        wall_mean_s: mean(&walls),
+        wall_mean_s: wall_mean,
         wall_std_s: stddev(&walls),
+        wall_clock_ms: wall_mean * 1e3,
+        events_per_sec,
         sequential_virtual_s: m.sequential_virtual_s,
         speedup_vs_sequential: speedup,
         scale_outs: m.scale_outs,
@@ -120,6 +135,7 @@ fn run_once(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ScenarioKind::MapReduce => mapreduce(spec, quick),
         ScenarioKind::Elastic => elastic(spec, quick),
         ScenarioKind::SeqVsThreaded => seq_vs_threaded(spec, quick),
+        ScenarioKind::Megascale => megascale(spec, quick),
     }
 }
 
@@ -130,6 +146,7 @@ fn empty_measured(virtual_s: f64) -> Measured {
         scale_outs: 0,
         scale_ins: 0,
         scale_events: Vec::new(),
+        events_dispatched: None,
         extras: Vec::new(),
         wall_extras: Vec::new(),
     }
@@ -173,6 +190,7 @@ fn sweep(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
     }
     let mut m = empty_measured(best);
     m.sequential_virtual_s = sequential;
+    m.events_dispatched = Some(baseline.events);
     m.extras = extras;
     Ok(m)
 }
@@ -190,6 +208,7 @@ fn matchmaking(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
     }
     let mut m = empty_measured(headline);
     m.sequential_virtual_s = Some(baseline.sim_time_s);
+    m.events_dispatched = Some(baseline.events);
     m.extras = extras;
     Ok(m)
 }
@@ -302,12 +321,131 @@ fn seq_vs_threaded(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
     }
     let speedup = if wall_thr > 0.0 { wall_seq / wall_thr } else { 1.0 };
     let mut m = empty_measured(seq.sim_time_s);
+    m.events_dispatched = Some(seq.events);
     m.wall_extras = vec![
         ("wall_sequential_s".to_string(), wall_seq),
         ("wall_threaded_s".to_string(), wall_thr),
         ("wall_speedup".to_string(), speedup),
     ];
     Ok(m)
+}
+
+/// Megascale DES throughput: one cloudlet population, three runs.
+///
+/// 1. Next-completion engine on the indexed calendar queue — the shipping
+///    hot path and the headline measurement.
+/// 2. The same engine on the seed `BinaryHeap` queue — the *referee*:
+///    every virtual quantity (clock, per-cloudlet finish times, event
+///    count) must match run 1 bit-for-bit or the scenario errors out.
+/// 3. The seed polling engine — the event-volume comparator: it must
+///    dispatch strictly more events for the same bit-exact virtual times,
+///    and the reduction factor is recorded as a gated extra.
+fn megascale(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
+    let binder = || Box::<RoundRobinBinder>::default();
+    let cfg_indexed = SimConfig {
+        des_engine: EngineMode::NextCompletion,
+        event_queue: QueueKind::Indexed,
+        ..spec.sim_config(quick)
+    };
+    let run = |cfg: &SimConfig| -> (ScenarioResult, f64) {
+        let t0 = Instant::now();
+        let r = run_scenario_custom(cfg, spec.variable_vms, false, binder());
+        (r, t0.elapsed().as_secs_f64())
+    };
+    let (fast, wall_fast) = run(&cfg_indexed);
+
+    // referee 1: the heap-backed queue must reproduce every virtual
+    // quantity bit-for-bit
+    let cfg_heap = SimConfig {
+        event_queue: QueueKind::Heap,
+        ..cfg_indexed.clone()
+    };
+    let (heap, wall_heap) = run(&cfg_heap);
+    check_bit_exact(spec.name, "indexed-vs-heap queue", &fast, &heap, true)?;
+    if fast.events_processed != heap.events_processed {
+        return Err(C2SError::Other(format!(
+            "{}: queue implementations dispatched different event counts: {} vs {}",
+            spec.name, fast.events_processed, heap.events_processed
+        )));
+    }
+
+    // referee 2: the polling engine pays more events for the same
+    // per-cloudlet times. Its *final clock* may trail a stale timer that
+    // fired after the last completion (the timer's absolute prediction
+    // rounds differently from the re-arm-accumulated completion instant),
+    // so across engines the clock is ordered, not bit-compared.
+    let cfg_polling = SimConfig {
+        des_engine: EngineMode::Polling,
+        event_queue: QueueKind::Heap,
+        ..cfg_indexed.clone()
+    };
+    let (polling, wall_polling) = run(&cfg_polling);
+    check_bit_exact(spec.name, "next-completion-vs-polling engine", &fast, &polling, false)?;
+    if fast.sim_clock > polling.sim_clock {
+        return Err(C2SError::Other(format!(
+            "{}: next-completion clock {} beyond the polling clock {}",
+            spec.name, fast.sim_clock, polling.sim_clock
+        )));
+    }
+
+    let reduction = polling.events_processed as f64 / fast.events_processed.max(1) as f64;
+    // deterministic drift sentinel over the full finish-time vector
+    let finish_checksum: f64 = fast.cloudlets.iter().map(|c| c.finish_time).sum();
+
+    let mut m = empty_measured(fast.sim_clock);
+    m.events_dispatched = Some(fast.events_processed);
+    m.extras = vec![
+        ("cloudlets_ok".to_string(), fast.successes() as f64),
+        ("events_nextcompletion".to_string(), fast.events_processed as f64),
+        ("events_polling".to_string(), polling.events_processed as f64),
+        ("event_reduction".to_string(), reduction),
+        ("finish_checksum".to_string(), finish_checksum),
+    ];
+    m.wall_extras = vec![
+        ("wall_indexed_s".to_string(), wall_fast),
+        ("wall_heap_s".to_string(), wall_heap),
+        ("wall_polling_s".to_string(), wall_polling),
+    ];
+    Ok(m)
+}
+
+/// Fail with a drift report unless both runs agree bit-for-bit on every
+/// per-cloudlet virtual time (`compare_clock` additionally bit-compares
+/// the final clock — exact across queue implementations, while across
+/// engine modes only the per-cloudlet times are comparable).
+fn check_bit_exact(
+    scenario: &str,
+    what: &str,
+    a: &ScenarioResult,
+    b: &ScenarioResult,
+    compare_clock: bool,
+) -> Result<()> {
+    if compare_clock && a.sim_clock.to_bits() != b.sim_clock.to_bits() {
+        return Err(C2SError::Other(format!(
+            "{scenario}: {what} virtual clock drifted: {} vs {}",
+            a.sim_clock, b.sim_clock
+        )));
+    }
+    if a.cloudlets.len() != b.cloudlets.len() {
+        return Err(C2SError::Other(format!(
+            "{scenario}: {what} cloudlet counts differ: {} vs {}",
+            a.cloudlets.len(),
+            b.cloudlets.len()
+        )));
+    }
+    for (x, y) in a.cloudlets.iter().zip(&b.cloudlets) {
+        if x.id != y.id
+            || x.finish_time.to_bits() != y.finish_time.to_bits()
+            || x.start_time.to_bits() != y.start_time.to_bits()
+        {
+            return Err(C2SError::Other(format!(
+                "{scenario}: {what} virtual times drifted at cloudlet {}: \
+                 start {} vs {}, finish {} vs {}",
+                x.id, x.start_time, y.start_time, x.finish_time, y.finish_time
+            )));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -359,6 +497,31 @@ mod tests {
         let out = run_spec(&spec, &quick_opts()).unwrap();
         assert!(out.virtual_s > 0.0);
         assert!(out.wall_extras.iter().any(|(k, _)| k == "wall_speedup"));
+    }
+
+    #[test]
+    fn megascale_reduces_event_volume_with_exact_times() {
+        let spec = find("megascale_broker").unwrap();
+        let out = run_spec(&spec, &quick_opts()).unwrap();
+        let extra = |k: &str| {
+            out.extras
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing extra {k}"))
+        };
+        // the acceptance gate: >= 5x fewer dispatched events than polling
+        // (the run itself already errored if virtual times drifted)
+        assert!(
+            extra("event_reduction") >= 5.0,
+            "reduction {} (nc {}, polling {})",
+            extra("event_reduction"),
+            extra("events_nextcompletion"),
+            extra("events_polling"),
+        );
+        assert_eq!(extra("cloudlets_ok"), spec.sim_config(true).no_of_cloudlets as f64);
+        assert!(out.events_per_sec.unwrap_or(0.0) > 0.0, "{out:?}");
+        assert!(out.wall_clock_ms >= 0.0);
     }
 
     #[test]

@@ -27,6 +27,11 @@ pub enum ScenarioKind {
     /// Same deployment run with `workers = 1` vs all cores; virtual time
     /// must be identical, wall time is the payload.
     SeqVsThreaded,
+    /// Pure-DES throughput at scale: the same cloudlet population run on
+    /// the next-completion engine (indexed + heap queues, cross-checked
+    /// bit-for-bit) and on the seed polling engine, proving the event
+    /// volume reduction with identical virtual times.
+    Megascale,
 }
 
 impl ScenarioKind {
@@ -38,6 +43,7 @@ impl ScenarioKind {
             ScenarioKind::MapReduce => "mapreduce",
             ScenarioKind::Elastic => "elastic",
             ScenarioKind::SeqVsThreaded => "seq-vs-threaded",
+            ScenarioKind::Megascale => "megascale",
         }
     }
 }
@@ -130,6 +136,9 @@ pub struct ScenarioSpec {
     pub loaded: bool,
     /// Cloudlet length distribution.
     pub distribution: CloudletDistribution,
+    /// Draw heterogeneous VM sizes (§5.1.2 variable sizing) while keeping
+    /// the cloudlet population on `distribution`.
+    pub variable_vms: bool,
     /// Cloudlet scheduler discipline on every VM.
     pub scheduler: SchedulerKind,
     /// Grid member counts to sweep (static kinds); for MapReduce these
@@ -201,6 +210,7 @@ mod tests {
             cloudlets: 64,
             loaded: true,
             distribution: CloudletDistribution::Uniform,
+            variable_vms: false,
             scheduler: SchedulerKind::TimeShared,
             nodes: &[1, 2],
             grid_workers: 1,

@@ -67,6 +67,9 @@ pub struct Broker {
     /// Cloudlets to schedule.
     cloudlets: Vec<Cloudlet>,
     binder: Box<dyn CloudletBinder>,
+    /// Submit one batched event per datacenter instead of one event per
+    /// cloudlet (the next-completion engine's default).
+    batch_submit: bool,
     // --- runtime state ---
     /// Successfully created VMs.
     pub created_vms: Vec<Vm>,
@@ -100,6 +103,7 @@ impl Broker {
             vm_requests,
             cloudlets,
             binder,
+            batch_submit: true,
             created_vms: Vec::new(),
             vm_dc: HashMap::new(),
             retry_idx: HashMap::new(),
@@ -111,6 +115,13 @@ impl Broker {
         }
     }
 
+    /// Per-cloudlet submission events (the seed polling engine's volume);
+    /// `true` groups submissions into one event per datacenter.
+    pub fn with_batch_submit(mut self, batch: bool) -> Self {
+        self.batch_submit = batch;
+        self
+    }
+
     /// Entity start: fan VM creation requests out round-robin over
     /// datacenters.
     pub fn start(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
@@ -120,7 +131,7 @@ impl Broker {
         for (i, vm) in reqs.into_iter().enumerate() {
             let dc = self.datacenters[i % self.datacenters.len()];
             self.retry_idx.insert(vm.id, i % self.datacenters.len());
-            ctx.schedule(0.0, self_id, dc, EventTag::VmCreate, EventData::Vm(vm));
+            ctx.schedule(0.0, self_id, dc, EventTag::VmCreate, EventData::Vm(Box::new(vm)));
         }
         if self.pending_acks == 0 {
             self.submit_cloudlets(self_id, ctx);
@@ -131,14 +142,50 @@ impl Broker {
         let mut cloudlets = std::mem::take(&mut self.cloudlets);
         self.binder.bind(&mut cloudlets, &self.created_vms);
         self.bind_steps = self.binder.search_steps();
-        for c in cloudlets {
-            if c.status == CloudletStatus::Failed || c.vm_id.is_none() {
-                self.finished.push(c);
-                continue;
+        if self.batch_submit {
+            // one event per datacenter; per-VM submission order is a
+            // subsequence of the global order, so scheduler state evolves
+            // identically to per-cloudlet submission
+            let mut order: Vec<EntityId> = Vec::new();
+            let mut per_dc: HashMap<EntityId, Vec<Cloudlet>> = HashMap::new();
+            for c in cloudlets {
+                if c.status == CloudletStatus::Failed || c.vm_id.is_none() {
+                    self.finished.push(c);
+                    continue;
+                }
+                let dc = self.vm_dc[&c.vm_id.unwrap()];
+                let batch = per_dc.entry(dc).or_default();
+                if batch.is_empty() {
+                    order.push(dc);
+                }
+                batch.push(c);
             }
-            let vm_id = c.vm_id.unwrap();
-            let dc = self.vm_dc[&vm_id];
-            ctx.schedule(0.0, self_id, dc, EventTag::CloudletSubmit, EventData::Cloudlet(c));
+            for dc in order {
+                let batch = per_dc.remove(&dc).expect("batched datacenter");
+                ctx.schedule(
+                    0.0,
+                    self_id,
+                    dc,
+                    EventTag::CloudletSubmit,
+                    EventData::Cloudlets(batch),
+                );
+            }
+        } else {
+            for c in cloudlets {
+                if c.status == CloudletStatus::Failed || c.vm_id.is_none() {
+                    self.finished.push(c);
+                    continue;
+                }
+                let vm_id = c.vm_id.unwrap();
+                let dc = self.vm_dc[&vm_id];
+                ctx.schedule(
+                    0.0,
+                    self_id,
+                    dc,
+                    EventTag::CloudletSubmit,
+                    EventData::Cloudlet(Box::new(c)),
+                );
+            }
         }
     }
 
@@ -152,7 +199,7 @@ impl Broker {
                 };
                 if ok {
                     self.vm_dc.insert(vm.id, ev.src);
-                    self.created_vms.push(vm);
+                    self.created_vms.push(*vm);
                     self.pending_acks -= 1;
                 } else {
                     // try the next datacenter; give up once every
@@ -174,12 +221,11 @@ impl Broker {
                     self.submit_cloudlets(self_id, ctx);
                 }
             }
-            EventTag::CloudletReturn => {
-                let EventData::Cloudlet(c) = ev.data else {
-                    return;
-                };
-                self.finished.push(c);
-            }
+            EventTag::CloudletReturn => match ev.data {
+                EventData::Cloudlet(c) => self.finished.push(*c),
+                EventData::Cloudlets(cs) => self.finished.extend(cs),
+                _ => {}
+            },
             _ => {}
         }
     }

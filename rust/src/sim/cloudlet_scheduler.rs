@@ -151,6 +151,18 @@ impl VmScheduler {
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
+    /// Absolute virtual time of the earliest completion (None when idle).
+    ///
+    /// This is the next-completion scheduling contract: the datacenter
+    /// arms exactly one wake-up per VM at this instant and re-arms it on
+    /// every submit/finish. The instant is `now + delay` with the *same*
+    /// float operations the polling engine uses when it schedules its
+    /// delay-relative update, so both engines produce bit-identical event
+    /// timestamps — the basis of the cross-engine determinism referee.
+    pub fn next_completion_time(&self, now: f64) -> Option<f64> {
+        self.next_completion_delay(now).map(|d| now + d)
+    }
+
     /// Number of cloudlets currently running or queued.
     pub fn load(&self) -> usize {
         self.running.len() + self.waiting.len()
@@ -235,6 +247,17 @@ mod tests {
         let fin = s.update(2.0);
         assert_eq!(fin.len(), 1);
         assert_eq!(fin[0].id, 2);
+    }
+
+    #[test]
+    fn next_completion_time_is_now_plus_delay() {
+        let mut s = VmScheduler::new(SchedulerKind::TimeShared, 1000.0, 1);
+        assert_eq!(s.next_completion_time(3.0), None, "idle VM never wakes");
+        s.submit(cl(0, 500), 3.0);
+        let d = s.next_completion_delay(3.0).unwrap();
+        let t = s.next_completion_time(3.0).unwrap();
+        assert_eq!(t.to_bits(), (3.0 + d).to_bits(), "bit-identical instant");
+        assert!((t - 3.5).abs() < 1e-9);
     }
 
     #[test]

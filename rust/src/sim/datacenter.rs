@@ -2,13 +2,30 @@
 //! infrastructure-as-a-service" (§2.1.1). Handles VM creation requests via
 //! its allocation policy and drives cloudlet execution via per-VM
 //! schedulers, returning finished cloudlets to their broker.
+//!
+//! Two engine modes drive cloudlet progress ([`EngineMode`]):
+//!
+//! * **Polling** (the seed behaviour): every submit re-schedules a
+//!   version-guarded `VmProcessingUpdate`; stale timers are dispatched and
+//!   discarded, and every finished cloudlet returns in its own event.
+//! * **Next-completion** (the [`Datacenter::new`] default; the calibrated
+//!   distribution pipeline opts into polling via `SimConfig`): exactly
+//!   one wake-up is armed per VM at
+//!   [`VmScheduler::next_completion_time`], re-armed via queue
+//!   *cancellation* on every submit/finish, so no stale timer is ever
+//!   dispatched; finished cloudlets return in batches. Virtual-time
+//!   results are bit-identical to polling — the scheduler advances through
+//!   the same `(submit, completion)` instants either way — but total event
+//!   volume drops from O(cloudlets × updates) toward O(VMs + completions).
 
 use std::collections::HashMap;
 
+use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
 use crate::sim::cloudlet_scheduler::{SchedulerKind, VmScheduler};
-use crate::sim::des::SimCtx;
+use crate::sim::des::{EngineMode, SimCtx};
 use crate::sim::event::{EntityId, EventData, EventTag, SimEvent};
 use crate::sim::host::Host;
+use crate::sim::queue::EventHandle;
 use crate::sim::vm::Vm;
 use crate::sim::vm_allocation::{VmAllocationPolicy, VmAllocationPolicySimple};
 
@@ -20,27 +37,33 @@ pub struct Datacenter {
     pub hosts: Vec<Host>,
     policy: Box<dyn VmAllocationPolicy>,
     scheduler_kind: SchedulerKind,
+    engine: EngineMode,
     /// Per-VM schedulers keyed by VM id.
     schedulers: HashMap<usize, VmScheduler>,
     /// VMs placed here.
     pub vms: HashMap<usize, Vm>,
     /// Broker entity that owns each VM (for cloudlet returns).
     vm_owner: HashMap<usize, EntityId>,
+    /// The armed wake-up per VM (next-completion mode only).
+    pending_wakeup: HashMap<usize, EventHandle>,
     /// Per-event processing cost accounting (fed to the §3.3 model).
     pub events_handled: u64,
 }
 
 impl Datacenter {
-    /// Build a datacenter with `hosts` and the default allocation policy.
+    /// Build a datacenter with `hosts`, the default allocation policy and
+    /// the default next-completion engine.
     pub fn new(dc_id: usize, hosts: Vec<Host>, scheduler_kind: SchedulerKind) -> Self {
         Self {
             dc_id,
             hosts,
             policy: Box::new(VmAllocationPolicySimple),
             scheduler_kind,
+            engine: EngineMode::NextCompletion,
             schedulers: HashMap::new(),
             vms: HashMap::new(),
             vm_owner: HashMap::new(),
+            pending_wakeup: HashMap::new(),
             events_handled: 0,
         }
     }
@@ -51,10 +74,17 @@ impl Datacenter {
         self
     }
 
+    /// Select the engine mode (polling reproduces the seed event volume).
+    pub fn with_engine(mut self, engine: EngineMode) -> Self {
+        self.engine = engine;
+        self
+    }
+
     fn handle_vm_create(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
-        let EventData::Vm(mut vm) = ev.data else {
+        let EventData::Vm(vm) = ev.data else {
             return;
         };
+        let mut vm = *vm;
         let ok = match self.policy.select_host(&self.hosts, &vm) {
             Some(h) if self.hosts[h].allocate(&vm) => {
                 vm.host = Some(h);
@@ -68,41 +98,69 @@ impl Datacenter {
             }
             _ => false,
         };
-        ctx.schedule(0.0, self_id, ev.src, EventTag::VmCreateAck, EventData::VmAck(vm, ok));
+        ctx.schedule(
+            0.0,
+            self_id,
+            ev.src,
+            EventTag::VmCreateAck,
+            EventData::VmAck(Box::new(vm), ok),
+        );
     }
 
     fn handle_cloudlet_submit(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
-        let EventData::Cloudlet(cloudlet) = ev.data else {
-            return;
-        };
-        let Some(vm_id) = cloudlet.vm_id else {
-            // unbound cloudlet: fail it straight back
-            let mut c = cloudlet;
-            c.status = crate::sim::cloudlet::CloudletStatus::Failed;
-            ctx.schedule(0.0, self_id, ev.src, EventTag::CloudletReturn, EventData::Cloudlet(c));
-            return;
-        };
         let owner = ev.src;
-        self.vm_owner.entry(vm_id).or_insert(owner);
-        let Some(sched) = self.schedulers.get_mut(&vm_id) else {
-            let mut c = cloudlet;
-            c.status = crate::sim::cloudlet::CloudletStatus::Failed;
-            ctx.schedule(0.0, self_id, ev.src, EventTag::CloudletReturn, EventData::Cloudlet(c));
-            return;
+        let cloudlets: Vec<Cloudlet> = match ev.data {
+            EventData::Cloudlet(c) => vec![*c],
+            EventData::Cloudlets(cs) => cs,
+            _ => return,
         };
-        sched.submit(cloudlet, ctx.clock());
-        // a submit may have completed earlier work
-        for done in sched.drain_pending_finished() {
-            let to = self.vm_owner[&vm_id];
-            ctx.schedule(0.0, self_id, to, EventTag::CloudletReturn, EventData::Cloudlet(done));
+        let mut failed: Vec<Cloudlet> = Vec::new();
+        // VM ids that received work, in first-touch order (deterministic)
+        let mut touched: Vec<usize> = Vec::new();
+        for mut c in cloudlets {
+            let Some(vm_id) = c.vm_id else {
+                // unbound cloudlet: fail it straight back
+                c.status = CloudletStatus::Failed;
+                failed.push(c);
+                continue;
+            };
+            self.vm_owner.entry(vm_id).or_insert(owner);
+            let Some(sched) = self.schedulers.get_mut(&vm_id) else {
+                c.status = CloudletStatus::Failed;
+                failed.push(c);
+                continue;
+            };
+            sched.submit(c, ctx.clock());
+            if !touched.contains(&vm_id) {
+                touched.push(vm_id);
+            }
         }
-        self.reschedule_update(self_id, vm_id, ctx);
+        if !failed.is_empty() {
+            self.send_returns(self_id, owner, failed, ctx);
+        }
+        for vm_id in touched {
+            // a submit may have completed earlier work
+            let done = self
+                .schedulers
+                .get_mut(&vm_id)
+                .expect("touched scheduler")
+                .drain_pending_finished();
+            if !done.is_empty() {
+                let to = self.vm_owner[&vm_id];
+                self.send_returns(self_id, to, done, ctx);
+            }
+            self.reschedule_update(self_id, vm_id, ctx);
+        }
     }
 
     fn handle_update(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
         let EventData::UpdateToken(vm_id, version) = ev.data else {
             return;
         };
+        // this wake-up has fired: forget its handle (but never a newer one)
+        if self.pending_wakeup.get(&vm_id) == Some(&ev.seq) {
+            self.pending_wakeup.remove(&vm_id);
+        }
         let Some(sched) = self.schedulers.get_mut(&vm_id) else {
             return;
         };
@@ -111,26 +169,81 @@ impl Datacenter {
         }
         let finished = sched.update(ctx.clock());
         let owner = self.vm_owner.get(&vm_id).copied();
-        for done in finished {
-            if let Some(to) = owner {
-                ctx.schedule(0.0, self_id, to, EventTag::CloudletReturn, EventData::Cloudlet(done));
+        if let Some(to) = owner {
+            if !finished.is_empty() {
+                self.send_returns(self_id, to, finished, ctx);
             }
         }
         self.reschedule_update(self_id, vm_id, ctx);
+    }
+
+    /// Return finished/failed cloudlets to their broker: one event per
+    /// cloudlet under polling (the seed event volume), one batch under
+    /// next-completion.
+    fn send_returns(
+        &self,
+        self_id: EntityId,
+        to: EntityId,
+        mut done: Vec<Cloudlet>,
+        ctx: &mut SimCtx,
+    ) {
+        match self.engine {
+            EngineMode::Polling => {
+                for c in done {
+                    ctx.schedule(
+                        0.0,
+                        self_id,
+                        to,
+                        EventTag::CloudletReturn,
+                        EventData::Cloudlet(Box::new(c)),
+                    );
+                }
+            }
+            EngineMode::NextCompletion => {
+                let data = if done.len() == 1 {
+                    EventData::Cloudlet(Box::new(done.pop().expect("one cloudlet")))
+                } else {
+                    EventData::Cloudlets(done)
+                };
+                ctx.schedule(0.0, self_id, to, EventTag::CloudletReturn, data);
+            }
+        }
     }
 
     fn reschedule_update(&mut self, self_id: EntityId, vm_id: usize, ctx: &mut SimCtx) {
         let Some(sched) = self.schedulers.get(&vm_id) else {
             return;
         };
-        if let Some(delay) = sched.next_completion_delay(ctx.clock()) {
-            ctx.schedule(
-                delay,
-                self_id,
-                self_id,
-                EventTag::VmProcessingUpdate,
-                EventData::UpdateToken(vm_id, sched.version),
-            );
+        match self.engine {
+            EngineMode::Polling => {
+                if let Some(delay) = sched.next_completion_delay(ctx.clock()) {
+                    ctx.schedule(
+                        delay,
+                        self_id,
+                        self_id,
+                        EventTag::VmProcessingUpdate,
+                        EventData::UpdateToken(vm_id, sched.version),
+                    );
+                }
+            }
+            EngineMode::NextCompletion => {
+                // re-arm: cancel the stale wake-up (it is never dispatched,
+                // never counted), then arm exactly one at the earliest
+                // completion
+                if let Some(h) = self.pending_wakeup.remove(&vm_id) {
+                    ctx.cancel(h);
+                }
+                if let Some(t) = sched.next_completion_time(ctx.clock()) {
+                    let h = ctx.schedule_at(
+                        t,
+                        self_id,
+                        self_id,
+                        EventTag::VmProcessingUpdate,
+                        EventData::UpdateToken(vm_id, sched.version),
+                    );
+                    self.pending_wakeup.insert(vm_id, h);
+                }
+            }
         }
     }
 
@@ -149,7 +262,8 @@ impl Datacenter {
 #[cfg(test)]
 mod tests {
     // Datacenter behaviour is exercised end-to-end through scenario.rs;
-    // unit tests here cover the allocation/ack path in isolation.
+    // unit tests here cover the allocation/ack path in isolation, under
+    // both engine modes.
     use super::*;
     use crate::sim::cloudlet::Cloudlet;
     use crate::sim::des::{Entity, Simulation};
@@ -166,8 +280,8 @@ mod tests {
                 // ask dc (entity 0) to create two VMs, one impossible
                 let vm_ok = Vm::new(0, 0, 1000, 1, 512, 1);
                 let vm_bad = Vm::new(1, 0, 99_999, 1, 512, 1);
-                ctx.schedule(0.0, self_id, 0, EventTag::VmCreate, EventData::Vm(vm_ok));
-                ctx.schedule(0.0, self_id, 0, EventTag::VmCreate, EventData::Vm(vm_bad));
+                ctx.schedule(0.0, self_id, 0, EventTag::VmCreate, EventData::Vm(Box::new(vm_ok)));
+                ctx.schedule(0.0, self_id, 0, EventTag::VmCreate, EventData::Vm(Box::new(vm_bad)));
             }
         }
         fn process(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
@@ -188,12 +302,16 @@ mod tests {
                                 self_id,
                                 0,
                                 EventTag::CloudletSubmit,
-                                EventData::Cloudlet(c),
+                                EventData::Cloudlet(Box::new(c)),
                             );
                         }
                     }
                     EventTag::CloudletReturn => {
-                        *returns += 1;
+                        *returns += match &ev.data {
+                            EventData::Cloudlet(_) => 1,
+                            EventData::Cloudlets(cs) => cs.len(),
+                            _ => 0,
+                        };
                     }
                     _ => {}
                 },
@@ -201,10 +319,10 @@ mod tests {
         }
     }
 
-    #[test]
-    fn create_ack_and_cloudlet_return() {
+    fn run_probe(engine: EngineMode) -> (Vec<bool>, usize, f64, u64) {
         let mut sim = Simulation::new();
-        let dc = Datacenter::new(0, vec![Host::new(0, 4, 2000, 8192)], SchedulerKind::TimeShared);
+        let dc = Datacenter::new(0, vec![Host::new(0, 4, 2000, 8192)], SchedulerKind::TimeShared)
+            .with_engine(engine);
         sim.add_entity(Ent::Dc(dc));
         let probe = sim.add_entity(Ent::Probe {
             acks: Vec::new(),
@@ -214,9 +332,25 @@ mod tests {
         let Ent::Probe { acks, returns } = sim.entity(probe) else {
             unreachable!()
         };
-        assert_eq!(acks, &vec![true, false], "one VM fits, one does not");
-        assert_eq!(*returns, 1, "the cloudlet came back");
+        (acks.clone(), *returns, stats.clock, stats.events_processed)
+    }
+
+    #[test]
+    fn create_ack_and_cloudlet_return() {
+        let (acks, returns, clock, _) = run_probe(EngineMode::NextCompletion);
+        assert_eq!(acks, vec![true, false], "one VM fits, one does not");
+        assert_eq!(returns, 1, "the cloudlet came back");
         // 2000 MI at the VM's 1000 MIPS = 2 simulated seconds
-        assert!((stats.clock - 2.0).abs() < 1e-9, "clock={}", stats.clock);
+        assert!((clock - 2.0).abs() < 1e-9, "clock={clock}");
+    }
+
+    #[test]
+    fn engines_agree_on_virtual_time() {
+        let (acks_p, ret_p, clock_p, events_p) = run_probe(EngineMode::Polling);
+        let (acks_n, ret_n, clock_n, events_n) = run_probe(EngineMode::NextCompletion);
+        assert_eq!(acks_p, acks_n);
+        assert_eq!(ret_p, ret_n);
+        assert_eq!(clock_p.to_bits(), clock_n.to_bits(), "bit-exact virtual time");
+        assert!(events_n <= events_p, "{events_n} vs {events_p}");
     }
 }

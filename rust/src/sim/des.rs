@@ -5,28 +5,51 @@
 //! dispatches to the destination entity. The engine also counts processed
 //! events — the distribution layer charges per-event processing cost to the
 //! master instance's virtual clock (the unparallelizable `k·T1` core of
-//! §3.3).
-
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+//! §3.3). Cancelled events are never dispatched and never counted, so the
+//! §3.3 accounting always reflects exactly the events that were handled.
+//!
+//! The queue itself is pluggable ([`crate::sim::queue::EventQueue`]): the
+//! seed `BinaryHeap` and the indexed calendar queue are selectable per run
+//! and bit-exact against each other — the cross-check the megascale bench
+//! scenario performs on every run.
 
 use crate::sim::event::{EntityId, EventData, EventTag, SimEvent};
+use crate::sim::queue::{make_queue, EventHandle, EventQueue, QueueKind};
+
+/// How the datacenter drives cloudlet progress over virtual time
+/// (`desEngine` in `cloud2sim.properties`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// The seed behaviour: every submit re-schedules a version-guarded
+    /// `VmProcessingUpdate`, stale timers are dispatched and discarded,
+    /// and every finished cloudlet returns in its own event. Event volume
+    /// grows as O(cloudlets × updates).
+    Polling,
+    /// Exactly one armed wake-up per VM at its earliest completion,
+    /// re-armed (via queue cancellation) on submit/finish; submissions and
+    /// returns travel in batches. Event volume is O(VMs + completions)
+    /// with identical virtual-time results. This is the sim-core default
+    /// ([`crate::sim::datacenter::Datacenter::new`]); the calibrated
+    /// distribution pipeline keeps [`EngineMode::Polling`] because its
+    /// §3.3 per-event cost constant is anchored to the seed volume.
+    NextCompletion,
+}
 
 /// The event queue + clock handed to entities while they process events.
 pub struct SimCtx {
     clock: f64,
     seq: u64,
-    queue: BinaryHeap<Reverse<SimEvent>>,
+    queue: Box<dyn EventQueue>,
     events_processed: u64,
     terminated: bool,
 }
 
 impl SimCtx {
-    fn new() -> Self {
+    fn new(queue: Box<dyn EventQueue>) -> Self {
         Self {
             clock: 0.0,
             seq: 0,
-            queue: BinaryHeap::new(),
+            queue,
             events_processed: 0,
             terminated: false,
         }
@@ -37,7 +60,8 @@ impl SimCtx {
         self.clock
     }
 
-    /// Schedule an event `delay` seconds from now.
+    /// Schedule an event `delay` seconds from now. The returned handle
+    /// cancels the event via [`SimCtx::cancel`] while it is still queued.
     pub fn schedule(
         &mut self,
         delay: f64,
@@ -45,21 +69,44 @@ impl SimCtx {
         dst: EntityId,
         tag: EventTag,
         data: EventData,
-    ) {
+    ) -> EventHandle {
         debug_assert!(delay >= 0.0, "cannot schedule into the past");
+        self.schedule_at(self.clock + delay.max(0.0), src, dst, tag, data)
+    }
+
+    /// Schedule an event at an absolute virtual time (used by the
+    /// next-completion scheduler, whose wake-up instants come from
+    /// [`crate::sim::cloudlet_scheduler::VmScheduler::next_completion_time`]).
+    pub fn schedule_at(
+        &mut self,
+        time: f64,
+        src: EntityId,
+        dst: EntityId,
+        tag: EventTag,
+        data: EventData,
+    ) -> EventHandle {
+        debug_assert!(time + 1e-9 >= self.clock, "cannot schedule into the past");
+        let handle = self.seq;
         let ev = SimEvent {
-            time: self.clock + delay.max(0.0),
-            seq: self.seq,
+            time,
+            seq: handle,
             src,
             dst,
             tag,
             data,
         };
         self.seq += 1;
-        self.queue.push(Reverse(ev));
+        self.queue.push(ev);
+        handle
     }
 
-    /// Ask the engine to stop after the current event.
+    /// Cancel a scheduled, not-yet-delivered event. The event is never
+    /// dispatched and never counted in [`SimCtx::events_processed`].
+    pub fn cancel(&mut self, handle: EventHandle) -> bool {
+        self.queue.cancel(handle)
+    }
+
+    /// Ask the engine to stop before the next event.
     pub fn terminate(&mut self) {
         self.terminated = true;
     }
@@ -67,6 +114,11 @@ impl SimCtx {
     /// Events processed so far.
     pub fn events_processed(&self) -> u64 {
         self.events_processed
+    }
+
+    /// Live events currently queued (post-run inspection / tests).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
     }
 }
 
@@ -80,7 +132,7 @@ pub trait Entity {
 
 /// The simulation engine: entity registry + run loop.
 pub struct Simulation<E: Entity> {
-    entities: Vec<Option<E>>,
+    entities: Vec<E>,
     ctx: SimCtx,
 }
 
@@ -94,45 +146,57 @@ pub struct RunStats {
 }
 
 impl<E: Entity> Simulation<E> {
-    /// Empty simulation.
+    /// Empty simulation on the default (indexed) event queue.
     pub fn new() -> Self {
+        Self::with_queue(make_queue(QueueKind::Indexed))
+    }
+
+    /// Empty simulation on an explicit event queue implementation.
+    pub fn with_queue(queue: Box<dyn EventQueue>) -> Self {
         Self {
             entities: Vec::new(),
-            ctx: SimCtx::new(),
+            ctx: SimCtx::new(queue),
         }
     }
 
     /// Register an entity, returning its id.
     pub fn add_entity(&mut self, e: E) -> EntityId {
-        self.entities.push(Some(e));
+        self.entities.push(e);
         self.entities.len() - 1
     }
 
     /// Immutable access to an entity (post-run inspection).
     pub fn entity(&self, id: EntityId) -> &E {
-        self.entities[id].as_ref().expect("entity in flight")
+        &self.entities[id]
+    }
+
+    /// Live events still queued (post-run inspection / tests).
+    pub fn queue_len(&self) -> usize {
+        self.ctx.queue_len()
     }
 
     /// Run to completion (or until an entity calls [`SimCtx::terminate`]).
     /// `max_events` guards against runaway scenarios.
+    ///
+    /// Termination and the event budget are checked *before* popping, so
+    /// stopping never swallows a queued event (the seed engine popped
+    /// first and silently discarded one event on every early stop).
     pub fn run(&mut self, max_events: u64) -> RunStats {
         // start all entities
         for id in 0..self.entities.len() {
-            let mut e = self.entities[id].take().expect("entity");
-            e.start(id, &mut self.ctx);
-            self.entities[id] = Some(e);
+            // split borrow: the entity slot and the context are disjoint
+            // fields, so no take/reinsert dance is needed
+            self.entities[id].start(id, &mut self.ctx);
         }
-        while let Some(Reverse(ev)) = self.ctx.queue.pop() {
-            if self.ctx.terminated || self.ctx.events_processed >= max_events {
+        while !self.ctx.terminated && self.ctx.events_processed < max_events {
+            let Some(ev) = self.ctx.queue.pop() else {
                 break;
-            }
+            };
             debug_assert!(ev.time + 1e-9 >= self.ctx.clock, "time must not run backwards");
             self.ctx.clock = ev.time.max(self.ctx.clock);
             self.ctx.events_processed += 1;
             let dst = ev.dst;
-            let mut e = self.entities[dst].take().expect("destination entity");
-            e.process(dst, ev, &mut self.ctx);
-            self.entities[dst] = Some(e);
+            self.entities[dst].process(dst, ev, &mut self.ctx);
         }
         RunStats {
             clock: self.ctx.clock,
@@ -176,24 +240,26 @@ mod tests {
 
     #[test]
     fn ping_pong_clock_advances() {
-        let mut sim = Simulation::new();
-        let a = sim.add_entity(PingPong {
-            peer: 1,
-            rounds_left: 3,
-            initiator: true,
-            received: Vec::new(),
-        });
-        let _b = sim.add_entity(PingPong {
-            peer: 0,
-            rounds_left: 3,
-            initiator: false,
-            received: Vec::new(),
-        });
-        let stats = sim.run(1000);
-        // a->b at 1, b->a at 2, a->b at 3 ... 7 messages total
-        assert_eq!(stats.events_processed, 7);
-        assert!((stats.clock - 7.0).abs() < 1e-9);
-        assert_eq!(sim.entity(a).received, vec![2.0, 4.0, 6.0]);
+        for kind in [QueueKind::Heap, QueueKind::Indexed] {
+            let mut sim = Simulation::with_queue(make_queue(kind));
+            let a = sim.add_entity(PingPong {
+                peer: 1,
+                rounds_left: 3,
+                initiator: true,
+                received: Vec::new(),
+            });
+            let _b = sim.add_entity(PingPong {
+                peer: 0,
+                rounds_left: 3,
+                initiator: false,
+                received: Vec::new(),
+            });
+            let stats = sim.run(1000);
+            // a->b at 1, b->a at 2, a->b at 3 ... 7 messages total
+            assert_eq!(stats.events_processed, 7, "{kind:?}");
+            assert!((stats.clock - 7.0).abs() < 1e-9);
+            assert_eq!(sim.entity(a).received, vec![2.0, 4.0, 6.0]);
+        }
     }
 
     #[test]
@@ -211,6 +277,9 @@ mod tests {
         sim.add_entity(Loop);
         let stats = sim.run(100);
         assert_eq!(stats.events_processed, 100);
+        // the budget stop happens before popping: the pending event the
+        // 100th dispatch scheduled is still queued, not silently dropped
+        assert_eq!(sim.queue_len(), 1);
     }
 
     #[test]
@@ -228,9 +297,58 @@ mod tests {
                 self.seen.push(ev.seq);
             }
         }
+        for kind in [QueueKind::Heap, QueueKind::Indexed] {
+            let mut sim = Simulation::with_queue(make_queue(kind));
+            let r = sim.add_entity(Recorder { seen: Vec::new() });
+            sim.run(100);
+            assert_eq!(sim.entity(r).seen, vec![0, 1, 2, 3, 4], "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn terminate_stops_before_next_pop() {
+        // regression for the seed loop-ordering bug: the old engine popped
+        // an event first and *then* noticed termination, discarding it
+        struct Stopper;
+        impl Entity for Stopper {
+            fn start(&mut self, id: EntityId, ctx: &mut SimCtx) {
+                ctx.schedule(1.0, id, id, EventTag::Start, EventData::None);
+                ctx.schedule(2.0, id, id, EventTag::Start, EventData::None);
+            }
+            fn process(&mut self, _id: EntityId, _ev: SimEvent, ctx: &mut SimCtx) {
+                ctx.terminate();
+            }
+        }
         let mut sim = Simulation::new();
-        let r = sim.add_entity(Recorder { seen: Vec::new() });
-        sim.run(100);
-        assert_eq!(sim.entity(r).seen, vec![0, 1, 2, 3, 4]);
+        sim.add_entity(Stopper);
+        let stats = sim.run(100);
+        assert_eq!(stats.events_processed, 1, "stopped after the first event");
+        assert!((stats.clock - 1.0).abs() < 1e-9);
+        assert_eq!(sim.queue_len(), 1, "the t=2 event survives the stop");
+    }
+
+    #[test]
+    fn cancelled_event_is_not_dispatched() {
+        struct Canceller {
+            fired: Vec<EventTag>,
+        }
+        impl Entity for Canceller {
+            fn start(&mut self, id: EntityId, ctx: &mut SimCtx) {
+                let h = ctx.schedule(1.0, id, id, EventTag::VmProcessingUpdate, EventData::None);
+                ctx.schedule(2.0, id, id, EventTag::End, EventData::None);
+                assert!(ctx.cancel(h));
+            }
+            fn process(&mut self, _id: EntityId, ev: SimEvent, _ctx: &mut SimCtx) {
+                self.fired.push(ev.tag);
+            }
+        }
+        for kind in [QueueKind::Heap, QueueKind::Indexed] {
+            let mut sim = Simulation::with_queue(make_queue(kind));
+            let c = sim.add_entity(Canceller { fired: Vec::new() });
+            let stats = sim.run(100);
+            assert_eq!(sim.entity(c).fired, vec![EventTag::End], "{kind:?}");
+            assert_eq!(stats.events_processed, 1, "cancelled events are not counted");
+            assert!((stats.clock - 2.0).abs() < 1e-9);
+        }
     }
 }

@@ -1,4 +1,11 @@
 //! Simulation events: the scheduling operations of CloudSim's Fig 2.1.
+//!
+//! [`SimEvent`] is the unit the hot loop moves through the event queue, so
+//! its payload is kept small: the bulky entity payloads (`Vm`, `Cloudlet`)
+//! are boxed, and the hot-path wake-up token (`VmProcessingUpdate` under
+//! next-completion scheduling) is a plain `(vm_id, version)` pair — no
+//! allocation per event. Batched submissions/returns amortize one `Vec`
+//! across a whole group of cloudlets.
 
 use crate::sim::cloudlet::Cloudlet;
 use crate::sim::vm::Vm;
@@ -13,12 +20,14 @@ pub enum EventTag {
     VmCreate,
     /// Datacenter replies with creation success/failure.
     VmCreateAck,
-    /// Broker submits a cloudlet to the datacenter hosting its VM.
+    /// Broker submits one cloudlet (or a batch) to the datacenter hosting
+    /// its VM.
     CloudletSubmit,
-    /// Datacenter returns a finished cloudlet to its broker.
+    /// Datacenter returns finished cloudlets to their broker.
     CloudletReturn,
-    /// Internal datacenter timer: re-evaluate VM processing (time-shared
-    /// scheduler updates).
+    /// Internal datacenter timer: re-evaluate VM processing. Under polling
+    /// this is the version-guarded periodic update; under next-completion
+    /// scheduling it is the single armed wake-up per VM.
     VmProcessingUpdate,
     /// Entity bring-up.
     Start,
@@ -32,12 +41,15 @@ pub enum EventData {
     /// No payload.
     None,
     /// VM creation request.
-    Vm(Vm),
+    Vm(Box<Vm>),
     /// VM creation acknowledgement `(vm, success)`.
-    VmAck(Vm, bool),
-    /// Cloudlet submission / return.
-    Cloudlet(Cloudlet),
-    /// Scheduler update version guard `(vm_id, version)`.
+    VmAck(Box<Vm>, bool),
+    /// Single cloudlet submission / return.
+    Cloudlet(Box<Cloudlet>),
+    /// Batched cloudlet submission / return (next-completion engine).
+    Cloudlets(Vec<Cloudlet>),
+    /// Scheduler update token `(vm_id, version)` — allocation-free, the
+    /// hot tag of the DES inner loop.
     UpdateToken(usize, u64),
 }
 
@@ -46,7 +58,8 @@ pub enum EventData {
 pub struct SimEvent {
     /// Absolute simulated time.
     pub time: f64,
-    /// Monotonic sequence number (FIFO tie-break at equal times).
+    /// Monotonic sequence number (FIFO tie-break at equal times; doubles
+    /// as the cancellation handle).
     pub seq: u64,
     /// Source entity.
     pub src: EntityId,
@@ -101,5 +114,13 @@ mod tests {
         assert!(ev(1.0, 5) < ev(2.0, 1));
         assert!(ev(1.0, 1) < ev(1.0, 2), "FIFO at equal time");
         assert_eq!(ev(1.0, 1), ev(1.0, 1));
+    }
+
+    #[test]
+    fn payloads_stay_small() {
+        // the queue moves SimEvents by value; boxing the entity payloads
+        // keeps the hot loop's copies bounded regardless of entity size
+        assert!(std::mem::size_of::<EventData>() <= 40);
+        assert!(std::mem::size_of::<SimEvent>() <= 96);
     }
 }

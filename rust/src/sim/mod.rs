@@ -1,7 +1,9 @@
 //! The CloudSim substrate: a from-scratch discrete-event cloud simulator
 //! with the entity model of CloudSim 3.x (§2.1.1, Fig 2.1).
 //!
-//! * [`des`] — the discrete-event engine (future event queue, clock).
+//! * [`des`] — the discrete-event engine (run loop, clock, cancellation).
+//! * [`queue`] — pluggable future event queues: the seed `BinaryHeap` and
+//!   the indexed two-tier calendar queue, cross-checkable bit-for-bit.
 //! * [`event`] — event tags and payloads (Fig 2.1 scheduling operations).
 //! * [`pe`], [`host`], [`vm`], [`cloudlet`] — the entity model: processing
 //!   elements with MIPS ratings, hosts aggregating PEs, VMs placed on
@@ -25,6 +27,7 @@ pub mod des;
 pub mod event;
 pub mod host;
 pub mod pe;
+pub mod queue;
 pub mod scenario;
 pub mod vm;
 pub mod vm_allocation;

@@ -6,9 +6,10 @@ use crate::config::{CloudletDistribution, SimConfig};
 use crate::sim::broker::{Broker, CloudletBinder, RoundRobinBinder};
 use crate::sim::cloudlet::Cloudlet;
 use crate::sim::datacenter::Datacenter;
-use crate::sim::des::{Entity, SimCtx, Simulation};
+use crate::sim::des::{EngineMode, Entity, SimCtx, Simulation};
 use crate::sim::event::{EntityId, SimEvent};
 use crate::sim::host::Host;
+use crate::sim::queue::make_queue;
 use crate::sim::vm::Vm;
 use crate::util::rng::SplitMix64;
 
@@ -126,21 +127,39 @@ pub fn make_hosts(cfg: &SimConfig) -> Vec<Host> {
 /// Run a full scenario with the given binder; this is "pure CloudSim" —
 /// the single-JVM semantics both Table 5.1 columns share. The distribution
 /// layer reuses the outputs and re-prices execution on the grid.
+///
+/// The event queue ([`SimConfig::event_queue`]) and the engine mode
+/// ([`SimConfig::des_engine`]) come from the config; virtual-time outputs
+/// are bit-identical across all four combinations — only the dispatched
+/// event count differs between engine modes.
 pub fn run_scenario_with_binder(
     cfg: &SimConfig,
     variable: bool,
     binder: Box<dyn CloudletBinder>,
 ) -> ScenarioResult {
-    let mut sim: Simulation<CloudEntity> = Simulation::new();
+    run_scenario_custom(cfg, variable, variable, binder)
+}
+
+/// Like [`run_scenario_with_binder`] but with independent control over VM
+/// and cloudlet sizing — the megascale throughput scenario runs
+/// heterogeneous VMs against a uniform cloudlet population.
+pub fn run_scenario_custom(
+    cfg: &SimConfig,
+    vm_variable: bool,
+    cloudlet_variable: bool,
+    binder: Box<dyn CloudletBinder>,
+) -> ScenarioResult {
+    let mut sim: Simulation<CloudEntity> = Simulation::with_queue(make_queue(cfg.event_queue));
     let mut dc_ids = Vec::new();
     for d in 0..cfg.no_of_datacenters {
-        let dc = Datacenter::new(d, make_hosts(cfg), cfg.scheduler);
+        let dc = Datacenter::new(d, make_hosts(cfg), cfg.scheduler).with_engine(cfg.des_engine);
         dc_ids.push(sim.add_entity(CloudEntity::Dc(dc)));
     }
-    let vms = make_vms(cfg, variable);
-    let cloudlets = make_cloudlets(cfg, variable);
+    let vms = make_vms(cfg, vm_variable);
+    let cloudlets = make_cloudlets(cfg, cloudlet_variable);
     let n_cloudlets = cloudlets.len();
-    let broker = Broker::new(0, dc_ids.clone(), vms, cloudlets, binder);
+    let broker = Broker::new(0, dc_ids.clone(), vms, cloudlets, binder)
+        .with_batch_submit(cfg.des_engine == EngineMode::NextCompletion);
     let broker_id = sim.add_entity(CloudEntity::Broker(broker));
 
     let stats = sim.run(50_000_000);

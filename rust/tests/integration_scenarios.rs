@@ -93,7 +93,7 @@ fn quick_suite_is_deterministic_end_to_end() {
 /// quantity exactly (shortest-roundtrip float formatting end to end).
 #[test]
 fn report_survives_json_roundtrip() {
-    let specs: Vec<_> = ["bursty_broker", "elastic_closed_loop"]
+    let specs: Vec<_> = ["bursty_broker", "elastic_closed_loop", "megascale_broker"]
         .iter()
         .map(|n| find(n).unwrap())
         .collect();
@@ -107,4 +107,15 @@ fn report_survives_json_roundtrip() {
     let elastic = reparsed.find("elastic_closed_loop").unwrap();
     assert!(elastic.scale_outs >= 1 && elastic.scale_ins >= 1);
     assert!(!elastic.scale_events.is_empty());
+    // the megascale scenario must land its throughput figures in the JSON
+    let mega = reparsed.find("megascale_broker").unwrap();
+    assert!(mega.events_per_sec.unwrap_or(0.0) > 0.0, "{mega:?}");
+    assert!(mega.wall_clock_ms > 0.0);
+    let reduction = mega
+        .extras
+        .iter()
+        .find(|(k, _)| k == "event_reduction")
+        .map(|(_, v)| *v)
+        .expect("event_reduction extra");
+    assert!(reduction >= 5.0, "event reduction only {reduction}x");
 }

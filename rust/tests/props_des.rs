@@ -1,0 +1,229 @@
+//! DES hot-path properties: the indexed calendar queue must be
+//! indistinguishable from the seed binary heap at the pop stream level,
+//! and the next-completion engine must be indistinguishable from the seed
+//! polling engine at the virtual-time level — over randomized schedules,
+//! same-timestamp FIFO batches, zero-delay self-sends and cancellations.
+
+use cloud2sim::config::{CloudletDistribution, SimConfig};
+use cloud2sim::sim::broker::RoundRobinBinder;
+use cloud2sim::sim::cloudlet_scheduler::SchedulerKind;
+use cloud2sim::sim::des::{EngineMode, Entity, SimCtx, Simulation};
+use cloud2sim::sim::event::{EntityId, EventData, EventTag, SimEvent};
+use cloud2sim::sim::queue::{make_queue, EventQueue, QueueKind};
+use cloud2sim::sim::scenario::{run_scenario_custom, ScenarioResult};
+use cloud2sim::util::proptest::{forall, Gen};
+
+fn ev(time: f64, seq: u64) -> SimEvent {
+    SimEvent {
+        time,
+        seq,
+        src: 0,
+        dst: 0,
+        tag: EventTag::Start,
+        data: EventData::None,
+    }
+}
+
+/// Heap and calendar queues produce identical `(time, seq)` pop streams
+/// under randomized interleaved push/pop/cancel traffic that respects the
+/// engine's invariants (monotone clock, strictly increasing seq).
+#[test]
+fn prop_queue_pop_parity_under_random_schedules() {
+    forall("queue-pop-parity", 300, |g: &mut Gen| {
+        let mut heap = make_queue(QueueKind::Heap);
+        let mut cal = make_queue(QueueKind::Indexed);
+        let mut clock = 0.0f64;
+        let mut seq = 0u64;
+        // seqs pushed but neither popped nor cancelled yet
+        let mut live: Vec<u64> = Vec::new();
+        let mut times: Vec<f64> = Vec::new(); // time per pushed seq (by index)
+        let ops = g.usize(1..120);
+        for _ in 0..ops {
+            let roll = g.f64(0.0..1.0);
+            if roll < 0.55 {
+                // push: zero delays, FIFO batches at one timestamp, and
+                // far-future jumps all exercised
+                let delay = match g.usize(0..4) {
+                    0 => 0.0,
+                    1 => g.f64(0.0..2.0),
+                    2 => g.f64(0.0..1e4),
+                    _ => g.f64(0.0..1e8),
+                };
+                let batch = if g.bool(0.3) { g.usize(1..5) } else { 1 };
+                for _ in 0..batch {
+                    let t = clock + delay;
+                    heap.push(ev(t, seq));
+                    cal.push(ev(t, seq));
+                    live.push(seq);
+                    times.push(t);
+                    seq += 1;
+                }
+            } else if roll < 0.85 {
+                // pop from both; streams must agree exactly
+                let a = heap.pop();
+                let b = cal.pop();
+                match (&a, &b) {
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.time.to_bits(), y.time.to_bits(), "time diverged");
+                        assert_eq!(x.seq, y.seq, "seq diverged");
+                        clock = x.time;
+                        live.retain(|&s| s != x.seq);
+                    }
+                    (None, None) => {}
+                    _ => panic!("one queue empty, the other not: {a:?} vs {b:?}"),
+                }
+            } else if !live.is_empty() {
+                // cancel a random scheduled-not-delivered event in both
+                let idx = g.usize(0..live.len());
+                let victim = live.swap_remove(idx);
+                assert!(heap.cancel(victim));
+                assert!(cal.cancel(victim));
+            }
+            assert_eq!(heap.len(), cal.len(), "live counts diverged");
+        }
+        // drain: the tails must agree too, and cancelled events never show
+        let mut last = (f64::NEG_INFINITY, 0u64);
+        loop {
+            let a = heap.pop();
+            let b = cal.pop();
+            match (a, b) {
+                (Some(x), Some(y)) => {
+                    assert_eq!((x.time.to_bits(), x.seq), (y.time.to_bits(), y.seq));
+                    assert!(
+                        (x.time, x.seq) > last,
+                        "pop order regressed: {:?} after {last:?}",
+                        (x.time, x.seq)
+                    );
+                    assert!(live.contains(&x.seq), "cancelled or ghost event popped");
+                    last = (x.time, x.seq);
+                }
+                (None, None) => break,
+                (a, b) => panic!("drain length mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    });
+}
+
+fn random_cfg(g: &mut Gen) -> SimConfig {
+    SimConfig {
+        no_of_datacenters: g.usize(1..4),
+        hosts_per_datacenter: g.usize(1..3),
+        pes_per_host: g.usize(1..5),
+        no_of_vms: g.usize(1..7),
+        no_of_cloudlets: g.usize(1..33),
+        cloudlet_length_mi: g.u64(100..5_000),
+        cloudlet_distribution: if g.bool(0.5) {
+            CloudletDistribution::Uniform
+        } else {
+            CloudletDistribution::Variable
+        },
+        scheduler: if g.bool(0.5) {
+            SchedulerKind::TimeShared
+        } else {
+            SchedulerKind::SpaceShared
+        },
+        seed: g.u64(0..u64::MAX - 1),
+        ..SimConfig::default()
+    }
+}
+
+fn run(cfg: &SimConfig, engine: EngineMode, queue: QueueKind) -> ScenarioResult {
+    let cfg = SimConfig {
+        des_engine: engine,
+        event_queue: queue,
+        ..cfg.clone()
+    };
+    run_scenario_custom(&cfg, false, false, Box::<RoundRobinBinder>::default())
+}
+
+fn assert_same_virtual(a: &ScenarioResult, b: &ScenarioResult, what: &str) {
+    assert_eq!(a.sim_clock.to_bits(), b.sim_clock.to_bits(), "{what}: clock");
+    assert_eq!(a.cloudlets.len(), b.cloudlets.len(), "{what}: cloudlet count");
+    for (x, y) in a.cloudlets.iter().zip(&b.cloudlets) {
+        assert_eq!(x.id, y.id, "{what}: id order");
+        assert_eq!(x.status, y.status, "{what}: status of {}", x.id);
+        assert_eq!(
+            x.finish_time.to_bits(),
+            y.finish_time.to_bits(),
+            "{what}: finish of {} ({} vs {})",
+            x.id,
+            x.finish_time,
+            y.finish_time
+        );
+        assert_eq!(
+            x.start_time.to_bits(),
+            y.start_time.to_bits(),
+            "{what}: start of {}",
+            x.id
+        );
+    }
+}
+
+/// All four (engine × queue) combinations agree bit-for-bit on every
+/// virtual quantity; the next-completion engine never dispatches more
+/// events than polling.
+#[test]
+fn prop_engines_and_queues_bit_exact() {
+    forall("engine-queue-bit-exact", 60, |g: &mut Gen| {
+        let cfg = random_cfg(g);
+        let nc_indexed = run(&cfg, EngineMode::NextCompletion, QueueKind::Indexed);
+        let nc_heap = run(&cfg, EngineMode::NextCompletion, QueueKind::Heap);
+        let poll_heap = run(&cfg, EngineMode::Polling, QueueKind::Heap);
+        let poll_indexed = run(&cfg, EngineMode::Polling, QueueKind::Indexed);
+
+        assert_same_virtual(&nc_indexed, &nc_heap, "nc indexed-vs-heap");
+        assert_same_virtual(&poll_heap, &poll_indexed, "polling heap-vs-indexed");
+        assert_same_virtual(&nc_indexed, &poll_heap, "nc-vs-polling");
+
+        // queue choice never changes what was dispatched
+        assert_eq!(nc_indexed.events_processed, nc_heap.events_processed);
+        assert_eq!(poll_heap.events_processed, poll_indexed.events_processed);
+        // killing the polling storms never costs events
+        assert!(
+            nc_indexed.events_processed <= poll_heap.events_processed,
+            "next-completion dispatched more: {} vs {}",
+            nc_indexed.events_processed,
+            poll_heap.events_processed
+        );
+        // scheduling work is engine-independent too
+        assert_eq!(nc_indexed.bind_steps, poll_heap.bind_steps);
+    });
+}
+
+/// Zero-delay self-send storms keep FIFO semantics on both queues: an
+/// entity that fans out re-sends at the current instant sees them in
+/// schedule order, identically on heap and calendar queues.
+#[test]
+fn zero_delay_self_send_fifo_parity() {
+    struct Storm {
+        budget: u32,
+        trace: Vec<u64>,
+    }
+    impl Entity for Storm {
+        fn start(&mut self, id: EntityId, ctx: &mut SimCtx) {
+            ctx.schedule(1.0, id, id, EventTag::Start, EventData::None);
+        }
+        fn process(&mut self, id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
+            self.trace.push(ev.seq);
+            if self.budget > 0 {
+                self.budget -= 1;
+                // two zero-delay re-sends at the current instant
+                ctx.schedule(0.0, id, id, EventTag::Start, EventData::None);
+                ctx.schedule(0.0, id, id, EventTag::Start, EventData::None);
+            }
+        }
+    }
+    let mut traces = Vec::new();
+    for kind in [QueueKind::Heap, QueueKind::Indexed] {
+        let mut sim = Simulation::with_queue(make_queue(kind));
+        let s = sim.add_entity(Storm {
+            budget: 64,
+            trace: Vec::new(),
+        });
+        let stats = sim.run(10_000);
+        assert!((stats.clock - 1.0).abs() < 1e-12, "storm stays at t=1");
+        traces.push(sim.entity(s).trace.clone());
+    }
+    assert_eq!(traces[0], traces[1], "queue choice changed dispatch order");
+    assert!(traces[0].windows(2).all(|w| w[0] < w[1]), "FIFO violated");
+}
