@@ -58,6 +58,11 @@ struct Measured {
     /// DES events dispatched by the headline run, when the driver knows
     /// it (feeds the `events_per_sec` throughput figure).
     events_dispatched: Option<u64>,
+    /// Wall time of the headline run alone, when the driver timed it
+    /// separately — the `events_per_sec` denominator. Without it the
+    /// whole-repetition wall is used, which undercounts throughput for
+    /// scenarios whose repetition also runs referee/comparator sims.
+    headline_wall_s: Option<f64>,
     extras: Vec<(String, f64)>,
     wall_extras: Vec<(String, f64)>,
 }
@@ -65,11 +70,15 @@ struct Measured {
 /// Run one spec, producing its outcome.
 pub fn run_spec(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOutcome> {
     let mut walls = Vec::with_capacity(opts.reps);
+    let mut headline_walls = Vec::with_capacity(opts.reps);
     let mut last: Option<Measured> = None;
     for _ in 0..opts.reps {
         let t0 = Instant::now();
         let m = run_once(spec, opts.quick)?;
         walls.push(t0.elapsed().as_secs_f64());
+        if let Some(w) = m.headline_wall_s {
+            headline_walls.push(w);
+        }
         last = Some(m);
     }
     let m = last.expect("reps >= 1");
@@ -78,10 +87,17 @@ pub fn run_spec(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOutcom
         .map(|seq| seq / m.virtual_s)
         .filter(|s| s.is_finite());
     let wall_mean = mean(&walls);
+    // averaged over repetitions like `walls`, so one stalled run can't
+    // skew the reported throughput
+    let throughput_wall = if headline_walls.is_empty() {
+        wall_mean
+    } else {
+        mean(&headline_walls)
+    };
     let events_per_sec = m
         .events_dispatched
-        .filter(|_| wall_mean > 0.0)
-        .map(|e| e as f64 / wall_mean)
+        .filter(|_| throughput_wall > 0.0)
+        .map(|e| e as f64 / throughput_wall)
         .filter(|r| r.is_finite());
     Ok(ScenarioOutcome {
         name: spec.name.to_string(),
@@ -147,6 +163,7 @@ fn empty_measured(virtual_s: f64) -> Measured {
         scale_ins: 0,
         scale_events: Vec::new(),
         events_dispatched: None,
+        headline_wall_s: None,
         extras: Vec::new(),
         wall_extras: Vec::new(),
     }
@@ -322,6 +339,7 @@ fn seq_vs_threaded(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
     let speedup = if wall_thr > 0.0 { wall_seq / wall_thr } else { 1.0 };
     let mut m = empty_measured(seq.sim_time_s);
     m.events_dispatched = Some(seq.events);
+    m.headline_wall_s = Some(wall_seq);
     m.wall_extras = vec![
         ("wall_sequential_s".to_string(), wall_seq),
         ("wall_threaded_s".to_string(), wall_thr),
@@ -394,6 +412,7 @@ fn megascale(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
 
     let mut m = empty_measured(fast.sim_clock);
     m.events_dispatched = Some(fast.events_processed);
+    m.headline_wall_s = Some(wall_fast);
     m.extras = vec![
         ("cloudlets_ok".to_string(), fast.successes() as f64),
         ("events_nextcompletion".to_string(), fast.events_processed as f64),

@@ -18,7 +18,7 @@
 //!   the same `(submit, completion)` instants either way — but total event
 //!   volume drops from O(cloudlets × updates) toward O(VMs + completions).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
 use crate::sim::cloudlet_scheduler::{SchedulerKind, VmScheduler};
@@ -115,8 +115,10 @@ impl Datacenter {
             _ => return,
         };
         let mut failed: Vec<Cloudlet> = Vec::new();
-        // VM ids that received work, in first-touch order (deterministic)
+        // VM ids that received work, in first-touch order (deterministic);
+        // membership via the set so a megascale batch stays O(cloudlets)
         let mut touched: Vec<usize> = Vec::new();
+        let mut touched_set: HashSet<usize> = HashSet::new();
         for mut c in cloudlets {
             let Some(vm_id) = c.vm_id else {
                 // unbound cloudlet: fail it straight back
@@ -131,7 +133,7 @@ impl Datacenter {
                 continue;
             };
             sched.submit(c, ctx.clock());
-            if !touched.contains(&vm_id) {
+            if touched_set.insert(vm_id) {
                 touched.push(vm_id);
             }
         }

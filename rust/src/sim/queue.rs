@@ -186,7 +186,14 @@ impl CalendarQueue {
         self.ring_start = lo;
         self.cur = 0;
         self.cur_sorted = false;
-        let ring_end = self.ring_start + self.width * nb as f64;
+        let mut ring_end = self.ring_start + self.width * nb as f64;
+        if ring_end <= lo {
+            // at extreme magnitudes lo + width*nb can round back to lo
+            // (ULP(lo) > the whole window); degrade to plain sorted
+            // buckets instead of bouncing every event back to the
+            // overflow forever
+            ring_end = f64::INFINITY;
+        }
         let pending = std::mem::take(&mut self.overflow);
         for ev in pending {
             if ev.time < ring_end {
@@ -341,6 +348,22 @@ mod tests {
         let popped = drain(&mut q);
         assert_eq!(popped.len(), 50);
         assert!(popped.windows(2).all(|w| w[0] <= w[1]), "{popped:?}");
+    }
+
+    #[test]
+    fn calendar_survives_ulp_scale_timestamps() {
+        // at t ~ 2^62 the ULP (1024) exceeds the ring window (256 * width),
+        // so ring_start + width * nb rounds back to ring_start; migrate
+        // must degrade to a sorted bucket, not loop forever
+        let big = 4.7e18;
+        let mut q = CalendarQueue::new();
+        q.push(ev(big, 0));
+        q.push(ev(big + 2048.0, 1));
+        q.push(ev(big + 1024.0, 2));
+        assert_eq!(
+            drain(&mut q),
+            vec![(big, 0), (big + 1024.0, 2), (big + 2048.0, 1)]
+        );
     }
 
     #[test]
