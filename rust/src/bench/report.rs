@@ -48,6 +48,10 @@ pub struct ScenarioOutcome {
     /// DES events dispatched per wall-clock second by the headline run,
     /// when the scenario measures one — never hard-gated.
     pub events_per_sec: Option<f64>,
+    /// MapReduce pairs processed per wall-clock second by the headline
+    /// run, when the scenario measures one (`megascale_wordcount`) —
+    /// never hard-gated. Absent in older reports; parses as `None`.
+    pub pairs_per_sec: Option<f64>,
     /// Headline virtual time of the sequential / single-node deployment,
     /// when the scenario has one.
     pub sequential_virtual_s: Option<f64>,
@@ -100,6 +104,7 @@ impl ScenarioOutcome {
             ("wall_std_s", Json::Num(self.wall_std_s)),
             ("wall_clock_ms", Json::Num(self.wall_clock_ms)),
             ("events_per_sec", opt_num(self.events_per_sec)),
+            ("pairs_per_sec", opt_num(self.pairs_per_sec)),
             ("sequential_virtual_s", opt_num(self.sequential_virtual_s)),
             ("speedup_vs_sequential", opt_num(self.speedup_vs_sequential)),
             ("scale_outs", Json::Num(self.scale_outs as f64)),
@@ -152,6 +157,7 @@ impl ScenarioOutcome {
             // v1 reports lack the field; derive it so soft gates still work
             wall_clock_ms: num("wall_clock_ms").unwrap_or(wall_mean_s * 1e3),
             events_per_sec: opt_field("events_per_sec"),
+            pairs_per_sec: opt_field("pairs_per_sec"),
             sequential_virtual_s: opt_field("sequential_virtual_s"),
             speedup_vs_sequential: opt_field("speedup_vs_sequential"),
             scale_outs: v.get("scale_outs").and_then(Json::as_u64).unwrap_or(0),
@@ -425,6 +431,7 @@ mod tests {
             wall_std_s: 0.001,
             wall_clock_ms: 10.0,
             events_per_sec: Some(125_000.5),
+            pairs_per_sec: Some(2_400_000.25),
             sequential_virtual_s: Some(virt * 3.0),
             speedup_vs_sequential: Some(3.0),
             scale_outs: 0,
@@ -521,6 +528,7 @@ mod tests {
         assert_eq!(r.scenarios[0].virtual_s, 2.5);
         assert_eq!(r.scenarios[0].wall_clock_ms, 250.0, "derived from wall_mean_s");
         assert_eq!(r.scenarios[0].events_per_sec, None);
+        assert_eq!(r.scenarios[0].pairs_per_sec, None, "pre-PR5 reports lack it");
         // re-rendering upgrades the schema tag
         assert!(r.render().contains(SCHEMA));
     }

@@ -11,6 +11,7 @@ pub use properties::Properties;
 
 use crate::error::{C2SError, Result};
 use crate::grid::backend::BackendProfile;
+use crate::mapreduce::job::MrPipeline;
 use crate::sim::cloudlet_scheduler::SchedulerKind;
 use crate::sim::des::EngineMode;
 use crate::sim::queue::QueueKind;
@@ -171,6 +172,12 @@ pub struct SimConfig {
     pub mr_lines_per_file: usize,
     /// Verbose mode (per-instance progress logging).
     pub mr_verbose: bool,
+    /// Shuffle/reduce/collect pipeline (`mrPipeline`). Virtual-time
+    /// results are bit-identical between the two; `parallel` (the
+    /// default) runs the owner-partitioned hot path on real threads,
+    /// `sequential` is the seed tail and the in-run referee of the
+    /// `megascale_wordcount` scenario.
+    pub mr_pipeline: MrPipeline,
 }
 
 impl Default for SimConfig {
@@ -208,6 +215,7 @@ impl Default for SimConfig {
             mr_files: 3,
             mr_lines_per_file: 10_000,
             mr_verbose: false,
+            mr_pipeline: MrPipeline::default(),
         }
     }
 }
@@ -271,6 +279,9 @@ impl SimConfig {
         get!("mapreduce.files", mr_files, get_usize);
         get!("mapreduce.linesPerFile", mr_lines_per_file, get_usize);
         get!("mapreduce.verbose", mr_verbose, get_bool);
+        if let Some(v) = props.get("mrPipeline") {
+            c.mr_pipeline = v.parse().map_err(C2SError::Config)?;
+        }
 
         if let Some(v) = props.get("isLoaded") {
             c.workload = match v {
@@ -439,6 +450,21 @@ mod tests {
         let p = Properties::parse("gridBackend=terracotta\n").unwrap();
         assert!(SimConfig::from_properties(&p).is_err());
         let p = Properties::parse("isLoaded=maybe\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+    }
+
+    #[test]
+    fn mr_pipeline_parses_and_defaults_parallel() {
+        assert_eq!(SimConfig::default().mr_pipeline, MrPipeline::Parallel);
+        let p = Properties::parse("mrPipeline=sequential\n").unwrap();
+        let c = SimConfig::from_properties(&p).unwrap();
+        assert_eq!(c.mr_pipeline, MrPipeline::Sequential);
+        let p = Properties::parse("mrPipeline=parallel\n").unwrap();
+        assert_eq!(
+            SimConfig::from_properties(&p).unwrap().mr_pipeline,
+            MrPipeline::Parallel
+        );
+        let p = Properties::parse("mrPipeline=threaded\n").unwrap();
         assert!(SimConfig::from_properties(&p).is_err());
     }
 

@@ -455,6 +455,35 @@ impl GridCluster {
         });
     }
 
+    /// Fork-run-merge over every member **without** dispatch, completion
+    /// sync, or `executor.tasks` accounting — the raw two-phase shard
+    /// machinery with zero virtual-time side effects of its own.
+    ///
+    /// The MapReduce shuffle/reduce pipeline uses this: its sequential
+    /// referee advances member clocks directly (no executor batch, so no
+    /// dispatch/await charges), and the parallel pipeline must reproduce
+    /// those clocks bit-for-bit while still running bodies on real OS
+    /// threads. Bodies here cannot fail and must not queue writes that can
+    /// fail admission; clock effects are exactly the `advance*` calls the
+    /// body makes on its own shard.
+    pub(crate) fn execute_sharded_silent<R: Send>(
+        &mut self,
+        f: impl Fn(&mut NodeCtx) -> R + Sync,
+    ) -> Vec<R> {
+        let members = self.members();
+        let snapshot = Arc::new(self.atomics.clone());
+        let mut ctxs: Vec<NodeCtx> = members
+            .iter()
+            .enumerate()
+            .map(|(o, &m)| self.fork_ctx_shared(m, o, snapshot.clone()))
+            .collect();
+        let results = run_bodies(&mut ctxs, self.cfg.workers, &f);
+        for ctx in ctxs {
+            let _ = self.merge_ctx(ctx);
+        }
+        results
+    }
+
     /// Caller blocks until every target's completion + result message.
     fn await_all(&mut self, caller: NodeId, members: &[NodeId]) {
         let mut latest = self.clock(caller);
@@ -626,6 +655,26 @@ mod tests {
                     "workers={workers}: batch must discard on error"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn sharded_silent_charges_only_body_time() {
+        for workers in [1usize, 4] {
+            let mut c = cluster(3, workers);
+            c.barrier();
+            let clocks0: Vec<f64> = c.members().iter().map(|&m| c.clock(m)).collect();
+            let out = c.execute_sharded_silent(|ctx| {
+                ctx.advance_busy(2.0);
+                ctx.offset()
+            });
+            assert_eq!(out, vec![0, 1, 2]);
+            for (i, &m) in c.members().iter().enumerate() {
+                // no dispatch or completion-sync charges: the clock moves by
+                // exactly the body's advance, bit-for-bit
+                assert_eq!(c.clock(m), clocks0[i] + 2.0, "workers={workers}");
+            }
+            assert_eq!(c.metrics.counter("executor.tasks"), 0);
         }
     }
 

@@ -6,6 +6,7 @@
 //! cloud2sim matchmaking [--nodes N] [--vms V] [--cloudlets C] [--pjrt]
 //! cloud2sim mapreduce   [--backend hazelcast|infinispan] [--files F]
 //!                       [--lines L] [--instances N] [--verbose]
+//!                       [--pipeline sequential|parallel] [--config file]
 //! cloud2sim elastic     [--available N] [--config file]
 //! cloud2sim bench       [--all] [--scenario name]... [--quick] [--reps N]
 //!                       [--json out.json] [--compare baseline.json]
@@ -149,8 +150,15 @@ fn cmd_matchmaking(args: &Args) -> Result<()> {
 }
 
 fn cmd_mapreduce(args: &Args) -> Result<()> {
-    let files = args.usize_or("files", 3)?;
-    let lines = args.usize_or("lines", 10_000)?;
+    // --config loads the paper-style properties (mapreduce.files,
+    // mapreduce.linesPerFile, mapreduce.verbose, mrPipeline,
+    // nodeHeapBytes); explicit flags override it
+    let cfg = match args.get("config") {
+        Some(path) => SimConfig::from_properties(&Properties::load(path)?)?,
+        None => SimConfig::default(),
+    };
+    let files = args.usize_or("files", cfg.mr_files)?;
+    let lines = args.usize_or("lines", cfg.mr_lines_per_file)?;
     let instances = args.usize_or("instances", 1)?;
     let corpus = Corpus::new(CorpusConfig {
         files,
@@ -158,11 +166,15 @@ fn cmd_mapreduce(args: &Args) -> Result<()> {
         lines_per_file: lines,
         ..CorpusConfig::default()
     });
-    let job = JobConfig {
-        verbose: args.has("verbose"),
+    let mut job = JobConfig {
+        verbose: cfg.mr_verbose || args.has("verbose"),
+        pipeline: cfg.mr_pipeline,
         ..JobConfig::default()
     };
-    let heap = 64 * 1024 * 1024;
+    if let Some(p) = args.get("pipeline") {
+        job.pipeline = p.parse().map_err(C2SError::Config)?;
+    }
+    let heap = cfg.node_heap_bytes;
     let backend = args.get("backend").unwrap_or("infinispan");
     let r = match backend {
         "hazelcast" => run_hz_wordcount(corpus, job, instances, heap)?,

@@ -16,14 +16,30 @@
 //! 4. **Reduce** — owners fold their keys through the user `Reducer`.
 //! 5. **Collect** — the supervisor (master) gathers the result;
 //!    `reduce()` invocations = distinct keys, `map()` invocations = files.
+//!
+//! Phases 3–5 run through one of two pipelines selected by
+//! [`JobConfig::pipeline`] (`mrPipeline`): the seed **sequential** tail, or
+//! the owner-partitioned **parallel** tail where each owner's grouping and
+//! fold run on real OS threads via the two-phase shard machinery and
+//! collect k-way-merges the per-owner sorted results. Both tails execute
+//! the same f64 operations in the same order per member, so every virtual
+//! quantity (clocks, heap, invocation counts, top words) is bitwise
+//! identical — `tests/props_mr.rs` fuzzes the contract and the
+//! `megascale_wordcount` scenario referees it in-run at 2M+ distinct keys.
+//! Mappers emit into partition-pre-hashed buckets: the partition id is
+//! computed once per distinct key at emit time and cached, so neither
+//! pipeline ever re-hashes a key during shuffle (see ARCHITECTURE.md §4).
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
 
 use crate::error::{C2SError, Result};
 use crate::grid::cluster::{GridCluster, NodeId};
 use crate::grid::partition::partition_of;
 use crate::mapreduce::corpus::Corpus;
-use crate::mapreduce::job::{top_n, JobConfig, JobResult, Mapper, Reducer};
+use crate::mapreduce::job::{
+    merge_sorted_counts, top_n, top_n_pairs, JobConfig, JobResult, Mapper, MrPipeline, Reducer,
+};
 
 /// CPU cost of mapping one token (tokenize + emit) on the JVM (s).
 const TOKEN_CPU_COST: f64 = 0.8e-6;
@@ -31,6 +47,17 @@ const TOKEN_CPU_COST: f64 = 0.8e-6;
 const REDUCE_VALUE_CPU_COST: f64 = 0.1e-6;
 /// Serialized bytes per shuffled key entry.
 const SHUFFLE_ENTRY_BYTES: u64 = 24;
+
+/// One mapper's combined output for one partition owner: `(key, count)`
+/// pairs destined for that owner, in arbitrary (hash) order.
+type OwnerBucket = Vec<(String, i64)>;
+/// One mapper's full output: one [`OwnerBucket`] per member, plus the
+/// member's distinct-key count (the shuffle wire-cost driver), retained
+/// pair-heap bytes and emitted-pair count.
+type MapOutput = (Vec<OwnerBucket>, u64, u64, u64);
+/// What either pipeline tail hands back to the shared collect/teardown
+/// code: `reduce()` invocations, the total count, and the top words.
+type TailOutput = (u64, i64, Vec<(String, i64)>);
 
 /// The engine: corpus + job config + user code.
 pub struct MapReduceEngine<'a> {
@@ -105,13 +132,19 @@ impl<'a> MapReduceEngine<'a> {
         // owns its NodeCtx shard, so with `workers > 1` the real
         // tokenization work spreads over OS threads while virtual time
         // stays bitwise-identical to sequential execution.
+        //
+        // The combine map caches each distinct key's partition id at first
+        // emit (one hash per distinct key, on the worker thread) and the
+        // body splits its output into per-owner buckets before returning —
+        // shuffle becomes a hand-off and never re-hashes a key.
         let chunks_ref = &chunks;
         let corpus = &self.corpus;
         let mapper = self.mapper;
         let verbose = self.job.verbose;
         let map_backend = &backend;
+        let partition_count = cluster.cfg.partition_count;
         let map_out = cluster.try_execute_on_all(master, |ctx| {
-            let mut partial: HashMap<String, i64> = HashMap::new();
+            let mut partial: HashMap<String, (u32, i64)> = HashMap::new();
             let mut retained: u64 = 0;
             let mut emitted: u64 = 0;
             let mut text = String::new(); // reused line buffer (perf pass §L3)
@@ -121,7 +154,14 @@ impl<'a> MapReduceEngine<'a> {
                 for line in l0..l1 {
                     corpus.line_text_into(f, line, &mut text);
                     mapper.map(f, line, &text, &mut |k, v| {
-                        *partial.entry(k).or_insert(0) += v;
+                        use std::collections::hash_map::Entry;
+                        match partial.entry(k) {
+                            Entry::Occupied(mut e) => e.get_mut().1 += v,
+                            Entry::Vacant(e) => {
+                                let pid = partition_of(e.key().as_bytes(), partition_count);
+                                e.insert((pid, v));
+                            }
+                        }
                         tokens_in_chunk += 1;
                     });
                 }
@@ -139,74 +179,56 @@ impl<'a> MapReduceEngine<'a> {
                 }
                 ctx.advance_busy(cost * gc);
             }
-            Ok((partial, retained, emitted))
+            // split into per-owner buckets on the worker thread, consuming
+            // the cached partition ids
+            let distinct = partial.len() as u64;
+            let mut buckets: Vec<OwnerBucket> = Vec::new();
+            buckets.resize_with(n, Vec::new);
+            for (k, (pid, v)) in partial {
+                let owner = pid as usize % n;
+                // the satellite micro-assert: the owner derived from the
+                // emit-time partition id must agree with a shuffle-time
+                // re-hash (debug builds only — release never re-hashes)
+                debug_assert_eq!(
+                    owner,
+                    partition_of(k.as_bytes(), partition_count) as usize % n,
+                    "emit-time and shuffle-time owners disagree for {k:?}"
+                );
+                buckets[owner].push((k, v));
+            }
+            Ok((buckets, distinct, retained, emitted))
         });
-        let map_out = match map_out {
+        let map_out: Vec<(NodeId, MapOutput)> = match map_out {
             Ok(r) => r,
             Err(e) => return Err(self.release_on_err(cluster, &members, &reserved, e)),
         };
-        let mut partials: Vec<HashMap<String, i64>> = Vec::with_capacity(n);
+        let mut bucketed: Vec<Vec<OwnerBucket>> = Vec::with_capacity(n);
+        let mut distincts: Vec<u64> = Vec::with_capacity(n);
         let mut emitted_total: u64 = 0;
-        for (i, (_member, (partial, retained, emitted))) in map_out.into_iter().enumerate() {
-            partials.push(partial);
+        for (i, (_member, (buckets, distinct, retained, emitted))) in
+            map_out.into_iter().enumerate()
+        {
+            bucketed.push(buckets);
+            distincts.push(distinct);
             reserved[i] += retained;
             emitted_total += emitted;
         }
         cluster.barrier();
 
-        // ---- Phase 3: shuffle ----
-        // Keys move to their partition owner. The *owner* pays the
-        // per-key merge/accounting cost (distinct/n keys each, in
-        // parallel): Hazelcast 3.2's young MR does a supervisor round-trip
-        // per keyed result — the Table 5.3 collapse when a single-node job
-        // (no shuffle at all) becomes distributed.
-        //
-        // BTreeMap, not HashMap: phase 4 accumulates f64 costs while
-        // iterating this map, and f64 addition is order-sensitive — sorted
-        // iteration keeps sim_time_s bit-identical across runs (the
-        // parallel engine's determinism contract is asserted exactly).
-        let mut grouped: Vec<BTreeMap<String, Vec<i64>>> = vec![BTreeMap::new(); n];
-        for (i, m) in members.iter().enumerate() {
-            if n > 1 {
-                let d_i = partials[i].len() as u64;
-                let wire = cluster.net.transfer(d_i * SHUFFLE_ENTRY_BYTES);
-                cluster.advance_busy(*m, wire);
+        // ---- Phases 3–5: shuffle → reduce → collect ----
+        // Two pipelines, one virtual-time contract: the parallel tail runs
+        // the same f64 operations in the same order per member as the
+        // sequential tail, so `mrPipeline` changes wall clock only.
+        let (reduce_invocations, total_count, top_words) = match self.job.pipeline {
+            MrPipeline::Sequential => {
+                self.tail_sequential(cluster, &members, bucketed, &distincts, local_factor)
             }
-            for (k, v) in partials[i].drain() {
-                let owner =
-                    (partition_of(k.as_bytes(), cluster.cfg.partition_count) as usize) % n;
-                grouped[owner].entry(k).or_default().push(v);
+            MrPipeline::Parallel => {
+                self.tail_parallel(cluster, &members, bucketed, &distincts, local_factor)
             }
-        }
-        if n > 1 {
-            for (i, m) in members.iter().enumerate() {
-                let gc = cluster.gc_factor(*m);
-                let merge_cpu = grouped[i].len() as f64 * backend.mr_shuffle_per_key;
-                cluster.advance_busy(*m, merge_cpu * gc);
-            }
-        }
-        cluster.barrier();
+        };
 
-        // ---- Phase 4: reduce ----
-        let mut final_counts: BTreeMap<String, i64> = BTreeMap::new();
-        let mut reduce_invocations: u64 = 0;
-        for (i, m) in members.iter().enumerate() {
-            let gc = cluster.gc_factor(*m);
-            let mut cost = 0.0;
-            for (k, vals) in &grouped[i] {
-                cost += backend.mr_reduce_overhead + vals.len() as f64 * REDUCE_VALUE_CPU_COST;
-                reduce_invocations += 1;
-                let folded = self.reducer.reduce(k, vals);
-                final_counts.insert(k.clone(), folded);
-            }
-            if self.job.verbose {
-                cost *= 1.15;
-            }
-            cluster.advance_busy(*m, cost * local_factor * gc);
-        }
-        cluster.barrier();
-
-        // ---- Phase 5: collect at the supervisor ----
+        // ---- Phase 5 (shared): collect at the supervisor ----
         let result_bytes = reduce_invocations * SHUFFLE_ENTRY_BYTES;
         if n > 1 {
             let wire = cluster.net.transfer(result_bytes);
@@ -236,18 +258,202 @@ impl<'a> MapReduceEngine<'a> {
         }
         let t_end = cluster.barrier();
 
-        let total_count: i64 = final_counts.values().sum();
         Ok(JobResult {
             map_invocations: files as u64,
             reduce_invocations,
             sim_time_s: t_end - t_start,
             emitted_pairs: emitted_total,
-            top_words: top_n(&final_counts, 10),
+            top_words,
             total_count,
             nodes: n,
             peak_heap,
             split_brain_events,
         })
+    }
+
+    /// The seed shuffle/reduce/collect tail: every phase runs on the
+    /// calling thread, one member after another. This is the in-run
+    /// referee the parallel tail is compared against bit-for-bit.
+    fn tail_sequential(
+        &self,
+        cluster: &mut GridCluster,
+        members: &[NodeId],
+        mut bucketed: Vec<Vec<OwnerBucket>>,
+        distincts: &[u64],
+        local_factor: f64,
+    ) -> TailOutput {
+        let n = members.len();
+        let backend = cluster.cfg.backend.clone();
+
+        // Phase 3: shuffle. Keys move to their partition owner (the owner
+        // was fixed at emit time — no re-hash here). The *owner* pays the
+        // per-key merge/accounting cost (distinct/n keys each, in
+        // parallel): Hazelcast 3.2's young MR does a supervisor round-trip
+        // per keyed result — the Table 5.3 collapse when a single-node job
+        // (no shuffle at all) becomes distributed.
+        //
+        // BTreeMap, not HashMap: phase 4 accumulates f64 costs while
+        // iterating this map, and f64 addition is order-sensitive — sorted
+        // iteration keeps sim_time_s bit-identical across runs (the
+        // parallel engine's determinism contract is asserted exactly).
+        let mut grouped: Vec<BTreeMap<String, Vec<i64>>> = vec![BTreeMap::new(); n];
+        for (i, m) in members.iter().enumerate() {
+            if n > 1 {
+                let wire = cluster.net.transfer(distincts[i] * SHUFFLE_ENTRY_BYTES);
+                cluster.advance_busy(*m, wire);
+            }
+            for (owner, bucket) in bucketed[i].drain(..).enumerate() {
+                for (k, v) in bucket {
+                    grouped[owner].entry(k).or_default().push(v);
+                }
+            }
+        }
+        if n > 1 {
+            for (i, m) in members.iter().enumerate() {
+                let gc = cluster.gc_factor(*m);
+                let merge_cpu = grouped[i].len() as f64 * backend.mr_shuffle_per_key;
+                cluster.advance_busy(*m, merge_cpu * gc);
+            }
+        }
+        cluster.barrier();
+
+        // Phase 4: reduce. `grouped` is owned, so keys move into the
+        // result map — no per-key clone.
+        let mut final_counts: BTreeMap<String, i64> = BTreeMap::new();
+        let mut reduce_invocations: u64 = 0;
+        for (i, m) in members.iter().enumerate() {
+            let gc = cluster.gc_factor(*m);
+            let mut cost = 0.0;
+            for (k, vals) in std::mem::take(&mut grouped[i]) {
+                cost += backend.mr_reduce_overhead + vals.len() as f64 * REDUCE_VALUE_CPU_COST;
+                reduce_invocations += 1;
+                let folded = self.reducer.reduce(&k, &vals);
+                final_counts.insert(k, folded);
+            }
+            if self.job.verbose {
+                cost *= 1.15;
+            }
+            cluster.advance_busy(*m, cost * local_factor * gc);
+        }
+        cluster.barrier();
+
+        let total_count: i64 = final_counts.values().sum();
+        let top_words = top_n(&final_counts, 10);
+        (reduce_invocations, total_count, top_words)
+    }
+
+    /// The owner-partitioned parallel tail: shuffle is a bucket hand-off,
+    /// each owner's grouping + fold run inside the two-phase shard
+    /// machinery on real OS threads (keys moved, never cloned), and
+    /// collect k-way-merges the per-owner sorted results.
+    ///
+    /// Bit-exactness with [`MapReduceEngine::tail_sequential`] is by
+    /// construction: per member, the same `advance_busy` values are applied
+    /// in the same order around the same two barriers, and the shards run
+    /// through [`GridCluster::execute_sharded_silent`], which adds no
+    /// dispatch or completion-sync charges of its own.
+    fn tail_parallel(
+        &self,
+        cluster: &mut GridCluster,
+        members: &[NodeId],
+        bucketed: Vec<Vec<OwnerBucket>>,
+        distincts: &[u64],
+        local_factor: f64,
+    ) -> TailOutput {
+        let n = members.len();
+        let multi = n > 1;
+        let per_key = cluster.cfg.backend.mr_shuffle_per_key;
+        let reduce_overhead = cluster.cfg.backend.mr_reduce_overhead;
+        let verbose = self.job.verbose;
+        let reducer = self.reducer;
+
+        // Phase 3a (master): hand each owner its buckets, source-ordered —
+        // per-key value order stays "source member ascending", exactly the
+        // order the sequential drain produces.
+        let mut owner_inputs: Vec<Vec<OwnerBucket>> = Vec::new();
+        owner_inputs.resize_with(n, || Vec::with_capacity(n));
+        for source in bucketed {
+            for (owner, bucket) in source.into_iter().enumerate() {
+                owner_inputs[owner].push(bucket);
+            }
+        }
+        // Wire costs in member order, so the net model's counters advance
+        // in the same sequence as the sequential referee's.
+        let wires: Vec<f64> = if multi {
+            distincts
+                .iter()
+                .map(|d| cluster.net.transfer(d * SHUFFLE_ENTRY_BYTES))
+                .collect()
+        } else {
+            vec![0.0; n]
+        };
+
+        // Phase 3b (threads): each owner charges its shuffle costs and
+        // groups its keys. The `Mutex<Option<..>>` cells exist only to move
+        // each owner's input into its body (one uncontended lock per
+        // member).
+        let handoff: Vec<Mutex<Option<Vec<OwnerBucket>>>> = owner_inputs
+            .into_iter()
+            .map(|x| Mutex::new(Some(x)))
+            .collect();
+        let grouped: Vec<BTreeMap<String, Vec<i64>>> = cluster.execute_sharded_silent(|ctx| {
+            let i = ctx.offset();
+            if multi {
+                ctx.advance_busy(wires[i]);
+            }
+            let sources = handoff[i].lock().unwrap().take().expect("one owner per shard");
+            let mut mine: BTreeMap<String, Vec<i64>> = BTreeMap::new();
+            for bucket in sources {
+                for (k, v) in bucket {
+                    mine.entry(k).or_default().push(v);
+                }
+            }
+            if multi {
+                let gc = ctx.gc_factor();
+                ctx.advance_busy(mine.len() as f64 * per_key * gc);
+            }
+            mine
+        });
+        cluster.barrier();
+
+        // Phase 4 (threads): each owner folds its keys, accumulating cost
+        // in sorted-key order — the sequential referee's exact f64
+        // sequence — and returns its results as a key-sorted run.
+        let handoff: Vec<Mutex<Option<BTreeMap<String, Vec<i64>>>>> =
+            grouped.into_iter().map(|g| Mutex::new(Some(g))).collect();
+        let folded: Vec<(OwnerBucket, u64)> = cluster.execute_sharded_silent(|ctx| {
+            let mine = handoff[ctx.offset()].lock().unwrap().take().expect("one owner per shard");
+            let gc = ctx.gc_factor();
+            let mut cost = 0.0;
+            let mut run: OwnerBucket = Vec::with_capacity(mine.len());
+            let mut invocations: u64 = 0;
+            for (k, vals) in mine {
+                cost += reduce_overhead + vals.len() as f64 * REDUCE_VALUE_CPU_COST;
+                invocations += 1;
+                let out = reducer.reduce(&k, &vals);
+                run.push((k, out));
+            }
+            if verbose {
+                cost *= 1.15;
+            }
+            ctx.advance_busy(cost * local_factor * gc);
+            (run, invocations)
+        });
+        cluster.barrier();
+
+        // Phase 5a (master): k-way merge of the per-owner sorted runs
+        // replaces the sequential tail's global BTreeMap insert stream.
+        let mut reduce_invocations: u64 = 0;
+        let mut runs: Vec<OwnerBucket> = Vec::with_capacity(n);
+        for (run, invocations) in folded {
+            reduce_invocations += invocations;
+            runs.push(run);
+        }
+        let merged = merge_sorted_counts(runs);
+        debug_assert_eq!(merged.len() as u64, reduce_invocations);
+        let total_count: i64 = merged.iter().map(|(_, c)| *c).sum();
+        let top_words = top_n_pairs(merged.iter().map(|(k, c)| (k.as_str(), *c)), 10);
+        (reduce_invocations, total_count, top_words)
     }
 
     fn release_on_err(

@@ -20,6 +20,40 @@ pub trait Reducer: Sync {
     fn reduce(&self, key: &str, values: &[i64]) -> i64;
 }
 
+/// Which shuffle/reduce/collect implementation the engine runs
+/// (`mrPipeline` in `cloud2sim.properties`).
+///
+/// Both pipelines produce **bitwise-identical** virtual times and results
+/// (the parallel engine's determinism contract, fuzzed by
+/// `rust/tests/props_mr.rs`); they differ only in wall-clock behaviour.
+/// `Sequential` is the seed implementation and doubles as the in-run
+/// referee for the `megascale_wordcount` scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MrPipeline {
+    /// Seed behaviour: shuffle, reduce and collect run on the calling
+    /// thread, one member after another.
+    Sequential,
+    /// Owner-partitioned hot path: mappers emit into per-owner buckets,
+    /// each owner groups and folds its keys inside the two-phase parallel
+    /// executor, and collect k-way-merges the per-owner sorted results.
+    #[default]
+    Parallel,
+}
+
+impl std::str::FromStr for MrPipeline {
+    type Err = String;
+
+    /// Parse the `mrPipeline` property / `--pipeline` flag value
+    /// (case-insensitive) — the one parser shared by every entry point.
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" => Ok(MrPipeline::Sequential),
+            "parallel" => Ok(MrPipeline::Parallel),
+            other => Err(format!("mrPipeline must be sequential|parallel, got {other}")),
+        }
+    }
+}
+
 /// Job parameters (`cloud2sim.properties` MapReduce section, §4.2.3).
 #[derive(Debug, Clone)]
 pub struct JobConfig {
@@ -27,6 +61,8 @@ pub struct JobConfig {
     pub chunk_lines: usize,
     /// Verbose mode: per-instance progress accounting (§3.4.2) — slower.
     pub verbose: bool,
+    /// Shuffle/reduce/collect implementation (`mrPipeline`).
+    pub pipeline: MrPipeline,
 }
 
 impl Default for JobConfig {
@@ -34,6 +70,7 @@ impl Default for JobConfig {
         Self {
             chunk_lines: 1000,
             verbose: false,
+            pipeline: MrPipeline::default(),
         }
     }
 }
@@ -73,10 +110,64 @@ impl JobResult {
 
 /// Deterministically pick the top-`n` entries of a count map (ties by key).
 pub fn top_n(counts: &BTreeMap<String, i64>, n: usize) -> Vec<(String, i64)> {
-    let mut v: Vec<(String, i64)> = counts.iter().map(|(k, c)| (k.clone(), *c)).collect();
-    v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-    v.truncate(n);
-    v
+    top_n_pairs(counts.iter().map(|(k, c)| (k.as_str(), *c)), n)
+}
+
+/// Streaming top-`n` selection over `(key, count)` pairs under the count
+/// comparator (count descending, ties by key ascending). Keys must be
+/// distinct; the comparator is then a total order, so the selection is
+/// independent of the input order — both MapReduce pipelines share this
+/// one implementation, which is what makes their `top_words` comparable
+/// bit-for-bit.
+pub fn top_n_pairs<'a>(
+    pairs: impl Iterator<Item = (&'a str, i64)>,
+    n: usize,
+) -> Vec<(String, i64)> {
+    let mut best: Vec<(String, i64)> = Vec::with_capacity(n.saturating_add(1).min(64));
+    for (k, c) in pairs {
+        let outranks = |a: &(String, i64)| c > a.1 || (c == a.1 && k < a.0.as_str());
+        if best.len() < n {
+            let pos = best.partition_point(|a| !outranks(a));
+            best.insert(pos, (k.to_string(), c));
+        } else if n > 0 && outranks(&best[n - 1]) {
+            let pos = best.partition_point(|a| !outranks(a));
+            best.insert(pos, (k.to_string(), c));
+            best.truncate(n);
+        }
+    }
+    best
+}
+
+/// K-way-merge per-owner key-sorted `(key, count)` runs into one globally
+/// key-sorted stream — the parallel pipeline's collect phase. Owners
+/// partition the key space, so the runs are pairwise disjoint and the
+/// merged stream equals the sequential pipeline's global `BTreeMap`
+/// iteration order. Strings are moved, never cloned.
+pub fn merge_sorted_counts(runs: Vec<Vec<(String, i64)>>) -> Vec<(String, i64)> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let total: usize = runs.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(total);
+    // heap of (next key, count, source run): pop-min yields global order
+    let mut iters: Vec<std::vec::IntoIter<(String, i64)>> =
+        runs.into_iter().map(Vec::into_iter).collect();
+    let mut heap: BinaryHeap<Reverse<(String, i64, usize)>> = BinaryHeap::new();
+    for (r, it) in iters.iter_mut().enumerate() {
+        if let Some((k, c)) = it.next() {
+            heap.push(Reverse((k, c, r)));
+        }
+    }
+    while let Some(Reverse((k, c, r))) = heap.pop() {
+        if let Some((prev, _)) = out.last() {
+            debug_assert!(*prev < k, "owner runs must be sorted and pairwise disjoint");
+        }
+        out.push((k, c));
+        if let Some((nk, nc)) = iters[r].next() {
+            heap.push(Reverse((nk, nc, r)));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -91,6 +182,48 @@ mod tests {
         m.insert("c".to_string(), 5);
         let t = top_n(&m, 2);
         assert_eq!(t, vec![("b".to_string(), 9), ("a".to_string(), 5)]);
+    }
+
+    #[test]
+    fn top_n_pairs_matches_sort_based_selection() {
+        // streaming selection must equal "sort everything, truncate"
+        let pairs = vec![("m", 4i64), ("a", 7), ("z", 7), ("q", 1), ("b", 4), ("c", 9)];
+        let mut reference: Vec<(String, i64)> =
+            pairs.iter().map(|(k, c)| (k.to_string(), *c)).collect();
+        reference.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        for n in 0..=pairs.len() + 1 {
+            let mut want = reference.clone();
+            want.truncate(n);
+            let got = top_n_pairs(pairs.iter().map(|(k, c)| (*k, *c)), n);
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn merge_sorted_counts_interleaves_disjoint_runs() {
+        let runs = vec![
+            vec![("a".to_string(), 1i64), ("d".to_string(), 4)],
+            vec![("b".to_string(), 2), ("e".to_string(), 5)],
+            vec![],
+            vec![("c".to_string(), 3)],
+        ];
+        let merged = merge_sorted_counts(runs);
+        let keys: Vec<&str> = merged.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["a", "b", "c", "d", "e"]);
+        assert_eq!(merged.iter().map(|(_, c)| c).sum::<i64>(), 15);
+    }
+
+    #[test]
+    fn pipeline_default_is_parallel() {
+        assert_eq!(JobConfig::default().pipeline, MrPipeline::Parallel);
+    }
+
+    #[test]
+    fn pipeline_parses_case_insensitively() {
+        assert_eq!("sequential".parse(), Ok(MrPipeline::Sequential));
+        assert_eq!("Parallel".parse(), Ok(MrPipeline::Parallel));
+        assert_eq!("SEQUENTIAL".parse(), Ok(MrPipeline::Sequential));
+        assert!("threaded".parse::<MrPipeline>().is_err());
     }
 
     #[test]

@@ -54,6 +54,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 zipf_s: 1.35,
                 vocab: 50_000,
                 backend: MrBackend::Infinispan,
+                quick_divisor: 4,
             }),
             elastic: None,
         },
@@ -172,6 +173,40 @@ pub fn registry() -> Vec<ScenarioSpec> {
             mr: None,
             elastic: None,
         },
+        ScenarioSpec {
+            name: "megascale_wordcount",
+            summary: "8M-token skewed-Zipf word count on 16 members: parallel \
+                      shuffle/reduce pipeline refereed bit-for-bit by the \
+                      sequential seed tail",
+            paper_ref: "§3.4 / Figs 5.10-5.11 scaled to 2M+ distinct keys \
+                        (reduce() invocations)",
+            kind: ScenarioKind::MegascaleMapReduce,
+            datacenters: 1,
+            hosts_per_datacenter: 1,
+            pes_per_host: 8,
+            vms: 1,
+            cloudlets: 1,
+            loaded: false,
+            distribution: CloudletDistribution::Uniform,
+            variable_vms: false,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[16],
+            grid_workers: 0,
+            // 16 files x 42k lines x 12 words = 8.064M tokens; at
+            // zipf_s = 0.95 over a 16M-word vocabulary the job folds
+            // ~2.4M distinct keys — the >= 2M floor the CI gate checks.
+            mr: Some(MrShape {
+                files: 16,
+                distinct_files: 16,
+                lines_per_file: 42_000,
+                zipf_s: 0.95,
+                vocab: 16_000_000,
+                backend: MrBackend::Infinispan,
+                // debug-mode suites run this scenario at 1/32 size
+                quick_divisor: 32,
+            }),
+            elastic: None,
+        },
     ]
 }
 
@@ -190,9 +225,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn at_least_seven_unique_scenarios() {
+    fn at_least_eight_unique_scenarios() {
         let names = names();
-        assert!(names.len() >= 7, "registry shrank: {names:?}");
+        assert!(names.len() >= 8, "registry shrank: {names:?}");
         let set: std::collections::HashSet<_> = names.iter().collect();
         assert_eq!(set.len(), names.len(), "duplicate scenario names");
     }
@@ -225,9 +260,29 @@ mod tests {
             "elastic_closed_loop",
             "seq_vs_threaded",
             "megascale_broker",
+            "megascale_wordcount",
         ] {
             assert!(find(required).is_some(), "missing {required}");
         }
+    }
+
+    #[test]
+    fn megascale_wordcount_shape_hits_the_floors() {
+        let spec = find("megascale_wordcount").unwrap();
+        let shape = spec.mr.as_ref().expect("mapreduce shape");
+        let corpus = shape.corpus_config(false);
+        // the ISSUE floors: 16 members, >= 2M distinct keys. Distinct keys
+        // can't be asserted statically, but the token budget that produces
+        // ~2.4M of them (measured by the CI gate) can: 8M+ tokens over a
+        // vocabulary large enough to not cap the distinct count.
+        assert_eq!(spec.nodes, &[16]);
+        assert_eq!(spec.grid_workers, 0, "all cores is the point");
+        let tokens = corpus.files * corpus.lines_per_file * corpus.words_per_line;
+        assert!(tokens >= 8_000_000, "token budget shrank: {tokens}");
+        assert!(corpus.vocab >= 2 * 2_000_000, "vocab caps distinct keys");
+        // quick (debug test-suite) mode must stay ~32x smaller
+        let quick = shape.corpus_config(true);
+        assert!(quick.lines_per_file <= corpus.lines_per_file / 30);
     }
 
     #[test]

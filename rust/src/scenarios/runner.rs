@@ -15,7 +15,8 @@ use crate::elastic::{run_adaptive, HealthMeasure};
 use crate::error::{C2SError, Result};
 use crate::grid::parallel::resolve_workers;
 use crate::mapreduce::{
-    run_hz_wordcount_with_workers, run_inf_wordcount_with_workers, Corpus, JobConfig,
+    run_hz_wordcount_with_workers, run_inf_wordcount_with_workers, Corpus, JobConfig, JobResult,
+    MrPipeline,
 };
 use crate::runtime::workload::NativeBurnModel;
 use crate::scenarios::spec::{MrBackend, ScenarioKind, ScenarioSpec};
@@ -58,6 +59,9 @@ struct Measured {
     /// DES events dispatched by the headline run, when the driver knows
     /// it (feeds the `events_per_sec` throughput figure).
     events_dispatched: Option<u64>,
+    /// MapReduce pairs emitted by the headline run, when the driver knows
+    /// it (feeds the `pairs_per_sec` throughput figure).
+    pairs_emitted: Option<u64>,
     /// Wall time of the headline run alone, when the driver timed it
     /// separately — the `events_per_sec` denominator. Without it the
     /// whole-repetition wall is used, which undercounts throughput for
@@ -71,6 +75,7 @@ struct Measured {
 pub fn run_spec(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOutcome> {
     let mut walls = Vec::with_capacity(opts.reps);
     let mut headline_walls = Vec::with_capacity(opts.reps);
+    let mut wall_extras_best: Vec<(String, f64)> = Vec::new();
     let mut last: Option<Measured> = None;
     for _ in 0..opts.reps {
         let t0 = Instant::now();
@@ -79,25 +84,57 @@ pub fn run_spec(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOutcom
         if let Some(w) = m.headline_wall_s {
             headline_walls.push(w);
         }
+        // wall extras: keep the per-key minimum across repetitions — the
+        // best observed value, robust to one stalled (noisy-neighbor) rep.
+        // Virtual extras need no such treatment: they are bit-identical
+        // across reps by the determinism contract.
+        for (k, v) in &m.wall_extras {
+            match wall_extras_best.iter_mut().find(|(bk, _)| bk == k) {
+                Some((_, best)) => *best = best.min(*v),
+                None => wall_extras_best.push((k.clone(), *v)),
+            }
+        }
         last = Some(m);
     }
-    let m = last.expect("reps >= 1");
+    let mut m = last.expect("reps >= 1");
+    m.wall_extras = wall_extras_best;
+    // ratio keys can't be min-aggregated (that would publish the *worst*
+    // ratio next to best-observed walls); recompute the speedup from the
+    // aggregated minima so the reported trio stays internally consistent
+    let wall_of = |extras: &[(String, f64)], key: &str| {
+        extras.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    };
+    let num = wall_of(&m.wall_extras, "wall_sequential_s");
+    let den = wall_of(&m.wall_extras, "wall_parallel_s")
+        .or_else(|| wall_of(&m.wall_extras, "wall_threaded_s"));
+    if let (Some(n), Some(d)) = (num, den) {
+        if let Some(slot) = m.wall_extras.iter_mut().find(|(k, _)| k == "wall_speedup") {
+            if d > 0.0 {
+                slot.1 = n / d;
+            }
+        }
+    }
     let speedup = m
         .sequential_virtual_s
         .map(|seq| seq / m.virtual_s)
         .filter(|s| s.is_finite());
     let wall_mean = mean(&walls);
-    // averaged over repetitions like `walls`, so one stalled run can't
-    // skew the reported throughput
+    // best (minimum) observed headline wall: one stalled run can't skew
+    // the reported throughput, and warm repetitions dominate cold starts
     let throughput_wall = if headline_walls.is_empty() {
         wall_mean
     } else {
-        mean(&headline_walls)
+        headline_walls.iter().copied().fold(f64::INFINITY, f64::min)
     };
     let events_per_sec = m
         .events_dispatched
         .filter(|_| throughput_wall > 0.0)
         .map(|e| e as f64 / throughput_wall)
+        .filter(|r| r.is_finite());
+    let pairs_per_sec = m
+        .pairs_emitted
+        .filter(|_| throughput_wall > 0.0)
+        .map(|p| p as f64 / throughput_wall)
         .filter(|r| r.is_finite());
     Ok(ScenarioOutcome {
         name: spec.name.to_string(),
@@ -107,6 +144,7 @@ pub fn run_spec(spec: &ScenarioSpec, opts: &RunOptions) -> Result<ScenarioOutcom
         wall_std_s: stddev(&walls),
         wall_clock_ms: wall_mean * 1e3,
         events_per_sec,
+        pairs_per_sec,
         sequential_virtual_s: m.sequential_virtual_s,
         speedup_vs_sequential: speedup,
         scale_outs: m.scale_outs,
@@ -152,6 +190,7 @@ fn run_once(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ScenarioKind::Elastic => elastic(spec, quick),
         ScenarioKind::SeqVsThreaded => seq_vs_threaded(spec, quick),
         ScenarioKind::Megascale => megascale(spec, quick),
+        ScenarioKind::MegascaleMapReduce => megascale_mapreduce(spec, quick),
     }
 }
 
@@ -163,6 +202,7 @@ fn empty_measured(virtual_s: f64) -> Measured {
         scale_ins: 0,
         scale_events: Vec::new(),
         events_dispatched: None,
+        pairs_emitted: None,
         headline_wall_s: None,
         extras: Vec::new(),
         wall_extras: Vec::new(),
@@ -428,6 +468,106 @@ fn megascale(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
     Ok(m)
 }
 
+/// Megascale MapReduce throughput: one word-count corpus, two pipelines.
+///
+/// 1. The **parallel** shuffle/reduce pipeline at `gridWorkers = 0` (all
+///    cores) — the shipping hot path and the headline measurement
+///    (`pairs_per_sec`).
+/// 2. The **sequential** seed pipeline on the same corpus and cluster
+///    shape — the *referee*: every virtual quantity (job time, peak heap,
+///    reduce invocations, emitted pairs, total count, top words) must
+///    match run 1 bit-for-bit or the scenario errors out.
+///
+/// The wall-clock delta between the two runs is recorded as
+/// `wall_speedup` (parallel must win at full size — CI gates it on the
+/// release-mode run, where the tail dominates).
+fn megascale_mapreduce(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
+    let shape = spec
+        .mr
+        .as_ref()
+        .ok_or_else(|| C2SError::Config(format!("{} has no MapReduce shape", spec.name)))?;
+    let heap = SimConfig::default().node_heap_bytes;
+    let workers = resolve_workers(spec.grid_workers);
+    let n = *spec.nodes.last().unwrap_or(&1);
+    let run = |pipeline: MrPipeline| -> Result<(JobResult, f64)> {
+        let corpus = Corpus::new(shape.corpus_config(quick));
+        let job = JobConfig {
+            pipeline,
+            ..JobConfig::default()
+        };
+        let t0 = Instant::now();
+        let r = match shape.backend {
+            MrBackend::Hazelcast => run_hz_wordcount_with_workers(corpus, job, n, heap, workers)?,
+            MrBackend::Infinispan => run_inf_wordcount_with_workers(corpus, job, n, heap, workers)?,
+        };
+        Ok((r, t0.elapsed().as_secs_f64()))
+    };
+    let (par, wall_par) = run(MrPipeline::Parallel)?;
+    let (seq, wall_seq) = run(MrPipeline::Sequential)?;
+    check_mr_bit_exact(spec.name, &par, &seq)?;
+
+    let speedup = if wall_par > 0.0 { wall_seq / wall_par } else { 1.0 };
+    // deterministic drift sentinel over the winners' counts
+    let top10_count_sum: i64 = par.top_words.iter().map(|(_, c)| *c).sum();
+
+    let mut m = empty_measured(par.sim_time_s);
+    m.sequential_virtual_s = Some(seq.sim_time_s);
+    m.pairs_emitted = Some(par.emitted_pairs);
+    m.headline_wall_s = Some(wall_par);
+    m.extras = vec![
+        ("reduce_invocations".to_string(), par.reduce_invocations as f64),
+        ("emitted_pairs".to_string(), par.emitted_pairs as f64),
+        ("peak_heap_bytes".to_string(), par.peak_heap as f64),
+        ("top10_count_sum".to_string(), top10_count_sum as f64),
+    ];
+    m.wall_extras = vec![
+        ("wall_parallel_s".to_string(), wall_par),
+        ("wall_sequential_s".to_string(), wall_seq),
+        ("wall_speedup".to_string(), speedup),
+    ];
+    Ok(m)
+}
+
+/// Fail with a drift report unless the parallel and sequential MapReduce
+/// pipelines agree bit-for-bit on every virtual quantity of the job.
+fn check_mr_bit_exact(scenario: &str, par: &JobResult, seq: &JobResult) -> Result<()> {
+    let drift = |what: &str, a: String, b: String| {
+        Err(C2SError::Other(format!(
+            "{scenario}: parallel-vs-sequential pipeline drifted on {what}: {a} vs {b}"
+        )))
+    };
+    if par.sim_time_s.to_bits() != seq.sim_time_s.to_bits() {
+        return drift("sim_time_s", par.sim_time_s.to_string(), seq.sim_time_s.to_string());
+    }
+    if par.peak_heap != seq.peak_heap {
+        return drift("peak_heap", par.peak_heap.to_string(), seq.peak_heap.to_string());
+    }
+    if par.reduce_invocations != seq.reduce_invocations {
+        return drift(
+            "reduce_invocations",
+            par.reduce_invocations.to_string(),
+            seq.reduce_invocations.to_string(),
+        );
+    }
+    if par.emitted_pairs != seq.emitted_pairs {
+        return drift("emitted_pairs", par.emitted_pairs.to_string(), seq.emitted_pairs.to_string());
+    }
+    if par.total_count != seq.total_count {
+        return drift("total_count", par.total_count.to_string(), seq.total_count.to_string());
+    }
+    if par.top_words != seq.top_words {
+        return drift("top_words", format!("{:?}", par.top_words), format!("{:?}", seq.top_words));
+    }
+    if par.split_brain_events != seq.split_brain_events {
+        return drift(
+            "split_brain_events",
+            par.split_brain_events.to_string(),
+            seq.split_brain_events.to_string(),
+        );
+    }
+    Ok(())
+}
+
 /// Fail with a drift report unless both runs agree bit-for-bit on every
 /// per-cloudlet virtual time (`compare_clock` additionally bit-compares
 /// the final clock — exact across queue implementations, while across
@@ -541,6 +681,48 @@ mod tests {
         assert_eq!(extra("cloudlets_ok"), spec.sim_config(true).no_of_cloudlets as f64);
         assert!(out.events_per_sec.unwrap_or(0.0) > 0.0, "{out:?}");
         assert!(out.wall_clock_ms >= 0.0);
+    }
+
+    #[test]
+    fn megascale_wordcount_pipelines_agree_bit_for_bit() {
+        // the registry shape is CI-scale; shrink the corpus for the debug
+        // test suite (the in-run referee hard-errors on any virtual drift,
+        // so this passing IS the parity check)
+        let mut spec = find("megascale_wordcount").unwrap();
+        let mut shape = spec.mr.clone().unwrap();
+        shape.lines_per_file = 400;
+        shape.quick_divisor = 1;
+        spec.mr = Some(shape);
+        let out = run_spec(&spec, &quick_opts()).unwrap();
+        assert!(out.virtual_s > 0.0);
+        assert_eq!(
+            out.sequential_virtual_s.map(f64::to_bits),
+            Some(out.virtual_s.to_bits()),
+            "pipelines must report identical virtual time"
+        );
+        assert!(out.pairs_per_sec.unwrap_or(0.0) > 0.0, "{out:?}");
+        let extra = |k: &str| {
+            out.extras
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing extra {k}"))
+        };
+        assert!(extra("reduce_invocations") > 0.0);
+        assert!(extra("emitted_pairs") >= extra("reduce_invocations"));
+        assert!(extra("peak_heap_bytes") > 0.0);
+        // the published ratio must agree with the published walls
+        let wall = |k: &str| {
+            out.wall_extras
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing wall extra {k}"))
+        };
+        assert_eq!(
+            wall("wall_speedup").to_bits(),
+            (wall("wall_sequential_s") / wall("wall_parallel_s")).to_bits()
+        );
     }
 
     #[test]

@@ -32,6 +32,11 @@ pub enum ScenarioKind {
     /// bit-for-bit) and on the seed polling engine, proving the event
     /// volume reduction with identical virtual times.
     Megascale,
+    /// MapReduce throughput at scale: the same word-count job run through
+    /// the parallel shuffle/reduce pipeline (headline) and the sequential
+    /// seed pipeline (in-run referee) — every virtual quantity must match
+    /// bit-for-bit, the wall-clock delta is the payload (`pairs_per_sec`).
+    MegascaleMapReduce,
 }
 
 impl ScenarioKind {
@@ -44,6 +49,7 @@ impl ScenarioKind {
             ScenarioKind::Elastic => "elastic",
             ScenarioKind::SeqVsThreaded => "seq-vs-threaded",
             ScenarioKind::Megascale => "megascale",
+            ScenarioKind::MegascaleMapReduce => "megascale-mapreduce",
         }
     }
 }
@@ -73,17 +79,23 @@ pub struct MrShape {
     pub vocab: usize,
     /// Backend profile to run on.
     pub backend: MrBackend,
+    /// Lines-per-file divisor applied in `quick` (CI smoke) mode. The
+    /// classic shapes use 4; megascale shapes use a much larger divisor so
+    /// the debug-mode test suite stays fast while the full-size run keeps
+    /// its ≥2M-distinct-key floor.
+    pub quick_divisor: usize,
 }
 
 impl MrShape {
     /// Corpus configuration for this shape; `quick` divides the lines per
-    /// file by 4 (the scenario registry's smoke-test mode).
+    /// file by [`MrShape::quick_divisor`] (the scenario registry's
+    /// smoke-test mode).
     pub fn corpus_config(&self, quick: bool) -> CorpusConfig {
         CorpusConfig {
             files: self.files,
             distinct_files: self.distinct_files.max(1),
             lines_per_file: if quick {
-                (self.lines_per_file / 4).max(1)
+                (self.lines_per_file / self.quick_divisor.max(1)).max(1)
             } else {
                 self.lines_per_file
             },
@@ -257,15 +269,25 @@ mod tests {
             zipf_s: 1.35,
             vocab: 50_000,
             backend: MrBackend::Infinispan,
+            quick_divisor: 4,
         };
         assert_eq!(shape.corpus_config(false).lines_per_file, 8000);
         assert_eq!(shape.corpus_config(true).lines_per_file, 2000);
         assert_eq!(shape.corpus_config(true).zipf_s, 1.35);
+        let megascale = MrShape {
+            quick_divisor: 32,
+            ..shape
+        };
+        assert_eq!(megascale.corpus_config(true).lines_per_file, 250);
     }
 
     #[test]
     fn kind_tags_stable() {
         assert_eq!(ScenarioKind::Elastic.tag(), "elastic");
         assert_eq!(ScenarioKind::SeqVsThreaded.tag(), "seq-vs-threaded");
+        assert_eq!(
+            ScenarioKind::MegascaleMapReduce.tag(),
+            "megascale-mapreduce"
+        );
     }
 }

@@ -1,0 +1,204 @@
+//! Property tests for the MapReduce shuffle/reduce pipeline parity
+//! contract: for any corpus shape, skew, member count, worker count,
+//! backend profile and verbose mode, the owner-partitioned **parallel**
+//! pipeline must produce *bitwise-identical* virtual quantities to the
+//! seed **sequential** pipeline — per-member clocks and busy time, heap,
+//! network counters, job time, peak heap, reduce invocations and the top
+//! words. Wall clock is the only thing allowed to differ.
+//!
+//! Uses the in-repo `util::proptest` harness (the offline vendor set has
+//! no proptest crate).
+
+use cloud2sim::grid::backend::BackendProfile;
+use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+use cloud2sim::grid::serialize::InMemoryFormat;
+use cloud2sim::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
+use cloud2sim::mapreduce::{Corpus, CorpusConfig, JobConfig, MapReduceEngine, MrPipeline};
+use cloud2sim::util::proptest::{forall, Gen};
+
+/// One randomized job shape.
+#[derive(Debug, Clone)]
+struct Case {
+    members: usize,
+    files: usize,
+    distinct_files: usize,
+    lines: usize,
+    vocab: usize,
+    zipf_s: f64,
+    hazelcast: bool,
+    verbose: bool,
+    chunk_lines: usize,
+}
+
+impl Case {
+    fn draw(g: &mut Gen) -> Self {
+        let files = g.usize(1..5);
+        Self {
+            members: g.usize(1..6),
+            files,
+            distinct_files: g.usize(1..files + 1),
+            lines: g.usize(20..100),
+            vocab: g.usize(40..3000),
+            zipf_s: g.f64(0.6..1.6),
+            hazelcast: g.bool(0.5),
+            verbose: g.bool(0.3),
+            chunk_lines: g.usize(5..60),
+        }
+    }
+}
+
+/// Everything the parity contract covers, f64s captured as raw bits.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    clocks: Vec<u64>,
+    busy: Vec<u64>,
+    heap: Vec<u64>,
+    net_messages: u64,
+    net_bytes: u64,
+    barriers: u64,
+    sim_time_bits: u64,
+    peak_heap: u64,
+    reduce_invocations: u64,
+    emitted_pairs: u64,
+    total_count: i64,
+    top_words: Vec<(String, i64)>,
+    split_brain: u32,
+}
+
+fn run(case: &Case, pipeline: MrPipeline, workers: usize) -> Fingerprint {
+    let corpus = Corpus::new(CorpusConfig {
+        files: case.files,
+        distinct_files: case.distinct_files,
+        lines_per_file: case.lines,
+        vocab: case.vocab.max(2),
+        zipf_s: case.zipf_s,
+        ..CorpusConfig::default()
+    });
+    let job = JobConfig {
+        chunk_lines: case.chunk_lines,
+        verbose: case.verbose,
+        pipeline,
+    };
+    let backend = if case.hazelcast {
+        BackendProfile::hazelcast_like()
+    } else {
+        BackendProfile::infinispan_like()
+    };
+    let mapper = WordCountMapper;
+    let reducer = WordCountReducer;
+    let engine = MapReduceEngine::new(corpus, job, &mapper, &reducer);
+    let mut cluster = GridCluster::with_members(
+        GridConfig {
+            backend,
+            in_memory_format: InMemoryFormat::Object,
+            node_heap_bytes: 64 * 1024 * 1024,
+            workers,
+            ..GridConfig::default()
+        },
+        case.members,
+    );
+    let r = engine.run(&mut cluster).expect("job fits the 64MB heap");
+    let members = cluster.members();
+    Fingerprint {
+        clocks: members.iter().map(|&m| cluster.clock(m).to_bits()).collect(),
+        busy: members.iter().map(|&m| cluster.busy(m).to_bits()).collect(),
+        heap: members.iter().map(|&m| cluster.heap_used(m)).collect(),
+        net_messages: cluster.net.messages,
+        net_bytes: cluster.net.bytes,
+        barriers: cluster.metrics.counter("cluster.barriers"),
+        sim_time_bits: r.sim_time_s.to_bits(),
+        peak_heap: r.peak_heap,
+        reduce_invocations: r.reduce_invocations,
+        emitted_pairs: r.emitted_pairs,
+        total_count: r.total_count,
+        top_words: r.top_words,
+        split_brain: r.split_brain_events,
+    }
+}
+
+#[test]
+fn pipelines_are_bit_identical_across_shapes() {
+    forall("mr-pipeline-parity", 32, |g: &mut Gen| {
+        let case = Case::draw(g);
+        let threaded_workers = [2, 3, 4][g.usize(0..3)];
+        let seq = run(&case, MrPipeline::Sequential, 1);
+        // inline parallel pipeline: same tail structure, no thread pool
+        let par_inline = run(&case, MrPipeline::Parallel, 1);
+        // real-thread parallel pipeline
+        let par_threaded = run(&case, MrPipeline::Parallel, threaded_workers);
+        assert_eq!(seq, par_inline, "inline parallel tail drifted: {case:?}");
+        assert_eq!(
+            seq, par_threaded,
+            "threaded parallel tail drifted ({threaded_workers} workers): {case:?}"
+        );
+        // sanity: word count is conserved and something was reduced
+        assert_eq!(seq.total_count as u64, seq.emitted_pairs, "{case:?}");
+        assert!(seq.reduce_invocations > 0, "{case:?}");
+    });
+}
+
+#[test]
+fn long_hazelcast_jobs_split_brain_identically() {
+    // force the deterministic split-brain penalty path (> 600 virtual s on
+    // a distributed hazelcast-profile job) through both pipelines
+    // mirrors the engine's `long_hazelcast_jobs_split_brain` shape
+    let case = Case {
+        members: 3,
+        files: 3,
+        distinct_files: 3,
+        lines: 3000,
+        vocab: 1_200_000,
+        zipf_s: 0.9,
+        hazelcast: true,
+        verbose: false,
+        chunk_lines: 1000,
+    };
+    let seq = run(&case, MrPipeline::Sequential, 1);
+    let par = run(&case, MrPipeline::Parallel, 2);
+    assert!(seq.split_brain > 0, "job must be long enough to split-brain");
+    assert_eq!(seq, par);
+}
+
+#[test]
+fn oom_failure_is_identical_across_pipelines() {
+    // a corpus that cannot fit the pair-retention heap must fail the same
+    // way (map-phase OOM) in both pipelines — the error path releases the
+    // same reservations
+    let corpus = || {
+        Corpus::new(CorpusConfig {
+            files: 8,
+            distinct_files: 4,
+            lines_per_file: 30_000,
+            ..CorpusConfig::default()
+        })
+    };
+    let mapper = WordCountMapper;
+    let reducer = WordCountReducer;
+    for pipeline in [MrPipeline::Sequential, MrPipeline::Parallel] {
+        let job = JobConfig {
+            pipeline,
+            ..JobConfig::default()
+        };
+        let engine = MapReduceEngine::new(corpus(), job, &mapper, &reducer);
+        // 16MB: the ~10MB input share is admitted, then the Hazelcast
+        // pair-retention reserves (55 B/token) blow the heap mid-map — the
+        // batch-atomic error path, not the phase-1 admission check
+        let mut cluster = GridCluster::with_members(
+            GridConfig {
+                backend: BackendProfile::hazelcast_like(),
+                in_memory_format: InMemoryFormat::Object,
+                node_heap_bytes: 16 * 1024 * 1024,
+                workers: 2,
+                ..GridConfig::default()
+            },
+            2,
+        );
+        let err = engine.run(&mut cluster).expect_err("must OOM");
+        assert!(err.is_oom(), "{pipeline:?}: {err}");
+        let members = cluster.members();
+        // every reservation was released on the error path
+        for &m in &members {
+            assert_eq!(cluster.heap_used(m), 0, "{pipeline:?} leaked scratch");
+        }
+    }
+}
