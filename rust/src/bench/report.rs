@@ -320,6 +320,8 @@ fn action_code(action: &str) -> f64 {
     match action {
         "out" => 1.0,
         "in" => 2.0,
+        "crash" => 3.0,
+        "rejoin" => 4.0,
         _ => 0.0,
     }
 }

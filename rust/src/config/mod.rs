@@ -10,6 +10,7 @@ pub mod properties;
 pub use properties::Properties;
 
 use crate::error::{C2SError, Result};
+use crate::faults::{FaultPlan, SpeculativeExecution};
 use crate::grid::backend::BackendProfile;
 use crate::mapreduce::job::MrPipeline;
 use crate::sim::cloudlet_scheduler::SchedulerKind;
@@ -178,6 +179,23 @@ pub struct SimConfig {
     /// `sequential` is the seed tail and the in-run referee of the
     /// `megascale_wordcount` scenario.
     pub mr_pipeline: MrPipeline,
+
+    // ---- Fault injection (ROADMAP open item 3) ----
+    /// Seed for deterministic fault victim selection (`faultSeed`).
+    pub fault_seed: u64,
+    /// Crash one non-master member at this virtual time (`memberCrashAt`,
+    /// seconds relative to run start; unset = no crash).
+    pub member_crash_at: Option<f64>,
+    /// Re-join the crashed member at this virtual time
+    /// (`memberRejoinAt`); requires `memberCrashAt` and must not precede
+    /// it.
+    pub member_rejoin_at: Option<f64>,
+    /// Multiplicative virtual-time skew of one member's map work
+    /// (`slowMemberSkew`, ≥ 1.0; 1.0 = no straggler).
+    pub slow_member_skew: f64,
+    /// Speculative backup execution of straggler map tasks
+    /// (`speculativeExecution=on|off`).
+    pub speculative_execution: SpeculativeExecution,
 }
 
 impl Default for SimConfig {
@@ -216,6 +234,11 @@ impl Default for SimConfig {
             mr_lines_per_file: 10_000,
             mr_verbose: false,
             mr_pipeline: MrPipeline::default(),
+            fault_seed: FaultPlan::default().seed,
+            member_crash_at: None,
+            member_rejoin_at: None,
+            slow_member_skew: 1.0,
+            speculative_execution: SpeculativeExecution::default(),
         }
     }
 }
@@ -281,6 +304,17 @@ impl SimConfig {
         get!("mapreduce.verbose", mr_verbose, get_bool);
         if let Some(v) = props.get("mrPipeline") {
             c.mr_pipeline = v.parse().map_err(C2SError::Config)?;
+        }
+        get!("faultSeed", fault_seed, get_u64);
+        get!("slowMemberSkew", slow_member_skew, get_f64);
+        if let Some(v) = props.get_f64("memberCrashAt")? {
+            c.member_crash_at = Some(v);
+        }
+        if let Some(v) = props.get_f64("memberRejoinAt")? {
+            c.member_rejoin_at = Some(v);
+        }
+        if let Some(v) = props.get("speculativeExecution") {
+            c.speculative_execution = v.parse().map_err(C2SError::Config)?;
         }
 
         if let Some(v) = props.get("isLoaded") {
@@ -400,7 +434,46 @@ impl SimConfig {
                 )));
             }
         }
+        if !self.slow_member_skew.is_finite() || self.slow_member_skew < 1.0 {
+            return Err(C2SError::Config(format!(
+                "slowMemberSkew must be a finite factor >= 1.0, got {}",
+                self.slow_member_skew
+            )));
+        }
+        if let Some(crash) = self.member_crash_at {
+            if !crash.is_finite() || crash < 0.0 {
+                return Err(C2SError::Config(format!(
+                    "memberCrashAt must be a non-negative virtual time, got {crash}"
+                )));
+            }
+        }
+        if let Some(rejoin) = self.member_rejoin_at {
+            match self.member_crash_at {
+                None => {
+                    return Err(C2SError::Config(
+                        "memberRejoinAt requires memberCrashAt".into(),
+                    ))
+                }
+                Some(crash) if rejoin < crash => {
+                    return Err(C2SError::Config(format!(
+                        "memberRejoinAt ({rejoin}) must not precede memberCrashAt ({crash})"
+                    )))
+                }
+                Some(_) => {}
+            }
+        }
         Ok(())
+    }
+
+    /// The typed fault schedule for this configuration.
+    pub fn fault_plan(&self) -> FaultPlan {
+        FaultPlan {
+            seed: self.fault_seed,
+            member_crash_at: self.member_crash_at,
+            member_rejoin_at: self.member_rejoin_at,
+            slow_member_skew: self.slow_member_skew,
+            speculative: self.speculative_execution,
+        }
     }
 }
 
@@ -528,5 +601,52 @@ mod tests {
     fn threshold_gap_enforced() {
         let p = Properties::parse("maxThreshold=0.1\nminThreshold=0.5\n").unwrap();
         assert!(SimConfig::from_properties(&p).is_err());
+    }
+
+    #[test]
+    fn fault_keys_parse_and_round_trip() {
+        let d = SimConfig::default();
+        assert!(d.fault_plan().is_noop(), "defaults inject nothing");
+        let p = Properties::parse(
+            "faultSeed=7\nmemberCrashAt=4.5\nmemberRejoinAt=9.0\n\
+             slowMemberSkew=3.25\nspeculativeExecution=ON\n",
+        )
+        .unwrap();
+        let c = SimConfig::from_properties(&p).unwrap();
+        assert_eq!(c.fault_seed, 7);
+        assert_eq!(c.member_crash_at, Some(4.5));
+        assert_eq!(c.member_rejoin_at, Some(9.0));
+        assert_eq!(c.slow_member_skew, 3.25);
+        assert!(c.speculative_execution.is_on());
+        // the typed plan carries exactly the parsed schedule
+        let plan = c.fault_plan();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.member_crash_at, Some(4.5));
+        assert_eq!(plan.member_rejoin_at, Some(9.0));
+        assert_eq!(plan.slow_member_skew, 3.25);
+        assert!(plan.speculative.is_on());
+        assert!(!plan.is_noop());
+    }
+
+    #[test]
+    fn fault_keys_validated() {
+        // skew below 1.0 makes no sense (that would be a *fast* member)
+        let p = Properties::parse("slowMemberSkew=0.5\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        // rejoin without a crash
+        let p = Properties::parse("memberRejoinAt=5.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        // rejoin before the crash
+        let p = Properties::parse("memberCrashAt=9.0\nmemberRejoinAt=5.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        // negative crash time
+        let p = Properties::parse("memberCrashAt=-1.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        // bad enum
+        let p = Properties::parse("speculativeExecution=maybe\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        // a well-formed schedule passes
+        let p = Properties::parse("memberCrashAt=2.0\nmemberRejoinAt=2.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_ok());
     }
 }

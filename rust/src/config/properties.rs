@@ -223,4 +223,38 @@ mod tests {
         p.set("a", "2");
         assert_eq!(p.get("a"), Some("2"));
     }
+
+    #[test]
+    fn fault_keys_round_trip_through_set_and_parse() {
+        // the fault-injection keys survive a set → iter → reparse cycle
+        // exactly (the path `mapreduce --config` takes)
+        let mut p = Properties::default();
+        p.set("faultSeed", "12345");
+        p.set("memberCrashAt", "4.25");
+        p.set("memberRejoinAt", "9.75");
+        p.set("slowMemberSkew", "3.5");
+        p.set("speculativeExecution", "on");
+        let rendered: String = p
+            .iter()
+            .map(|(k, v)| format!("{k}={v}\n"))
+            .collect();
+        let q = Properties::parse(&rendered).unwrap();
+        assert_eq!(q.get_u64("faultSeed").unwrap(), Some(12345));
+        assert_eq!(q.get_f64("memberCrashAt").unwrap(), Some(4.25));
+        assert_eq!(q.get_f64("memberRejoinAt").unwrap(), Some(9.75));
+        assert_eq!(q.get_f64("slowMemberSkew").unwrap(), Some(3.5));
+        assert_eq!(q.get("speculativeExecution"), Some("on"));
+        // case-insensitive enum value parses through the shared FromStr
+        use crate::faults::SpeculativeExecution;
+        let s: SpeculativeExecution = q.get("speculativeExecution").unwrap().parse().unwrap();
+        assert!(s.is_on());
+        assert_eq!("OfF".parse::<SpeculativeExecution>().unwrap(), SpeculativeExecution::Off);
+    }
+
+    #[test]
+    fn malformed_fault_values_rejected() {
+        let p = Properties::parse("memberCrashAt=soon\nslowMemberSkew=very\n").unwrap();
+        assert!(p.get_f64("memberCrashAt").is_err());
+        assert!(p.get_f64("slowMemberSkew").is_err());
+    }
 }

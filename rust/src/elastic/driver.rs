@@ -42,6 +42,11 @@ pub enum ScaleAction {
     Out,
     /// An Initiator left the main cluster.
     In,
+    /// A member was killed by the fault plan (`memberCrashAt`), taking its
+    /// in-flight round share with it.
+    Crash,
+    /// The crashed member restarted and rejoined (`memberRejoinAt`).
+    Rejoin,
 }
 
 impl std::fmt::Display for ScaleAction {
@@ -49,6 +54,8 @@ impl std::fmt::Display for ScaleAction {
         match self {
             ScaleAction::Out => write!(f, "out"),
             ScaleAction::In => write!(f, "in"),
+            ScaleAction::Crash => write!(f, "crash"),
+            ScaleAction::Rejoin => write!(f, "rejoin"),
         }
     }
 }
@@ -90,6 +97,18 @@ pub struct ElasticReport {
     pub cloudlets_ok: usize,
     /// Max process CPU load observed (Fig 5.5).
     pub max_process_cpu_load: f64,
+    /// Members killed by the fault plan (0 without one).
+    pub crashes: usize,
+    /// Crashed members that restarted and rejoined.
+    pub rejoins: usize,
+    /// Round tasks lost to a crash and re-queued onto the survivors.
+    pub tasks_reexecuted: u64,
+    /// Map entries dropped with leavers across the whole run
+    /// (`map.entries_lost` — non-zero only without backups).
+    pub entries_lost: u64,
+    /// Map entries promoted from backups and re-homed by partition
+    /// rebuilds across the whole run (`map.entries_migrated`).
+    pub entries_migrated: u64,
 }
 
 /// Run the loaded round-robin scenario with adaptive scaling over at most
@@ -148,9 +167,31 @@ pub fn run_adaptive(
     let mut scale_ins = 0;
     let mut peak = 1;
 
+    // deterministic fault plan (§noop without the memberCrashAt knob):
+    // the crash fires on the first round at or past `memberCrashAt` once a
+    // second member exists; the victim's share of that round's batch is
+    // re-queued onto the survivors
+    let plan = cfg.fault_plan();
+    let mut crash_pending = plan.member_crash_at;
+    let mut rejoin_pending: Option<f64> = None;
+    let mut crashes = 0usize;
+    let mut rejoins = 0usize;
+    let mut tasks_reexecuted: u64 = 0;
+
     // workload: remaining cloudlet MI lengths, re-partitioned every round
     // over whatever members currently exist
     let mut remaining: Vec<u64> = scenario.cloudlets.iter().map(|c| c.length_mi).collect();
+    if plan.member_crash_at.is_some() {
+        // under a crash plan, keep the per-cloudlet state in a distributed
+        // map (the paper holds job state in Hazelcast maps): the crash
+        // then observably re-homes the victim's share through its backups,
+        // and the churn referee asserts the lost/migrated split. Fault-free
+        // runs skip this so their virtual times stay bit-identical to the
+        // pre-fault-model driver.
+        for (i, len) in remaining.iter().enumerate() {
+            main.map_put(master, "cloudletState", format!("cl-{i}"), len)?;
+        }
+    }
     let ws = model.working_set_bytes();
     let mut round = 0usize;
     while !remaining.is_empty() {
@@ -195,6 +236,47 @@ pub fn run_adaptive(
             }
         }
 
+        let now = main.clock(master);
+        let mut event = format!("Health Monitoring (round {round})");
+
+        // --- fault injection: member crash / rejoin ---
+        if let Some(crash_at) = crash_pending {
+            if now - t_start >= crash_at && main.size() > 1 {
+                // victim: the youngest member (highest offset, never the
+                // master) — its strided share of this round's batch dies
+                // with it and is re-queued for the survivors
+                let victim = members[n - 1];
+                main.leave(victim)?;
+                let mut requeued: Vec<u64> =
+                    batch.iter().skip(n - 1).step_by(n).copied().collect();
+                tasks_reexecuted += requeued.len() as u64;
+                requeued.extend(remaining.iter().copied());
+                remaining = requeued;
+                crashes += 1;
+                crash_pending = None;
+                rejoin_pending = plan.member_rejoin_at;
+                event = format!("Member Crash - I{}", n - 1);
+                events.push(ScaleEvent {
+                    at: now - t_start,
+                    action: ScaleAction::Crash,
+                    instances_after: main.size(),
+                });
+            }
+        }
+        if let Some(rejoin_at) = rejoin_pending {
+            if now - t_start >= rejoin_at {
+                main.join();
+                rejoins += 1;
+                rejoin_pending = None;
+                event = "Member Rejoin".to_string();
+                events.push(ScaleEvent {
+                    at: now - t_start,
+                    action: ScaleAction::Rejoin,
+                    instances_after: main.size(),
+                });
+            }
+        }
+
         // --- health monitoring + Algorithm 4 ---
         let samples = monitor.sample(&main);
         let master_sample = samples
@@ -203,7 +285,6 @@ pub fn run_adaptive(
             .map(|(_, s)| *s)
             .expect("master sampled");
         let load = monitor.measure(&master_sample, measure);
-        let now = main.clock(master);
         // keep the control plane's clocks in step with the simulation
         let sub_now = sub.max_clock();
         if now > sub_now {
@@ -212,7 +293,6 @@ pub fn run_adaptive(
             }
         }
         let decision = scaler.decide(now, load, main.size());
-        let mut event = format!("Health Monitoring (round {round})");
         match decision {
             ScaleDecision::Out => {
                 probe.add_instance();
@@ -277,6 +357,11 @@ pub fn run_adaptive(
         events,
         cloudlets_ok: scenario.successes(),
         max_process_cpu_load: monitor.max_process_cpu_load,
+        crashes,
+        rejoins,
+        tasks_reexecuted,
+        entries_lost: main.metrics.counter("map.entries_lost"),
+        entries_migrated: main.metrics.counter("map.entries_migrated"),
     })
 }
 
@@ -353,6 +438,47 @@ mod tests {
         let r = run_adaptive(&cfg, 5, HealthMeasure::LoadAverage, &mut model).unwrap();
         assert_eq!(r.scale_outs, 0, "{r:?}");
         assert_eq!(r.final_instances, 1);
+    }
+
+    #[test]
+    fn churn_crash_and_rejoin_redistribute_work() {
+        let mut model = NativeBurnModel::default();
+        let cfg = SimConfig {
+            member_crash_at: Some(5.0),
+            member_rejoin_at: Some(15.0),
+            ..loaded_cfg()
+        };
+        let r = run_adaptive(&cfg, 5, HealthMeasure::LoadAverage, &mut model).unwrap();
+        assert_eq!(r.crashes, 1, "{r:?}");
+        assert_eq!(r.rejoins, 1);
+        assert!(r.tasks_reexecuted > 0, "the victim's round share is re-queued");
+        assert!(r.events.iter().any(|e| e.action == ScaleAction::Crash));
+        assert!(r.events.iter().any(|e| e.action == ScaleAction::Rejoin));
+        let crash_at = r
+            .events
+            .iter()
+            .find(|e| e.action == ScaleAction::Crash)
+            .unwrap()
+            .at;
+        let rejoin_at = r
+            .events
+            .iter()
+            .find(|e| e.action == ScaleAction::Rejoin)
+            .unwrap()
+            .at;
+        assert!(crash_at >= 5.0 && rejoin_at >= 15.0 && rejoin_at > crash_at);
+        // elastic runs mandate synchronous backups (§3.4.3): churn must
+        // migrate the victim's entries, never lose them
+        assert_eq!(r.entries_lost, 0);
+        assert!(r.entries_migrated > 0, "the victim's map share re-homes");
+        // data parity with a fault-free run: every cloudlet still finishes
+        let mut referee_model = NativeBurnModel::default();
+        let referee =
+            run_adaptive(&loaded_cfg(), 5, HealthMeasure::LoadAverage, &mut referee_model)
+                .unwrap();
+        assert_eq!(r.cloudlets_ok, referee.cloudlets_ok);
+        assert_eq!(referee.crashes, 0);
+        assert_eq!(referee.tasks_reexecuted, 0);
     }
 
     #[test]

@@ -78,6 +78,13 @@ impl IntelligentAdaptiveScaler {
         if self.terminated {
             return Ok(IasAction::Terminated);
         }
+        // a fault-plan crash may have killed our Initiator out from under
+        // us: forget it instead of later shutting down a ghost member
+        if let Some(init) = self.initiator {
+            if main.offset_of(init).is_err() {
+                self.initiator = None;
+            }
+        }
         let me = self.sub_node;
         // terminate-all check (§4.3.2)
         if sub.atomic_get(me, SCALING_KEY) == TERMINATE_ALL_FLAG {
@@ -221,6 +228,26 @@ mod tests {
             assert!(ias.is_terminated());
         }
         assert_eq!(main.size(), 1, "initiators left the main cluster");
+    }
+
+    #[test]
+    fn crashed_initiator_is_forgotten() {
+        let (mut sub, mut main) = clusters(1);
+        let s0 = sub.members()[0];
+        let mut ias = IntelligentAdaptiveScaler::new(s0, "t0", 0.0);
+        IntelligentAdaptiveScaler::init_health_map(&mut sub, s0, "t0").unwrap();
+        let mut probe = AdaptiveScalerProbe::new();
+        probe.add_instance();
+        probe.probe(&mut sub, s0, "t0").unwrap();
+        assert_eq!(ias.probe(&mut sub, &mut main).unwrap(), IasAction::Spawned);
+        let init = ias.initiator.expect("spawned an initiator");
+        // the fault plan kills the Initiator behind the IAS's back
+        main.leave(init).unwrap();
+        // a scale-in request must not shut down the ghost member
+        probe.remove_instance();
+        probe.probe(&mut sub, s0, "t0").unwrap();
+        assert_eq!(ias.probe(&mut sub, &mut main).unwrap(), IasAction::Idle);
+        assert!(ias.initiator.is_none(), "ghost initiator forgotten");
     }
 
     #[test]

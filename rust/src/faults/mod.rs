@@ -1,0 +1,305 @@
+//! Seeded, deterministic fault injection (ROADMAP open item 3).
+//!
+//! The paper's closing claim is an elastic middleware that survives a
+//! dynamically changing Hazelcast cluster (§4.3.3), yet a failure model is
+//! only trustworthy in a simulator if it is *reproducible*: the same seed
+//! must produce the same crash, the same straggler and the same recovery
+//! schedule on every run and at every `gridWorkers` setting. This module
+//! holds the [`FaultPlan`] — the declarative description parsed from
+//! `cloud2sim.properties` (`faultSeed`, `memberCrashAt`, `memberRejoinAt`,
+//! `slowMemberSkew`, `speculativeExecution`) — plus the deterministic
+//! victim-selection helpers and the [`FaultEvent`] log the test harness
+//! fingerprints.
+//!
+//! Fault semantics (the referee contract, fuzzed by
+//! `rust/tests/props_faults.rs`): faults may change **timing** quantities
+//! (virtual clocks, `sim_time_s`, heap peaks) but never **data** results —
+//! `total_count`, `emitted_pairs`, `top_words` and `reduce_invocations`
+//! must be bit-identical to a no-failure run of the same job. Crashed map
+//! tasks are re-executed on survivors, straggler skew only stretches
+//! virtual time, and speculative backups race the straggler under
+//! first-result-wins with both attempts producing the same deterministic
+//! output.
+
+use crate::util::rng::SplitMix64;
+
+/// Domain-separation constants mixed into [`FaultPlan::seed`] so the crash
+/// victim and the straggler are drawn from independent streams.
+const CRASH_STREAM: u64 = 0xC4A5_11FA_17BA_D001;
+const STRAGGLER_STREAM: u64 = 0x51_0C0F_FEE5_10F2;
+
+/// Whether straggler map tasks get a speculative backup attempt on the
+/// least-loaded survivor (`speculativeExecution` in
+/// `cloud2sim.properties`), per Dean & Ghemawat's backup-task mechanism.
+///
+/// First-result-wins: whichever of primary and backup finishes first in
+/// virtual time determines the job's timing; the *data* result is always
+/// the primary's deterministic output, which both attempts share — that is
+/// what keeps `On` and `Off` bit-identical on results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpeculativeExecution {
+    /// No backup attempts; stragglers run to completion.
+    #[default]
+    Off,
+    /// Back up straggler map tasks on the least-loaded survivor.
+    On,
+}
+
+impl SpeculativeExecution {
+    /// True when backup execution is enabled.
+    pub fn is_on(self) -> bool {
+        matches!(self, SpeculativeExecution::On)
+    }
+}
+
+impl std::str::FromStr for SpeculativeExecution {
+    type Err = String;
+
+    /// Parse the `speculativeExecution` property value (case-insensitive)
+    /// — the one parser shared by every entry point, mirroring
+    /// [`crate::mapreduce::MrPipeline`].
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "on" => Ok(SpeculativeExecution::On),
+            "off" => Ok(SpeculativeExecution::Off),
+            other => Err(format!("speculativeExecution must be on|off, got {other}")),
+        }
+    }
+}
+
+impl std::fmt::Display for SpeculativeExecution {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SpeculativeExecution::On => "on",
+            SpeculativeExecution::Off => "off",
+        })
+    }
+}
+
+/// What kind of fault (or recovery action) a [`FaultEvent`] records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A member left the cluster abruptly.
+    Crash,
+    /// The crashed member came back and re-joined.
+    Rejoin,
+    /// Lost map tasks were re-executed on survivors.
+    Reexecution,
+    /// The slow-member skew made this member a straggler.
+    Straggler,
+    /// A speculative backup beat the straggling primary.
+    SpeculativeWin,
+    /// The straggling primary beat its speculative backup.
+    SpeculativeLoss,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Rejoin => "rejoin",
+            FaultKind::Reexecution => "reexecution",
+            FaultKind::Straggler => "straggler",
+            FaultKind::SpeculativeWin => "speculative-win",
+            FaultKind::SpeculativeLoss => "speculative-loss",
+        })
+    }
+}
+
+/// One entry of the fault log. `PartialEq` (with `at` compared via raw
+/// bits in [`FaultEvent::fingerprint`]) is what the same-seed identity
+/// tests in `tests/props_faults.rs` key on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual seconds since the job/run started.
+    pub at: f64,
+    /// What happened.
+    pub kind: FaultKind,
+    /// Member offset (engine faults) or instance count (driver faults)
+    /// the event concerns.
+    pub member: u64,
+    /// Deterministic detail (task counts, skew factors) — no wall-clock
+    /// quantities allowed here.
+    pub detail: String,
+}
+
+impl FaultEvent {
+    /// Bit-stable rendering (`at` as raw f64 bits) used to compare fault
+    /// logs across runs and worker counts.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{:016x} {} member-{} {}",
+            self.at.to_bits(),
+            self.kind,
+            self.member,
+            self.detail
+        )
+    }
+}
+
+/// A declarative, seeded fault schedule (the `faultSeed` /
+/// `memberCrashAt` / `memberRejoinAt` / `slowMemberSkew` /
+/// `speculativeExecution` properties).
+///
+/// Times are virtual seconds **relative to the start** of whatever run the
+/// plan is injected into (a MapReduce job or an elastic driver session);
+/// this keeps one plan meaningful across quick and full scenario modes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for victim/straggler selection (`faultSeed`).
+    pub seed: u64,
+    /// Crash one non-master member at this virtual time (`memberCrashAt`).
+    pub member_crash_at: Option<f64>,
+    /// Re-join the crashed member at this virtual time
+    /// (`memberRejoinAt`); requires `member_crash_at` and must not
+    /// precede it.
+    pub member_rejoin_at: Option<f64>,
+    /// Multiplicative virtual-time skew for one member's map work
+    /// (`slowMemberSkew`, ≥ 1.0; 1.0 disables the straggler).
+    pub slow_member_skew: f64,
+    /// Speculative backup execution of straggler tasks
+    /// (`speculativeExecution`).
+    pub speculative: SpeculativeExecution,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0xFA17_0000_C10D_25B1,
+            member_crash_at: None,
+            member_rejoin_at: None,
+            slow_member_skew: 1.0,
+            speculative: SpeculativeExecution::default(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing (no crash, no skew).
+    pub fn is_noop(&self) -> bool {
+        self.member_crash_at.is_none() && self.slow_member_skew <= 1.0
+    }
+
+    /// Deterministically pick the crash victim's member *offset* in an
+    /// `n`-member cluster. Never the master (offset 0); `None` when no
+    /// crash is scheduled or there is no non-master member to kill.
+    pub fn crash_offset(&self, n: usize) -> Option<usize> {
+        if self.member_crash_at.is_none() || n < 2 {
+            return None;
+        }
+        let mut rng = SplitMix64::new(self.seed ^ CRASH_STREAM);
+        Some(1 + (rng.next_u64() % (n as u64 - 1)) as usize)
+    }
+
+    /// Deterministically pick the straggler's member offset; `None` when
+    /// the skew is ≤ 1.0. Any member (including the master) may straggle.
+    pub fn straggler_offset(&self, n: usize) -> Option<usize> {
+        if self.slow_member_skew <= 1.0 || n == 0 {
+            return None;
+        }
+        let mut rng = SplitMix64::new(self.seed ^ STRAGGLER_STREAM);
+        Some((rng.next_u64() % n as u64) as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_noop() {
+        let p = FaultPlan::default();
+        assert!(p.is_noop());
+        assert_eq!(p.crash_offset(4), None);
+        assert_eq!(p.straggler_offset(4), None);
+    }
+
+    #[test]
+    fn crash_offset_is_deterministic_and_never_master() {
+        let plan = FaultPlan {
+            member_crash_at: Some(5.0),
+            ..FaultPlan::default()
+        };
+        for n in 2..12 {
+            let a = plan.crash_offset(n).expect("n >= 2");
+            let b = plan.crash_offset(n).expect("n >= 2");
+            assert_eq!(a, b, "same seed, same victim");
+            assert!((1..n).contains(&a), "victim {a} must be a non-master");
+        }
+        // single-member clusters have nobody expendable
+        assert_eq!(plan.crash_offset(1), None);
+        assert_eq!(plan.crash_offset(0), None);
+    }
+
+    #[test]
+    fn seeds_select_different_victims() {
+        // over many seeds the victim must actually vary (not pinned)
+        let hits: std::collections::BTreeSet<usize> = (0..64u64)
+            .filter_map(|s| {
+                FaultPlan {
+                    seed: s,
+                    member_crash_at: Some(1.0),
+                    ..FaultPlan::default()
+                }
+                .crash_offset(8)
+            })
+            .collect();
+        assert!(hits.len() > 3, "victim stuck: {hits:?}");
+    }
+
+    #[test]
+    fn straggler_requires_real_skew() {
+        let mut plan = FaultPlan {
+            slow_member_skew: 1.0,
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.straggler_offset(4), None);
+        plan.slow_member_skew = 3.0;
+        let s = plan.straggler_offset(4).expect("skew active");
+        assert!(s < 4);
+        assert_eq!(plan.straggler_offset(4), Some(s), "deterministic");
+    }
+
+    #[test]
+    fn crash_and_straggler_streams_are_independent() {
+        // changing the seed shifts both picks, but the two picks are not
+        // forced equal: domain separation keeps the streams distinct
+        let any_differ = (0..32u64).any(|s| {
+            let plan = FaultPlan {
+                seed: s,
+                member_crash_at: Some(1.0),
+                slow_member_skew: 2.0,
+                ..FaultPlan::default()
+            };
+            plan.crash_offset(6) != plan.straggler_offset(6)
+        });
+        assert!(any_differ);
+    }
+
+    #[test]
+    fn speculative_execution_parses_case_insensitively() {
+        assert_eq!("on".parse(), Ok(SpeculativeExecution::On));
+        assert_eq!("OFF".parse(), Ok(SpeculativeExecution::Off));
+        assert_eq!("On".parse(), Ok(SpeculativeExecution::On));
+        assert!("yes".parse::<SpeculativeExecution>().is_err());
+        assert_eq!(SpeculativeExecution::On.to_string(), "on");
+        assert_eq!(SpeculativeExecution::Off.to_string(), "off");
+        assert!(!SpeculativeExecution::default().is_on());
+    }
+
+    #[test]
+    fn fault_event_fingerprint_is_bit_stable() {
+        let e = FaultEvent {
+            at: 1.5,
+            kind: FaultKind::Crash,
+            member: 3,
+            detail: "lost 7 chunks".into(),
+        };
+        assert_eq!(e.fingerprint(), e.clone().fingerprint());
+        assert!(e.fingerprint().contains("crash member-3"));
+        // a 1-ulp timing drift must change the fingerprint
+        let mut shifted = e.clone();
+        shifted.at = f64::from_bits(e.at.to_bits() + 1);
+        assert_ne!(e.fingerprint(), shifted.fingerprint());
+    }
+}

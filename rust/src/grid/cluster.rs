@@ -189,6 +189,11 @@ impl GridCluster {
     /// through backups; with `backup_count == 0` the data held by the node
     /// is lost (the paper mandates synchronous backups for elastic runs,
     /// §3.4.3). Returns the number of entries lost.
+    ///
+    /// Both outcomes are counted in the metrics registry — the churn tests
+    /// assert the split: `map.entries_lost` (dropped with the leaver,
+    /// backup-less clusters) vs `map.entries_migrated` (promoted from
+    /// backups and re-homed by the partition rebuild).
     pub fn leave(&mut self, id: NodeId) -> Result<u64> {
         let Some(offset) = self.membership.offset_of(id) else {
             return Err(C2SError::Cluster(format!("{id} is not a member")));
@@ -198,20 +203,32 @@ impl GridCluster {
                 "cannot remove the last member of a running cluster".into(),
             ));
         }
+        // entries living in partitions owned by the leaver: lost outright
+        // without backups, otherwise they survive and migrate
+        let owned: Vec<u32> = (0..self.table.partition_count())
+            .filter(|&p| self.table.owner(p) == offset)
+            .collect();
         let mut lost = 0u64;
+        let mut migrated = 0u64;
         if self.table.backup_count() == 0 {
-            // entries in partitions owned by the leaver are lost
-            let owned: Vec<u32> = (0..self.table.partition_count())
-                .filter(|&p| self.table.owner(p) == offset)
-                .collect();
             for m in self.maps.values_mut() {
                 lost += m.drop_partitions(&owned);
+            }
+        } else {
+            for m in self.maps.values() {
+                migrated += m
+                    .partition_stats()
+                    .iter()
+                    .filter(|(p, _, _)| owned.contains(p))
+                    .map(|(_, entries, _)| entries)
+                    .sum::<u64>();
             }
         }
         self.membership.leave(id);
         self.nodes.remove(&id);
         self.metrics.incr("membership.leaves");
         self.metrics.add("map.entries_lost", lost);
+        self.metrics.add("map.entries_migrated", migrated);
         self.rebuild_partition_table();
         Ok(lost)
     }
@@ -553,5 +570,44 @@ mod tests {
         c.advance_busy(m0, 100.0);
         let m1 = c.join();
         assert!(c.clock(m1) >= 100.0, "joiner cannot start in the past");
+    }
+
+    fn populated(backup_count: u32, n: usize) -> GridCluster {
+        let mut c = GridCluster::with_members(
+            GridConfig {
+                backup_count,
+                ..GridConfig::default()
+            },
+            n,
+        );
+        let master = c.master().unwrap();
+        for i in 0..200u64 {
+            c.map_put(master, "churn", format!("key-{i}"), &i).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn backupless_leave_counts_lost_entries() {
+        let mut c = populated(0, 3);
+        let victim = c.members()[2];
+        let lost = c.leave(victim).unwrap();
+        assert!(lost > 0, "a 3-way partition split must strand entries");
+        assert_eq!(c.metrics.counter("map.entries_lost"), lost);
+        assert_eq!(c.metrics.counter("map.entries_migrated"), 0);
+        assert_eq!(c.map_len("churn") as u64, 200 - lost);
+    }
+
+    #[test]
+    fn backed_up_leave_counts_migrated_entries() {
+        let mut c = populated(1, 3);
+        let victim = c.members()[2];
+        let lost = c.leave(victim).unwrap();
+        assert_eq!(lost, 0, "synchronous backups keep every entry (§3.4.3)");
+        assert_eq!(c.metrics.counter("map.entries_lost"), 0);
+        let migrated = c.metrics.counter("map.entries_migrated");
+        assert!(migrated > 0, "the leaver's owned entries must be re-homed");
+        assert!(migrated <= 200);
+        assert_eq!(c.map_len("churn"), 200, "no data loss with backups");
     }
 }

@@ -21,6 +21,7 @@ pub mod config;
 pub mod dist;
 pub mod elastic;
 pub mod error;
+pub mod faults;
 pub mod grid;
 pub mod mapreduce;
 pub mod metrics;
@@ -35,6 +36,7 @@ pub mod prelude {
     pub use crate::config::{CloudletDistribution, Properties, SimConfig, WorkloadKind};
     pub use crate::dist::{run_cloudsim_baseline, run_distributed, DistReport};
     pub use crate::error::{C2SError, Result};
+    pub use crate::faults::{FaultEvent, FaultPlan, SpeculativeExecution};
     pub use crate::grid::backend::BackendProfile;
     pub use crate::grid::cluster::{GridCluster, GridConfig};
     pub use crate::scenarios::{RunOptions, ScenarioSpec};

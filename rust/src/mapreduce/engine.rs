@@ -34,7 +34,10 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 
 use crate::error::{C2SError, Result};
+use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+use crate::grid::backend::BackendProfile;
 use crate::grid::cluster::{GridCluster, NodeId};
+use crate::grid::parallel::NodeCtx;
 use crate::grid::partition::partition_of;
 use crate::mapreduce::corpus::Corpus;
 use crate::mapreduce::job::{
@@ -53,8 +56,9 @@ const SHUFFLE_ENTRY_BYTES: u64 = 24;
 type OwnerBucket = Vec<(String, i64)>;
 /// One mapper's full output: one [`OwnerBucket`] per member, plus the
 /// member's distinct-key count (the shuffle wire-cost driver), retained
-/// pair-heap bytes and emitted-pair count.
-type MapOutput = (Vec<OwnerBucket>, u64, u64, u64);
+/// pair-heap bytes, emitted-pair count, and the total virtual cost the
+/// member charged for its chunks (the straggler/speculation driver).
+type MapOutput = (Vec<OwnerBucket>, u64, u64, u64, f64);
 /// What either pipeline tail hands back to the shared collect/teardown
 /// code: `reduce()` invocations, the total count, and the top words.
 type TailOutput = (u64, i64, Vec<(String, i64)>);
@@ -67,6 +71,7 @@ pub struct MapReduceEngine<'a> {
     pub job: JobConfig,
     mapper: &'a dyn Mapper,
     reducer: &'a dyn Reducer,
+    faults: Option<FaultPlan>,
 }
 
 impl<'a> MapReduceEngine<'a> {
@@ -82,7 +87,17 @@ impl<'a> MapReduceEngine<'a> {
             job,
             mapper,
             reducer,
+            faults: None,
         }
+    }
+
+    /// Inject a seeded fault schedule into the job (crash/re-execution,
+    /// straggler skew, speculative backups). Faults change *timing* only:
+    /// every data result stays bit-identical to the no-fault run — the
+    /// referee contract `tests/props_faults.rs` fuzzes.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
     }
 
     /// Run the job on the cluster. The master is the supervisor ("the
@@ -137,66 +152,24 @@ impl<'a> MapReduceEngine<'a> {
         // emit (one hash per distinct key, on the worker thread) and the
         // body splits its output into per-owner buckets before returning —
         // shuffle becomes a hand-off and never re-hashes a key.
+        //
+        // The fault plan fixes its crash victim before the phase starts:
+        // the victim's body does no work (its map output would die with it
+        // anyway — map output lives on the worker, Dean & Ghemawat §3.3)
+        // and its chunks are re-executed on survivors below.
+        let plan = self.faults.clone().unwrap_or_default();
+        let crash_off = plan.crash_offset(n);
         let chunks_ref = &chunks;
-        let corpus = &self.corpus;
-        let mapper = self.mapper;
-        let verbose = self.job.verbose;
         let map_backend = &backend;
         let partition_count = cluster.cfg.partition_count;
         let map_out = cluster.try_execute_on_all(master, |ctx| {
-            let mut partial: HashMap<String, (u32, i64)> = HashMap::new();
-            let mut retained: u64 = 0;
-            let mut emitted: u64 = 0;
-            let mut text = String::new(); // reused line buffer (perf pass §L3)
-            for &(f, l0, l1) in chunks_ref.iter().skip(ctx.offset()).step_by(n) {
-                let gc = ctx.gc_factor();
-                let mut tokens_in_chunk: u64 = 0;
-                for line in l0..l1 {
-                    corpus.line_text_into(f, line, &mut text);
-                    mapper.map(f, line, &text, &mut |k, v| {
-                        use std::collections::hash_map::Entry;
-                        match partial.entry(k) {
-                            Entry::Occupied(mut e) => e.get_mut().1 += v,
-                            Entry::Vacant(e) => {
-                                let pid = partition_of(e.key().as_bytes(), partition_count);
-                                e.insert((pid, v));
-                            }
-                        }
-                        tokens_in_chunk += 1;
-                    });
-                }
-                emitted += tokens_in_chunk;
-                // pair-retention heap (the Hazelcast OOM mechanism)
-                let pair_bytes = tokens_in_chunk * map_backend.mr_pair_retained_bytes;
-                ctx.reserve_scratch(pair_bytes)?;
-                retained += pair_bytes;
-                let mut cost = map_backend.mr_chunk_overhead
-                    + tokens_in_chunk as f64 * TOKEN_CPU_COST * local_factor;
-                if verbose {
-                    // verbose mode logs per-chunk progress (§5.2:
-                    // "executions were slower in verbose mode")
-                    cost += map_backend.mr_chunk_overhead * 0.5;
-                }
-                ctx.advance_busy(cost * gc);
+            if Some(ctx.offset()) == crash_off {
+                let mut buckets: Vec<OwnerBucket> = Vec::new();
+                buckets.resize_with(n, Vec::new);
+                return Ok((buckets, 0, 0, 0, 0.0));
             }
-            // split into per-owner buckets on the worker thread, consuming
-            // the cached partition ids
-            let distinct = partial.len() as u64;
-            let mut buckets: Vec<OwnerBucket> = Vec::new();
-            buckets.resize_with(n, Vec::new);
-            for (k, (pid, v)) in partial {
-                let owner = pid as usize % n;
-                // the satellite micro-assert: the owner derived from the
-                // emit-time partition id must agree with a shuffle-time
-                // re-hash (debug builds only — release never re-hashes)
-                debug_assert_eq!(
-                    owner,
-                    partition_of(k.as_bytes(), partition_count) as usize % n,
-                    "emit-time and shuffle-time owners disagree for {k:?}"
-                );
-                buckets[owner].push((k, v));
-            }
-            Ok((buckets, distinct, retained, emitted))
+            let mine = chunks_ref.iter().skip(ctx.offset()).step_by(n).copied();
+            self.map_chunk_set(ctx, mine, n, partition_count, local_factor, map_backend)
         });
         let map_out: Vec<(NodeId, MapOutput)> = match map_out {
             Ok(r) => r,
@@ -204,14 +177,165 @@ impl<'a> MapReduceEngine<'a> {
         };
         let mut bucketed: Vec<Vec<OwnerBucket>> = Vec::with_capacity(n);
         let mut distincts: Vec<u64> = Vec::with_capacity(n);
+        let mut cost_sums: Vec<f64> = Vec::with_capacity(n);
         let mut emitted_total: u64 = 0;
-        for (i, (_member, (buckets, distinct, retained, emitted))) in
+        for (i, (_member, (buckets, distinct, retained, emitted, cost))) in
             map_out.into_iter().enumerate()
         {
             bucketed.push(buckets);
             distincts.push(distinct);
+            cost_sums.push(cost);
             reserved[i] += retained;
             emitted_total += emitted;
+        }
+
+        // ---- Fault recovery + straggler injection (timing only) ----
+        // Every chunk is still mapped exactly once and i64 folds commute,
+        // so the data results below stay bit-identical to a no-fault run;
+        // only clocks, heap peaks and sim_time_s may move.
+        let mut tasks_reexecuted: u64 = 0;
+        let mut speculative_wins: u64 = 0;
+        let mut fault_events: Vec<FaultEvent> = Vec::new();
+        if let Some(co) = crash_off {
+            let crash_at = plan.member_crash_at.unwrap_or(0.0);
+            let lost: Vec<(usize, usize, usize)> =
+                chunks.iter().skip(co).step_by(n).copied().collect();
+            fault_events.push(FaultEvent {
+                at: crash_at,
+                kind: FaultKind::Crash,
+                member: co as u64,
+                detail: format!("lost {} map chunks", lost.len()),
+            });
+            if !lost.is_empty() {
+                let lost_ref = &lost;
+                let reexec = cluster.try_execute_on_all(master, |ctx| {
+                    let off = ctx.offset();
+                    if off == co {
+                        // the victim is still down while its work re-runs
+                        let mut buckets: Vec<OwnerBucket> = Vec::new();
+                        buckets.resize_with(n, Vec::new);
+                        return Ok((buckets, 0, 0, 0, 0.0));
+                    }
+                    // survivors split the lost chunks round-robin by
+                    // survivor rank, priced exactly like the primary pass
+                    let rank = if off > co { off - 1 } else { off };
+                    let mine = lost_ref.iter().skip(rank).step_by(n - 1).copied();
+                    self.map_chunk_set(ctx, mine, n, partition_count, local_factor, map_backend)
+                });
+                let reexec = match reexec {
+                    Ok(r) => r,
+                    Err(e) => return Err(self.release_on_err(cluster, &members, &reserved, e)),
+                };
+                for (i, (_member, (buckets, distinct, retained, emitted, cost))) in
+                    reexec.into_iter().enumerate()
+                {
+                    for (owner, bucket) in buckets.into_iter().enumerate() {
+                        bucketed[i][owner].extend(bucket);
+                    }
+                    distincts[i] += distinct;
+                    cost_sums[i] += cost;
+                    reserved[i] += retained;
+                    emitted_total += emitted;
+                }
+                tasks_reexecuted = lost.len() as u64;
+                fault_events.push(FaultEvent {
+                    at: crash_at,
+                    kind: FaultKind::Reexecution,
+                    member: co as u64,
+                    detail: format!("{} chunks re-executed on {} survivors", lost.len(), n - 1),
+                });
+            }
+            // the victim restarts (fail-fast when no memberRejoinAt is
+            // scheduled) and pays the backend's instance-init cost before
+            // it can make the phase barrier
+            let rejoin_at = plan.member_rejoin_at.unwrap_or(crash_at);
+            let victim = members[co];
+            let restart = (t_start + rejoin_at).max(cluster.clock(victim)) + backend.init_cost;
+            let dt = restart - cluster.clock(victim);
+            cluster.advance(victim, dt);
+            fault_events.push(FaultEvent {
+                at: rejoin_at,
+                kind: FaultKind::Rejoin,
+                member: co as u64,
+                detail: format!("restarted, init cost {}s", backend.init_cost),
+            });
+        }
+        if let Some(s) = plan.straggler_offset(n) {
+            // skew the straggler's accumulated map advances — multiplying
+            // the total is identical to multiplying every per-chunk
+            // advance, so the skew is exactly the two-phase executor's
+            // virtual-time stretch without re-running the bodies
+            if Some(s) != crash_off && cost_sums[s] > 0.0 {
+                let skew = plan.slow_member_skew;
+                let straggler = members[s];
+                let extra = cost_sums[s] * (skew - 1.0);
+                let clock_s = cluster.clock(straggler);
+                fault_events.push(FaultEvent {
+                    at: clock_s - t_start,
+                    kind: FaultKind::Straggler,
+                    member: s as u64,
+                    detail: format!("skew {skew}x over map work"),
+                });
+                // backup candidates: everyone but the straggler and the
+                // (dead or restarting) crash victim; least-loaded wins,
+                // ties by offset — fully deterministic
+                let backup = if plan.speculative.is_on() {
+                    (0..n).filter(|&i| i != s && Some(i) != crash_off).min_by(
+                        |&a, &b| {
+                            cluster
+                                .clock(members[a])
+                                .partial_cmp(&cluster.clock(members[b]))
+                                .expect("virtual clocks are finite")
+                                .then(a.cmp(&b))
+                        },
+                    )
+                } else {
+                    None
+                };
+                match backup {
+                    Some(b) => {
+                        let clock_b = cluster.clock(members[b]);
+                        let backup_finish = clock_b + cost_sums[s];
+                        let straggler_finish = clock_s + extra;
+                        if backup_finish < straggler_finish {
+                            // first-result-wins: the backup copy finishes
+                            // first and the straggler's attempt is killed
+                            // there; the shared deterministic output makes
+                            // the winner's identity timing-only
+                            cluster.advance_busy(members[b], cost_sums[s]);
+                            cluster.advance_busy(straggler, (backup_finish - clock_s).max(0.0));
+                            let mut won = chunks.iter().skip(s).step_by(n).count() as u64;
+                            if let Some(co) = crash_off {
+                                let lost = chunks.iter().skip(co).step_by(n).count();
+                                let rank = if s > co { s - 1 } else { s };
+                                won += (0..lost).skip(rank).step_by(n - 1).count() as u64;
+                            }
+                            speculative_wins = won;
+                            fault_events.push(FaultEvent {
+                                at: backup_finish - t_start,
+                                kind: FaultKind::SpeculativeWin,
+                                member: s as u64,
+                                detail: format!("backup member-{b} finished first"),
+                            });
+                        } else {
+                            // the primary wins; the backup is killed when
+                            // the primary's result lands
+                            cluster.advance_busy(straggler, extra);
+                            cluster.advance_busy(
+                                members[b],
+                                cost_sums[s].min(straggler_finish - clock_b).max(0.0),
+                            );
+                            fault_events.push(FaultEvent {
+                                at: straggler_finish - t_start,
+                                kind: FaultKind::SpeculativeLoss,
+                                member: s as u64,
+                                detail: format!("primary beat backup member-{b}"),
+                            });
+                        }
+                    }
+                    None => cluster.advance_busy(straggler, extra),
+                }
+            }
         }
         cluster.barrier();
 
@@ -268,7 +392,80 @@ impl<'a> MapReduceEngine<'a> {
             nodes: n,
             peak_heap,
             split_brain_events,
+            tasks_reexecuted,
+            speculative_wins,
+            fault_events,
         })
+    }
+
+    /// Map one chunk set on one member shard — the body shared by the
+    /// primary map pass and the crash-recovery re-execution pass, so both
+    /// price, reserve and combine chunks identically.
+    fn map_chunk_set(
+        &self,
+        ctx: &mut NodeCtx,
+        chunks: impl Iterator<Item = (usize, usize, usize)>,
+        n: usize,
+        partition_count: u32,
+        local_factor: f64,
+        backend: &BackendProfile,
+    ) -> Result<MapOutput> {
+        let mut partial: HashMap<String, (u32, i64)> = HashMap::new();
+        let mut retained: u64 = 0;
+        let mut emitted: u64 = 0;
+        let mut cost_sum: f64 = 0.0;
+        let mut text = String::new(); // reused line buffer (perf pass §L3)
+        for (f, l0, l1) in chunks {
+            let gc = ctx.gc_factor();
+            let mut tokens_in_chunk: u64 = 0;
+            for line in l0..l1 {
+                self.corpus.line_text_into(f, line, &mut text);
+                self.mapper.map(f, line, &text, &mut |k, v| {
+                    use std::collections::hash_map::Entry;
+                    match partial.entry(k) {
+                        Entry::Occupied(mut e) => e.get_mut().1 += v,
+                        Entry::Vacant(e) => {
+                            let pid = partition_of(e.key().as_bytes(), partition_count);
+                            e.insert((pid, v));
+                        }
+                    }
+                    tokens_in_chunk += 1;
+                });
+            }
+            emitted += tokens_in_chunk;
+            // pair-retention heap (the Hazelcast OOM mechanism)
+            let pair_bytes = tokens_in_chunk * backend.mr_pair_retained_bytes;
+            ctx.reserve_scratch(pair_bytes)?;
+            retained += pair_bytes;
+            let mut cost =
+                backend.mr_chunk_overhead + tokens_in_chunk as f64 * TOKEN_CPU_COST * local_factor;
+            if self.job.verbose {
+                // verbose mode logs per-chunk progress (§5.2:
+                // "executions were slower in verbose mode")
+                cost += backend.mr_chunk_overhead * 0.5;
+            }
+            let charged = cost * gc;
+            ctx.advance_busy(charged);
+            cost_sum += charged;
+        }
+        // split into per-owner buckets on the worker thread, consuming
+        // the cached partition ids
+        let distinct = partial.len() as u64;
+        let mut buckets: Vec<OwnerBucket> = Vec::new();
+        buckets.resize_with(n, Vec::new);
+        for (k, (pid, v)) in partial {
+            let owner = pid as usize % n;
+            // the satellite micro-assert: the owner derived from the
+            // emit-time partition id must agree with a shuffle-time
+            // re-hash (debug builds only — release never re-hashes)
+            debug_assert_eq!(
+                owner,
+                partition_of(k.as_bytes(), partition_count) as usize % n,
+                "emit-time and shuffle-time owners disagree for {k:?}"
+            );
+            buckets[owner].push((k, v));
+        }
+        Ok((buckets, distinct, retained, emitted, cost_sum))
     }
 
     /// The seed shuffle/reduce/collect tail: every phase runs on the
@@ -706,5 +903,162 @@ mod split_brain_tests {
         let mut hz = grid(BackendProfile::hazelcast_like(), 3);
         let res = eng.run(&mut hz).unwrap();
         assert_eq!(res.split_brain_events, 0);
+    }
+}
+
+#[cfg(test)]
+mod fault_tests {
+    use super::*;
+    use crate::faults::{FaultPlan, SpeculativeExecution};
+    use crate::grid::backend::BackendProfile;
+    use crate::grid::cluster::GridConfig;
+    use crate::grid::serialize::InMemoryFormat;
+    use crate::mapreduce::corpus::CorpusConfig;
+    use crate::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
+
+    fn grid(backend: BackendProfile, n: usize) -> GridCluster {
+        GridCluster::with_members(
+            GridConfig {
+                backend,
+                in_memory_format: InMemoryFormat::Object,
+                node_heap_bytes: 64 * 1024 * 1024,
+                ..GridConfig::default()
+            },
+            n,
+        )
+    }
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusConfig {
+            files: 3,
+            distinct_files: 3,
+            lines_per_file: 200,
+            ..CorpusConfig::default()
+        })
+    }
+
+    fn run_with(plan: Option<FaultPlan>, n: usize) -> JobResult {
+        let (m, r) = (WordCountMapper, WordCountReducer);
+        // small chunks so every member (and so any fault victim) has work
+        let job = JobConfig {
+            chunk_lines: 50,
+            ..JobConfig::default()
+        };
+        let mut eng = MapReduceEngine::new(corpus(), job, &m, &r);
+        if let Some(p) = plan {
+            eng = eng.with_fault_plan(p);
+        }
+        let mut cluster = grid(BackendProfile::infinispan_like(), n);
+        eng.run(&mut cluster).unwrap()
+    }
+
+    #[test]
+    fn crash_reexecutes_lost_chunks_and_preserves_results() {
+        let clean = run_with(None, 3);
+        let plan = FaultPlan {
+            member_crash_at: Some(0.1),
+            member_rejoin_at: Some(2.0),
+            ..FaultPlan::default()
+        };
+        let faulted = run_with(Some(plan), 3);
+        // the referee contract: data results are bit-identical
+        assert_eq!(faulted.total_count, clean.total_count);
+        assert_eq!(faulted.emitted_pairs, clean.emitted_pairs);
+        assert_eq!(faulted.top_words, clean.top_words);
+        assert_eq!(faulted.reduce_invocations, clean.reduce_invocations);
+        assert!(faulted.is_conserved());
+        // recovery really happened and was logged
+        assert!(faulted.tasks_reexecuted > 0, "{faulted:?}");
+        assert!(faulted.sim_time_s > clean.sim_time_s, "recovery costs time");
+        let kinds: Vec<_> = faulted.fault_events.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&FaultKind::Crash));
+        assert!(kinds.contains(&FaultKind::Reexecution));
+        assert!(kinds.contains(&FaultKind::Rejoin));
+        assert!(clean.fault_events.is_empty() && clean.tasks_reexecuted == 0);
+    }
+
+    #[test]
+    fn straggler_skew_stretches_time_not_results() {
+        let clean = run_with(None, 4);
+        let plan = FaultPlan {
+            slow_member_skew: 8.0,
+            ..FaultPlan::default()
+        };
+        let skewed = run_with(Some(plan), 4);
+        assert_eq!(skewed.total_count, clean.total_count);
+        assert_eq!(skewed.top_words, clean.top_words);
+        assert!(skewed.sim_time_s > clean.sim_time_s, "straggler must drag the barrier");
+        assert!(skewed
+            .fault_events
+            .iter()
+            .any(|e| e.kind == FaultKind::Straggler));
+    }
+
+    #[test]
+    fn speculative_backup_wins_against_heavy_skew() {
+        let base = FaultPlan {
+            slow_member_skew: 8.0,
+            ..FaultPlan::default()
+        };
+        let off = run_with(Some(base.clone()), 4);
+        let on = run_with(
+            Some(FaultPlan {
+                speculative: SpeculativeExecution::On,
+                ..base
+            }),
+            4,
+        );
+        // on/off parity on data, first-result-wins on time
+        assert_eq!(on.total_count, off.total_count);
+        assert_eq!(on.emitted_pairs, off.emitted_pairs);
+        assert_eq!(on.top_words, off.top_words);
+        assert_eq!(on.reduce_invocations, off.reduce_invocations);
+        assert!(
+            on.sim_time_s <= off.sim_time_s,
+            "a backup can only help: {} vs {}",
+            on.sim_time_s,
+            off.sim_time_s
+        );
+        // an 8x skew on idle-ish peers must lose the race to a backup
+        assert!(on.speculative_wins > 0, "{:?}", on.fault_events);
+        assert!(on
+            .fault_events
+            .iter()
+            .any(|e| e.kind == FaultKind::SpeculativeWin));
+        assert_eq!(off.speculative_wins, 0);
+    }
+
+    #[test]
+    fn same_seed_same_fault_log() {
+        let plan = FaultPlan {
+            member_crash_at: Some(0.5),
+            slow_member_skew: 3.0,
+            speculative: SpeculativeExecution::On,
+            ..FaultPlan::default()
+        };
+        let a = run_with(Some(plan.clone()), 4);
+        let b = run_with(Some(plan), 4);
+        let fa: Vec<String> = a.fault_events.iter().map(|e| e.fingerprint()).collect();
+        let fb: Vec<String> = b.fault_events.iter().map(|e| e.fingerprint()).collect();
+        assert_eq!(fa, fb);
+        assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+    }
+
+    #[test]
+    fn single_member_cluster_survives_a_plan() {
+        // nobody to crash, nobody to back up — the plan degrades to skew
+        // on the only member and results stay intact
+        let clean = run_with(None, 1);
+        let plan = FaultPlan {
+            member_crash_at: Some(0.5),
+            slow_member_skew: 2.0,
+            speculative: SpeculativeExecution::On,
+            ..FaultPlan::default()
+        };
+        let faulted = run_with(Some(plan), 1);
+        assert_eq!(faulted.total_count, clean.total_count);
+        assert_eq!(faulted.top_words, clean.top_words);
+        assert_eq!(faulted.tasks_reexecuted, 0, "no victim on 1 member");
+        assert!(faulted.sim_time_s > clean.sim_time_s, "skew still applies");
     }
 }

@@ -7,6 +7,7 @@
 //! (JGroups-clustered, mature MR, efficient local mode).
 
 use crate::error::Result;
+use crate::faults::FaultPlan;
 use crate::grid::backend::BackendProfile;
 use crate::grid::cluster::{GridCluster, GridConfig};
 use crate::grid::serialize::InMemoryFormat;
@@ -50,9 +51,30 @@ pub fn run_inf_wordcount_with_workers(
     node_heap_bytes: u64,
     workers: usize,
 ) -> Result<JobResult> {
+    run_inf_wordcount_faulted(
+        corpus,
+        job,
+        instances,
+        node_heap_bytes,
+        workers,
+        FaultPlan::default(),
+    )
+}
+
+/// [`run_inf_wordcount_with_workers`] under a deterministic fault plan.
+/// A no-op plan takes the exact fault-free code path, so the fault
+/// scenarios can use the same entry point for headline and referee runs.
+pub fn run_inf_wordcount_faulted(
+    corpus: Corpus,
+    job: JobConfig,
+    instances: usize,
+    node_heap_bytes: u64,
+    workers: usize,
+    plan: FaultPlan,
+) -> Result<JobResult> {
     let mapper = WordCountMapper;
     let reducer = WordCountReducer;
-    let engine = MapReduceEngine::new(corpus, job, &mapper, &reducer);
+    let engine = MapReduceEngine::new(corpus, job, &mapper, &reducer).with_fault_plan(plan);
     let mut cluster = GridCluster::with_members(
         GridConfig {
             workers: workers.max(1),

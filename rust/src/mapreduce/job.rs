@@ -3,6 +3,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::faults::FaultEvent;
+
 /// Emits intermediate `(key, value)` pairs from one input record.
 ///
 /// `Sync` is a supertrait: the engine's map phase runs member tasks on
@@ -99,6 +101,15 @@ pub struct JobResult {
     /// Hazelcast jobs saw instances leave and the cluster split/merge —
     /// hazelcast#2359 — "limiting the usability ... to shorter jobs").
     pub split_brain_events: u32,
+    /// Map chunks lost to a member crash and re-executed on survivors
+    /// (0 without a fault plan).
+    pub tasks_reexecuted: u64,
+    /// Straggler chunks whose speculative backup finished first
+    /// (0 unless `speculativeExecution=on`).
+    pub speculative_wins: u64,
+    /// Deterministic fault log (empty without a fault plan) — same-seed
+    /// runs must produce bit-identical logs at every worker count.
+    pub fault_events: Vec<FaultEvent>,
 }
 
 impl JobResult {
@@ -238,6 +249,9 @@ mod tests {
             nodes: 1,
             peak_heap: 0,
             split_brain_events: 0,
+            tasks_reexecuted: 0,
+            speculative_wins: 0,
+            fault_events: vec![],
         };
         assert!(r.is_conserved());
     }

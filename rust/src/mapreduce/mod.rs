@@ -25,6 +25,6 @@ pub fn default_workers() -> usize {
 
 pub use corpus::{Corpus, CorpusConfig};
 pub use engine::MapReduceEngine;
-pub use hz_engine::{run_hz_wordcount, run_hz_wordcount_with_workers};
-pub use inf_engine::{run_inf_wordcount, run_inf_wordcount_with_workers};
+pub use hz_engine::{run_hz_wordcount, run_hz_wordcount_faulted, run_hz_wordcount_with_workers};
+pub use inf_engine::{run_inf_wordcount, run_inf_wordcount_faulted, run_inf_wordcount_with_workers};
 pub use job::{JobConfig, JobResult, Mapper, MrPipeline, Reducer};

@@ -1,12 +1,14 @@
 //! The named scenario registry.
 //!
-//! Six scenarios reproduce and extend the paper's §5 evaluation; every one
-//! runs end-to-end through the real stack and lands in
-//! `BENCH_scenarios.json` as one point on the perf trajectory. Names are
-//! stable API: CI, the README and the baseline file refer to them.
+//! The registered scenarios reproduce and extend the paper's §5
+//! evaluation; every one runs end-to-end through the real stack and lands
+//! in `BENCH_scenarios.json` as one point on the perf trajectory. Names
+//! are stable API: CI, the README and the baseline file refer to them.
 
 use crate::config::CloudletDistribution;
-use crate::scenarios::spec::{ElasticShape, MrBackend, MrShape, ScenarioKind, ScenarioSpec};
+use crate::scenarios::spec::{
+    ElasticShape, FaultShape, MrBackend, MrShape, ScenarioKind, ScenarioSpec,
+};
 use crate::sim::cloudlet_scheduler::SchedulerKind;
 
 /// All registered scenarios, in presentation order.
@@ -30,6 +32,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             grid_workers: 1,
             mr: None,
             elastic: None,
+            faults: None,
         },
         ScenarioSpec {
             name: "mr_wordcount_skewed",
@@ -57,6 +60,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 quick_divisor: 4,
             }),
             elastic: None,
+            faults: None,
         },
         ScenarioSpec {
             name: "heterogeneous_vms",
@@ -76,6 +80,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             grid_workers: 1,
             mr: None,
             elastic: None,
+            faults: None,
         },
         ScenarioSpec {
             name: "bursty_broker",
@@ -98,6 +103,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             grid_workers: 1,
             mr: None,
             elastic: None,
+            faults: None,
         },
         ScenarioSpec {
             name: "elastic_closed_loop",
@@ -132,6 +138,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 available_nodes: 3,
                 max_instances: 3,
             }),
+            faults: None,
         },
         ScenarioSpec {
             name: "seq_vs_threaded",
@@ -151,6 +158,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             grid_workers: 0,
             mr: None,
             elastic: None,
+            faults: None,
         },
         ScenarioSpec {
             name: "megascale_broker",
@@ -172,6 +180,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             grid_workers: 1,
             mr: None,
             elastic: None,
+            faults: None,
         },
         ScenarioSpec {
             name: "megascale_wordcount",
@@ -206,6 +215,86 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 quick_divisor: 32,
             }),
             elastic: None,
+            faults: None,
+        },
+        ScenarioSpec {
+            name: "mr_straggler_speculative",
+            summary: "seeded slow member skews the map phase; speculative \
+                      backups win the race without moving one result bit",
+            paper_ref: "§3.4.2 extended with a deterministic fault model \
+                        (straggler skew + speculative re-execution)",
+            kind: ScenarioKind::MrStragglerSpeculative,
+            datacenters: 1,
+            hosts_per_datacenter: 1,
+            pes_per_host: 8,
+            vms: 1,
+            cloudlets: 1,
+            loaded: false,
+            distribution: CloudletDistribution::Uniform,
+            variable_vms: false,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[4],
+            grid_workers: 0,
+            mr: Some(MrShape {
+                files: 6,
+                distinct_files: 3,
+                lines_per_file: 4000,
+                zipf_s: 1.1,
+                vocab: 50_000,
+                backend: MrBackend::Infinispan,
+                quick_divisor: 4,
+            }),
+            elastic: None,
+            faults: Some(FaultShape {
+                // the paper's arXiv id, as a stable seed
+                fault_seed: 1601_03980,
+                member_crash_at: None,
+                member_rejoin_at: None,
+                slow_member_skew: 6.0,
+                speculative: true,
+            }),
+        },
+        ScenarioSpec {
+            name: "member_churn_elastic",
+            summary: "a member crashes mid-run and later rejoins: the \
+                      closed loop re-queues its work onto the survivors \
+                      and every cloudlet still completes",
+            paper_ref: "§3.2.2 / §4.3.3 extended with deterministic \
+                        crash/rejoin churn",
+            kind: ScenarioKind::MemberChurnElastic,
+            datacenters: 15,
+            hosts_per_datacenter: 4,
+            pes_per_host: 8,
+            vms: 200,
+            // the proven elastic_closed_loop choreography: the bursty head
+            // forces a scale-out (so there is a non-master member to kill)
+            // and the light tail drains the cluster back down
+            cloudlets: 1100,
+            loaded: true,
+            distribution: CloudletDistribution::BurstyTail {
+                head_pct: 27,
+                tail_divisor: 200,
+            },
+            variable_vms: false,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1],
+            grid_workers: 1,
+            mr: None,
+            elastic: Some(ElasticShape {
+                max_threshold: 0.20,
+                min_threshold: 0.05,
+                time_between_scaling: 10.0,
+                time_between_health_checks: 1.0,
+                available_nodes: 3,
+                max_instances: 3,
+            }),
+            faults: Some(FaultShape {
+                fault_seed: 1601_03980,
+                member_crash_at: Some(5.0),
+                member_rejoin_at: Some(15.0),
+                slow_member_skew: 1.0,
+                speculative: false,
+            }),
         },
     ]
 }
@@ -225,9 +314,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn at_least_eight_unique_scenarios() {
+    fn at_least_ten_unique_scenarios() {
         let names = names();
-        assert!(names.len() >= 8, "registry shrank: {names:?}");
+        assert!(names.len() >= 10, "registry shrank: {names:?}");
         let set: std::collections::HashSet<_> = names.iter().collect();
         assert_eq!(set.len(), names.len(), "duplicate scenario names");
     }
@@ -261,9 +350,30 @@ mod tests {
             "seq_vs_threaded",
             "megascale_broker",
             "megascale_wordcount",
+            "mr_straggler_speculative",
+            "member_churn_elastic",
         ] {
             assert!(find(required).is_some(), "missing {required}");
         }
+    }
+
+    #[test]
+    fn fault_scenarios_carry_real_plans() {
+        let straggler = find("mr_straggler_speculative").unwrap();
+        let f = straggler.faults.as_ref().expect("fault shape");
+        assert!(f.slow_member_skew > 1.0);
+        assert!(f.speculative);
+        assert!(f.member_crash_at.is_none());
+        assert!(!straggler.sim_config(true).fault_plan().is_noop());
+
+        let churn = find("member_churn_elastic").unwrap();
+        let f = churn.faults.as_ref().expect("fault shape");
+        let (crash, rejoin) = (f.member_crash_at.unwrap(), f.member_rejoin_at.unwrap());
+        assert!(crash < rejoin, "the victim must rejoin after it crashes");
+        assert!(churn.elastic.is_some(), "churn runs the closed loop");
+        // churn keeps its exact shape in quick mode — the choreography is
+        // the scenario
+        assert_eq!(churn.sim_config(true).no_of_cloudlets, churn.cloudlets);
     }
 
     #[test]

@@ -13,10 +13,11 @@ use crate::dist::matchmaking::{run_matchmaking_baseline, run_matchmaking_distrib
 use crate::dist::{run_cloudsim_baseline, run_distributed};
 use crate::elastic::{run_adaptive, HealthMeasure};
 use crate::error::{C2SError, Result};
+use crate::faults::{FaultPlan, SpeculativeExecution};
 use crate::grid::parallel::resolve_workers;
 use crate::mapreduce::{
-    run_hz_wordcount_with_workers, run_inf_wordcount_with_workers, Corpus, JobConfig, JobResult,
-    MrPipeline,
+    run_hz_wordcount_faulted, run_hz_wordcount_with_workers, run_inf_wordcount_faulted,
+    run_inf_wordcount_with_workers, Corpus, JobConfig, JobResult, MrPipeline,
 };
 use crate::runtime::workload::NativeBurnModel;
 use crate::scenarios::spec::{MrBackend, ScenarioKind, ScenarioSpec};
@@ -191,6 +192,8 @@ fn run_once(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ScenarioKind::SeqVsThreaded => seq_vs_threaded(spec, quick),
         ScenarioKind::Megascale => megascale(spec, quick),
         ScenarioKind::MegascaleMapReduce => megascale_mapreduce(spec, quick),
+        ScenarioKind::MrStragglerSpeculative => mr_straggler_speculative(spec, quick),
+        ScenarioKind::MemberChurnElastic => member_churn_elastic(spec, quick),
     }
 }
 
@@ -528,6 +531,233 @@ fn megascale_mapreduce(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
     Ok(m)
 }
 
+/// Straggler + speculative word count: three runs over one corpus.
+///
+/// 1. **Headline**: seeded slow-member skew with `speculativeExecution=on`
+///    — the backup copy of each straggler chunk races the straggler and
+///    the first finisher's (bit-identical) output wins.
+/// 2. **Referee 1**: same skew, speculation off. Results must match the
+///    headline bit-for-bit, and speculation must never make virtual time
+///    worse.
+/// 3. **Referee 2**: no faults at all. Results must again match
+///    bit-for-bit — the fault model's contract is that faults move
+///    clocks, never data.
+fn mr_straggler_speculative(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
+    let shape = spec
+        .mr
+        .as_ref()
+        .ok_or_else(|| C2SError::Config(format!("{} has no MapReduce shape", spec.name)))?;
+    let cfg = spec.sim_config(quick);
+    let heap = SimConfig::default().node_heap_bytes;
+    let workers = resolve_workers(spec.grid_workers);
+    let n = *spec.nodes.last().unwrap_or(&1);
+    let run = |plan: FaultPlan| -> Result<(JobResult, f64)> {
+        let corpus = Corpus::new(shape.corpus_config(quick));
+        let job = JobConfig::default();
+        let t0 = Instant::now();
+        let r = match shape.backend {
+            MrBackend::Hazelcast => {
+                run_hz_wordcount_faulted(corpus, job, n, heap, workers, plan)?
+            }
+            MrBackend::Infinispan => {
+                run_inf_wordcount_faulted(corpus, job, n, heap, workers, plan)?
+            }
+        };
+        Ok((r, t0.elapsed().as_secs_f64()))
+    };
+    let plan_on = cfg.fault_plan();
+    let plan_off = FaultPlan {
+        speculative: SpeculativeExecution::Off,
+        ..plan_on.clone()
+    };
+    let (on, wall_on) = run(plan_on)?;
+    let (off, _wall_off) = run(plan_off)?;
+    let (clean, wall_clean) = run(FaultPlan::default())?;
+    check_mr_results_exact(spec.name, "speculative-on-vs-off", &on, &off)?;
+    check_mr_results_exact(spec.name, "faulted-vs-nofault", &on, &clean)?;
+    if on.sim_time_s > off.sim_time_s {
+        return Err(C2SError::Other(format!(
+            "{}: speculation made the job slower: {} vs {} without it",
+            spec.name, on.sim_time_s, off.sim_time_s
+        )));
+    }
+    if on.speculative_wins == 0 {
+        return Err(C2SError::Other(format!(
+            "{}: no speculative win against a {}x straggler",
+            spec.name,
+            cfg.slow_member_skew
+        )));
+    }
+
+    let mut m = empty_measured(on.sim_time_s);
+    m.pairs_emitted = Some(on.emitted_pairs);
+    m.headline_wall_s = Some(wall_on);
+    m.extras = vec![
+        ("speculative_wins".to_string(), on.speculative_wins as f64),
+        ("tasks_reexecuted".to_string(), on.tasks_reexecuted as f64),
+        ("fault_events".to_string(), on.fault_events.len() as f64),
+        ("sim_time_speculative_off_s".to_string(), off.sim_time_s),
+        ("sim_time_nofault_s".to_string(), clean.sim_time_s),
+        (
+            "straggler_virtual_overhead_s".to_string(),
+            on.sim_time_s - clean.sim_time_s,
+        ),
+        ("reduce_invocations".to_string(), on.reduce_invocations as f64),
+        ("emitted_pairs".to_string(), on.emitted_pairs as f64),
+    ];
+    m.wall_extras = vec![(
+        "recovery_wall_overhead_s".to_string(),
+        wall_on - wall_clean,
+    )];
+    Ok(m)
+}
+
+/// The elastic closed loop under deterministic churn: one member crashes
+/// at `memberCrashAt` (its round share is re-queued onto the survivors)
+/// and rejoins at `memberRejoinAt`. The in-run referee replays the same
+/// closed loop without the fault plan — every cloudlet must still
+/// complete, and churn must never lose a map entry (elastic runs mandate
+/// synchronous backups, §3.4.3).
+fn member_churn_elastic(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
+    let shape = spec
+        .elastic
+        .as_ref()
+        .ok_or_else(|| C2SError::Config(format!("{} has no elastic shape", spec.name)))?;
+    let cfg = spec.sim_config(quick);
+    let mut model = NativeBurnModel::default();
+    let t0 = Instant::now();
+    let faulted = run_adaptive(
+        &cfg,
+        shape.available_nodes,
+        HealthMeasure::LoadAverage,
+        &mut model,
+    )?;
+    let wall_faulted = t0.elapsed().as_secs_f64();
+
+    // in-run referee: the identical closed loop with the fault plan off
+    let clean_cfg = SimConfig {
+        member_crash_at: None,
+        member_rejoin_at: None,
+        slow_member_skew: 1.0,
+        ..cfg.clone()
+    };
+    let mut clean_model = NativeBurnModel::default();
+    let t1 = Instant::now();
+    let clean = run_adaptive(
+        &clean_cfg,
+        shape.available_nodes,
+        HealthMeasure::LoadAverage,
+        &mut clean_model,
+    )?;
+    let wall_clean = t1.elapsed().as_secs_f64();
+
+    if faulted.cloudlets_ok != clean.cloudlets_ok {
+        return Err(C2SError::Other(format!(
+            "{}: churn changed the completed-cloudlet count: {} vs {}",
+            spec.name, faulted.cloudlets_ok, clean.cloudlets_ok
+        )));
+    }
+    if faulted.crashes == 0 || faulted.rejoins == 0 {
+        return Err(C2SError::Other(format!(
+            "{}: the fault plan never fired (crashes {}, rejoins {})",
+            spec.name, faulted.crashes, faulted.rejoins
+        )));
+    }
+    if faulted.tasks_reexecuted == 0 {
+        return Err(C2SError::Other(format!(
+            "{}: the crash victim's round share was never re-executed",
+            spec.name
+        )));
+    }
+    if faulted.entries_lost != 0 {
+        return Err(C2SError::Other(format!(
+            "{}: churn lost {} map entries despite synchronous backups",
+            spec.name, faulted.entries_lost
+        )));
+    }
+
+    let mut m = empty_measured(faulted.sim_time_s);
+    m.scale_outs = faulted.scale_outs as u64;
+    m.scale_ins = faulted.scale_ins as u64;
+    m.scale_events = faulted
+        .events
+        .iter()
+        .map(|e| ScaleEventOut {
+            at: e.at,
+            action: e.action.to_string(),
+            instances_after: e.instances_after as u64,
+        })
+        .collect();
+    m.extras = vec![
+        ("crashes".to_string(), faulted.crashes as f64),
+        ("rejoins".to_string(), faulted.rejoins as f64),
+        (
+            "tasks_reexecuted".to_string(),
+            faulted.tasks_reexecuted as f64,
+        ),
+        ("entries_lost".to_string(), faulted.entries_lost as f64),
+        (
+            "entries_migrated".to_string(),
+            faulted.entries_migrated as f64,
+        ),
+        ("cloudlets_ok".to_string(), faulted.cloudlets_ok as f64),
+        ("peak_instances".to_string(), faulted.peak_instances as f64),
+        ("sim_time_nofault_s".to_string(), clean.sim_time_s),
+        (
+            "churn_virtual_overhead_s".to_string(),
+            faulted.sim_time_s - clean.sim_time_s,
+        ),
+    ];
+    m.wall_extras = vec![(
+        "recovery_wall_overhead_s".to_string(),
+        wall_faulted - wall_clean,
+    )];
+    Ok(m)
+}
+
+/// Fail with a drift report unless two fault-plan variants of the same
+/// job agree bit-for-bit on every *result* quantity. Unlike
+/// [`check_mr_bit_exact`] this deliberately skips `sim_time_s` and
+/// `peak_heap`: the fault model's contract is that faults (crashes,
+/// stragglers, speculation) move clocks and heap, never data.
+fn check_mr_results_exact(
+    scenario: &str,
+    what: &str,
+    a: &JobResult,
+    b: &JobResult,
+) -> Result<()> {
+    let drift = |field: &str, x: String, y: String| {
+        Err(C2SError::Other(format!(
+            "{scenario}: {what} drifted on {field}: {x} vs {y}"
+        )))
+    };
+    if a.total_count != b.total_count {
+        return drift("total_count", a.total_count.to_string(), b.total_count.to_string());
+    }
+    if a.emitted_pairs != b.emitted_pairs {
+        return drift(
+            "emitted_pairs",
+            a.emitted_pairs.to_string(),
+            b.emitted_pairs.to_string(),
+        );
+    }
+    if a.reduce_invocations != b.reduce_invocations {
+        return drift(
+            "reduce_invocations",
+            a.reduce_invocations.to_string(),
+            b.reduce_invocations.to_string(),
+        );
+    }
+    if a.top_words != b.top_words {
+        return drift(
+            "top_words",
+            format!("{:?}", a.top_words),
+            format!("{:?}", b.top_words),
+        );
+    }
+    Ok(())
+}
+
 /// Fail with a drift report unless the parallel and sequential MapReduce
 /// pipelines agree bit-for-bit on every virtual quantity of the job.
 fn check_mr_bit_exact(scenario: &str, par: &JobResult, seq: &JobResult) -> Result<()> {
@@ -723,6 +953,55 @@ mod tests {
             wall("wall_speedup").to_bits(),
             (wall("wall_sequential_s") / wall("wall_parallel_s")).to_bits()
         );
+    }
+
+    #[test]
+    fn straggler_speculative_scenario_holds_result_parity() {
+        // the in-run referees hard-error on any result drift, so this
+        // passing IS the parity check
+        let spec = find("mr_straggler_speculative").unwrap();
+        let out = run_spec(&spec, &quick_opts()).unwrap();
+        let extra = |k: &str| {
+            out.extras
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing extra {k}"))
+        };
+        assert!(extra("speculative_wins") > 0.0);
+        assert!(
+            extra("sim_time_speculative_off_s") >= out.virtual_s,
+            "speculation must never slow the job down"
+        );
+        assert!(
+            extra("straggler_virtual_overhead_s") >= 0.0,
+            "a straggler cannot make the job faster than fault-free"
+        );
+        assert!(extra("fault_events") > 0.0);
+        assert!(out
+            .wall_extras
+            .iter()
+            .any(|(k, _)| k == "recovery_wall_overhead_s"));
+    }
+
+    #[test]
+    fn member_churn_scenario_reexecutes_and_completes() {
+        let spec = find("member_churn_elastic").unwrap();
+        let out = run_spec(&spec, &quick_opts()).unwrap();
+        let extra = |k: &str| {
+            out.extras
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing extra {k}"))
+        };
+        assert!(extra("crashes") >= 1.0);
+        assert!(extra("rejoins") >= 1.0);
+        assert!(extra("tasks_reexecuted") > 0.0);
+        assert_eq!(extra("entries_lost"), 0.0);
+        assert!(extra("entries_migrated") > 0.0, "the victim's entries re-home");
+        assert!(out.scale_events.iter().any(|e| e.action == "crash"));
+        assert!(out.scale_events.iter().any(|e| e.action == "rejoin"));
     }
 
     #[test]

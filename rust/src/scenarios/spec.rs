@@ -8,6 +8,7 @@
 //! MapReduce engines → elastic closed loop.
 
 use crate::config::{CloudletDistribution, ScalingMode, SimConfig, WorkloadKind};
+use crate::faults::SpeculativeExecution;
 use crate::mapreduce::CorpusConfig;
 use crate::sim::cloudlet_scheduler::SchedulerKind;
 
@@ -37,6 +38,16 @@ pub enum ScenarioKind {
     /// seed pipeline (in-run referee) — every virtual quantity must match
     /// bit-for-bit, the wall-clock delta is the payload (`pairs_per_sec`).
     MegascaleMapReduce,
+    /// Word count under a seeded slow-member skew with speculative
+    /// re-execution on (headline), refereed in-run by speculative-off and
+    /// no-fault runs — results must match bit-for-bit; only virtual time
+    /// may move, and speculation must never make it worse.
+    MrStragglerSpeculative,
+    /// The elastic closed loop with a seeded member crash and rejoin: the
+    /// victim's round share is re-queued onto the survivors and the run is
+    /// refereed in-run against the fault-free closed loop — every cloudlet
+    /// must still complete.
+    MemberChurnElastic,
 }
 
 impl ScenarioKind {
@@ -50,6 +61,8 @@ impl ScenarioKind {
             ScenarioKind::SeqVsThreaded => "seq-vs-threaded",
             ScenarioKind::Megascale => "megascale",
             ScenarioKind::MegascaleMapReduce => "megascale-mapreduce",
+            ScenarioKind::MrStragglerSpeculative => "mr-straggler-speculative",
+            ScenarioKind::MemberChurnElastic => "member-churn-elastic",
         }
     }
 }
@@ -123,6 +136,27 @@ pub struct ElasticShape {
     pub max_instances: usize,
 }
 
+/// Deterministic fault-injection knobs for the fault scenarios — the
+/// spec-level mirror of the `faultSeed` / `memberCrashAt` /
+/// `memberRejoinAt` / `slowMemberSkew` / `speculativeExecution`
+/// properties (see `SimConfig::fault_plan`).
+#[derive(Debug, Clone)]
+pub struct FaultShape {
+    /// Seed for victim/straggler selection (`faultSeed`).
+    pub fault_seed: u64,
+    /// Virtual time at which one member crashes (`memberCrashAt`).
+    pub member_crash_at: Option<f64>,
+    /// Virtual time at which the crashed member rejoins
+    /// (`memberRejoinAt`).
+    pub member_rejoin_at: Option<f64>,
+    /// Multiplicative virtual-time skew on the seeded slow member
+    /// (`slowMemberSkew`; 1.0 = nobody straggles).
+    pub slow_member_skew: f64,
+    /// Run speculative backups for the straggler's chunks
+    /// (`speculativeExecution=on`).
+    pub speculative: bool,
+}
+
 /// One named, fully declarative scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
@@ -163,6 +197,8 @@ pub struct ScenarioSpec {
     pub mr: Option<MrShape>,
     /// Elastic knobs (Elastic kind only).
     pub elastic: Option<ElasticShape>,
+    /// Deterministic fault plan (fault-scenario kinds only).
+    pub faults: Option<FaultShape>,
 }
 
 impl ScenarioSpec {
@@ -171,7 +207,11 @@ impl ScenarioSpec {
     /// keeps its exact shape — its scale-out/scale-in choreography *is*
     /// the scenario).
     pub fn sim_config(&self, quick: bool) -> SimConfig {
-        let cloudlets = if quick && self.kind != ScenarioKind::Elastic {
+        let keeps_shape = matches!(
+            self.kind,
+            ScenarioKind::Elastic | ScenarioKind::MemberChurnElastic
+        );
+        let cloudlets = if quick && !keeps_shape {
             (self.cloudlets / 2).max(16)
         } else {
             self.cloudlets
@@ -201,6 +241,17 @@ impl ScenarioSpec {
             cfg.time_between_health_checks = e.time_between_health_checks;
             cfg.max_instances_to_be_spawned = e.max_instances;
         }
+        if let Some(f) = &self.faults {
+            cfg.fault_seed = f.fault_seed;
+            cfg.member_crash_at = f.member_crash_at;
+            cfg.member_rejoin_at = f.member_rejoin_at;
+            cfg.slow_member_skew = f.slow_member_skew;
+            cfg.speculative_execution = if f.speculative {
+                SpeculativeExecution::On
+            } else {
+                SpeculativeExecution::Off
+            };
+        }
         cfg
     }
 }
@@ -228,6 +279,7 @@ mod tests {
             grid_workers: 1,
             mr: None,
             elastic: None,
+            faults: None,
         }
     }
 
@@ -289,5 +341,38 @@ mod tests {
             ScenarioKind::MegascaleMapReduce.tag(),
             "megascale-mapreduce"
         );
+        assert_eq!(
+            ScenarioKind::MrStragglerSpeculative.tag(),
+            "mr-straggler-speculative"
+        );
+        assert_eq!(
+            ScenarioKind::MemberChurnElastic.tag(),
+            "member-churn-elastic"
+        );
+    }
+
+    #[test]
+    fn fault_shape_flows_into_sim_config() {
+        let mut s = spec();
+        s.kind = ScenarioKind::MrStragglerSpeculative;
+        s.faults = Some(FaultShape {
+            fault_seed: 99,
+            member_crash_at: Some(3.0),
+            member_rejoin_at: Some(8.0),
+            slow_member_skew: 4.0,
+            speculative: true,
+        });
+        let cfg = s.sim_config(false);
+        cfg.validate().unwrap();
+        let plan = cfg.fault_plan();
+        assert_eq!(plan.seed, 99);
+        assert_eq!(plan.member_crash_at, Some(3.0));
+        assert_eq!(plan.member_rejoin_at, Some(8.0));
+        assert_eq!(plan.slow_member_skew, 4.0);
+        assert!(plan.speculative.is_on());
+        assert!(!plan.is_noop());
+        // churn keeps its exact shape in quick mode, like Elastic
+        s.kind = ScenarioKind::MemberChurnElastic;
+        assert_eq!(s.sim_config(true).no_of_cloudlets, 64);
     }
 }

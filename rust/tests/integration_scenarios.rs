@@ -89,6 +89,62 @@ fn quick_suite_is_deterministic_end_to_end() {
     }
 }
 
+/// The fault-injection scenarios must be run-twice deterministic down to
+/// the rendered JSON bytes: fault logs, crash/rejoin scale events,
+/// re-execution counters and referee extras are all virtual quantities.
+/// Only the wall-clock fields may differ between runs, so those are
+/// pinned before the byte comparison (the `compare` gate checks the rest
+/// without any normalization).
+#[test]
+fn fault_scenarios_render_identical_json_run_twice() {
+    let specs: Vec<_> = ["mr_straggler_speculative", "member_churn_elastic"]
+        .iter()
+        .map(|n| find(n).unwrap())
+        .collect();
+    let mut a = run_suite(&specs, &quick()).unwrap();
+    let mut b = run_suite(&specs, &quick()).unwrap();
+    let cmp = compare(&a, &b);
+    assert!(cmp.is_ok(), "nondeterminism detected:\n{}", cmp.describe());
+
+    // the churn scenario carries its crash/rejoin log and re-execution
+    // evidence in the JSON — the quantities CI's fault gate reads
+    let churn = a.find("member_churn_elastic").unwrap();
+    assert!(churn.scale_events.iter().any(|e| e.action == "crash"));
+    assert!(churn.scale_events.iter().any(|e| e.action == "rejoin"));
+    let reexec = churn
+        .extras
+        .iter()
+        .find(|(k, _)| k == "tasks_reexecuted")
+        .map(|(_, v)| *v)
+        .expect("tasks_reexecuted extra");
+    assert!(reexec > 0.0, "churn must re-execute lost work: {churn:?}");
+    let spec_mr = a.find("mr_straggler_speculative").unwrap();
+    let wins = spec_mr
+        .extras
+        .iter()
+        .find(|(k, _)| k == "speculative_wins")
+        .map(|(_, v)| *v)
+        .expect("speculative_wins extra");
+    assert!(wins > 0.0, "backup must beat the straggler: {spec_mr:?}");
+
+    // byte-identical JSON once the wall-clock noise is pinned
+    for r in [&mut a, &mut b] {
+        for s in &mut r.scenarios {
+            s.wall_mean_s = 0.0;
+            s.wall_std_s = 0.0;
+            s.wall_clock_ms = 0.0;
+            s.events_per_sec = None;
+            s.pairs_per_sec = None;
+            s.wall_extras.clear();
+        }
+    }
+    assert_eq!(
+        a.render(),
+        b.render(),
+        "fault scenario JSON must be byte-identical run-to-run"
+    );
+}
+
 /// Serializing a report and parsing it back must preserve every gated
 /// quantity exactly (shortest-roundtrip float formatting end to end).
 #[test]

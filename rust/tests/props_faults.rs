@@ -1,0 +1,278 @@
+//! Property tests for the deterministic fault-injection subsystem
+//! (`cloud2sim::faults`): for any corpus shape, member count, worker
+//! count, backend profile, crash point, rejoin point, straggler skew and
+//! speculation mode,
+//!
+//! 1. the same `faultSeed` produces a **bit-identical fault log** (and
+//!    virtual times) across repeated runs and across executor worker
+//!    counts,
+//! 2. a run **with** failures produces results bit-identical to a run
+//!    **without** them — faults move clocks, never data, and
+//! 3. speculative execution is a pure time optimization: results match
+//!    the speculation-off run bit-for-bit and virtual time never gets
+//!    worse.
+//!
+//! Plus the partition-loss accounting regression: member removal splits
+//! entry counts into `map.entries_lost` (backup-less) vs
+//! `map.entries_migrated` (synchronous backups), exactly.
+//!
+//! Uses the in-repo `util::proptest` harness (the offline vendor set has
+//! no proptest crate).
+
+use cloud2sim::faults::{FaultPlan, SpeculativeExecution};
+use cloud2sim::grid::backend::BackendProfile;
+use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+use cloud2sim::grid::serialize::InMemoryFormat;
+use cloud2sim::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
+use cloud2sim::mapreduce::{Corpus, CorpusConfig, JobConfig, MapReduceEngine};
+use cloud2sim::util::proptest::{forall, Gen};
+
+/// One randomized faulted-job shape. The fuzzed fault axes: crash point
+/// (and whether a crash happens at all), rejoin point, straggler skew,
+/// speculation, fault seed — on top of the usual corpus/member/backend/
+/// worker-count axes.
+#[derive(Debug, Clone)]
+struct Case {
+    members: usize,
+    files: usize,
+    distinct_files: usize,
+    lines: usize,
+    vocab: usize,
+    zipf_s: f64,
+    hazelcast: bool,
+    chunk_lines: usize,
+    fault_seed: u64,
+    crash_at: Option<f64>,
+    rejoin_after: f64,
+    skew: f64,
+    speculative: bool,
+}
+
+impl Case {
+    fn draw(g: &mut Gen) -> Self {
+        let files = g.usize(1..5);
+        Self {
+            // >= 2 members so a crash victim can exist
+            members: g.usize(2..6),
+            files,
+            distinct_files: g.usize(1..files + 1),
+            lines: g.usize(20..100),
+            vocab: g.usize(40..2000),
+            zipf_s: g.f64(0.6..1.6),
+            hazelcast: g.bool(0.5),
+            chunk_lines: g.usize(5..60),
+            fault_seed: g.u64(0..u64::MAX),
+            crash_at: if g.bool(0.6) {
+                Some(g.f64(0.0..20.0))
+            } else {
+                None
+            },
+            rejoin_after: g.f64(0.0..10.0),
+            skew: if g.bool(0.7) { g.f64(1.5..8.0) } else { 1.0 },
+            speculative: g.bool(0.5),
+        }
+    }
+
+    fn plan(&self) -> FaultPlan {
+        FaultPlan {
+            seed: self.fault_seed,
+            member_crash_at: self.crash_at,
+            member_rejoin_at: self.crash_at.map(|at| at + self.rejoin_after),
+            slow_member_skew: self.skew,
+            speculative: if self.speculative {
+                SpeculativeExecution::On
+            } else {
+                SpeculativeExecution::Off
+            },
+        }
+    }
+
+    /// Map chunks the job will schedule — when every member owns at least
+    /// one, a crash is guaranteed to lose (and re-execute) work.
+    fn chunks(&self) -> usize {
+        self.files * ((self.lines + self.chunk_lines - 1) / self.chunk_lines)
+    }
+}
+
+/// Everything the fault contracts cover, f64s captured as raw bits.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    sim_time_bits: u64,
+    peak_heap: u64,
+    total_count: i64,
+    emitted_pairs: u64,
+    reduce_invocations: u64,
+    top_words: Vec<(String, i64)>,
+    tasks_reexecuted: u64,
+    speculative_wins: u64,
+    /// Bit-stable renderings of every fault event, in emission order.
+    fault_log: Vec<String>,
+}
+
+fn run(case: &Case, plan: &FaultPlan, workers: usize) -> Outcome {
+    let corpus = Corpus::new(CorpusConfig {
+        files: case.files,
+        distinct_files: case.distinct_files,
+        lines_per_file: case.lines,
+        vocab: case.vocab.max(2),
+        zipf_s: case.zipf_s,
+        ..CorpusConfig::default()
+    });
+    let job = JobConfig {
+        chunk_lines: case.chunk_lines,
+        ..JobConfig::default()
+    };
+    let backend = if case.hazelcast {
+        BackendProfile::hazelcast_like()
+    } else {
+        BackendProfile::infinispan_like()
+    };
+    let mapper = WordCountMapper;
+    let reducer = WordCountReducer;
+    let engine =
+        MapReduceEngine::new(corpus, job, &mapper, &reducer).with_fault_plan(plan.clone());
+    let mut cluster = GridCluster::with_members(
+        GridConfig {
+            backend,
+            in_memory_format: InMemoryFormat::Object,
+            node_heap_bytes: 64 * 1024 * 1024,
+            workers,
+            ..GridConfig::default()
+        },
+        case.members,
+    );
+    let r = engine.run(&mut cluster).expect("job fits the 64MB heap");
+    Outcome {
+        sim_time_bits: r.sim_time_s.to_bits(),
+        peak_heap: r.peak_heap,
+        total_count: r.total_count,
+        emitted_pairs: r.emitted_pairs,
+        reduce_invocations: r.reduce_invocations,
+        top_words: r.top_words,
+        tasks_reexecuted: r.tasks_reexecuted,
+        speculative_wins: r.speculative_wins,
+        fault_log: r.fault_events.iter().map(|e| e.fingerprint()).collect(),
+    }
+}
+
+#[test]
+fn same_seed_fault_logs_are_bit_identical_across_runs_and_workers() {
+    forall("fault-log-determinism", 24, |g: &mut Gen| {
+        let case = Case::draw(g);
+        let plan = case.plan();
+        let threaded_workers = [2, 4][g.usize(0..2)];
+        let a = run(&case, &plan, 1);
+        let b = run(&case, &plan, 1);
+        let c = run(&case, &plan, threaded_workers);
+        // repeated runs AND different worker counts: one outcome, down to
+        // the fault-event bits
+        assert_eq!(a, b, "re-run drifted: {case:?}");
+        assert_eq!(
+            a, c,
+            "worker count changed the fault schedule ({threaded_workers} workers): {case:?}"
+        );
+        if case.crash_at.is_some() && case.chunks() >= case.members {
+            // every member owns work, so the victim's crash must lose some
+            assert!(a.tasks_reexecuted > 0, "{case:?}");
+            assert!(!a.fault_log.is_empty(), "{case:?}");
+        }
+        if plan.is_noop() {
+            assert!(a.fault_log.is_empty(), "{case:?}");
+        }
+    });
+}
+
+#[test]
+fn faults_move_clocks_never_results() {
+    forall("fault-result-parity", 24, |g: &mut Gen| {
+        let case = Case::draw(g);
+        let plan = case.plan();
+        let faulted = run(&case, &plan, 2);
+        let clean = run(&case, &FaultPlan::default(), 2);
+        assert_eq!(faulted.total_count, clean.total_count, "{case:?}");
+        assert_eq!(faulted.emitted_pairs, clean.emitted_pairs, "{case:?}");
+        assert_eq!(
+            faulted.reduce_invocations, clean.reduce_invocations,
+            "{case:?}"
+        );
+        assert_eq!(faulted.top_words, clean.top_words, "{case:?}");
+        assert_eq!(faulted.total_count as u64, faulted.emitted_pairs, "{case:?}");
+        // the no-fault referee is genuinely fault-free
+        assert!(clean.fault_log.is_empty(), "{case:?}");
+        assert_eq!(clean.tasks_reexecuted, 0, "{case:?}");
+        assert_eq!(clean.speculative_wins, 0, "{case:?}");
+        if case.crash_at.is_none() {
+            // pure straggler skew only ever adds virtual time (a crash may
+            // legitimately finish earlier: survivors re-execute the lost
+            // share in parallel while the idle victim restarts)
+            assert!(
+                f64::from_bits(faulted.sim_time_bits) >= f64::from_bits(clean.sim_time_bits),
+                "{case:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn speculative_execution_is_a_pure_time_optimization() {
+    forall("speculative-parity", 24, |g: &mut Gen| {
+        let mut case = Case::draw(g);
+        // guarantee a straggler so speculation has something to race
+        case.skew = g.f64(2.0..8.0);
+        case.speculative = true;
+        let on_plan = case.plan();
+        let off_plan = FaultPlan {
+            speculative: SpeculativeExecution::Off,
+            ..on_plan.clone()
+        };
+        let on = run(&case, &on_plan, 2);
+        let off = run(&case, &off_plan, 2);
+        assert_eq!(on.total_count, off.total_count, "{case:?}");
+        assert_eq!(on.emitted_pairs, off.emitted_pairs, "{case:?}");
+        assert_eq!(on.reduce_invocations, off.reduce_invocations, "{case:?}");
+        assert_eq!(on.top_words, off.top_words, "{case:?}");
+        assert_eq!(off.speculative_wins, 0, "{case:?}");
+        // first-result-wins may only ever help the clock
+        assert!(
+            f64::from_bits(on.sim_time_bits) <= f64::from_bits(off.sim_time_bits),
+            "speculation made the job slower: {case:?}"
+        );
+    });
+}
+
+#[test]
+fn partition_loss_accounting_splits_lost_and_migrated() {
+    // regression for the member-removal accounting: without backups the
+    // leaver's owned entries are lost (counted in `map.entries_lost`);
+    // with synchronous backups every one survives and re-homes (counted
+    // in `map.entries_migrated`)
+    for backup_count in [0u32, 1] {
+        let mut c = GridCluster::with_members(
+            GridConfig {
+                backup_count,
+                ..GridConfig::default()
+            },
+            3,
+        );
+        let master = c.master().unwrap();
+        for i in 0..300u64 {
+            c.map_put(master, "state", format!("k-{i}"), &i).unwrap();
+        }
+        let victim = c.members()[2];
+        let lost = c.leave(victim).unwrap();
+        let lost_ctr = c.metrics.counter("map.entries_lost");
+        let migrated_ctr = c.metrics.counter("map.entries_migrated");
+        if backup_count == 0 {
+            assert!(lost > 0, "a 3-way split must strand entries");
+            assert_eq!(lost_ctr, lost);
+            assert_eq!(migrated_ctr, 0);
+            assert_eq!(c.map_len("state") as u64, 300 - lost);
+        } else {
+            assert_eq!(lost, 0, "synchronous backups keep every entry");
+            assert_eq!(lost_ctr, 0);
+            assert!(migrated_ctr > 0, "the leaver's entries must re-home");
+            assert!(migrated_ctr <= 300);
+            assert_eq!(c.map_len("state"), 300, "no data loss with backups");
+        }
+    }
+}

@@ -160,6 +160,61 @@ fn long_hazelcast_jobs_split_brain_identically() {
 }
 
 #[test]
+fn midjob_hazelcast_join_crash_leaves_clocks_and_heap_consistent() {
+    // hazelcast#2354: a mid-job join crashes the running job. The error
+    // path must be a pure rejection — no clock advance, no heap charge,
+    // no membership change — for any job shape (fault-churn runs depend
+    // on this staying true when the elastic driver joins members around
+    // MapReduce work).
+    forall("hz-midjob-join-crash", 16, |g: &mut Gen| {
+        let case = Case {
+            hazelcast: true,
+            ..Case::draw(g)
+        };
+        let corpus = Corpus::new(CorpusConfig {
+            files: case.files,
+            distinct_files: case.distinct_files,
+            lines_per_file: case.lines,
+            vocab: case.vocab.max(2),
+            zipf_s: case.zipf_s,
+            ..CorpusConfig::default()
+        });
+        let job = JobConfig {
+            chunk_lines: case.chunk_lines,
+            verbose: case.verbose,
+            pipeline: MrPipeline::Parallel,
+        };
+        let mapper = WordCountMapper;
+        let reducer = WordCountReducer;
+        let engine = MapReduceEngine::new(corpus, job, &mapper, &reducer);
+        let mut cluster = GridCluster::with_members(
+            GridConfig {
+                backend: BackendProfile::hazelcast_like(),
+                in_memory_format: InMemoryFormat::Object,
+                node_heap_bytes: 64 * 1024 * 1024,
+                workers: 2,
+                ..GridConfig::default()
+            },
+            case.members,
+        );
+        engine.run(&mut cluster).expect("job fits the 64MB heap");
+        let members = cluster.members();
+        let clocks: Vec<u64> = members.iter().map(|&m| cluster.clock(m).to_bits()).collect();
+        let heaps: Vec<u64> = members.iter().map(|&m| cluster.heap_used(m)).collect();
+        let err = engine
+            .simulate_midjob_join(&mut cluster)
+            .expect_err("hazelcast profile must crash the running job");
+        assert!(err.to_string().contains("hazelcast#2354"), "{err}");
+        assert_eq!(cluster.members(), members, "{case:?}: membership moved");
+        let clocks_after: Vec<u64> =
+            members.iter().map(|&m| cluster.clock(m).to_bits()).collect();
+        let heaps_after: Vec<u64> = members.iter().map(|&m| cluster.heap_used(m)).collect();
+        assert_eq!(clocks, clocks_after, "{case:?}: a failed join moved a clock");
+        assert_eq!(heaps, heaps_after, "{case:?}: a failed join charged heap");
+    });
+}
+
+#[test]
 fn oom_failure_is_identical_across_pipelines() {
     // a corpus that cannot fit the pair-retention heap must fail the same
     // way (map-phase OOM) in both pipelines — the error path releases the
