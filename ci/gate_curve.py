@@ -1,0 +1,306 @@
+#!/usr/bin/env python3
+"""Shape-gate scaling curves (``cloud2sim-curve/1``) against a baseline.
+
+This is the CI side of the sweep harness's gating philosophy, mirroring
+``rust/src/bench/curve.rs`` exactly:
+
+* every *virtual* quantity — axis values, per-cell virtual times and
+  deterministic extras, every non-wall series — must match the baseline
+  **bit for bit** (sweeps are as deterministic as single scenarios);
+* *wall* series are never compared point for point. Each sweep carries
+  its declared shape gates as data (the same ``gates`` array the Rust
+  ``--compare`` path interprets), and this script evaluates them:
+  monotone trajectories within a relative tolerance, strict curve
+  ordering (Infinispan below Hazelcast), and knee location within a cell
+  tolerance of the baseline's knee — with a noise floor that skips wall
+  gates when the sweep ran too fast to carry signal, and a core cap so a
+  2-core runner is never asked to show 8-way wall speedup.
+
+``--require`` names sweeps that must be present AND still declare a
+monotone speedup gate plus a knee gate, so a regression cannot pass by
+silently dropping a sweep or defanging its gate declarations.
+
+The pure cores (:func:`knee_index`, :func:`check_gate`,
+:func:`compare_curves`, :func:`check_required`) are unit-tested by
+``ci/test_gates.py``.
+"""
+
+import argparse
+import json
+import math
+import os
+import struct
+import sys
+
+SCHEMA = "cloud2sim-curve/1"
+
+
+def bits(v):
+    """Bit pattern of a float — the equality virtual quantities are held
+    to (so -0.0 vs 0.0 counts as drift, exactly like ``f64::to_bits``)."""
+    return struct.pack("<d", float(v))
+
+
+def series_values(sweep, name):
+    """Values of a named series, or None when the sweep lacks it."""
+    for s in sweep.get("series", []):
+        if s.get("name") == name:
+            return s.get("values", [])
+    return None
+
+
+def knee_index(values, frac):
+    """Smallest index reaching ``frac`` of the series maximum (finite
+    values only); None when nothing is finite."""
+    finite = [v for v in values if math.isfinite(v)]
+    if not finite:
+        return None
+    peak = max(finite)
+    for i, v in enumerate(values):
+        if math.isfinite(v) and v >= frac * peak:
+            return i
+    return None
+
+
+def _gate_range(gate, sweep, cores):
+    cells = sweep.get("cells", [])
+    return [
+        i
+        for i in range(int(gate.get("from", 0)), len(cells))
+        if not gate.get("cap_to_cores") or cells[i].get("x", 0.0) <= cores
+    ]
+
+
+def check_gate(gate, sweep, baseline_sweep, cores):
+    """Evaluate one gate. Returns a failure string, or None when the gate
+    passes or is skipped (noise floor, knee without a baseline)."""
+    name = sweep.get("name", "?")
+    series = gate.get("series", "?")
+
+    def fail(msg):
+        return f"{name}: {series} {msg}"
+
+    values = series_values(sweep, series)
+    if values is None:
+        return fail(f"series missing (gate {gate.get('kind')})")
+    if gate.get("wall"):
+        # noise floor: when even the largest cell wall is below the
+        # floor, the whole sweep ran too fast to carry wall signal
+        max_wall = max(
+            (c.get("wall_min_s", 0.0) for c in sweep.get("cells", [])), default=0.0
+        )
+        if max_wall < gate.get("min_ref_wall_s", 0.0):
+            return None
+    rng = _gate_range(gate, sweep, cores)
+    kind = gate.get("kind")
+
+    if kind in ("monotone_nondecreasing", "monotone_nonincreasing"):
+        decreasing = kind == "monotone_nonincreasing"
+        rel_tol = gate.get("rel_tol", 0.0)
+        extremum = None
+        for i in rng:
+            v = values[i]
+            if not math.isfinite(v):
+                return fail(f"non-finite value at cell {i}")
+            if extremum is not None:
+                bound = extremum * (1.0 + rel_tol) if decreasing else extremum * (1.0 - rel_tol)
+                broken = v > bound if decreasing else v < bound
+                if broken:
+                    x = sweep["cells"][i].get("x")
+                    word = "nonincreasing" if decreasing else "nondecreasing"
+                    return fail(
+                        f"not monotone {word} at x={x}: {v} vs bound {bound} (tol {rel_tol})"
+                    )
+                extremum = min(extremum, v) if decreasing else max(extremum, v)
+            else:
+                extremum = v
+        return None
+
+    if kind == "ordering_below":
+        other = gate.get("other")
+        if not other:
+            return fail("ordering gate without an upper series")
+        upper = series_values(sweep, other)
+        if upper is None:
+            return fail(f"upper series {other} missing")
+        for i in rng:
+            if not values[i] < upper[i]:
+                x = sweep["cells"][i].get("x")
+                return fail(f"ordering broken at x={x}: {values[i]} !< {upper[i]} ({other})")
+        return None
+
+    if kind == "knee":
+        base_values = series_values(baseline_sweep, series) if baseline_sweep else None
+        if base_values is None:
+            # bootstrap: no baseline yet, nothing to anchor the knee to
+            return None
+
+        def pick(sw, vals):
+            # cap both sides with the *current* machine's cores so the
+            # comparison is self-consistent on whatever runner executes it
+            cells = sw.get("cells", [])
+            return [
+                vals[i]
+                for i in range(len(vals))
+                if not gate.get("cap_to_cores")
+                or (i < len(cells) and cells[i].get("x", 0.0) <= cores)
+            ]
+
+        frac = gate.get("frac", 0.0)
+        cur = knee_index(pick(sweep, values), frac)
+        base = knee_index(pick(baseline_sweep, base_values), frac)
+        if cur is None or base is None:
+            return fail("knee undefined (non-finite series)")
+        tol = int(gate.get("knee_tol", 0))
+        if abs(cur - base) > tol:
+            return fail(f"knee moved from cell {base} to {cur} (tol {tol})")
+        return None
+
+    return fail(f"unknown gate kind {kind}")
+
+
+def check_sweep_gates(sweep, baseline_sweep, cores, include_wall):
+    """Evaluate every declared gate of one sweep."""
+    fails = []
+    for gate in sweep.get("gates", []):
+        if not include_wall and gate.get("wall"):
+            continue
+        msg = check_gate(gate, sweep, baseline_sweep, cores)
+        if msg is not None:
+            fails.append(msg)
+    return fails
+
+
+def compare_curves(current, baseline, cores):
+    """Full curve compare: bit-exact on virtual quantities, declared shape
+    gates on everything else. Returns a dict with ``drifts``, ``missing``,
+    ``unchecked`` and ``shape_failures`` lists."""
+    out = {"drifts": [], "missing": [], "unchecked": [], "shape_failures": []}
+    cur_by_name = {s.get("name"): s for s in current.get("sweeps", [])}
+    base_names = set()
+    for b in baseline.get("sweeps", []):
+        name = b.get("name")
+        base_names.add(name)
+        c = cur_by_name.get(name)
+        if c is None:
+            out["missing"].append(name)
+            continue
+
+        def check(field, cur_v, base_v):
+            if bits(cur_v) != bits(base_v):
+                out["drifts"].append(f"{name}: {field} changed {base_v} -> {cur_v}")
+
+        if c.get("axis") != b.get("axis"):
+            out["drifts"].append(
+                f"{name}: axis changed {b.get('axis')} -> {c.get('axis')}"
+            )
+            continue
+        b_cells, c_cells = b.get("cells", []), c.get("cells", [])
+        check("cells.len", len(c_cells), len(b_cells))
+        for i, (cc, bc) in enumerate(zip(c_cells, b_cells)):
+            check(f"cells[{i}].x", cc.get("x", float("nan")), bc.get("x", float("nan")))
+            check(
+                f"cells[{i}].virtual_s",
+                cc.get("virtual_s", float("nan")),
+                bc.get("virtual_s", float("nan")),
+            )
+            for k, bv in bc.get("extras", {}).items():
+                cv = cc.get("extras", {}).get(k, float("nan"))
+                check(f"cells[{i}].extras.{k}", cv, bv)
+        for bs in b.get("series", []):
+            if bs.get("wall"):
+                continue  # wall series are shape-gated, never bit-compared
+            cv = series_values(c, bs.get("name"))
+            if cv is None:
+                out["drifts"].append(f"{name}: series {bs.get('name')} disappeared")
+                continue
+            b_vals = bs.get("values", [])
+            check(f"series.{bs.get('name')}.len", len(cv), len(b_vals))
+            for i, (x, y) in enumerate(zip(cv, b_vals)):
+                check(f"series.{bs.get('name')}[{i}]", x, y)
+        # shape gates: the current run's declarations, anchored to the
+        # baseline where a gate needs one (knee location)
+        out["shape_failures"].extend(check_sweep_gates(c, b, cores, True))
+    for name, c in cur_by_name.items():
+        if name not in base_names:
+            out["unchecked"].append(name)
+            # a new sweep still gets its own shape gates (no knee anchor)
+            out["shape_failures"].extend(check_sweep_gates(c, None, cores, True))
+    return out
+
+
+def check_required(current, required_names):
+    """Anti-defanging: each required sweep must exist and still declare a
+    monotone speedup gate plus a knee gate."""
+    fails = []
+    by_name = {s.get("name"): s for s in current.get("sweeps", [])}
+    for name in required_names:
+        sweep = by_name.get(name)
+        if sweep is None:
+            fails.append(f"required sweep {name} is missing from the report")
+            continue
+        gates = sweep.get("gates", [])
+        has_speedup_monotone = any(
+            g.get("kind") == "monotone_nondecreasing" and "speedup" in g.get("series", "")
+            for g in gates
+        )
+        has_knee = any(g.get("kind") == "knee" for g in gates)
+        if not has_speedup_monotone:
+            fails.append(f"required sweep {name} no longer declares a monotone speedup gate")
+        if not has_knee:
+            fails.append(f"required sweep {name} no longer declares a knee gate")
+    return fails
+
+
+def _load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise SystemExit(f"FAIL {path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    return doc
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("current", help="curve report of this run (BENCH_curves.json)")
+    p.add_argument("baseline", help="committed baseline (ci/BENCH_curves_baseline.json)")
+    p.add_argument(
+        "--require",
+        default="",
+        help="comma-separated sweep names that must be present and keep "
+        "their monotone-speedup + knee gate declarations",
+    )
+    p.add_argument(
+        "--cores",
+        type=int,
+        default=0,
+        help="core count for cap_to_cores gates (default: detected)",
+    )
+    args = p.parse_args(argv)
+    current = _load(args.current)
+    baseline = _load(args.baseline)
+    cores = args.cores if args.cores > 0 else (os.cpu_count() or 1)
+
+    failures = check_required(current, [n for n in args.require.split(",") if n])
+    cmp = compare_curves(current, baseline, cores)
+    for d in cmp["drifts"]:
+        print(f"DRIFT {d}")
+    for m in cmp["missing"]:
+        print(f"MISSING {m}: in baseline but not in this run")
+    for u in cmp["unchecked"]:
+        print(f"NEW {u}: no baseline entry yet (not gated)")
+    for s in cmp["shape_failures"]:
+        print(f"SHAPE {s}")
+    if not baseline.get("sweeps"):
+        print("note: baseline is the empty bootstrap - the next push to main arms it")
+    failures += cmp["drifts"] + cmp["missing"] + cmp["shape_failures"]
+    for failure in failures:
+        print(f"FAIL {failure}", file=sys.stderr)
+    if failures:
+        return 1
+    print("curve gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Gate the fault-injection recovery evidence.
+
+The fault scenarios referee themselves in-run: any result divergence
+between a faulted run and its fault-free twin hard-errors before a report
+even exists. This gate re-asserts the *evidence of injection* from the
+JSON — crashes happened, work was re-executed, the backup copy won at
+least once — so a silently defanged fault plan fails CI even when parity
+trivially holds. It also assembles the reviewable fault-event log
+artifact (``BENCH_fault_events.json``).
+
+The pure core :func:`check_faults` takes the two parsed reports and
+returns ``(lines, failures, events_doc)`` so ``ci/test_gates.py`` can
+unit-test the logic without touching disk.
+"""
+
+import argparse
+import json
+import sys
+
+
+def _scenario(report, name):
+    for s in report.get("scenarios", []):
+        if s.get("name") == name:
+            return s
+    return None
+
+
+def check_faults(churn_report, straggler_report):
+    """Pure gate core: parsed reports -> (lines, failures, events_doc)."""
+    lines, failures = [], []
+    events_doc = {}
+
+    churn = _scenario(churn_report, "member_churn_elastic")
+    if churn is None:
+        failures.append("member_churn_elastic missing from its report")
+    else:
+        e = churn.get("extras", {})
+        for key in ("crashes", "rejoins", "tasks_reexecuted", "entries_migrated"):
+            if key in e:
+                lines.append(f"{key:<19}: {e[key]:.0f}")
+        if "churn_virtual_overhead_s" in e:
+            lines.append(f"churn overhead (vs): {e['churn_virtual_overhead_s']:.3f} s")
+        if not e.get("tasks_reexecuted", 0) > 0:
+            failures.append("churn must re-execute lost work")
+        if not (e.get("crashes", 0) >= 1 and e.get("rejoins", 0) >= 1):
+            failures.append("churn plan must crash and rejoin at least once")
+        if e.get("entries_lost", 1) != 0:
+            failures.append("backups must migrate entries, not lose them")
+        if not e.get("cloudlets_ok", 0) > 0:
+            failures.append("referee parity evidence missing (cloudlets_ok)")
+        actions = [ev.get("action") for ev in churn.get("scale_events", [])]
+        if "crash" not in actions or "rejoin" not in actions:
+            failures.append(f"crash/rejoin missing from the scale-event log: {actions}")
+        events_doc["member_churn_elastic"] = {
+            "scale_events": churn.get("scale_events", []),
+            "extras": dict(e),
+        }
+
+    spec = _scenario(straggler_report, "mr_straggler_speculative")
+    if spec is None:
+        failures.append("mr_straggler_speculative missing from its report")
+    else:
+        se = spec.get("extras", {})
+        if "speculative_wins" in se:
+            lines.append(f"speculative_wins   : {se['speculative_wins']:.0f}")
+        if not se.get("speculative_wins", 0) > 0:
+            failures.append("the backup copy must beat the straggler at least once")
+        if not se.get("fault_events", 0) > 0:
+            failures.append("no fault events were injected")
+        events_doc["mr_straggler_speculative"] = {"extras": dict(se)}
+
+    return lines, failures, events_doc
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument(
+        "churn",
+        nargs="?",
+        default="BENCH_fault_churn.json",
+        help="member_churn_elastic report (default: %(default)s)",
+    )
+    p.add_argument(
+        "straggler",
+        nargs="?",
+        default="BENCH_fault_straggler.json",
+        help="mr_straggler_speculative report (default: %(default)s)",
+    )
+    p.add_argument(
+        "--events-out",
+        default="BENCH_fault_events.json",
+        help="where to write the fault-event log artifact (default: %(default)s)",
+    )
+    args = p.parse_args(argv)
+    with open(args.churn) as f:
+        churn_report = json.load(f)
+    with open(args.straggler) as f:
+        straggler_report = json.load(f)
+    lines, failures, events_doc = check_faults(churn_report, straggler_report)
+    for line in lines:
+        print(line)
+    with open(args.events_out, "w") as f:
+        json.dump(events_doc, f, indent=2, sort_keys=True)
+    for failure in failures:
+        print(f"FAIL {failure}", file=sys.stderr)
+    if failures:
+        return 1
+    print("fault gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Gate the megascale word count's parallel-pipeline wall-clock win.
+
+Reads a ``cloud2sim-bench/2`` report (``BENCH_megascale_wordcount.json``)
+and re-asserts the scenario's floors: at least 2M distinct keys reduced,
+a positive pairs/sec figure, and the parallel shuffle/reduce pipeline
+beating the sequential tail on wall clock. Both walls are per-pipeline
+minima across the bench repetitions (best observed vs best observed), so
+a cold-start stall on repetition one cannot flip the verdict.
+
+The pure core :func:`check_wordcount` takes the parsed report and returns
+``(lines, failures)`` — printable evidence and failure strings — so
+``ci/test_gates.py`` can unit-test the gate logic without touching disk.
+"""
+
+import argparse
+import json
+import sys
+
+
+def check_wordcount(report):
+    """Pure gate core: parsed report -> (printable lines, failures)."""
+    lines, failures = [], []
+    matches = [
+        s for s in report.get("scenarios", []) if s.get("name") == "megascale_wordcount"
+    ]
+    if not matches:
+        return lines, ["megascale_wordcount missing from the report"]
+    sc = matches[0]
+    extras = sc.get("extras", {})
+    walls = sc.get("wall_extras", {})
+    pairs = sc.get("pairs_per_sec")
+    reduces = extras.get("reduce_invocations")
+    par = walls.get("wall_parallel_s")
+    seq = walls.get("wall_sequential_s")
+
+    if pairs is not None:
+        lines.append(f"pairs_per_sec      : {pairs:.0f}")
+    if reduces is not None:
+        lines.append(f"reduce_invocations : {reduces:.0f}")
+    if par is not None and seq is not None:
+        lines.append(f"wall parallel      : {par * 1e3:.0f} ms")
+        lines.append(f"wall sequential    : {seq * 1e3:.0f} ms")
+        if par > 0:
+            lines.append(f"wall speedup       : {seq / par:.2f}x")
+
+    if reduces is None or reduces < 2e6:
+        failures.append("megascale floor broken: need >= 2M distinct keys reduced")
+    if not pairs or pairs <= 0:
+        failures.append("pairs_per_sec missing or non-positive")
+    if par is None or seq is None:
+        failures.append("per-pipeline walls missing from wall_extras")
+    elif not par < seq:
+        failures.append("parallel shuffle/reduce must beat the sequential tail on wall clock")
+    return lines, failures
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument(
+        "report",
+        nargs="?",
+        default="BENCH_megascale_wordcount.json",
+        help="bench report to gate (default: %(default)s)",
+    )
+    args = p.parse_args(argv)
+    with open(args.report) as f:
+        report = json.load(f)
+    lines, failures = check_wordcount(report)
+    for line in lines:
+        print(line)
+    for failure in failures:
+        print(f"FAIL {failure}", file=sys.stderr)
+    if failures:
+        return 1
+    print("wordcount gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

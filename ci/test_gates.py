@@ -1,0 +1,288 @@
+#!/usr/bin/env python3
+"""Unit tests for the pure cores of the CI gate scripts.
+
+Run with ``python3 ci/test_gates.py``. These mirror the Rust unit tests
+in ``rust/src/bench/curve.rs`` so the two interpreters of the serialized
+gate declarations cannot silently diverge.
+"""
+
+import math
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import gate_curve
+import gate_faults
+import gate_wordcount
+
+
+def sweep(name="workers", xs=(1.0, 2.0, 4.0), walls=(1.0, 0.55, 0.3)):
+    """A worker-scaling-shaped sweep with wall shape gates."""
+    return {
+        "name": name,
+        "scenario": "megascale_wordcount",
+        "kind": "worker-scaling",
+        "axis": "workers",
+        "cells": [
+            {"x": x, "virtual_s": 5.0, "extras": {"reduce_invocations": 100.0},
+             "wall_min_s": w, "wall_extras": {}}
+            for x, w in zip(xs, walls)
+        ],
+        "series": [
+            {"name": "virtual_s", "wall": False, "values": [5.0] * len(xs)},
+            {"name": "wall_speedup", "wall": True, "values": [1.0, 1.8, 3.3][: len(xs)]},
+        ],
+        "gates": [
+            {"kind": "monotone_nondecreasing", "series": "wall_speedup", "other": None,
+             "from": 0, "rel_tol": 0.35, "frac": 0.0, "knee_tol": 0, "wall": True,
+             "cap_to_cores": True, "min_ref_wall_s": 0.05},
+            {"kind": "knee", "series": "wall_speedup", "other": None, "from": 0,
+             "rel_tol": 0.0, "frac": 0.9, "knee_tol": 1, "wall": True,
+             "cap_to_cores": True, "min_ref_wall_s": 0.05},
+        ],
+    }
+
+
+def report(sweeps):
+    return {"schema": "cloud2sim-curve/1", "quick": True, "reps": 1, "sweeps": sweeps}
+
+
+def set_series(sw, name, values):
+    for s in sw["series"]:
+        if s["name"] == name:
+            s["values"] = list(values)
+
+
+class TestKneeIndex(unittest.TestCase):
+    def test_basic(self):
+        self.assertEqual(gate_curve.knee_index([1.0, 1.8, 3.3], 0.9), 2)
+        self.assertEqual(gate_curve.knee_index([1.0, 3.2, 3.3], 0.9), 1)
+        self.assertEqual(gate_curve.knee_index([3.3, 1.8, 1.0], 0.9), 0)
+
+    def test_non_finite(self):
+        self.assertIsNone(gate_curve.knee_index([float("nan"), float("inf")], 0.9))
+        self.assertEqual(gate_curve.knee_index([float("nan"), 2.0], 0.9), 1)
+
+
+class TestCheckGate(unittest.TestCase):
+    def test_monotone_within_tolerance_passes(self):
+        sw = sweep()
+        self.assertIsNone(gate_curve.check_gate(sw["gates"][0], sw, None, 8))
+        # a dip inside rel_tol passes: 1.8 * (1 - 0.35) = 1.17 bound
+        set_series(sw, "wall_speedup", [1.0, 1.8, 1.2])
+        self.assertIsNone(gate_curve.check_gate(sw["gates"][0], sw, None, 8))
+
+    def test_monotone_collapse_fails(self):
+        sw = sweep()
+        set_series(sw, "wall_speedup", [1.0, 1.8, 0.9])
+        msg = gate_curve.check_gate(sw["gates"][0], sw, None, 8)
+        self.assertIn("not monotone", msg)
+
+    def test_monotone_nonincreasing(self):
+        sw = sweep()
+        gate = dict(sw["gates"][0], kind="monotone_nonincreasing", wall=False)
+        set_series(sw, "wall_speedup", [3.0, 2.0, 1.0])
+        self.assertIsNone(gate_curve.check_gate(gate, sw, None, 8))
+        set_series(sw, "wall_speedup", [3.0, 1.0, 2.0])
+        self.assertIn("not monotone", gate_curve.check_gate(gate, sw, None, 8))
+
+    def test_noise_floor_skips_wall_gates(self):
+        sw = sweep(walls=(0.01, 0.006, 0.011))
+        set_series(sw, "wall_speedup", [1.0, 1.8, 0.9])  # collapsed...
+        self.assertIsNone(gate_curve.check_gate(sw["gates"][0], sw, None, 8))
+
+    def test_cap_to_cores_drops_oversized_cells(self):
+        sw = sweep()
+        set_series(sw, "wall_speedup", [1.0, 1.8, 0.9])  # fails at x=4
+        self.assertIsNone(gate_curve.check_gate(sw["gates"][0], sw, None, 2))
+
+    def test_from_skips_leading_cells(self):
+        # the hz 1->2 collapse pattern: from=1 skips the first transition
+        sw = sweep()
+        gate = dict(sw["gates"][0], wall=False, cap_to_cores=False)
+        gate["from"] = 1
+        set_series(sw, "wall_speedup", [9.0, 1.0, 1.5])
+        self.assertIsNone(gate_curve.check_gate(gate, sw, None, 8))
+        gate["from"] = 0
+        self.assertIn("not monotone", gate_curve.check_gate(gate, sw, None, 8))
+
+    def test_ordering_below(self):
+        sw = sweep()
+        sw["series"].append({"name": "inf", "wall": False, "values": [1.0, 2.0, 3.0]})
+        sw["series"].append({"name": "hz", "wall": False, "values": [2.0, 3.0, 4.0]})
+        gate = {"kind": "ordering_below", "series": "inf", "other": "hz", "from": 0,
+                "rel_tol": 0.0, "frac": 0.0, "knee_tol": 0, "wall": False,
+                "cap_to_cores": False, "min_ref_wall_s": 0.0}
+        self.assertIsNone(gate_curve.check_gate(gate, sw, None, 8))
+        set_series(sw, "inf", [1.0, 3.0, 3.0])  # tie at x=2 is a violation
+        self.assertIn("ordering broken", gate_curve.check_gate(gate, sw, None, 8))
+
+    def test_knee_needs_baseline_and_tolerates_one_cell(self):
+        sw = sweep()
+        gate = sw["gates"][1]
+        self.assertIsNone(gate_curve.check_gate(gate, sw, None, 8), "bootstrap skips")
+        base = sweep()
+        self.assertIsNone(gate_curve.check_gate(gate, sw, base, 8))
+        # knee at cell 1 vs baseline cell 2: within tol 1
+        set_series(sw, "wall_speedup", [1.0, 3.2, 3.3])
+        self.assertIsNone(gate_curve.check_gate(gate, sw, base, 8))
+        # knee at cell 0 vs baseline cell 2: moved 2 > tol 1
+        set_series(sw, "wall_speedup", [3.3, 1.8, 1.0])
+        self.assertIn("knee moved", gate_curve.check_gate(gate, sw, base, 8))
+
+    def test_missing_series_fails(self):
+        sw = sweep()
+        gate = dict(sw["gates"][0], series="no_such_series")
+        self.assertIn("series missing", gate_curve.check_gate(gate, sw, None, 8))
+
+
+class TestCompareCurves(unittest.TestCase):
+    def test_identical_reports_pass(self):
+        r = report([sweep()])
+        cmp = gate_curve.compare_curves(r, report([sweep()]), 8)
+        self.assertEqual(cmp["drifts"], [])
+        self.assertEqual(cmp["shape_failures"], [])
+
+    def test_one_ulp_virtual_drift_detected(self):
+        cur = report([sweep()])
+        cur["sweeps"][0]["cells"][1]["virtual_s"] = math.nextafter(5.0, 6.0)
+        cmp = gate_curve.compare_curves(cur, report([sweep()]), 8)
+        self.assertTrue(any("virtual_s" in d for d in cmp["drifts"]), cmp)
+
+    def test_negative_zero_is_drift(self):
+        cur = report([sweep()])
+        cur["sweeps"][0]["cells"][0]["extras"]["reduce_invocations"] = -0.0
+        base = report([sweep()])
+        base["sweeps"][0]["cells"][0]["extras"]["reduce_invocations"] = 0.0
+        cmp = gate_curve.compare_curves(cur, base, 8)
+        self.assertTrue(any("extras" in d for d in cmp["drifts"]), cmp)
+
+    def test_wall_values_never_bit_compared(self):
+        cur = report([sweep(walls=(30.0, 20.0, 10.0))])
+        set_series(cur["sweeps"][0], "wall_speedup", [1.0, 1.5, 3.0])
+        cmp = gate_curve.compare_curves(cur, report([sweep()]), 8)
+        self.assertEqual(cmp["drifts"], [], cmp)
+        self.assertEqual(cmp["shape_failures"], [], cmp)
+
+    def test_wall_shape_collapse_fails(self):
+        cur = report([sweep(walls=(1.0, 0.55, 1.1))])
+        set_series(cur["sweeps"][0], "wall_speedup", [1.0, 1.8, 0.9])
+        cmp = gate_curve.compare_curves(cur, report([sweep()]), 8)
+        self.assertTrue(any("wall_speedup" in s for s in cmp["shape_failures"]), cmp)
+
+    def test_missing_and_new_sweeps(self):
+        cmp = gate_curve.compare_curves(report([]), report([sweep()]), 8)
+        self.assertEqual(cmp["missing"], ["workers"])
+        cmp = gate_curve.compare_curves(report([sweep()]), report([]), 8)
+        self.assertEqual(cmp["unchecked"], ["workers"])
+        self.assertEqual(cmp["missing"], [])
+
+    def test_virtual_series_disappearing_is_drift(self):
+        cur = report([sweep()])
+        cur["sweeps"][0]["series"] = [
+            s for s in cur["sweeps"][0]["series"] if s["name"] != "virtual_s"
+        ]
+        cmp = gate_curve.compare_curves(cur, report([sweep()]), 8)
+        self.assertTrue(any("disappeared" in d for d in cmp["drifts"]), cmp)
+
+
+class TestCheckRequired(unittest.TestCase):
+    def test_present_with_gates_passes(self):
+        sw = sweep()
+        self.assertEqual(gate_curve.check_required(report([sw]), ["workers"]), [])
+
+    def test_missing_sweep_fails(self):
+        fails = gate_curve.check_required(report([]), ["workers"])
+        self.assertTrue(any("missing" in f for f in fails), fails)
+
+    def test_defanged_gates_fail(self):
+        sw = sweep()
+        sw["gates"] = [g for g in sw["gates"] if g["kind"] != "knee"]
+        fails = gate_curve.check_required(report([sw]), ["workers"])
+        self.assertTrue(any("knee" in f for f in fails), fails)
+        sw["gates"] = []
+        fails = gate_curve.check_required(report([sw]), ["workers"])
+        self.assertEqual(len(fails), 2, fails)
+
+
+def wordcount_report(reduces=2.4e6, pairs=1.2e6, par=0.8, seq=2.0):
+    return {
+        "schema": "cloud2sim-bench/2",
+        "scenarios": [{
+            "name": "megascale_wordcount",
+            "pairs_per_sec": pairs,
+            "extras": {"reduce_invocations": reduces},
+            "wall_extras": {"wall_parallel_s": par, "wall_sequential_s": seq},
+        }],
+    }
+
+
+class TestWordcountGate(unittest.TestCase):
+    def test_passing_report(self):
+        lines, failures = gate_wordcount.check_wordcount(wordcount_report())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("speedup" in l for l in lines), lines)
+
+    def test_floor_and_win_failures(self):
+        _, f = gate_wordcount.check_wordcount(wordcount_report(reduces=1e6))
+        self.assertTrue(any("2M" in x for x in f), f)
+        _, f = gate_wordcount.check_wordcount(wordcount_report(pairs=None))
+        self.assertTrue(any("pairs_per_sec" in x for x in f), f)
+        _, f = gate_wordcount.check_wordcount(wordcount_report(par=2.5, seq=2.0))
+        self.assertTrue(any("beat the sequential" in x for x in f), f)
+
+    def test_missing_scenario(self):
+        _, f = gate_wordcount.check_wordcount({"scenarios": []})
+        self.assertTrue(any("missing" in x for x in f), f)
+
+
+def fault_reports(crashes=2.0, wins=3.0, lost=0.0):
+    churn = {
+        "scenarios": [{
+            "name": "member_churn_elastic",
+            "extras": {
+                "crashes": crashes, "rejoins": crashes, "tasks_reexecuted": 5.0,
+                "entries_migrated": 100.0, "entries_lost": lost,
+                "cloudlets_ok": 400.0, "churn_virtual_overhead_s": 1.25,
+            },
+            "scale_events": (
+                [{"at": 10.0, "action": "crash", "instances_after": 2},
+                 {"at": 20.0, "action": "rejoin", "instances_after": 3}]
+                if crashes else []
+            ),
+        }],
+    }
+    straggler = {
+        "scenarios": [{
+            "name": "mr_straggler_speculative",
+            "extras": {"speculative_wins": wins, "fault_events": wins},
+        }],
+    }
+    return churn, straggler
+
+
+class TestFaultGate(unittest.TestCase):
+    def test_passing_reports(self):
+        churn, straggler = fault_reports()
+        lines, failures, doc = gate_faults.check_faults(churn, straggler)
+        self.assertEqual(failures, [])
+        self.assertIn("member_churn_elastic", doc)
+        self.assertEqual(len(doc["member_churn_elastic"]["scale_events"]), 2)
+        self.assertIn("mr_straggler_speculative", doc)
+
+    def test_defanged_plan_fails(self):
+        churn, straggler = fault_reports(crashes=0.0, wins=0.0)
+        _, failures, _ = gate_faults.check_faults(churn, straggler)
+        self.assertTrue(any("crash" in f for f in failures), failures)
+        self.assertTrue(any("straggler" in f for f in failures), failures)
+
+    def test_lost_entries_fail(self):
+        churn, straggler = fault_reports(lost=3.0)
+        _, failures, _ = gate_faults.check_faults(churn, straggler)
+        self.assertTrue(any("lose" in f for f in failures), failures)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

@@ -1,0 +1,1002 @@
+//! Scaling-curve reports (`cloud2sim-curve/1`) and the shape gate.
+//!
+//! The paper's results are *curves*, not points — Figs 5.1–5.11 plot
+//! speedup against node/cloudlet/instance counts — so a perf change must
+//! be judged on the trajectory it bends, not on one pin it moves. A
+//! [`CurveReport`] holds one [`SweepOutcome`] per registered sweep: the
+//! per-cell measurements ([`CurveCell`]: deterministic virtual metrics
+//! plus the minimum wall across repetitions), the derived series
+//! ([`SeriesOut`]: speedup, efficiency, per-backend times), and the
+//! declared shape gates ([`GateSpec`]) that `ci/gate_curve.py` and
+//! [`compare_curves`] enforce.
+//!
+//! The gating philosophy mirrors `bench/report.rs`: everything derived
+//! from virtual time is deterministic — bit-identical across repetitions,
+//! worker counts and machines — and is gated **bit-exactly**. Wall-derived
+//! series (the worker-scaling sweep's speedup) are machine-dependent, so
+//! they are gated on *shape* only: the speedup curve must stay monotone
+//! within a declared tolerance and its knee must not move by more than a
+//! declared number of cells, never on per-point equality.
+
+use crate::bench::json::Json;
+use crate::error::{C2SError, Result};
+
+/// Schema tag written into every curve report.
+pub const CURVE_SCHEMA: &str = "cloud2sim-curve/1";
+
+/// One grid cell of a sweep: everything measured at one axis value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CurveCell {
+    /// Axis value (cloudlet count, worker count, instance count).
+    pub x: f64,
+    /// Headline deterministic virtual time (s) at this cell — gated
+    /// bit-for-bit against the baseline.
+    pub virtual_s: f64,
+    /// Deterministic per-cell extras (e.g. the single-JVM baseline time);
+    /// gated bit-for-bit like `virtual_s`.
+    pub extras: Vec<(String, f64)>,
+    /// Minimum wall clock across the repetitions of this cell (s) — the
+    /// best observed value, robust to one stalled repetition. Never
+    /// bit-gated.
+    pub wall_min_s: f64,
+    /// Wall-clock extras, each published as the per-key minimum across
+    /// repetitions. Never bit-gated.
+    pub wall_extras: Vec<(String, f64)>,
+}
+
+/// One derived series over a sweep's cells (same length as `cells`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesOut {
+    /// Series name (`speedup`, `hz_virtual_s`, `wall_speedup`...).
+    pub name: String,
+    /// `true` when the series derives from wall clock: excluded from the
+    /// bit-exact compare, eligible for shape gates only.
+    pub wall: bool,
+    /// One value per cell, in axis order.
+    pub values: Vec<f64>,
+}
+
+/// Shape-gate kinds. Serialized by tag so `ci/gate_curve.py` interprets
+/// the same declarations the Rust compare does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateKind {
+    /// From `from` on, the series must never drop more than `rel_tol`
+    /// below its running maximum.
+    MonotoneNondecreasing,
+    /// From `from` on, the series must never rise more than `rel_tol`
+    /// above its running minimum.
+    MonotoneNonincreasing,
+    /// At every index >= `from`, `series` must stay strictly below
+    /// `other` (the hz-vs-inf ordering).
+    OrderingBelow,
+    /// The knee of `series` (smallest index reaching `frac` of the series
+    /// maximum) must sit within `knee_tol` cells of the baseline's knee.
+    /// Needs a baseline; skipped (with a note) without one.
+    Knee,
+}
+
+impl GateKind {
+    /// Stable tag used in the JSON.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            GateKind::MonotoneNondecreasing => "monotone_nondecreasing",
+            GateKind::MonotoneNonincreasing => "monotone_nonincreasing",
+            GateKind::OrderingBelow => "ordering_below",
+            GateKind::Knee => "knee",
+        }
+    }
+
+    fn from_tag(tag: &str) -> Option<GateKind> {
+        match tag {
+            "monotone_nondecreasing" => Some(GateKind::MonotoneNondecreasing),
+            "monotone_nonincreasing" => Some(GateKind::MonotoneNonincreasing),
+            "ordering_below" => Some(GateKind::OrderingBelow),
+            "knee" => Some(GateKind::Knee),
+            _ => None,
+        }
+    }
+}
+
+/// One declared shape gate, serialized into the curve JSON so the gate is
+/// data the Python CI script reads, not logic duplicated by hand.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateSpec {
+    /// What to check.
+    pub kind: GateKind,
+    /// Series the gate applies to.
+    pub series: String,
+    /// Second series for [`GateKind::OrderingBelow`] (the upper curve).
+    pub other: Option<String>,
+    /// First cell index the gate applies from (the hz sweeps start at 1:
+    /// the paper's 1→2 collapse is *expected* non-monotonicity).
+    pub from: usize,
+    /// Relative tolerance for the monotone kinds (0.1 = may dip 10%
+    /// below the running extremum before failing).
+    pub rel_tol: f64,
+    /// Knee fraction for [`GateKind::Knee`] (0.9 = first cell reaching
+    /// 90% of the series maximum).
+    pub frac: f64,
+    /// Allowed knee shift (in cells) against the baseline.
+    pub knee_tol: usize,
+    /// `true` when the gated series is wall-derived: the gate is applied
+    /// by `--compare` / `ci/gate_curve.py` with the noise floor below,
+    /// never at sweep-generation time.
+    pub wall: bool,
+    /// Restrict the gate to cells whose `x` does not exceed the detected
+    /// core count (wall speedup cannot keep growing past the physical
+    /// parallelism of the machine the bench runs on).
+    pub cap_to_cores: bool,
+    /// Noise floor for wall gates: when the largest cell wall in the
+    /// sweep is below this many seconds, the gate is skipped — sub-floor
+    /// walls are scheduler noise, not signal.
+    pub min_ref_wall_s: f64,
+}
+
+impl GateSpec {
+    /// A virtual-series monotone-nondecreasing gate.
+    pub fn monotone_nondecreasing(series: &str, from: usize, rel_tol: f64) -> GateSpec {
+        GateSpec {
+            kind: GateKind::MonotoneNondecreasing,
+            series: series.to_string(),
+            other: None,
+            from,
+            rel_tol,
+            frac: 0.0,
+            knee_tol: 0,
+            wall: false,
+            cap_to_cores: false,
+            min_ref_wall_s: 0.0,
+        }
+    }
+
+    /// An ordering gate: `series` strictly below `other` from `from` on.
+    pub fn ordering_below(series: &str, other: &str, from: usize) -> GateSpec {
+        GateSpec {
+            kind: GateKind::OrderingBelow,
+            series: series.to_string(),
+            other: Some(other.to_string()),
+            from,
+            rel_tol: 0.0,
+            frac: 0.0,
+            knee_tol: 0,
+            wall: false,
+            cap_to_cores: false,
+            min_ref_wall_s: 0.0,
+        }
+    }
+
+    /// A knee-location gate on a virtual series.
+    pub fn knee(series: &str, frac: f64, knee_tol: usize) -> GateSpec {
+        GateSpec {
+            kind: GateKind::Knee,
+            series: series.to_string(),
+            other: None,
+            from: 0,
+            rel_tol: 0.0,
+            frac,
+            knee_tol,
+            wall: false,
+            cap_to_cores: false,
+            min_ref_wall_s: 0.0,
+        }
+    }
+
+    /// Mark this gate as wall-derived with the given noise floor and
+    /// core capping.
+    pub fn on_wall(mut self, min_ref_wall_s: f64, cap_to_cores: bool) -> GateSpec {
+        self.wall = true;
+        self.min_ref_wall_s = min_ref_wall_s;
+        self.cap_to_cores = cap_to_cores;
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.tag().to_string())),
+            ("series", Json::Str(self.series.clone())),
+            (
+                "other",
+                self.other
+                    .as_ref()
+                    .map_or(Json::Null, |o| Json::Str(o.clone())),
+            ),
+            ("from", Json::Num(self.from as f64)),
+            ("rel_tol", Json::Num(self.rel_tol)),
+            ("frac", Json::Num(self.frac)),
+            ("knee_tol", Json::Num(self.knee_tol as f64)),
+            ("wall", Json::Bool(self.wall)),
+            ("cap_to_cores", Json::Bool(self.cap_to_cores)),
+            ("min_ref_wall_s", Json::Num(self.min_ref_wall_s)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<GateSpec> {
+        let err = |what: &str| C2SError::Config(format!("curve report: bad gate {what}"));
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .and_then(GateKind::from_tag)
+            .ok_or_else(|| err("kind"))?;
+        Ok(GateSpec {
+            kind,
+            series: v
+                .get("series")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err("series"))?
+                .to_string(),
+            other: v
+                .get("other")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            from: v.get("from").and_then(Json::as_u64).unwrap_or(0) as usize,
+            rel_tol: v.get("rel_tol").and_then(Json::as_f64).unwrap_or(0.0),
+            frac: v.get("frac").and_then(Json::as_f64).unwrap_or(0.0),
+            knee_tol: v.get("knee_tol").and_then(Json::as_u64).unwrap_or(0) as usize,
+            wall: v.get("wall").and_then(Json::as_bool).unwrap_or(false),
+            cap_to_cores: v
+                .get("cap_to_cores")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            min_ref_wall_s: v
+                .get("min_ref_wall_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        })
+    }
+}
+
+/// Everything one sweep produced: cells, derived series, declared gates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepOutcome {
+    /// Sweep registry name (`fig5_1_cloudlet_scaling_sweep`, ...).
+    pub name: String,
+    /// Base scenario the sweep derives its configuration from.
+    pub scenario: String,
+    /// Sweep kind tag (`cloudlet-scaling`, `worker-scaling`,
+    /// `backend-pair`).
+    pub kind: String,
+    /// Axis tag (`cloudlets`, `workers`, `instances`).
+    pub axis: String,
+    /// Cells in axis order.
+    pub cells: Vec<CurveCell>,
+    /// Derived series, each `cells.len()` long.
+    pub series: Vec<SeriesOut>,
+    /// Declared shape gates.
+    pub gates: Vec<GateSpec>,
+}
+
+impl SweepOutcome {
+    /// Values of a named series, if present.
+    pub fn series_values(&self, name: &str) -> Option<&[f64]> {
+        self.series
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| s.values.as_slice())
+    }
+
+    fn to_json(&self) -> Json {
+        let num_map = |pairs: &[(String, f64)]| {
+            Json::Obj(
+                pairs
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect(),
+            )
+        };
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("x", Json::Num(c.x)),
+                    ("virtual_s", Json::Num(c.virtual_s)),
+                    ("extras", num_map(&c.extras)),
+                    ("wall_min_s", Json::Num(c.wall_min_s)),
+                    ("wall_extras", num_map(&c.wall_extras)),
+                ])
+            })
+            .collect();
+        let series = self
+            .series
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("wall", Json::Bool(s.wall)),
+                    (
+                        "values",
+                        Json::Arr(s.values.iter().map(|v| Json::Num(*v)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("kind", Json::Str(self.kind.clone())),
+            ("axis", Json::Str(self.axis.clone())),
+            ("cells", Json::Arr(cells)),
+            ("series", Json::Arr(series)),
+            (
+                "gates",
+                Json::Arr(self.gates.iter().map(GateSpec::to_json).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<SweepOutcome> {
+        let err = |what: &str| C2SError::Config(format!("curve report: bad sweep {what}"));
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err("name"))?
+            .to_string();
+        let str_field = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string()
+        };
+        let pairs = |v: &Json, key: &str| -> Vec<(String, f64)> {
+            match v.get(key) {
+                Some(Json::Obj(kv)) => kv
+                    .iter()
+                    .filter_map(|(k, val)| val.as_f64().map(|n| (k.clone(), n)))
+                    .collect(),
+                _ => Vec::new(),
+            }
+        };
+        let mut cells = Vec::new();
+        if let Some(items) = v.get("cells").and_then(Json::as_array) {
+            for c in items {
+                cells.push(CurveCell {
+                    x: c.get("x").and_then(Json::as_f64).ok_or_else(|| err("cell x"))?,
+                    virtual_s: c
+                        .get("virtual_s")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| err("cell virtual_s"))?,
+                    extras: pairs(c, "extras"),
+                    wall_min_s: c.get("wall_min_s").and_then(Json::as_f64).unwrap_or(0.0),
+                    wall_extras: pairs(c, "wall_extras"),
+                });
+            }
+        }
+        let mut series = Vec::new();
+        if let Some(items) = v.get("series").and_then(Json::as_array) {
+            for s in items {
+                series.push(SeriesOut {
+                    name: s
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| err("series name"))?
+                        .to_string(),
+                    wall: s.get("wall").and_then(Json::as_bool).unwrap_or(false),
+                    values: s
+                        .get("values")
+                        .and_then(Json::as_array)
+                        .map(|vals| {
+                            vals.iter()
+                                .map(|x| x.as_f64().unwrap_or(f64::NAN))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                });
+            }
+        }
+        let mut gates = Vec::new();
+        if let Some(items) = v.get("gates").and_then(Json::as_array) {
+            for g in items {
+                gates.push(GateSpec::from_json(g)?);
+            }
+        }
+        Ok(SweepOutcome {
+            name,
+            scenario: str_field("scenario"),
+            kind: str_field("kind"),
+            axis: str_field("axis"),
+            cells,
+            series,
+            gates,
+        })
+    }
+}
+
+/// A full sweep run: schema tag, run mode, and per-sweep outcomes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CurveReport {
+    /// `true` when run with `--quick` (reduced axis and corpus shapes).
+    pub quick: bool,
+    /// Repetitions per cell (walls publish the per-cell minimum).
+    pub reps: usize,
+    /// Outcomes in run order.
+    pub sweeps: Vec<SweepOutcome>,
+}
+
+impl CurveReport {
+    /// Serialize to the `BENCH_curves.json` document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(CURVE_SCHEMA.to_string())),
+            ("quick", Json::Bool(self.quick)),
+            ("reps", Json::Num(self.reps as f64)),
+            (
+                "sweeps",
+                Json::Arr(self.sweeps.iter().map(SweepOutcome::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Render the JSON text.
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Parse a curve report document.
+    pub fn parse(text: &str) -> Result<CurveReport> {
+        let v = Json::parse(text).map_err(|e| C2SError::Config(format!("curve report: {e}")))?;
+        match v.get("schema").and_then(Json::as_str) {
+            Some(CURVE_SCHEMA) => {}
+            Some(other) => {
+                return Err(C2SError::Config(format!(
+                    "curve report schema mismatch: expected {CURVE_SCHEMA}, got {other}"
+                )))
+            }
+            None => return Err(C2SError::Config("curve report: missing schema field".into())),
+        }
+        let mut sweeps = Vec::new();
+        if let Some(items) = v.get("sweeps").and_then(Json::as_array) {
+            for item in items {
+                sweeps.push(SweepOutcome::from_json(item)?);
+            }
+        }
+        Ok(CurveReport {
+            quick: v.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            reps: v.get("reps").and_then(Json::as_u64).unwrap_or(1) as usize,
+            sweeps,
+        })
+    }
+
+    /// Load a curve report from disk.
+    pub fn load(path: &std::path::Path) -> Result<CurveReport> {
+        let text = std::fs::read_to_string(path).map_err(C2SError::Io)?;
+        Self::parse(&text)
+    }
+
+    /// Write the report to disk.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.render()).map_err(C2SError::Io)
+    }
+
+    /// Outcome by sweep name.
+    pub fn find(&self, name: &str) -> Option<&SweepOutcome> {
+        self.sweeps.iter().find(|s| s.name == name)
+    }
+}
+
+/// Knee of a curve: the smallest index whose value reaches `frac` of the
+/// series maximum (finite values only). `None` when nothing is finite.
+pub fn knee_index(values: &[f64], frac: f64) -> Option<usize> {
+    let max = values
+        .iter()
+        .copied()
+        .filter(|v| v.is_finite())
+        .fold(f64::NEG_INFINITY, f64::max);
+    if !max.is_finite() {
+        return None;
+    }
+    values
+        .iter()
+        .position(|v| v.is_finite() && *v >= frac * max)
+}
+
+/// Indices a gate applies to: from `gate.from`, optionally capped to
+/// cells whose axis value fits the detected core count.
+fn gate_range(gate: &GateSpec, sweep: &SweepOutcome, cores: usize) -> Vec<usize> {
+    (gate.from..sweep.cells.len())
+        .filter(|&i| !gate.cap_to_cores || sweep.cells[i].x <= cores as f64)
+        .collect()
+}
+
+/// Check one gate. `baseline` supplies the reference knee for
+/// [`GateKind::Knee`]; without one the knee gate reports `Ok` (bootstrap).
+/// `cores` caps `cap_to_cores` gates. Returns a failure description, or
+/// `None` when the gate passes (or is skipped by its noise floor).
+pub fn check_gate(
+    gate: &GateSpec,
+    sweep: &SweepOutcome,
+    baseline: Option<&SweepOutcome>,
+    cores: usize,
+) -> Option<String> {
+    let fail = |msg: String| Some(format!("{}: {} {msg}", sweep.name, gate.series));
+    let Some(values) = sweep.series_values(&gate.series) else {
+        return fail(format!("series missing (gate {})", gate.kind.tag()));
+    };
+    if gate.wall {
+        // noise floor: when even the largest cell wall is below the
+        // floor, the whole sweep ran too fast to carry wall signal
+        let max_wall = sweep
+            .cells
+            .iter()
+            .map(|c| c.wall_min_s)
+            .fold(0.0f64, f64::max);
+        if max_wall < gate.min_ref_wall_s {
+            return None;
+        }
+    }
+    let range = gate_range(gate, sweep, cores);
+    match gate.kind {
+        GateKind::MonotoneNondecreasing | GateKind::MonotoneNonincreasing => {
+            let decreasing = gate.kind == GateKind::MonotoneNonincreasing;
+            let mut extremum: Option<f64> = None;
+            for &i in &range {
+                let v = values[i];
+                if !v.is_finite() {
+                    return fail(format!("non-finite value at cell {i}"));
+                }
+                if let Some(ext) = extremum {
+                    let (bound, broken) = if decreasing {
+                        let b = ext * (1.0 + gate.rel_tol);
+                        (b, v > b)
+                    } else {
+                        let b = ext * (1.0 - gate.rel_tol);
+                        (b, v < b)
+                    };
+                    if broken {
+                        return fail(format!(
+                            "not monotone {} at x={}: {v} vs bound {bound} (tol {})",
+                            if decreasing { "nonincreasing" } else { "nondecreasing" },
+                            sweep.cells[i].x,
+                            gate.rel_tol
+                        ));
+                    }
+                }
+                extremum = Some(match extremum {
+                    Some(ext) if decreasing => ext.min(v),
+                    Some(ext) => ext.max(v),
+                    None => v,
+                });
+            }
+            None
+        }
+        GateKind::OrderingBelow => {
+            let Some(other_name) = gate.other.as_deref() else {
+                return fail("ordering gate without an upper series".into());
+            };
+            let Some(upper) = sweep.series_values(other_name) else {
+                return fail(format!("upper series {other_name} missing"));
+            };
+            for &i in &range {
+                if !(values[i] < upper[i]) {
+                    return fail(format!(
+                        "ordering broken at x={}: {} !< {} ({other_name})",
+                        sweep.cells[i].x, values[i], upper[i]
+                    ));
+                }
+            }
+            None
+        }
+        GateKind::Knee => {
+            let base_values = baseline.and_then(|b| b.series_values(&gate.series));
+            let Some(base_values) = base_values else {
+                // bootstrap: no baseline yet, nothing to anchor the knee to
+                return None;
+            };
+            // cap both sides with the *current* machine's core count so the
+            // comparison is self-consistent on whatever runner executes it
+            let pick = |sw: &SweepOutcome, vals: &[f64]| -> Vec<f64> {
+                (0..vals.len())
+                    .filter(|&i| {
+                        !gate.cap_to_cores
+                            || sw.cells.get(i).map(|c| c.x <= cores as f64).unwrap_or(false)
+                    })
+                    .map(|i| vals[i])
+                    .collect()
+            };
+            let cur = pick(sweep, values);
+            let base = pick(baseline.unwrap(), base_values);
+            match (knee_index(&cur, gate.frac), knee_index(&base, gate.frac)) {
+                (Some(k_cur), Some(k_base)) => {
+                    if k_cur.abs_diff(k_base) > gate.knee_tol {
+                        fail(format!(
+                            "knee moved from cell {k_base} to {k_cur} (tol {})",
+                            gate.knee_tol
+                        ))
+                    } else {
+                        None
+                    }
+                }
+                _ => fail("knee undefined (non-finite series)".into()),
+            }
+        }
+    }
+}
+
+/// Check every gate of a sweep. `include_wall` selects whether the
+/// wall-derived gates run (at sweep-generation time they do not: a loaded
+/// build machine must not fail a deterministic artifact).
+pub fn check_sweep_gates(
+    sweep: &SweepOutcome,
+    baseline: Option<&SweepOutcome>,
+    cores: usize,
+    include_wall: bool,
+) -> Vec<String> {
+    sweep
+        .gates
+        .iter()
+        .filter(|g| include_wall || !g.wall)
+        .filter_map(|g| check_gate(g, sweep, baseline, cores))
+        .collect()
+}
+
+/// Result of comparing a curve run against a baseline report.
+#[derive(Debug, Clone, Default)]
+pub struct CurveCompareOutcome {
+    /// Bit-exact drifts on virtual quantities (cells, virtual series) —
+    /// these fail the gate.
+    pub drifts: Vec<String>,
+    /// Sweeps the baseline has but the current run is missing — fail.
+    pub missing: Vec<String>,
+    /// Sweeps with no baseline entry yet — reported, not failing.
+    pub unchecked: Vec<String>,
+    /// Shape-gate failures (monotone tolerance broken, knee moved, curve
+    /// ordering inverted) — these fail the gate.
+    pub shape_failures: Vec<String>,
+}
+
+impl CurveCompareOutcome {
+    /// True when the curve gate passes.
+    pub fn is_ok(&self) -> bool {
+        self.drifts.is_empty() && self.missing.is_empty() && self.shape_failures.is_empty()
+    }
+
+    /// Human-readable summary, one line per finding.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for d in &self.drifts {
+            out.push_str(&format!("DRIFT {d}\n"));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("MISSING {m}: in baseline but not in this run\n"));
+        }
+        for u in &self.unchecked {
+            out.push_str(&format!("NEW {u}: no baseline entry yet (not gated)\n"));
+        }
+        for s in &self.shape_failures {
+            out.push_str(&format!("SHAPE {s}\n"));
+        }
+        if self.is_ok() {
+            out.push_str("curve gate: OK\n");
+        }
+        out
+    }
+}
+
+/// Compare a curve run against a baseline. Virtual quantities (axis
+/// values, per-cell virtual times and extras, every non-wall series) must
+/// match bit-for-bit. Wall quantities are never compared point-for-point;
+/// instead every declared gate is evaluated — monotone and ordering gates
+/// on the current curve, knee gates against the baseline curve — using
+/// `cores` for the `cap_to_cores` gates.
+pub fn compare_curves(
+    current: &CurveReport,
+    baseline: &CurveReport,
+    cores: usize,
+) -> CurveCompareOutcome {
+    let mut out = CurveCompareOutcome::default();
+    for b in &baseline.sweeps {
+        let Some(c) = current.find(&b.name) else {
+            out.missing.push(b.name.clone());
+            continue;
+        };
+        let mut drifts: Vec<String> = Vec::new();
+        let mut check = |drifts: &mut Vec<String>, field: String, cur: f64, base: f64| {
+            if cur.to_bits() != base.to_bits() {
+                drifts.push(format!("{}: {field} changed {base} -> {cur}", b.name));
+            }
+        };
+        if c.axis != b.axis {
+            out.drifts
+                .push(format!("{}: axis changed {} -> {}", b.name, b.axis, c.axis));
+            continue;
+        }
+        check(
+            &mut drifts,
+            "cells.len".into(),
+            c.cells.len() as f64,
+            b.cells.len() as f64,
+        );
+        for (i, (cc, bc)) in c.cells.iter().zip(&b.cells).enumerate() {
+            check(&mut drifts, format!("cells[{i}].x"), cc.x, bc.x);
+            check(
+                &mut drifts,
+                format!("cells[{i}].virtual_s"),
+                cc.virtual_s,
+                bc.virtual_s,
+            );
+            for (k, bv) in &bc.extras {
+                match cc.extras.iter().find(|(ck, _)| ck == k) {
+                    Some((_, cv)) => {
+                        check(&mut drifts, format!("cells[{i}].extras.{k}"), *cv, *bv)
+                    }
+                    None => check(&mut drifts, format!("cells[{i}].extras.{k}"), f64::NAN, *bv),
+                }
+            }
+        }
+        for bs in b.series.iter().filter(|s| !s.wall) {
+            match c.series_values(&bs.name) {
+                Some(cv) => {
+                    check(
+                        &mut drifts,
+                        format!("series.{}.len", bs.name),
+                        cv.len() as f64,
+                        bs.values.len() as f64,
+                    );
+                    for (i, (x, y)) in cv.iter().zip(&bs.values).enumerate() {
+                        check(&mut drifts, format!("series.{}[{i}]", bs.name), *x, *y);
+                    }
+                }
+                None => drifts.push(format!("{}: series {} disappeared", b.name, bs.name)),
+            }
+        }
+        out.drifts.append(&mut drifts);
+        // shape gates: the current run's declarations, anchored to the
+        // baseline where a gate needs one (knee location)
+        out.shape_failures
+            .extend(check_sweep_gates(c, Some(b), cores, true));
+    }
+    for c in &current.sweeps {
+        if baseline.find(&c.name).is_none() {
+            out.unchecked.push(c.name.clone());
+            // a new sweep still gets its own shape gates (no knee anchor)
+            out.shape_failures
+                .extend(check_sweep_gates(c, None, cores, true));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(x: f64, virt: f64, wall: f64) -> CurveCell {
+        CurveCell {
+            x,
+            virtual_s: virt,
+            extras: vec![("baseline_s".to_string(), virt * 2.0)],
+            wall_min_s: wall,
+            wall_extras: vec![("wall_rep_spread_s".to_string(), wall * 0.1)],
+        }
+    }
+
+    fn sweep(speedups: &[f64]) -> SweepOutcome {
+        SweepOutcome {
+            name: "demo_sweep".to_string(),
+            scenario: "demo".to_string(),
+            kind: "cloudlet-scaling".to_string(),
+            axis: "cloudlets".to_string(),
+            cells: speedups
+                .iter()
+                .enumerate()
+                .map(|(i, _)| cell((i as f64 + 1.0) * 100.0, 10.0 + i as f64, 0.5))
+                .collect(),
+            series: vec![SeriesOut {
+                name: "speedup".to_string(),
+                wall: false,
+                values: speedups.to_vec(),
+            }],
+            gates: vec![
+                GateSpec::monotone_nondecreasing("speedup", 0, 0.05),
+                GateSpec::knee("speedup", 0.9, 1),
+            ],
+        }
+    }
+
+    fn report(speedups: &[f64]) -> CurveReport {
+        CurveReport {
+            quick: true,
+            reps: 2,
+            sweeps: vec![sweep(speedups)],
+        }
+    }
+
+    #[test]
+    fn knee_index_basics() {
+        assert_eq!(knee_index(&[1.0, 2.0, 9.0, 10.0, 10.1], 0.9), Some(2));
+        assert_eq!(knee_index(&[5.0, 4.0, 3.0], 0.9), Some(0));
+        assert_eq!(knee_index(&[], 0.9), None);
+        assert_eq!(knee_index(&[f64::NAN, 4.0, 8.0], 0.9), Some(2));
+        assert_eq!(knee_index(&[f64::NAN], 0.9), None);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_report() {
+        let r = report(&[1.0, 1.5, 2.25, 96.05149999999999]);
+        let back = CurveReport::parse(&r.render()).unwrap();
+        assert_eq!(r, back);
+        assert!(r.render().contains(CURVE_SCHEMA));
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        assert!(CurveReport::parse("{\"schema\": \"cloud2sim-bench/2\"}").is_err());
+        assert!(CurveReport::parse("{}").is_err());
+    }
+
+    #[test]
+    fn monotone_gate_tolerates_small_dips_only() {
+        // strictly rising: passes
+        assert!(check_sweep_gates(&sweep(&[1.0, 1.2, 1.5]), None, 8, true).is_empty());
+        // 4% dip below the running max: inside the 5% tolerance
+        assert!(check_sweep_gates(&sweep(&[1.0, 1.5, 1.44]), None, 8, true).is_empty());
+        // 20% dip: fails
+        let fails = check_sweep_gates(&sweep(&[1.0, 1.5, 1.2]), None, 8, true);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("not monotone"), "{fails:?}");
+    }
+
+    #[test]
+    fn monotone_gate_from_index_ignores_the_collapse() {
+        // the hz 1->2 collapse: speedup drops at cell 1, then recovers;
+        // a from=1 gate must ignore the drop and check the recovery
+        let mut s = sweep(&[1.0, 0.2, 0.35, 0.6]);
+        s.gates = vec![GateSpec::monotone_nondecreasing("speedup", 1, 0.05)];
+        assert!(check_sweep_gates(&s, None, 8, true).is_empty());
+        // but a recovery that dips again still fails
+        let mut s = sweep(&[1.0, 0.2, 0.6, 0.3]);
+        s.gates = vec![GateSpec::monotone_nondecreasing("speedup", 1, 0.05)];
+        assert_eq!(check_sweep_gates(&s, None, 8, true).len(), 1);
+    }
+
+    #[test]
+    fn nonincreasing_gate_checks_time_curves() {
+        let mut s = sweep(&[10.0, 6.0, 4.5]);
+        s.gates = vec![GateSpec {
+            kind: GateKind::MonotoneNonincreasing,
+            ..GateSpec::monotone_nondecreasing("speedup", 0, 0.05)
+        }];
+        assert!(check_sweep_gates(&s, None, 8, true).is_empty());
+        let mut s = sweep(&[10.0, 6.0, 7.5]);
+        s.gates = vec![GateSpec {
+            kind: GateKind::MonotoneNonincreasing,
+            ..GateSpec::monotone_nondecreasing("speedup", 0, 0.05)
+        }];
+        assert_eq!(check_sweep_gates(&s, None, 8, true).len(), 1);
+    }
+
+    #[test]
+    fn ordering_gate_detects_inversion() {
+        let mut s = sweep(&[1.0, 2.0, 3.0]);
+        s.series.push(SeriesOut {
+            name: "upper".to_string(),
+            wall: false,
+            values: vec![2.0, 3.0, 4.0],
+        });
+        s.gates = vec![GateSpec::ordering_below("speedup", "upper", 0)];
+        assert!(check_sweep_gates(&s, None, 8, true).is_empty());
+        s.series[1].values[2] = 2.5; // upper dips below: inversion
+        let fails = check_sweep_gates(&s, None, 8, true);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("ordering broken"), "{fails:?}");
+    }
+
+    #[test]
+    fn wall_gates_respect_cap_and_noise_floor() {
+        // x values are 100, 200, 300 — cap to 200 "cores" checks 2 cells
+        let mut s = sweep(&[1.0, 1.5, 0.2]);
+        s.series[0].wall = true;
+        s.gates =
+            vec![GateSpec::monotone_nondecreasing("speedup", 0, 0.05).on_wall(0.05, true)];
+        // the violating third cell sits beyond the core cap: passes
+        assert!(check_sweep_gates(&s, None, 200, true).is_empty());
+        // with enough cores the violation is visible again
+        assert_eq!(check_sweep_gates(&s, None, 300, true).len(), 1);
+        // below the noise floor the gate is skipped entirely
+        for c in &mut s.cells {
+            c.wall_min_s = 0.001;
+        }
+        assert!(check_sweep_gates(&s, None, 300, true).is_empty());
+        // and wall gates never run when include_wall is off
+        for c in &mut s.cells {
+            c.wall_min_s = 1.0;
+        }
+        assert!(check_sweep_gates(&s, None, 300, false).is_empty());
+    }
+
+    #[test]
+    fn knee_gate_anchors_to_baseline() {
+        let base = sweep(&[1.0, 1.2, 5.0, 5.2]);
+        // knee stays at cell 2: passes
+        let cur = sweep(&[1.0, 1.3, 5.1, 5.3]);
+        assert!(check_sweep_gates(&cur, Some(&base), 8, true).is_empty());
+        // knee jumps to cell 0 (flat curve): |0 - 2| > tol 1 fails
+        let cur = sweep(&[5.0, 5.0, 5.0, 5.0]);
+        let fails = check_sweep_gates(&cur, Some(&base), 8, true);
+        assert!(fails.iter().any(|f| f.contains("knee moved")), "{fails:?}");
+        // no baseline: knee gate skipped (bootstrap)
+        assert!(check_sweep_gates(&cur, None, 8, true).is_empty());
+    }
+
+    #[test]
+    fn compare_passes_identical_and_flags_drift() {
+        let r = report(&[1.0, 1.5, 2.0, 2.1]);
+        let cmp = compare_curves(&r, &r.clone(), 8);
+        assert!(cmp.is_ok(), "{}", cmp.describe());
+        assert!(cmp.describe().contains("OK"));
+
+        // one virtual bit moved: drift
+        let mut cur = r.clone();
+        cur.sweeps[0].cells[1].virtual_s += 1e-9;
+        let cmp = compare_curves(&cur, &r, 8);
+        assert!(!cmp.is_ok());
+        assert!(cmp.drifts[0].contains("cells[1].virtual_s"), "{:?}", cmp.drifts);
+
+        // a virtual series value moved: drift
+        let mut cur = r.clone();
+        cur.sweeps[0].series[0].values[0] = 1.0000001;
+        assert!(!compare_curves(&cur, &r, 8).is_ok());
+
+        // a deterministic extra moved: drift
+        let mut cur = r.clone();
+        cur.sweeps[0].cells[0].extras[0].1 = 7.0;
+        assert!(!compare_curves(&cur, &r, 8).is_ok());
+    }
+
+    #[test]
+    fn compare_ignores_wall_values_but_gates_shape() {
+        let base = report(&[1.0, 1.5, 2.0, 2.1]);
+        let mut cur = base.clone();
+        // walls may move arbitrarily without failing the compare
+        for c in &mut cur.sweeps[0].cells {
+            c.wall_min_s *= 50.0;
+            c.wall_extras[0].1 *= 50.0;
+        }
+        assert!(compare_curves(&cur, &base, 8).is_ok());
+
+        // a broken monotone shape fails even with identical virtual bits
+        let mut cur = base.clone();
+        cur.sweeps[0].series[0].values = vec![1.0, 1.5, 2.0, 1.0];
+        // keep the virtual bit-compare quiet by also breaking the baseline
+        let mut base2 = base.clone();
+        base2.sweeps[0].series[0].values = vec![1.0, 1.5, 2.0, 1.0];
+        let cmp = compare_curves(&cur, &base2, 8);
+        assert!(!cmp.is_ok());
+        assert!(!cmp.shape_failures.is_empty(), "{}", cmp.describe());
+    }
+
+    #[test]
+    fn compare_missing_and_new_sweeps() {
+        let base = report(&[1.0, 2.0]);
+        let empty = CurveReport {
+            quick: true,
+            reps: 1,
+            sweeps: Vec::new(),
+        };
+        let cmp = compare_curves(&empty, &base, 8);
+        assert!(!cmp.is_ok());
+        assert_eq!(cmp.missing, vec!["demo_sweep".to_string()]);
+
+        // reversed: the sweep is new — not gated bit-wise, but its own
+        // shape gates still run
+        let cmp = compare_curves(&base, &empty, 8);
+        assert!(cmp.is_ok());
+        assert_eq!(cmp.unchecked, vec!["demo_sweep".to_string()]);
+        let bad = report(&[2.0, 1.0]);
+        let cmp = compare_curves(&bad, &empty, 8);
+        assert!(!cmp.is_ok(), "new sweeps still carry their shape gates");
+    }
+
+    #[test]
+    fn unknown_keys_are_tolerated() {
+        let text = r#"{
+  "schema": "cloud2sim-curve/1",
+  "quick": true,
+  "reps": 1,
+  "note": "bootstrap-empty baseline",
+  "sweeps": []
+}"#;
+        let r = CurveReport::parse(text).unwrap();
+        assert!(r.sweeps.is_empty());
+        assert!(r.quick);
+    }
+}

@@ -1,15 +1,24 @@
 //! Shared bench harness (criterion is unavailable in the offline vendor
 //! set; this provides warmup + repetition + stats with similar output),
 //! plus the machine-readable report pipeline: [`json`] is a minimal
-//! dependency-free JSON model and [`report`] the `BENCH_scenarios.json`
-//! schema with the CI determinism gate.
+//! dependency-free JSON model, [`report`] the `BENCH_scenarios.json`
+//! schema with the CI determinism gate, [`curve`] the
+//! `BENCH_curves.json` scaling-curve schema with the CI shape gate, and
+//! [`sweep`] the parallel grid-cell executor behind `bench sweep`.
 
+pub mod curve;
 pub mod harness;
 pub mod json;
 pub mod report;
+pub mod sweep;
 
+pub use curve::{
+    check_sweep_gates, compare_curves, knee_index, CurveCell, CurveCompareOutcome, CurveReport,
+    GateKind, GateSpec, SeriesOut, SweepOutcome,
+};
 pub use harness::{BenchHarness, Measurement};
 pub use json::Json;
 pub use report::{
     compare, compare_with_wall_tolerance, BenchReport, CompareOutcome, ScenarioOutcome,
 };
+pub use sweep::execute_cells;

@@ -1,0 +1,202 @@
+//! Parallel grid-cell executor for `bench sweep`.
+//!
+//! A sweep is a grid of independent simulation cells (one axis value
+//! each). Cells share nothing — every cell builds its own `SimConfig` /
+//! corpus and runs the engine end-to-end — so they can execute
+//! concurrently on real OS threads without touching the determinism
+//! contract: each cell's virtual quantities depend only on its own
+//! configuration, never on which thread ran it or in what order.
+//!
+//! [`execute_cells`] enforces that contract instead of assuming it: every
+//! cell is run `reps` times (possibly on different threads) and the
+//! executor hard-errors if any repetition disagrees on a single bit of
+//! `virtual_s`, `x` or the deterministic extras. Wall quantities are
+//! merged as per-key minima across repetitions — the best observed value,
+//! matching `run_spec`'s behavior for scenario reports — and results are
+//! returned in axis order regardless of completion order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::bench::curve::CurveCell;
+use crate::error::{C2SError, Result};
+
+/// Run one repetition of every cell `reps` times and merge. `run(i)`
+/// produces one repetition of cell `i` (its `wall_min_s` / `wall_extras`
+/// carry that repetition's walls). With `threads > 1` the cells are
+/// distributed over scoped worker threads via an atomic work index;
+/// results always come back in cell order, and the first error wins.
+pub fn execute_cells<F>(n_cells: usize, threads: usize, reps: usize, run: F) -> Result<Vec<CurveCell>>
+where
+    F: Fn(usize) -> Result<CurveCell> + Sync,
+{
+    let reps = reps.max(1);
+    if n_cells == 0 {
+        return Ok(Vec::new());
+    }
+    let threads = threads.clamp(1, n_cells);
+    if threads == 1 {
+        return (0..n_cells).map(|i| measure_cell(i, reps, &run)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<CurveCell>>>> =
+        (0..n_cells).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_cells {
+                    break;
+                }
+                let cell = measure_cell(i, reps, &run);
+                *slots[i].lock().expect("sweep slot poisoned") = Some(cell);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("sweep slot poisoned")
+                .expect("every cell index was claimed")
+        })
+        .collect()
+}
+
+/// Run cell `i` `reps` times: verify the deterministic parts are
+/// bit-identical across repetitions, min-merge the walls.
+fn measure_cell<F>(i: usize, reps: usize, run: &F) -> Result<CurveCell>
+where
+    F: Fn(usize) -> Result<CurveCell>,
+{
+    let mut acc = run(i)?;
+    for rep in 1..reps {
+        let again = run(i)?;
+        let drift = |what: &str| {
+            Err(C2SError::Other(format!(
+                "sweep cell {i} (x={}): repetition {} drifted on {what} — \
+                 virtual quantities must be bit-identical across reps",
+                acc.x,
+                rep + 1
+            )))
+        };
+        if again.x.to_bits() != acc.x.to_bits() {
+            return drift("x");
+        }
+        if again.virtual_s.to_bits() != acc.virtual_s.to_bits() {
+            return drift("virtual_s");
+        }
+        if again.extras.len() != acc.extras.len()
+            || again
+                .extras
+                .iter()
+                .zip(&acc.extras)
+                .any(|((ka, va), (kb, vb))| ka != kb || va.to_bits() != vb.to_bits())
+        {
+            return drift("extras");
+        }
+        acc.wall_min_s = acc.wall_min_s.min(again.wall_min_s);
+        if again.wall_extras.len() != acc.wall_extras.len()
+            || again
+                .wall_extras
+                .iter()
+                .zip(&acc.wall_extras)
+                .any(|((ka, _), (kb, _))| ka != kb)
+        {
+            return drift("wall_extras key set");
+        }
+        for ((_, acc_v), (_, new_v)) in acc.wall_extras.iter_mut().zip(&again.wall_extras) {
+            *acc_v = acc_v.min(*new_v);
+        }
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det_cell(i: usize) -> CurveCell {
+        CurveCell {
+            x: (i as f64 + 1.0) * 10.0,
+            virtual_s: 1.0 + i as f64 * 0.125,
+            extras: vec![("baseline_s".to_string(), 2.0 + i as f64)],
+            wall_min_s: 0.5,
+            wall_extras: vec![("wall_setup_s".to_string(), 0.1)],
+        }
+    }
+
+    #[test]
+    fn results_come_back_in_index_order_on_any_thread_count() {
+        let seq = execute_cells(7, 1, 1, |i| Ok(det_cell(i))).unwrap();
+        for threads in [2, 4, 16] {
+            let par = execute_cells(7, threads, 1, |i| Ok(det_cell(i))).unwrap();
+            assert_eq!(seq, par, "threads={threads}");
+        }
+        assert_eq!(seq[3].x, 40.0);
+    }
+
+    #[test]
+    fn reps_min_merge_walls_and_keep_virtual_bits() {
+        // walls differ per repetition; virtual parts do not
+        let calls: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        let cells = execute_cells(3, 2, 3, |i| {
+            let rep = calls[i].fetch_add(1, Ordering::Relaxed);
+            let mut c = det_cell(i);
+            c.wall_min_s = [0.9, 0.3, 0.6][rep % 3];
+            c.wall_extras[0].1 = [0.5, 0.8, 0.2][rep % 3];
+            Ok(c)
+        })
+        .unwrap();
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.virtual_s.to_bits(), det_cell(i).virtual_s.to_bits());
+            assert_eq!(c.wall_min_s, 0.3, "headline wall is the min across reps");
+            assert_eq!(c.wall_extras[0].1, 0.2, "wall extras min-merge per key");
+            assert_eq!(calls[i].load(Ordering::Relaxed), 3);
+        }
+    }
+
+    #[test]
+    fn virtual_drift_across_reps_is_a_hard_error() {
+        let calls = AtomicUsize::new(0);
+        let err = execute_cells(1, 1, 2, |i| {
+            let rep = calls.fetch_add(1, Ordering::Relaxed);
+            let mut c = det_cell(i);
+            c.virtual_s += rep as f64 * 1e-12; // one ulp-ish wobble
+            Ok(c)
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("virtual_s"), "{err}");
+
+        let calls = AtomicUsize::new(0);
+        let err = execute_cells(1, 1, 2, |i| {
+            let rep = calls.fetch_add(1, Ordering::Relaxed);
+            let mut c = det_cell(i);
+            c.extras[0].1 += rep as f64;
+            Ok(c)
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("extras"), "{err}");
+    }
+
+    #[test]
+    fn cell_errors_propagate() {
+        let r = execute_cells(4, 2, 1, |i| {
+            if i == 2 {
+                Err(C2SError::Other("cell 2 exploded".to_string()))
+            } else {
+                Ok(det_cell(i))
+            }
+        });
+        assert!(r.unwrap_err().to_string().contains("cell 2 exploded"));
+    }
+
+    #[test]
+    fn empty_grid_and_zero_reps_are_benign() {
+        assert!(execute_cells(0, 4, 3, |i| Ok(det_cell(i))).unwrap().is_empty());
+        // reps = 0 is clamped to 1 — the closure still runs once per cell
+        let cells = execute_cells(2, 1, 0, |i| Ok(det_cell(i))).unwrap();
+        assert_eq!(cells.len(), 2);
+    }
+}

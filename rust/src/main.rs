@@ -11,18 +11,22 @@
 //! cloud2sim bench       [--all] [--scenario name]... [--quick] [--reps N]
 //!                       [--json out.json] [--compare baseline.json]
 //!                       [--wall-tol 0.5] [--list]
+//! cloud2sim bench sweep [--all] [--sweep name]... [--quick] [--reps N]
+//!                       [--json BENCH_curves.json]
+//!                       [--compare baseline.json] [--list]
 //! cloud2sim info
 //! ```
 //!
 //! (clap is not in the offline vendor set; flags are parsed by hand, and
 //! `--config` loads the paper-style `cloud2sim.properties`.)
 
-use cloud2sim::bench::{self, BenchReport};
+use cloud2sim::bench::{self, BenchReport, CurveReport};
 use cloud2sim::config::{Properties, SimConfig};
 use cloud2sim::dist::matchmaking::{run_matchmaking_baseline, run_matchmaking_distributed};
 use cloud2sim::dist::{run_cloudsim_baseline, run_distributed_full, Strategy};
 use cloud2sim::elastic::{run_adaptive, HealthMeasure};
 use cloud2sim::error::{C2SError, Result};
+use cloud2sim::grid::parallel::resolve_workers;
 use cloud2sim::mapreduce::{run_hz_wordcount, run_inf_wordcount, Corpus, CorpusConfig, JobConfig};
 use cloud2sim::runtime::registry::{default_artifacts_dir, PjrtRuntime};
 use cloud2sim::runtime::workload::NativeBurnModel;
@@ -230,6 +234,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
             println!("  {:<26} {}", spec.name, spec.summary);
             println!("  {:<26}   reproduces: {}", "", spec.paper_ref);
         }
+        println!("\nregistered sweeps (run with `cloud2sim bench sweep`):");
+        for spec in scenarios::sweep_registry() {
+            println!("  {:<34} {}", spec.name, spec.summary);
+        }
         return Ok(());
     }
     let quick = args.has("quick");
@@ -303,6 +311,87 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cloud2sim bench sweep`: run the scaling-curve sweeps (grid cells on
+/// real threads), emit the machine-readable `BENCH_curves.json`
+/// (`cloud2sim-curve/1`), and optionally gate against a baseline — virtual
+/// series bit-for-bit, wall series on curve *shape* (monotone speedup,
+/// knee location) only.
+fn cmd_bench_sweep(args: &Args) -> Result<()> {
+    if args.has("list") {
+        println!("registered sweeps:");
+        for spec in scenarios::sweep_registry() {
+            println!("  {:<34} {}", spec.name, spec.summary);
+            println!("  {:<34}   reproduces: {}", "", spec.paper_ref);
+        }
+        return Ok(());
+    }
+    let quick = args.has("quick");
+    let mut opts = RunOptions::new(quick);
+    if let Some(r) = args.get("reps") {
+        opts.reps = r
+            .parse::<usize>()
+            .map_err(|_| C2SError::Config(format!("--reps wants an integer, got {r}")))?
+            .max(1);
+    }
+    // same guard as `bench`: a bare value-flag must not silently disable
+    // the gate it controls
+    for flag in ["sweep", "json", "compare", "reps"] {
+        if args.flags.iter().any(|(n, v)| n == flag && v.is_none()) {
+            return Err(C2SError::Config(format!(
+                "--{flag} wants a value; see `cloud2sim bench sweep --list` and README.md"
+            )));
+        }
+    }
+    let wanted = args.get_all("sweep");
+    let specs = if wanted.is_empty() {
+        // `--all` is the default; it exists so CI invocations read clearly
+        scenarios::sweep_registry()
+    } else {
+        let mut specs = Vec::with_capacity(wanted.len());
+        for name in wanted {
+            specs.push(scenarios::find_sweep(name).ok_or_else(|| {
+                C2SError::Config(format!(
+                    "unknown sweep {name}; see `cloud2sim bench sweep --list`"
+                ))
+            })?);
+        }
+        specs
+    };
+    println!(
+        "running {} sweep(s), quick={quick}, reps={}\n",
+        specs.len(),
+        opts.reps
+    );
+    let report = scenarios::run_sweep_suite(&specs, &opts)?;
+    // always write the artifact: the curve JSON is the whole point of the
+    // run, and CI's run-twice gate compares against the first run's file
+    let json_path = args.get("json").unwrap_or("BENCH_curves.json");
+    report.save(std::path::Path::new(json_path))?;
+    println!("\nwrote {json_path} ({} sweeps)", report.sweeps.len());
+    if let Some(path) = args.get("compare") {
+        let baseline = CurveReport::load(std::path::Path::new(path))?;
+        let cores = resolve_workers(0);
+        let cmp = bench::compare_curves(&report, &baseline, cores);
+        print!("\ncomparing against {path} ({cores} cores):\n{}", cmp.describe());
+        if baseline.sweeps.is_empty() {
+            println!(
+                "note: baseline is empty — populate it with \
+                 `cloud2sim bench sweep --all --quick --json {path}`"
+            );
+        }
+        if !cmp.is_ok() {
+            return Err(C2SError::Other(
+                "curve gate failed: virtual series drifted or a wall curve broke its \
+                 declared shape (see DRIFT/SHAPE lines above). If the change is \
+                 intentional, regenerate the baseline with \
+                 `cloud2sim bench sweep --all --quick --json <baseline>`"
+                    .into(),
+            ));
+        }
+    }
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     println!(
         "cloud2sim {} — Cloud²Sim reproduction",
@@ -327,6 +416,11 @@ fn cmd_info() -> Result<()> {
          ({} registered scenarios; --list to enumerate)",
         scenarios::registry().len()
     );
+    println!(
+        "scaling curves: cloud2sim bench sweep --all --json BENCH_curves.json \
+         ({} registered sweeps)",
+        scenarios::sweep_registry().len()
+    );
     println!("examples: quickstart, matchmaking, mapreduce_wordcount, elastic_scaling, e2e_paper");
     Ok(())
 }
@@ -340,6 +434,11 @@ fn main() {
         "matchmaking" => cmd_matchmaking(&args),
         "mapreduce" => cmd_mapreduce(&args),
         "elastic" => cmd_elastic(&args),
+        // `bench sweep` is a positional subcommand: re-parse the flags
+        // from after it so the hand parser never sees it as a value
+        "bench" if argv.get(1).map(String::as_str) == Some("sweep") => {
+            cmd_bench_sweep(&Args::parse(&argv[2.min(argv.len())..]))
+        }
         "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         _ => {

@@ -15,11 +15,21 @@
 //!   machine-readable [`ScenarioOutcome`](crate::bench::ScenarioOutcome)
 //!   that `cloud2sim bench` collects into `BENCH_scenarios.json`, the
 //!   artifact CI's determinism gate diffs against its baseline.
+//! * [`mod@sweep`] — declarative scaling-curve sweeps
+//!   ([`SweepSpec`](sweep::SweepSpec)): scenario × axis grids run as
+//!   concurrent cells into `BENCH_curves.json`, the artifact CI's
+//!   curve-shape gate checks (monotone speedup, knee location,
+//!   hz-vs-inf ordering).
 
 pub mod registry;
 pub mod runner;
 pub mod spec;
+pub mod sweep;
 
 pub use registry::{find, names, registry};
 pub use runner::{run_spec, run_suite, RunOptions};
 pub use spec::{ElasticShape, MrBackend, MrShape, ScenarioKind, ScenarioSpec};
+pub use sweep::{
+    find_sweep, run_sweep, run_sweep_suite, sweep_names, sweep_registry, SweepAxis, SweepKind,
+    SweepSpec,
+};

@@ -1,0 +1,636 @@
+//! Declarative scaling-curve sweeps (`bench sweep`).
+//!
+//! The paper's evaluation plots *curves* — Fig 5.1 speedup over cloudlet
+//! counts, Fig 5.11 / Table 5.3 Hazelcast-vs-Infinispan word count over
+//! instance counts — so one scenario point per PR cannot show whether a
+//! change bent a trajectory. A [`SweepSpec`] names a grid: a base
+//! scenario, one axis (cloudlet / worker / instance counts), the points
+//! to visit and the derived series + shape gates its kind implies. The
+//! runner executes the grid cells concurrently on real threads (they
+//! share nothing — each cell builds its own config and corpus), derives
+//! the speedup/efficiency series, and hard-errors at generation time if a
+//! *virtual* shape gate is broken — a curve that fails its own paper
+//! shape is a bug, not a data point.
+//!
+//! Wall-derived gates (the worker-scaling sweep) are declared here but
+//! evaluated only by `--compare` / `ci/gate_curve.py`, where a noise
+//! floor and the runner's core count are known.
+
+use std::time::Instant;
+
+use crate::bench::curve::{
+    check_sweep_gates, CurveCell, CurveReport, GateSpec, SeriesOut, SweepOutcome,
+};
+use crate::bench::sweep::execute_cells;
+use crate::config::SimConfig;
+use crate::dist::{run_cloudsim_baseline, run_distributed};
+use crate::error::{C2SError, Result};
+use crate::grid::parallel::resolve_workers;
+use crate::mapreduce::{
+    run_hz_wordcount_with_workers, run_inf_wordcount_with_workers, Corpus, JobConfig,
+};
+use crate::scenarios::registry;
+use crate::scenarios::runner::RunOptions;
+use crate::scenarios::spec::{MrBackend, MrShape};
+
+/// What the sweep's x axis counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepAxis {
+    /// Cloudlets submitted to the cloud scenario.
+    Cloudlets,
+    /// Executor worker threads (real parallelism).
+    Workers,
+    /// Grid member / backend instance counts.
+    Instances,
+}
+
+impl SweepAxis {
+    /// Stable tag used in the curve JSON.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SweepAxis::Cloudlets => "cloudlets",
+            SweepAxis::Workers => "workers",
+            SweepAxis::Instances => "instances",
+        }
+    }
+}
+
+/// Which cell driver and derived-series shape a sweep uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepKind {
+    /// Fig 5.1: distributed-vs-baseline speedup over cloudlet counts at a
+    /// fixed member count.
+    CloudletScaling,
+    /// Wall-clock speedup of one MapReduce job over executor worker
+    /// counts (virtual time must not move — that is the determinism
+    /// contract, enforced per cell).
+    WorkerScaling,
+    /// Fig 5.11 / Table 5.3: the same word count on both backend profiles
+    /// over instance counts — Infinispan must stay below Hazelcast.
+    BackendPair,
+}
+
+impl SweepKind {
+    /// Stable tag used in the curve JSON.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SweepKind::CloudletScaling => "cloudlet-scaling",
+            SweepKind::WorkerScaling => "worker-scaling",
+            SweepKind::BackendPair => "backend-pair",
+        }
+    }
+}
+
+/// One declarative sweep: scenario × axis grid plus run shape.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Registry name (stable; used by `bench sweep --sweep` and the JSON).
+    pub name: &'static str,
+    /// One-line human summary.
+    pub summary: &'static str,
+    /// Paper figure / table the curve mirrors.
+    pub paper_ref: &'static str,
+    /// Base scenario the cells derive their configuration from (a
+    /// scenario-registry name for [`SweepKind::CloudletScaling`]; a
+    /// descriptive label otherwise).
+    pub scenario: &'static str,
+    /// Cell driver and derived-series shape.
+    pub kind: SweepKind,
+    /// Axis the points count.
+    pub axis: SweepAxis,
+    /// Axis values to visit, ascending.
+    pub points: &'static [usize],
+    /// Divisor applied to every axis point in `--quick` mode (1 = the
+    /// axis keeps its shape and only the per-cell workload shrinks, via
+    /// [`MrShape::quick_divisor`]).
+    pub quick_divisor: usize,
+    /// Fixed second dimension: member count for cloudlet scaling,
+    /// instance count for worker scaling.
+    pub fixed_nodes: usize,
+    /// Run grid cells concurrently on real threads. Off for sweeps whose
+    /// cells use all cores internally (worker scaling measures wall
+    /// clock — co-running cells would poison it).
+    pub parallel_cells: bool,
+    /// MapReduce corpus shape (the MapReduce kinds only).
+    pub mr: Option<MrShape>,
+}
+
+impl SweepSpec {
+    /// The axis values one run visits: `points`, divided by
+    /// [`SweepSpec::quick_divisor`] in quick mode (deduplicated, floor 1).
+    pub fn axis_points(&self, quick: bool) -> Vec<usize> {
+        let div = if quick { self.quick_divisor.max(1) } else { 1 };
+        let mut out: Vec<usize> = Vec::with_capacity(self.points.len());
+        for &p in self.points {
+            let v = (p / div).max(1);
+            if out.last() != Some(&v) {
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// All registered sweeps, in presentation order.
+pub fn sweep_registry() -> Vec<SweepSpec> {
+    vec![
+        SweepSpec {
+            name: "fig5_1_cloudlet_scaling_sweep",
+            summary: "distributed-vs-baseline speedup over cloudlet counts \
+                      at the 3-member optimum",
+            paper_ref: "Fig 5.1 / Table 5.1 (speedup grows with simulation size)",
+            scenario: "fig5_1_cloudlet_scaling",
+            kind: SweepKind::CloudletScaling,
+            axis: SweepAxis::Cloudlets,
+            points: &[100, 200, 300, 400],
+            quick_divisor: 4,
+            fixed_nodes: 3,
+            parallel_cells: true,
+            mr: None,
+        },
+        SweepSpec {
+            name: "megascale_wordcount_workers_sweep",
+            summary: "wall-clock speedup of the parallel shuffle/reduce \
+                      pipeline over executor worker counts",
+            paper_ref: "§4.1 executor parallelism / D'Angelo & Marzolla's \
+                        scalability-trajectory criterion",
+            scenario: "megascale_wordcount",
+            kind: SweepKind::WorkerScaling,
+            axis: SweepAxis::Workers,
+            points: &[1, 2, 4, 8],
+            // the axis keeps its shape in quick mode; the corpus shrinks
+            // through the megascale shape's quick_divisor (32) instead
+            quick_divisor: 1,
+            fixed_nodes: 16,
+            parallel_cells: false,
+            mr: registry::find("megascale_wordcount").and_then(|s| s.mr),
+        },
+        SweepSpec {
+            name: "hz_vs_inf_wordcount_sweep",
+            summary: "the same word count on both backend profiles over \
+                      instance counts: Infinispan stays below Hazelcast",
+            paper_ref: "Fig 5.11 / Table 5.3 (1->2 collapse, then recovery)",
+            scenario: "fig5_11_table5_3_wordcount",
+            kind: SweepKind::BackendPair,
+            axis: SweepAxis::Instances,
+            points: &[1, 2, 3, 4, 6],
+            quick_divisor: 1,
+            fixed_nodes: 1,
+            parallel_cells: true,
+            // the fig 5.11 bench corpus shape: CorpusConfig::default()
+            // zipf/vocab with the paper's 10k lines per file
+            mr: Some(MrShape {
+                files: 3,
+                distinct_files: 3,
+                lines_per_file: 10_000,
+                zipf_s: 0.9,
+                vocab: 1_200_000,
+                backend: MrBackend::Hazelcast,
+                quick_divisor: 4,
+            }),
+        },
+    ]
+}
+
+/// Look a sweep up by name.
+pub fn find_sweep(name: &str) -> Option<SweepSpec> {
+    sweep_registry().into_iter().find(|s| s.name == name)
+}
+
+/// All registered sweep names, in presentation order.
+pub fn sweep_names() -> Vec<&'static str> {
+    sweep_registry().iter().map(|s| s.name).collect()
+}
+
+/// Run one sweep: execute the grid cells (concurrently when the spec
+/// allows it), derive the series its kind implies, and hard-error if any
+/// *virtual* shape gate fails — the wall gates are left for `--compare` /
+/// `ci/gate_curve.py`, where a noise floor applies.
+pub fn run_sweep(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
+    let points = spec.axis_points(opts.quick);
+    let threads = if spec.parallel_cells {
+        resolve_workers(0)
+    } else {
+        1
+    };
+    let cells = execute_cells(points.len(), threads, opts.reps, |i| {
+        run_cell(spec, points[i], opts.quick)
+    })?;
+    let (series, gates) = derive_series(spec, &cells)?;
+    let out = SweepOutcome {
+        name: spec.name.to_string(),
+        scenario: spec.scenario.to_string(),
+        kind: spec.kind.tag().to_string(),
+        axis: spec.axis.tag().to_string(),
+        cells,
+        series,
+        gates,
+    };
+    let fails = check_sweep_gates(&out, None, resolve_workers(0), false);
+    if !fails.is_empty() {
+        return Err(C2SError::Other(format!(
+            "sweep {} broke its paper-shape gates:\n  {}",
+            spec.name,
+            fails.join("\n  ")
+        )));
+    }
+    Ok(out)
+}
+
+/// Run a list of sweeps into a curve report, printing one progress line
+/// each.
+pub fn run_sweep_suite(specs: &[SweepSpec], opts: &RunOptions) -> Result<CurveReport> {
+    let mut sweeps = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let t0 = Instant::now();
+        let out = run_sweep(spec, opts)?;
+        println!(
+            "{:<34} {} cells over {:<9}  series {:<2}  [wall {:.0}ms]",
+            out.name,
+            out.cells.len(),
+            out.axis,
+            out.series.len(),
+            t0.elapsed().as_secs_f64() * 1e3,
+        );
+        sweeps.push(out);
+    }
+    Ok(CurveReport {
+        quick: opts.quick,
+        reps: opts.reps,
+        sweeps,
+    })
+}
+
+/// One repetition of one grid cell.
+fn run_cell(spec: &SweepSpec, x: usize, quick: bool) -> Result<CurveCell> {
+    match spec.kind {
+        SweepKind::CloudletScaling => cloudlet_cell(spec, x),
+        SweepKind::WorkerScaling => worker_cell(spec, x, quick),
+        SweepKind::BackendPair => backend_pair_cell(spec, x, quick),
+    }
+}
+
+/// Fig 5.1 cell: the base scenario's deployment with `x` cloudlets, run
+/// as the single-JVM baseline and distributed over the fixed member
+/// count. Quick mode shrinks the *axis*, not the config, so the cell
+/// shape is exactly what the axis value says.
+fn cloudlet_cell(spec: &SweepSpec, x: usize) -> Result<CurveCell> {
+    let base = registry::find(spec.scenario).ok_or_else(|| {
+        C2SError::Config(format!(
+            "sweep {}: unknown base scenario {}",
+            spec.name, spec.scenario
+        ))
+    })?;
+    let cfg = SimConfig {
+        no_of_cloudlets: x,
+        ..base.sim_config(false)
+    };
+    let t0 = Instant::now();
+    let baseline = run_cloudsim_baseline(&cfg)?;
+    let dist = run_distributed(&cfg, spec.fixed_nodes)?;
+    Ok(CurveCell {
+        x: x as f64,
+        virtual_s: dist.sim_time_s,
+        extras: vec![
+            ("baseline_s".to_string(), baseline.sim_time_s),
+            ("cloudlets_ok".to_string(), dist.cloudlets_ok as f64),
+        ],
+        wall_min_s: t0.elapsed().as_secs_f64(),
+        wall_extras: Vec::new(),
+    })
+}
+
+/// Worker-scaling cell: the megascale word count at `x` executor workers.
+/// Virtual time must be identical at every `x` — the series derivation
+/// hard-checks it.
+fn worker_cell(spec: &SweepSpec, x: usize, quick: bool) -> Result<CurveCell> {
+    let shape = mr_shape(spec)?;
+    let heap = SimConfig::default().node_heap_bytes;
+    let corpus = Corpus::new(shape.corpus_config(quick));
+    let t0 = Instant::now();
+    let r = match shape.backend {
+        MrBackend::Hazelcast => {
+            run_hz_wordcount_with_workers(corpus, JobConfig::default(), spec.fixed_nodes, heap, x)?
+        }
+        MrBackend::Infinispan => {
+            run_inf_wordcount_with_workers(corpus, JobConfig::default(), spec.fixed_nodes, heap, x)?
+        }
+    };
+    Ok(CurveCell {
+        x: x as f64,
+        virtual_s: r.sim_time_s,
+        extras: vec![
+            (
+                "reduce_invocations".to_string(),
+                r.reduce_invocations as f64,
+            ),
+            ("emitted_pairs".to_string(), r.emitted_pairs as f64),
+        ],
+        wall_min_s: t0.elapsed().as_secs_f64(),
+        wall_extras: Vec::new(),
+    })
+}
+
+/// Backend-pair cell: the same corpus through both backend profiles at
+/// `x` instances, single-threaded (the cells themselves run in parallel).
+fn backend_pair_cell(spec: &SweepSpec, x: usize, quick: bool) -> Result<CurveCell> {
+    let shape = mr_shape(spec)?;
+    let heap = SimConfig::default().node_heap_bytes;
+    let t0 = Instant::now();
+    let hz = run_hz_wordcount_with_workers(
+        Corpus::new(shape.corpus_config(quick)),
+        JobConfig::default(),
+        x,
+        heap,
+        1,
+    )?;
+    let inf = run_inf_wordcount_with_workers(
+        Corpus::new(shape.corpus_config(quick)),
+        JobConfig::default(),
+        x,
+        heap,
+        1,
+    )?;
+    Ok(CurveCell {
+        x: x as f64,
+        virtual_s: hz.sim_time_s,
+        extras: vec![
+            ("hz_s".to_string(), hz.sim_time_s),
+            ("inf_s".to_string(), inf.sim_time_s),
+        ],
+        wall_min_s: t0.elapsed().as_secs_f64(),
+        wall_extras: Vec::new(),
+    })
+}
+
+fn mr_shape(spec: &SweepSpec) -> Result<&MrShape> {
+    spec.mr
+        .as_ref()
+        .ok_or_else(|| C2SError::Config(format!("sweep {} has no MapReduce shape", spec.name)))
+}
+
+/// An extra every cell must carry, as a series.
+fn extra_series(cells: &[CurveCell], key: &str) -> Result<Vec<f64>> {
+    cells
+        .iter()
+        .map(|c| {
+            c.extras
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| *v)
+                .ok_or_else(|| C2SError::Other(format!("sweep cell missing extra {key}")))
+        })
+        .collect()
+}
+
+fn virt(name: &str, values: Vec<f64>) -> SeriesOut {
+    SeriesOut {
+        name: name.to_string(),
+        wall: false,
+        values,
+    }
+}
+
+fn wall(name: &str, values: Vec<f64>) -> SeriesOut {
+    SeriesOut {
+        name: name.to_string(),
+        wall: true,
+        values,
+    }
+}
+
+/// Series of `first / v` — the speedup convention for time curves (cell 0
+/// is the reference deployment).
+fn speedup_series(times: &[f64]) -> Vec<f64> {
+    let first = times.first().copied().unwrap_or(f64::NAN);
+    times.iter().map(|&t| first / t.max(1e-12)).collect()
+}
+
+/// Derive the series and gates a sweep kind implies.
+fn derive_series(
+    spec: &SweepSpec,
+    cells: &[CurveCell],
+) -> Result<(Vec<SeriesOut>, Vec<GateSpec>)> {
+    match spec.kind {
+        SweepKind::CloudletScaling => {
+            let baseline = extra_series(cells, "baseline_s")?;
+            let dist: Vec<f64> = cells.iter().map(|c| c.virtual_s).collect();
+            let speedup: Vec<f64> = baseline
+                .iter()
+                .zip(&dist)
+                .map(|(b, d)| b / d.max(1e-12))
+                .collect();
+            Ok((
+                vec![
+                    virt("baseline_virtual_s", baseline),
+                    virt("distributed_virtual_s", dist),
+                    virt("speedup", speedup),
+                ],
+                vec![
+                    // both time curves grow with the simulation size...
+                    GateSpec::monotone_nondecreasing("baseline_virtual_s", 0, 0.001),
+                    GateSpec::monotone_nondecreasing("distributed_virtual_s", 0, 0.001),
+                    // ...and the baseline grows faster (Fig 5.1: speedup
+                    // rises with cloudlet count; the single JVM pays the
+                    // §5.2 heap pressure the grid distributes away)
+                    GateSpec::monotone_nondecreasing("speedup", 0, 0.05),
+                    GateSpec::knee("speedup", 0.9, 1),
+                ],
+            ))
+        }
+        SweepKind::WorkerScaling => {
+            // determinism contract: worker count must never move a
+            // virtual bit (the cells only differ in real parallelism)
+            let v0 = cells.first().map(|c| c.virtual_s).unwrap_or(0.0);
+            for c in cells {
+                if c.virtual_s.to_bits() != v0.to_bits() {
+                    return Err(C2SError::Other(format!(
+                        "sweep {}: virtual time moved with the worker count: \
+                         {} at x={} vs {} at x={}",
+                        spec.name, c.virtual_s, c.x, v0, cells[0].x
+                    )));
+                }
+            }
+            let walls: Vec<f64> = cells.iter().map(|c| c.wall_min_s).collect();
+            let wall_speedup = speedup_series(&walls);
+            let efficiency: Vec<f64> = wall_speedup
+                .iter()
+                .zip(cells)
+                .map(|(s, c)| s / c.x.max(1.0))
+                .collect();
+            Ok((
+                vec![
+                    virt("virtual_s", cells.iter().map(|c| c.virtual_s).collect()),
+                    wall("wall_s", walls),
+                    wall("wall_speedup", wall_speedup),
+                    // informational: parallel efficiency decays as workers
+                    // outgrow the work — reported, never gated
+                    wall("efficiency", efficiency),
+                ],
+                vec![
+                    // shape-only wall gates, evaluated by --compare with a
+                    // 50 ms noise floor and capped to the runner's cores
+                    GateSpec::monotone_nondecreasing("wall_speedup", 0, 0.35).on_wall(0.05, true),
+                    GateSpec::knee("wall_speedup", 0.9, 1).on_wall(0.05, true),
+                ],
+            ))
+        }
+        SweepKind::BackendPair => {
+            let hz = extra_series(cells, "hz_s")?;
+            let inf = extra_series(cells, "inf_s")?;
+            let hz_speedup = speedup_series(&hz);
+            let inf_speedup = speedup_series(&inf);
+            Ok((
+                vec![
+                    virt("hz_virtual_s", hz),
+                    virt("inf_virtual_s", inf),
+                    virt("hz_speedup", hz_speedup),
+                    virt("inf_speedup", inf_speedup),
+                ],
+                vec![
+                    // Fig 5.11: Infinispan's lighter profile stays below
+                    // Hazelcast at every instance count
+                    GateSpec::ordering_below("inf_virtual_s", "hz_virtual_s", 0),
+                    // Table 5.3: the 1->2 distribution collapse is
+                    // expected (from = 1 skips it); past it both curves
+                    // must recover monotonically
+                    GateSpec::monotone_nondecreasing("hz_speedup", 1, 0.10),
+                    GateSpec::monotone_nondecreasing("inf_speedup", 1, 0.10),
+                    GateSpec::knee("hz_speedup", 0.9, 1),
+                    GateSpec::knee("inf_speedup", 0.9, 1),
+                ],
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> RunOptions {
+        RunOptions {
+            quick: true,
+            reps: 1,
+        }
+    }
+
+    fn tiny_shape(lines: usize) -> MrShape {
+        MrShape {
+            files: 3,
+            distinct_files: 3,
+            lines_per_file: lines,
+            zipf_s: 0.9,
+            vocab: 50_000,
+            backend: MrBackend::Infinispan,
+            quick_divisor: 1,
+        }
+    }
+
+    #[test]
+    fn registry_lists_the_three_paper_sweeps() {
+        let names = sweep_names();
+        for required in [
+            "fig5_1_cloudlet_scaling_sweep",
+            "megascale_wordcount_workers_sweep",
+            "hz_vs_inf_wordcount_sweep",
+        ] {
+            assert!(names.contains(&required), "missing {required}: {names:?}");
+        }
+        for spec in sweep_registry() {
+            assert!(spec.points.len() >= 2, "{} is not a curve", spec.name);
+            assert!(
+                spec.points.windows(2).all(|w| w[0] < w[1]),
+                "{} axis must ascend",
+                spec.name
+            );
+        }
+        assert!(find_sweep("fig5_1_cloudlet_scaling_sweep").is_some());
+        assert!(find_sweep("fig5_1").is_none(), "lookups are exact");
+    }
+
+    #[test]
+    fn quick_mode_divides_the_cloudlet_axis_only() {
+        let fig = find_sweep("fig5_1_cloudlet_scaling_sweep").unwrap();
+        assert_eq!(fig.axis_points(false), vec![100, 200, 300, 400]);
+        assert_eq!(fig.axis_points(true), vec![25, 50, 75, 100]);
+        let workers = find_sweep("megascale_wordcount_workers_sweep").unwrap();
+        assert_eq!(workers.axis_points(true), workers.axis_points(false));
+        // quick-collapsed duplicate points deduplicate
+        let spec = SweepSpec {
+            points: &[2, 4, 8],
+            quick_divisor: 4,
+            ..fig
+        };
+        assert_eq!(spec.axis_points(true), vec![1, 2]);
+    }
+
+    #[test]
+    fn cloudlet_sweep_quick_reproduces_the_fig5_1_shape() {
+        let spec = find_sweep("fig5_1_cloudlet_scaling_sweep").unwrap();
+        // run_sweep hard-errors if the monotone speedup gates fail, so
+        // this passing IS the shape check
+        let out = run_sweep(&spec, &quick_opts()).unwrap();
+        assert_eq!(out.cells.len(), 4);
+        assert_eq!(out.axis, "cloudlets");
+        let speedup = out.series_values("speedup").expect("speedup series");
+        assert_eq!(speedup.len(), 4);
+        assert!(speedup.iter().all(|s| s.is_finite() && *s > 0.0));
+        assert!(
+            speedup.last().unwrap() >= speedup.first().unwrap(),
+            "speedup must grow with simulation size: {speedup:?}"
+        );
+        assert!(!out.gates.is_empty());
+        assert!(out.cells.iter().all(|c| c.virtual_s > 0.0));
+    }
+
+    #[test]
+    fn backend_pair_sweep_orders_inf_below_hz() {
+        let spec = SweepSpec {
+            name: "tiny_backend_pair",
+            scenario: "tiny",
+            points: &[1, 2],
+            mr: Some(tiny_shape(300)),
+            ..find_sweep("hz_vs_inf_wordcount_sweep").unwrap()
+        };
+        // the ordering gate is virtual and checked at generation time
+        let out = run_sweep(&spec, &quick_opts()).unwrap();
+        let hz = out.series_values("hz_virtual_s").unwrap();
+        let inf = out.series_values("inf_virtual_s").unwrap();
+        assert_eq!(hz.len(), 2);
+        assert!(
+            hz.iter().zip(inf).all(|(h, i)| i < h),
+            "hz {hz:?} vs inf {inf:?}"
+        );
+        assert!(out.series_values("hz_speedup").is_some());
+        assert!(out
+            .gates
+            .iter()
+            .all(|g| !g.wall), "backend-pair gates are all virtual");
+    }
+
+    #[test]
+    fn worker_sweep_virtual_time_never_moves() {
+        let spec = SweepSpec {
+            name: "tiny_worker_scaling",
+            scenario: "tiny",
+            points: &[1, 2],
+            fixed_nodes: 4,
+            mr: Some(tiny_shape(200)),
+            ..find_sweep("megascale_wordcount_workers_sweep").unwrap()
+        };
+        let out = run_sweep(&spec, &quick_opts()).unwrap();
+        let v = out.series_values("virtual_s").unwrap();
+        assert_eq!(v[0].to_bits(), v[1].to_bits(), "{v:?}");
+        for wall_series in ["wall_s", "wall_speedup", "efficiency"] {
+            let s = out
+                .series
+                .iter()
+                .find(|s| s.name == wall_series)
+                .unwrap_or_else(|| panic!("missing {wall_series}"));
+            assert!(s.wall, "{wall_series} derives from wall clock");
+        }
+        // its gates are wall-only: none may fire at generation time
+        assert!(out.gates.iter().all(|g| g.wall));
+    }
+}

@@ -1,0 +1,353 @@
+//! JSON-layer integration tests for the bench report pipeline: the
+//! `cloud2sim-curve/1` schema round-trips bit-exactly through the public
+//! API, tolerates unknown keys at every nesting level (so the schema can
+//! grow without breaking old readers), and the bench-report parser still
+//! accepts v1 documents mixed with v2 ones — the optional throughput
+//! fields (`pairs_per_sec`, `events_per_sec`) parse as `None` when a
+//! report predates them. These are the exact properties `ci/gate_curve.py`
+//! and the armed baselines rely on.
+
+use cloud2sim::bench::{
+    compare, compare_curves, BenchReport, CurveCell, CurveReport, GateSpec, SeriesOut,
+    SweepOutcome,
+};
+
+/// A synthetic but fully-populated sweep: awkward floats, virtual and
+/// wall series, one gate of every builder shape.
+fn sweep(name: &str) -> SweepOutcome {
+    SweepOutcome {
+        name: name.to_string(),
+        scenario: "fig5_1_cloudlet_scaling".to_string(),
+        kind: "cloudlet-scaling".to_string(),
+        axis: "cloudlets".to_string(),
+        cells: vec![
+            CurveCell {
+                x: 100.0,
+                virtual_s: 96.05149999999999,
+                extras: vec![("baseline_s".to_string(), 120.2500000000001)],
+                wall_min_s: 0.125,
+                wall_extras: vec![("wall_setup_s".to_string(), 0.03125)],
+            },
+            CurveCell {
+                x: 200.0,
+                virtual_s: 191.1,
+                extras: vec![("baseline_s".to_string(), 260.5)],
+                wall_min_s: 0.25,
+                wall_extras: vec![("wall_setup_s".to_string(), 0.0625)],
+            },
+        ],
+        series: vec![
+            SeriesOut {
+                name: "speedup".to_string(),
+                wall: false,
+                values: vec![1.2519399999999998, 1.3631],
+            },
+            SeriesOut {
+                name: "hz_virtual_s".to_string(),
+                wall: false,
+                values: vec![5.0, 6.0],
+            },
+            SeriesOut {
+                name: "inf_virtual_s".to_string(),
+                wall: false,
+                values: vec![2.0, 3.0],
+            },
+            SeriesOut {
+                name: "wall_s".to_string(),
+                wall: true,
+                values: vec![0.125, 0.25],
+            },
+        ],
+        gates: vec![
+            GateSpec::monotone_nondecreasing("speedup", 0, 0.05),
+            GateSpec::knee("speedup", 0.9, 1),
+            GateSpec::ordering_below("inf_virtual_s", "hz_virtual_s", 0),
+            GateSpec::monotone_nondecreasing("wall_s", 0, 0.35).on_wall(0.05, true),
+        ],
+    }
+}
+
+fn curve_report() -> CurveReport {
+    CurveReport {
+        quick: true,
+        reps: 2,
+        sweeps: vec![sweep("s1")],
+    }
+}
+
+/// Build → render → parse must preserve every field exactly, including
+/// the gate declarations (they are *data* the Python gate reads) and the
+/// shortest-roundtrip float formatting on awkward virtual times.
+#[test]
+fn curve_report_roundtrips_bit_exactly() {
+    let r = curve_report();
+    let text = r.render();
+    assert!(text.contains("cloud2sim-curve/1"));
+    let back = CurveReport::parse(&text).unwrap();
+    assert_eq!(r, back);
+    // the gate declarations survive with their tags and wall markers
+    let s = back.find("s1").expect("find by name");
+    assert_eq!(s.gates.len(), 4);
+    assert!(s.gates.iter().any(|g| g.kind.tag() == "ordering_below"
+        && g.other.as_deref() == Some("hz_virtual_s")));
+    let wall_gate = s.gates.iter().find(|g| g.wall).expect("wall gate");
+    assert_eq!(wall_gate.min_ref_wall_s, 0.05);
+    assert!(wall_gate.cap_to_cores);
+    assert_eq!(
+        s.series_values("speedup").unwrap()[0].to_bits(),
+        1.2519399999999998f64.to_bits()
+    );
+}
+
+/// Disk round trip through `save` / `load`.
+#[test]
+fn curve_report_survives_disk_roundtrip() {
+    let r = curve_report();
+    let path = std::env::temp_dir().join(format!("c2s_curves_test_{}.json", std::process::id()));
+    r.save(&path).unwrap();
+    let back = CurveReport::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(r, back);
+}
+
+/// The two schemas do not cross-parse: a curve document is not a bench
+/// report and vice versa — CI arming the wrong baseline file fails loudly
+/// instead of gating garbage.
+#[test]
+fn schema_tags_reject_the_wrong_document_kind() {
+    let curve_text = curve_report().render();
+    let err = BenchReport::parse(&curve_text).unwrap_err().to_string();
+    assert!(err.contains("schema"), "{err}");
+
+    let bench_text = r#"{"schema": "cloud2sim-bench/2", "quick": true, "reps": 1, "scenarios": []}"#;
+    let err = CurveReport::parse(bench_text).unwrap_err().to_string();
+    assert!(err.contains("schema"), "{err}");
+
+    assert!(CurveReport::parse("{}").is_err(), "missing schema rejected");
+    assert!(CurveReport::parse("{\"schema\": \"cloud2sim-curve/9\"}").is_err());
+}
+
+/// Unknown keys at every nesting level must parse cleanly — this is what
+/// lets the shipped bootstrap baseline carry a `note` field and lets
+/// future schema extensions stay readable by old gates.
+#[test]
+fn curve_parser_tolerates_unknown_keys_at_every_level() {
+    let text = r#"{
+  "schema": "cloud2sim-curve/1",
+  "quick": true,
+  "reps": 1,
+  "note": "bootstrap baseline, armed by CI on first push",
+  "future_field": {"nested": [1, 2, 3]},
+  "sweeps": [
+    {
+      "name": "s1",
+      "scenario": "x",
+      "kind": "cloudlet-scaling",
+      "axis": "cloudlets",
+      "sweep_extra": true,
+      "cells": [
+        {"x": 100, "virtual_s": 2.5, "extras": {"baseline_s": 3.0},
+         "wall_min_s": 0.1, "wall_extras": {}, "cell_extra": "ignored"}
+      ],
+      "series": [
+        {"name": "speedup", "wall": false, "values": [1.2], "series_extra": 7}
+      ],
+      "gates": [
+        {"kind": "monotone_nondecreasing", "series": "speedup", "from": 0,
+         "rel_tol": 0.05, "gate_extra": null}
+      ]
+    }
+  ]
+}"#;
+    let r = CurveReport::parse(text).unwrap();
+    let s = r.find("s1").unwrap();
+    assert_eq!(s.cells.len(), 1);
+    assert_eq!(s.cells[0].virtual_s, 2.5);
+    assert_eq!(s.series_values("speedup"), Some(&[1.2][..]));
+    assert_eq!(s.gates.len(), 1);
+    assert_eq!(s.gates[0].rel_tol, 0.05);
+
+    // the exact shape the repo ships as ci/BENCH_curves_baseline.json
+    let bootstrap = r#"{"schema": "cloud2sim-curve/1", "quick": true, "reps": 1,
+  "note": "bootstrap", "sweeps": []}"#;
+    let r = CurveReport::parse(bootstrap).unwrap();
+    assert!(r.sweeps.is_empty());
+    assert!(r.quick);
+}
+
+/// v1 bench reports (pre-`wall_clock_ms`, pre-throughput-fields) parse
+/// next to v2 ones: the optional fields come back as `None`, the soft
+/// wall figure is derived, unknown keys are skipped, and a v2 run still
+/// compares cleanly against a v1-parsed baseline.
+#[test]
+fn v1_and_v2_bench_reports_mix() {
+    let v1_text = r#"{
+  "schema": "cloud2sim-bench/1",
+  "quick": true,
+  "reps": 1,
+  "scenarios": [
+    {"name": "s1", "kind": "mapreduce", "virtual_s": 42.125,
+     "wall_mean_s": 0.5, "wall_std_s": 0.0, "legacy_field": "ignored"}
+  ]
+}"#;
+    let v1 = BenchReport::parse(v1_text).unwrap();
+    let s = v1.find("s1").unwrap();
+    assert_eq!(s.pairs_per_sec, None, "pre-PR5 reports lack the field");
+    assert_eq!(s.events_per_sec, None);
+    assert_eq!(s.wall_clock_ms, 500.0, "derived from wall_mean_s");
+
+    // explicit nulls in a v2 document also parse as None
+    let v2_nulls = r#"{
+  "schema": "cloud2sim-bench/2",
+  "quick": true,
+  "reps": 1,
+  "scenarios": [
+    {"name": "s1", "kind": "mapreduce", "virtual_s": 42.125,
+     "wall_mean_s": 0.25, "wall_std_s": 0.0, "wall_clock_ms": 250.0,
+     "events_per_sec": null, "pairs_per_sec": null}
+  ]
+}"#;
+    let v2 = BenchReport::parse(v2_nulls).unwrap();
+    assert_eq!(v2.find("s1").unwrap().pairs_per_sec, None);
+
+    // a v2 run with the fields populated gates cleanly against the
+    // v1-parsed baseline: the optional fields are wall-side, never gated
+    let mut current = v1.clone();
+    current.scenarios[0].pairs_per_sec = Some(2.4e6);
+    current.scenarios[0].events_per_sec = Some(125_000.5);
+    current.scenarios[0].wall_clock_ms = 9_999.0;
+    let cmp = compare(&current, &v1);
+    assert!(cmp.is_ok(), "{}", cmp.describe());
+
+    // re-rendering a v1 parse upgrades the tag and keeps the nulls
+    let rendered = v1.render();
+    assert!(rendered.contains("cloud2sim-bench/2"));
+    assert_eq!(BenchReport::parse(&rendered).unwrap(), v1);
+}
+
+/// The curve gate is bit-exact on virtual quantities and completely
+/// blind to wall *values* — only wall curve *shape* can fail it.
+#[test]
+fn compare_curves_bit_exact_on_virtual_blind_to_wall_values() {
+    let base = curve_report();
+    let cmp = compare_curves(&base, &base.clone(), 8);
+    assert!(cmp.is_ok(), "{}", cmp.describe());
+    assert!(cmp.describe().contains("curve gate: OK"));
+
+    // wall values may change wildly (shape preserved) without failing
+    let mut cur = base.clone();
+    cur.sweeps[0].cells[0].wall_min_s = 30.0;
+    cur.sweeps[0].cells[1].wall_min_s = 60.0;
+    cur.sweeps[0].cells[1].wall_extras[0].1 = 1e6;
+    if let Some(s) = cur.sweeps[0].series.iter_mut().find(|s| s.name == "wall_s") {
+        s.values = vec![30.0, 60.0];
+    }
+    let cmp = compare_curves(&cur, &base, 8);
+    assert!(cmp.is_ok(), "wall values are not gated: {}", cmp.describe());
+
+    // one ulp on a virtual time is drift
+    let mut cur = base.clone();
+    let v = cur.sweeps[0].cells[1].virtual_s;
+    cur.sweeps[0].cells[1].virtual_s = f64::from_bits(v.to_bits() + 1);
+    let cmp = compare_curves(&cur, &base, 8);
+    assert!(!cmp.is_ok());
+    assert!(
+        cmp.drifts.iter().any(|d| d.contains("virtual_s")),
+        "{:?}",
+        cmp.drifts
+    );
+
+    // a sweep disappearing fails; a new sweep bootstraps
+    let empty = CurveReport {
+        quick: true,
+        reps: 1,
+        sweeps: Vec::new(),
+    };
+    let cmp = compare_curves(&empty, &base, 8);
+    assert!(!cmp.is_ok());
+    assert_eq!(cmp.missing, vec!["s1".to_string()]);
+    let cmp = compare_curves(&base, &empty, 8);
+    assert!(cmp.is_ok(), "{}", cmp.describe());
+    assert_eq!(cmp.unchecked, vec!["s1".to_string()]);
+}
+
+/// A sweep whose wall gates matter: the shape gate fires on compare when
+/// the wall speedup curve collapses, is skipped below the noise floor,
+/// and is capped to the runner's core count.
+#[test]
+fn wall_shape_gates_fire_on_compare_only() {
+    let mk = |wall_speedup: Vec<f64>, walls: [f64; 3]| -> CurveReport {
+        CurveReport {
+            quick: true,
+            reps: 1,
+            sweeps: vec![SweepOutcome {
+                name: "workers".to_string(),
+                scenario: "megascale_wordcount".to_string(),
+                kind: "worker-scaling".to_string(),
+                axis: "workers".to_string(),
+                cells: (0..3)
+                    .map(|i| CurveCell {
+                        x: [1.0, 2.0, 4.0][i],
+                        virtual_s: 5.0,
+                        extras: Vec::new(),
+                        wall_min_s: walls[i],
+                        wall_extras: Vec::new(),
+                    })
+                    .collect(),
+                series: vec![
+                    SeriesOut {
+                        name: "virtual_s".to_string(),
+                        wall: false,
+                        values: vec![5.0; 3],
+                    },
+                    SeriesOut {
+                        name: "wall_speedup".to_string(),
+                        wall: true,
+                        values: wall_speedup,
+                    },
+                ],
+                gates: vec![
+                    GateSpec::monotone_nondecreasing("wall_speedup", 0, 0.35).on_wall(0.05, true),
+                    GateSpec::knee("wall_speedup", 0.9, 1).on_wall(0.05, true),
+                ],
+            }],
+        }
+    };
+    let base = mk(vec![1.0, 1.8, 3.3], [1.0, 0.55, 0.3]);
+    assert!(compare_curves(&base, &base.clone(), 8).is_ok());
+
+    // a collapsed speedup curve breaks the monotone shape gate
+    let collapsed = mk(vec![1.0, 1.8, 0.9], [1.0, 0.55, 1.1]);
+    let cmp = compare_curves(&collapsed, &base, 8);
+    assert!(!cmp.is_ok());
+    assert!(
+        cmp.drifts.is_empty(),
+        "wall series are never bit-compared: {:?}",
+        cmp.drifts
+    );
+    assert!(
+        cmp.shape_failures.iter().any(|f| f.contains("wall_speedup")),
+        "{:?}",
+        cmp.shape_failures
+    );
+    assert!(cmp.describe().contains("SHAPE"));
+
+    // below the 50ms noise floor the same collapse is ignored
+    let noisy = mk(vec![1.0, 1.8, 0.9], [0.01, 0.006, 0.011]);
+    let cmp = compare_curves(&noisy, &base, 8);
+    assert!(cmp.is_ok(), "sub-floor walls carry no signal: {}", cmp.describe());
+
+    // on a 2-core runner the failing x=4 cell is out of gate range
+    let cmp = compare_curves(&collapsed, &base, 2);
+    assert!(cmp.is_ok(), "cap_to_cores must drop x=4: {}", cmp.describe());
+
+    // a knee that moves two cells past tolerance fails
+    let knee_moved = mk(vec![3.3, 1.8, 1.0], [0.3, 0.55, 1.0]);
+    let cmp = compare_curves(&knee_moved, &base, 8);
+    assert!(!cmp.is_ok());
+    assert!(
+        cmp.shape_failures.iter().any(|f| f.contains("knee")),
+        "{:?}",
+        cmp.shape_failures
+    );
+}

@@ -1,0 +1,184 @@
+//! Sweep-harness integration tests: `run_sweep` / `run_sweep_suite`
+//! drive the real engines end-to-end and the emitted `cloud2sim-curve/1`
+//! JSON is byte-identical across runs on its virtual parts — the
+//! acceptance criterion CI's run-twice curve determinism step enforces.
+//! The sweeps here use shrunk corpus shapes so the debug-mode suite stays
+//! fast; the full-size axes are exercised by `cloud2sim bench sweep`.
+
+use cloud2sim::bench::{compare_curves, CurveReport};
+use cloud2sim::scenarios::{
+    find_sweep, run_sweep, run_sweep_suite, MrBackend, MrShape, RunOptions, SweepSpec,
+};
+
+fn quick() -> RunOptions {
+    RunOptions {
+        quick: true,
+        reps: 1,
+    }
+}
+
+fn tiny_shape(lines: usize) -> MrShape {
+    MrShape {
+        files: 3,
+        distinct_files: 3,
+        lines_per_file: lines,
+        zipf_s: 0.9,
+        vocab: 50_000,
+        backend: MrBackend::Infinispan,
+        quick_divisor: 1,
+    }
+}
+
+/// A two-cell backend pair on a tiny corpus (all-virtual gates).
+fn tiny_pair() -> SweepSpec {
+    SweepSpec {
+        name: "tiny_backend_pair",
+        scenario: "tiny",
+        points: &[1, 2],
+        mr: Some(tiny_shape(300)),
+        ..find_sweep("hz_vs_inf_wordcount_sweep").unwrap()
+    }
+}
+
+/// A two-cell worker sweep on a tiny corpus (wall gates only).
+fn tiny_workers() -> SweepSpec {
+    SweepSpec {
+        name: "tiny_worker_scaling",
+        scenario: "tiny",
+        points: &[1, 2],
+        fixed_nodes: 4,
+        mr: Some(tiny_shape(200)),
+        ..find_sweep("megascale_wordcount_workers_sweep").unwrap()
+    }
+}
+
+/// Zero the wall-side noise so the rendered JSON can be compared byte
+/// for byte — exactly what virtual determinism promises, nothing more.
+fn pin_walls(r: &mut CurveReport) {
+    for sweep in &mut r.sweeps {
+        for cell in &mut sweep.cells {
+            cell.wall_min_s = 0.0;
+            cell.wall_extras.clear();
+        }
+        for series in &mut sweep.series {
+            if series.wall {
+                series.values = vec![0.0; series.values.len()];
+            }
+        }
+    }
+}
+
+/// The run-twice gate: two suite runs must agree bit-for-bit on every
+/// virtual quantity, and the rendered curve JSON must be byte-identical
+/// once the wall noise is pinned.
+#[test]
+fn sweep_suite_runs_twice_bit_identical() {
+    let specs = vec![tiny_pair(), tiny_workers()];
+    let mut a = run_sweep_suite(&specs, &quick()).unwrap();
+    let mut b = run_sweep_suite(&specs, &quick()).unwrap();
+    assert!(a.quick);
+    assert_eq!(a.reps, 1);
+    assert_eq!(a.sweeps.len(), 2);
+
+    // JSON round trip with real engine output
+    let reparsed = CurveReport::parse(&a.render()).unwrap();
+    assert_eq!(a, reparsed);
+
+    // pin the walls first so the compare cannot trip a wall shape gate on
+    // a loaded test machine — this test is about virtual determinism
+    pin_walls(&mut a);
+    pin_walls(&mut b);
+    let cmp = compare_curves(&a, &b, 1);
+    assert!(cmp.is_ok(), "nondeterminism detected:\n{}", cmp.describe());
+    assert_eq!(
+        a.render(),
+        b.render(),
+        "curve JSON must be byte-identical run-to-run on its virtual parts"
+    );
+}
+
+/// Cell-level parallelism must not move a virtual bit: the same sweep
+/// run with concurrent cells and with sequential cells produces
+/// identical virtual series.
+#[test]
+fn parallel_cells_match_sequential_bit_for_bit() {
+    let par = SweepSpec {
+        parallel_cells: true,
+        ..tiny_pair()
+    };
+    let seq = SweepSpec {
+        parallel_cells: false,
+        ..tiny_pair()
+    };
+    let a = run_sweep(&par, &quick()).unwrap();
+    let b = run_sweep(&seq, &quick()).unwrap();
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.x.to_bits(), cb.x.to_bits());
+        assert_eq!(ca.virtual_s.to_bits(), cb.virtual_s.to_bits());
+        assert_eq!(ca.extras, cb.extras);
+    }
+    for sa in a.series.iter().filter(|s| !s.wall) {
+        let vb = b.series_values(&sa.name).expect("series in both runs");
+        assert_eq!(sa.values.len(), vb.len());
+        for (x, y) in sa.values.iter().zip(vb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "series {} drifted", sa.name);
+        }
+    }
+}
+
+/// `--reps N` runs every cell N times; the executor hard-errors if any
+/// repetition moves a virtual bit, so a passing multi-rep run IS the
+/// per-cell determinism check. Walls publish the per-cell minimum.
+#[test]
+fn multi_rep_cells_stay_deterministic() {
+    let out = run_sweep(
+        &tiny_workers(),
+        &RunOptions {
+            quick: true,
+            reps: 2,
+        },
+    )
+    .unwrap();
+    let v = out.series_values("virtual_s").expect("virtual series");
+    assert!(v.iter().all(|x| x.to_bits() == v[0].to_bits()), "{v:?}");
+    assert!(out.cells.iter().all(|c| c.wall_min_s > 0.0));
+}
+
+/// Every sweep ships its shape gates as data inside the JSON, each gate
+/// referencing series that actually exist — the contract that lets
+/// `ci/gate_curve.py` interpret the declarations instead of hardcoding
+/// them.
+#[test]
+fn gates_travel_as_data_and_reference_real_series() {
+    let report = run_sweep_suite(&[tiny_pair()], &quick()).unwrap();
+    let reparsed = CurveReport::parse(&report.render()).unwrap();
+    for sweep in &reparsed.sweeps {
+        assert!(!sweep.gates.is_empty(), "{} declares no gates", sweep.name);
+        for gate in &sweep.gates {
+            assert!(
+                sweep.series_values(&gate.series).is_some(),
+                "{}: gate on unknown series {}",
+                sweep.name,
+                gate.series
+            );
+            if let Some(other) = &gate.other {
+                assert!(
+                    sweep.series_values(other).is_some(),
+                    "{}: ordering gate vs unknown series {other}",
+                    sweep.name
+                );
+            }
+            assert_eq!(
+                sweep
+                    .series
+                    .iter()
+                    .find(|s| s.name == gate.series)
+                    .map(|s| s.wall),
+                Some(gate.wall),
+                "{}: gate wall flag must match its series",
+                sweep.name
+            );
+        }
+    }
+}
