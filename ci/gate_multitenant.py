@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Gate the megascale multi-tenant scenario's memory and fairness floors.
+
+Reads a ``cloud2sim-bench/2`` report (``BENCH_multitenant.json``) and
+re-asserts what makes the scenario megascale and multi-tenant: at least
+1M cloudlets completed across at least 4 concurrent tenant brokers, the
+streaming store's modeled peak heap within a per-submitted-cloudlet byte
+budget (memory must scale with *active* work, not with everything ever
+submitted), and per-tenant p99 turnaround spread within a fairness bound
+(symmetric tenants must see symmetric service).
+
+The pure core :func:`check_multitenant` takes the parsed report and
+returns ``(lines, failures)`` — printable evidence and failure strings —
+so ``ci/test_gates.py`` can unit-test the gate logic without touching
+disk.
+"""
+
+import argparse
+import json
+import sys
+
+# megascale floors (mirrors rust/src/scenarios/runner.rs expectations)
+MIN_CLOUDLETS = 1_000_000
+MIN_TENANTS = 4
+# streaming-store budget: modeled peak heap per *submitted* cloudlet. The
+# retained seed path costs 56 bytes/cloudlet by construction; streaming
+# mode holds the whole pipeline more than an order of magnitude under it.
+MAX_BYTES_PER_CLOUDLET = 16.0
+# per-tenant p99 turnaround spread (max/min) for symmetric tenants
+MAX_P99_SPREAD = 1.5
+
+
+def check_multitenant(report):
+    """Pure gate core: parsed report -> (printable lines, failures)."""
+    lines, failures = [], []
+    matches = [
+        s
+        for s in report.get("scenarios", [])
+        if s.get("name") == "megascale_multitenant"
+    ]
+    if not matches:
+        return lines, ["megascale_multitenant missing from the report"]
+    sc = matches[0]
+    extras = sc.get("extras", {})
+    cloudlets = extras.get("cloudlets_ok")
+    tenants = extras.get("tenants")
+    bytes_per = extras.get("bytes_per_cloudlet")
+    spread = extras.get("p99_spread_ratio")
+
+    if cloudlets is not None:
+        lines.append(f"cloudlets completed : {cloudlets:.0f}")
+    if tenants is not None:
+        lines.append(f"tenants             : {tenants:.0f}")
+    if bytes_per is not None:
+        lines.append(f"bytes/cloudlet      : {bytes_per:.2f} (budget {MAX_BYTES_PER_CLOUDLET:.0f})")
+    if spread is not None:
+        lines.append(f"p99 spread          : {spread:.3f}x (bound {MAX_P99_SPREAD}x)")
+
+    if cloudlets is None or cloudlets < MIN_CLOUDLETS:
+        failures.append(f"megascale floor broken: need >= {MIN_CLOUDLETS} cloudlets completed")
+    if tenants is None or tenants < MIN_TENANTS:
+        failures.append(f"tenancy floor broken: need >= {MIN_TENANTS} concurrent tenants")
+    if bytes_per is None or not bytes_per > 0:
+        failures.append("bytes_per_cloudlet missing or non-positive")
+    elif bytes_per > MAX_BYTES_PER_CLOUDLET:
+        failures.append(
+            f"memory budget broken: {bytes_per:.2f} bytes/cloudlet "
+            f"> {MAX_BYTES_PER_CLOUDLET} (peak heap must track active VMs, not submissions)"
+        )
+    if spread is None or not spread >= 1.0:
+        failures.append("p99_spread_ratio missing or < 1 (max/min must be >= 1)")
+    elif spread > MAX_P99_SPREAD:
+        failures.append(
+            f"fairness broken: per-tenant p99 spread {spread:.3f}x > {MAX_P99_SPREAD}x"
+        )
+    # every tenant must have actually completed work
+    per_tenant = sorted(
+        (k, v) for k, v in extras.items() if k.startswith("tenant_") and k.endswith("_completed")
+    )
+    if tenants is not None and len(per_tenant) < int(tenants):
+        failures.append("per-tenant completion extras missing")
+    for key, done in per_tenant:
+        lines.append(f"{key:<20}: {done:.0f}")
+        if not done > 0:
+            failures.append(f"{key} is zero — a tenant was starved")
+    return lines, failures
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument(
+        "report",
+        nargs="?",
+        default="BENCH_multitenant.json",
+        help="bench report to gate (default: %(default)s)",
+    )
+    args = p.parse_args(argv)
+    with open(args.report) as f:
+        report = json.load(f)
+    lines, failures = check_multitenant(report)
+    for line in lines:
+        print(line)
+    for failure in failures:
+        print(f"FAIL {failure}", file=sys.stderr)
+    if failures:
+        return 1
+    print("multitenant gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

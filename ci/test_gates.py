@@ -15,6 +15,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 import gate_curve
 import gate_faults
+import gate_multitenant
 import gate_wordcount
 
 
@@ -235,6 +236,55 @@ class TestWordcountGate(unittest.TestCase):
 
     def test_missing_scenario(self):
         _, f = gate_wordcount.check_wordcount({"scenarios": []})
+        self.assertTrue(any("missing" in x for x in f), f)
+
+
+def multitenant_report(cloudlets=1_000_000.0, tenants=4.0, bytes_per=0.9,
+                       spread=1.02, starved=None):
+    extras = {
+        "cloudlets_ok": cloudlets,
+        "tenants": tenants,
+        "bytes_per_cloudlet": bytes_per,
+        "p99_spread_ratio": spread,
+    }
+    for t in range(int(tenants)):
+        extras[f"tenant_{t}_completed"] = 0.0 if t == starved else cloudlets / tenants
+    return {
+        "schema": "cloud2sim-bench/2",
+        "scenarios": [{"name": "megascale_multitenant", "extras": extras}],
+    }
+
+
+class TestMultitenantGate(unittest.TestCase):
+    def test_passing_report(self):
+        lines, failures = gate_multitenant.check_multitenant(multitenant_report())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("bytes/cloudlet" in l for l in lines), lines)
+
+    def test_megascale_and_tenancy_floors(self):
+        _, f = gate_multitenant.check_multitenant(multitenant_report(cloudlets=5e5))
+        self.assertTrue(any("megascale floor" in x for x in f), f)
+        _, f = gate_multitenant.check_multitenant(multitenant_report(tenants=2.0))
+        self.assertTrue(any("tenancy floor" in x for x in f), f)
+
+    def test_memory_budget(self):
+        _, f = gate_multitenant.check_multitenant(multitenant_report(bytes_per=56.0))
+        self.assertTrue(any("memory budget" in x for x in f), f)
+        _, f = gate_multitenant.check_multitenant(multitenant_report(bytes_per=None))
+        self.assertTrue(any("bytes_per_cloudlet" in x for x in f), f)
+
+    def test_fairness_spread(self):
+        _, f = gate_multitenant.check_multitenant(multitenant_report(spread=1.8))
+        self.assertTrue(any("fairness broken" in x for x in f), f)
+        _, f = gate_multitenant.check_multitenant(multitenant_report(spread=0.4))
+        self.assertTrue(any("p99_spread_ratio" in x for x in f), f)
+
+    def test_starved_tenant_fails(self):
+        _, f = gate_multitenant.check_multitenant(multitenant_report(starved=2))
+        self.assertTrue(any("starved" in x for x in f), f)
+
+    def test_missing_scenario(self):
+        _, f = gate_multitenant.check_multitenant({"scenarios": []})
         self.assertTrue(any("missing" in x for x in f), f)
 
 

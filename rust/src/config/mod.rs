@@ -3,7 +3,11 @@
 //! Mirrors the paper's `cloud2sim.properties` (Appendix A): simulations are
 //! parameterized without recompiling. [`Properties`] is a faithful
 //! `.properties` reader; [`SimConfig`] is the typed view consumed by the
-//! simulator, grid, MapReduce engines and the elastic middleware.
+//! simulator, grid, MapReduce engines and the elastic middleware; every
+//! closed-choice key parses through the [`ConfigKnob`] trait, which gives
+//! each knob one case-insensitive parser, one `variants()` listing for
+//! error messages and `--help`, and one canonical spelling that
+//! round-trips through a properties file.
 
 pub mod properties;
 
@@ -16,6 +20,201 @@ use crate::mapreduce::job::MrPipeline;
 use crate::sim::cloudlet_scheduler::SchedulerKind;
 use crate::sim::des::EngineMode;
 use crate::sim::queue::QueueKind;
+
+/// A named, enumerable configuration knob.
+///
+/// Every closed-choice key in `cloud2sim.properties` (engine, queue,
+/// scheduler, distribution, …) implements this trait — usually via the
+/// [`knob!`](macro@crate::knob) macro — so parsing, error messages,
+/// `--help` listings and properties-file round-trips all come from one
+/// place instead of per-site copy-pasted `match` blocks.
+///
+/// Contract: parsing is case-insensitive over [`variants`](Self::variants)
+/// (plus any aliases a knob declares), [`canonical`](Self::canonical)
+/// returns the documented spelling, and
+/// `parse_knob(x.canonical()) == Ok(x)` for every value — the round-trip
+/// property fuzzed by the `knob_variants_round_trip` test.
+pub trait ConfigKnob: Sized + Copy {
+    /// The `cloud2sim.properties` / CLI key, e.g. `desEngine`.
+    const KEY: &'static str;
+
+    /// Accepted canonical spellings, in documentation order. Aliases are
+    /// parsed but not listed.
+    fn variants() -> &'static [&'static str];
+
+    /// Parse one spelling (canonical or alias), case-insensitively.
+    fn parse_variant(s: &str) -> Option<Self>;
+
+    /// The canonical spelling of this value; re-parsing it yields `self`.
+    fn canonical(&self) -> &'static str;
+
+    /// Parse with the uniform error shape shared by every knob:
+    /// `"<KEY> must be <a|b|c>, got <input>"`.
+    fn parse_knob(s: &str) -> std::result::Result<Self, String> {
+        Self::parse_variant(s).ok_or_else(|| {
+            format!(
+                "{} must be {}, got {}",
+                Self::KEY,
+                Self::variants().join("|"),
+                s
+            )
+        })
+    }
+}
+
+/// Implement [`ConfigKnob`] for a C-like enum: one line per variant,
+/// `Path => "canonical" | "alias"…`. Matching is case-insensitive and
+/// allocation-free; `canonical()` is the exhaustive reverse map.
+macro_rules! knob {
+    ($ty:ty, $key:literal, { $( $val:path => $canon:literal $(| $alias:literal)* ),+ $(,)? }) => {
+        impl ConfigKnob for $ty {
+            const KEY: &'static str = $key;
+
+            fn variants() -> &'static [&'static str] {
+                &[$($canon),+]
+            }
+
+            fn parse_variant(s: &str) -> Option<Self> {
+                $(
+                    if s.eq_ignore_ascii_case($canon)
+                        $( || s.eq_ignore_ascii_case($alias) )*
+                    {
+                        return Some($val);
+                    }
+                )+
+                None
+            }
+
+            fn canonical(&self) -> &'static str {
+                match self {
+                    $( $val => $canon, )+
+                }
+            }
+        }
+    };
+}
+
+knob!(EngineMode, "desEngine", {
+    EngineMode::NextCompletion => "nextCompletion",
+    EngineMode::Polling => "polling",
+});
+
+// `calendar` is the canonical spelling of the indexed two-tier calendar
+// queue; `indexed` stays accepted for configs written before the rename.
+knob!(QueueKind, "eventQueue", {
+    QueueKind::Indexed => "calendar" | "indexed",
+    QueueKind::Heap => "heap",
+});
+
+knob!(SchedulerKind, "schedulerKind", {
+    SchedulerKind::TimeShared => "timeShared",
+    SchedulerKind::SpaceShared => "spaceShared",
+});
+
+knob!(ScalingMode, "scalingMode", {
+    ScalingMode::Static => "static",
+    ScalingMode::Auto => "auto",
+    ScalingMode::Adaptive => "adaptive",
+});
+
+knob!(WorkloadKind, "isLoaded", {
+    WorkloadKind::PjrtBurn => "true",
+    WorkloadKind::None => "false",
+    WorkloadKind::NativeBurn => "native",
+});
+
+knob!(MrPipeline, "mrPipeline", {
+    MrPipeline::Sequential => "sequential",
+    MrPipeline::Parallel => "parallel",
+});
+
+knob!(SpeculativeExecution, "speculativeExecution", {
+    SpeculativeExecution::On => "on",
+    SpeculativeExecution::Off => "off",
+});
+
+/// The `gridBackend` choice as a knob. [`BackendProfile`] itself is a
+/// struct of tuned latencies, not a C-like enum, so the knob is this
+/// two-valued selector; [`GridBackend::profile`] expands it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridBackend {
+    /// Hazelcast-like latency profile (the paper's primary backend).
+    Hazelcast,
+    /// Infinispan-like latency profile (§4.1 comparison backend).
+    Infinispan,
+}
+
+knob!(GridBackend, "gridBackend", {
+    GridBackend::Hazelcast => "hazelcast",
+    GridBackend::Infinispan => "infinispan",
+});
+
+impl GridBackend {
+    /// Expand the selector into the tuned [`BackendProfile`].
+    pub fn profile(self) -> BackendProfile {
+        match self {
+            GridBackend::Hazelcast => BackendProfile::hazelcast_like(),
+            GridBackend::Infinispan => BackendProfile::infinispan_like(),
+        }
+    }
+}
+
+// `bursty` expands to the calibrated default shape; the `BurstyTail`
+// payload makes this a manual impl rather than a `knob!` one-liner.
+impl ConfigKnob for CloudletDistribution {
+    const KEY: &'static str = "cloudletDistribution";
+
+    fn variants() -> &'static [&'static str] {
+        &["uniform", "variable", "bursty"]
+    }
+
+    fn parse_variant(s: &str) -> Option<Self> {
+        if s.eq_ignore_ascii_case("uniform") {
+            Some(CloudletDistribution::Uniform)
+        } else if s.eq_ignore_ascii_case("variable") {
+            Some(CloudletDistribution::Variable)
+        } else if s.eq_ignore_ascii_case("bursty") {
+            Some(CloudletDistribution::bursty_default())
+        } else {
+            None
+        }
+    }
+
+    fn canonical(&self) -> &'static str {
+        match self {
+            CloudletDistribution::Uniform => "uniform",
+            CloudletDistribution::Variable => "variable",
+            CloudletDistribution::BurstyTail { .. } => "bursty",
+        }
+    }
+}
+
+/// One row per enumerable knob: `(key, "a|b|c" variants, default)`.
+///
+/// Drives `--help` in the CLI and the README knob table, so the docs can
+/// never drift from what the parser actually accepts.
+pub fn knob_summary() -> Vec<(&'static str, String, &'static str)> {
+    fn row<K: ConfigKnob>(default: &K) -> (&'static str, String, &'static str) {
+        (K::KEY, K::variants().join("|"), default.canonical())
+    }
+    let d = SimConfig::default();
+    let backend = if d.backend.is_infinispan_like() {
+        GridBackend::Infinispan
+    } else {
+        GridBackend::Hazelcast
+    };
+    vec![
+        row(&d.des_engine),
+        row(&d.event_queue),
+        row(&d.scheduler),
+        row(&d.cloudlet_distribution),
+        row(&d.workload),
+        row(&backend),
+        row(&d.scaling_mode),
+        row(&d.mr_pipeline),
+        row(&d.speculative_execution),
+    ]
+}
 
 /// What each cloudlet executes once scheduled (`isLoaded` in the paper).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -114,17 +313,19 @@ pub struct SimConfig {
     /// Cloudlet scheduler discipline on every VM (`schedulerKind`).
     pub scheduler: SchedulerKind,
     /// Future-event-queue implementation for the DES (`eventQueue`):
-    /// the indexed calendar queue (default) or the seed binary heap.
+    /// the two-tier calendar queue (`calendar`, the default; `indexed`
+    /// is an accepted alias) or the seed binary heap (`heap`).
     /// Virtual-time results are bit-identical either way.
     pub event_queue: QueueKind,
     /// How the datacenter drives cloudlet progress (`desEngine`).
     /// Virtual-time results are bit-identical between modes, but the
-    /// dispatched event *count* is not — and the §3.3 `k·T1` cost model
-    /// (`dist::cost::EVENT_COST`) is calibrated against the paper's
-    /// measured runs at the seed polling volume, so `Polling` stays the
-    /// config default. `NextCompletion` is the DES hot path: the
-    /// `megascale_broker` scenario drives it explicitly and gates its
-    /// ≥5× event reduction.
+    /// dispatched event *count* is not. Since the §3.3 `k·T1` cost model
+    /// moved to event-volume-independent per-completion units
+    /// (`dist::cost::des_core_cost`), nothing downstream depends on the
+    /// polling event volume anymore, so the event-sparse
+    /// `NextCompletion` hot path is the default. `Polling` remains the
+    /// CloudSim-faithful referee mode that every bit-exactness gate
+    /// cross-checks against.
     pub des_engine: EngineMode,
     /// Cloudlet workload (`isLoaded`).
     pub workload: WorkloadKind,
@@ -213,7 +414,7 @@ impl Default for SimConfig {
             cloudlet_distribution: CloudletDistribution::Uniform,
             scheduler: SchedulerKind::TimeShared,
             event_queue: QueueKind::Indexed,
-            des_engine: EngineMode::Polling,
+            des_engine: EngineMode::NextCompletion,
             workload: WorkloadKind::None,
             load_iterations: 64,
             backend: BackendProfile::hazelcast_like(),
@@ -302,9 +503,6 @@ impl SimConfig {
         get!("mapreduce.files", mr_files, get_usize);
         get!("mapreduce.linesPerFile", mr_lines_per_file, get_usize);
         get!("mapreduce.verbose", mr_verbose, get_bool);
-        if let Some(v) = props.get("mrPipeline") {
-            c.mr_pipeline = v.parse().map_err(C2SError::Config)?;
-        }
         get!("faultSeed", fault_seed, get_u64);
         get!("slowMemberSkew", slow_member_skew, get_f64);
         if let Some(v) = props.get_f64("memberCrashAt")? {
@@ -313,89 +511,28 @@ impl SimConfig {
         if let Some(v) = props.get_f64("memberRejoinAt")? {
             c.member_rejoin_at = Some(v);
         }
-        if let Some(v) = props.get("speculativeExecution") {
-            c.speculative_execution = v.parse().map_err(C2SError::Config)?;
-        }
 
-        if let Some(v) = props.get("isLoaded") {
-            c.workload = match v {
-                "true" => WorkloadKind::PjrtBurn,
-                "native" => WorkloadKind::NativeBurn,
-                "false" => WorkloadKind::None,
-                other => {
-                    return Err(C2SError::Config(format!(
-                        "isLoaded must be true|false|native, got {other}"
-                    )))
+        // Every closed-choice key parses through the one ConfigKnob
+        // implementation — same variants, same error shape everywhere.
+        macro_rules! knob_get {
+            ($ty:ty, $field:ident) => {
+                if let Some(v) = props.get(<$ty as ConfigKnob>::KEY) {
+                    c.$field = <$ty as ConfigKnob>::parse_knob(v).map_err(C2SError::Config)?;
                 }
             };
         }
-        if let Some(v) = props.get("gridBackend") {
-            c.backend = match v.to_ascii_lowercase().as_str() {
-                "hazelcast" => BackendProfile::hazelcast_like(),
-                "infinispan" => BackendProfile::infinispan_like(),
-                other => {
-                    return Err(C2SError::Config(format!(
-                        "gridBackend must be hazelcast|infinispan, got {other}"
-                    )))
-                }
-            };
-        }
-        if let Some(v) = props.get("cloudletDistribution") {
-            c.cloudlet_distribution = match v.to_ascii_lowercase().as_str() {
-                "uniform" => CloudletDistribution::Uniform,
-                "variable" => CloudletDistribution::Variable,
-                "bursty" => CloudletDistribution::bursty_default(),
-                other => {
-                    return Err(C2SError::Config(format!(
-                        "cloudletDistribution must be uniform|variable|bursty, got {other}"
-                    )))
-                }
-            };
-        }
-        if let Some(v) = props.get("schedulerKind") {
-            c.scheduler = match v.to_ascii_lowercase().as_str() {
-                "timeshared" => SchedulerKind::TimeShared,
-                "spaceshared" => SchedulerKind::SpaceShared,
-                other => {
-                    return Err(C2SError::Config(format!(
-                        "schedulerKind must be timeShared|spaceShared, got {other}"
-                    )))
-                }
-            };
-        }
-        if let Some(v) = props.get("eventQueue") {
-            c.event_queue = match v.to_ascii_lowercase().as_str() {
-                "indexed" => QueueKind::Indexed,
-                "heap" => QueueKind::Heap,
-                other => {
-                    return Err(C2SError::Config(format!(
-                        "eventQueue must be indexed|heap, got {other}"
-                    )))
-                }
-            };
-        }
-        if let Some(v) = props.get("desEngine") {
-            c.des_engine = match v.to_ascii_lowercase().as_str() {
-                "nextcompletion" => EngineMode::NextCompletion,
-                "polling" => EngineMode::Polling,
-                other => {
-                    return Err(C2SError::Config(format!(
-                        "desEngine must be nextCompletion|polling, got {other}"
-                    )))
-                }
-            };
-        }
-        if let Some(v) = props.get("scalingMode") {
-            c.scaling_mode = match v.to_ascii_lowercase().as_str() {
-                "static" => ScalingMode::Static,
-                "auto" => ScalingMode::Auto,
-                "adaptive" => ScalingMode::Adaptive,
-                other => {
-                    return Err(C2SError::Config(format!(
-                        "scalingMode must be static|auto|adaptive, got {other}"
-                    )))
-                }
-            };
+        knob_get!(WorkloadKind, workload);
+        knob_get!(CloudletDistribution, cloudlet_distribution);
+        knob_get!(SchedulerKind, scheduler);
+        knob_get!(QueueKind, event_queue);
+        knob_get!(EngineMode, des_engine);
+        knob_get!(ScalingMode, scaling_mode);
+        knob_get!(MrPipeline, mr_pipeline);
+        knob_get!(SpeculativeExecution, speculative_execution);
+        if let Some(v) = props.get(GridBackend::KEY) {
+            c.backend = GridBackend::parse_knob(v)
+                .map_err(C2SError::Config)?
+                .profile();
         }
         c.validate()?;
         Ok(c)
@@ -549,16 +686,82 @@ mod tests {
         assert_eq!(c.des_engine, EngineMode::Polling);
         let d = SimConfig::default();
         assert_eq!(d.event_queue, QueueKind::Indexed);
-        // polling stays the config default: the §3.3 cost model is
-        // calibrated against the seed event volume
-        assert_eq!(d.des_engine, EngineMode::Polling);
+        // the fast engine is the default now that the §3.3 cost model is
+        // in per-completion units (event-volume-independent)
+        assert_eq!(d.des_engine, EngineMode::NextCompletion);
         let p = Properties::parse("desEngine=nextCompletion\n").unwrap();
         let c = SimConfig::from_properties(&p).unwrap();
         assert_eq!(c.des_engine, EngineMode::NextCompletion);
+        // canonical name and legacy alias both select the calendar queue
+        let p = Properties::parse("eventQueue=calendar\n").unwrap();
+        assert_eq!(
+            SimConfig::from_properties(&p).unwrap().event_queue,
+            QueueKind::Indexed
+        );
+        let p = Properties::parse("eventQueue=Indexed\n").unwrap();
+        assert_eq!(
+            SimConfig::from_properties(&p).unwrap().event_queue,
+            QueueKind::Indexed
+        );
         let p = Properties::parse("eventQueue=splaytree\n").unwrap();
         assert!(SimConfig::from_properties(&p).is_err());
         let p = Properties::parse("desEngine=psychic\n").unwrap();
         assert!(SimConfig::from_properties(&p).is_err());
+    }
+
+    #[test]
+    fn knob_variants_round_trip() {
+        fn check<K: ConfigKnob + PartialEq + std::fmt::Debug>() {
+            for v in K::variants() {
+                let parsed = K::parse_knob(v).unwrap_or_else(|e| panic!("{e}"));
+                assert_eq!(
+                    parsed.canonical(),
+                    *v,
+                    "{}: canonical spelling must round-trip",
+                    K::KEY
+                );
+                // case-insensitive: SHOUTED variants parse to the same value
+                let upper = v.to_ascii_uppercase();
+                assert_eq!(K::parse_knob(&upper).unwrap(), parsed, "{}", K::KEY);
+            }
+            let err = K::parse_knob("no-such-variant").unwrap_err();
+            assert!(err.starts_with(K::KEY), "error names the key: {err}");
+            assert!(
+                err.contains(&K::variants().join("|")),
+                "error lists the variants: {err}"
+            );
+            assert!(err.contains("no-such-variant"), "error echoes input: {err}");
+        }
+        check::<EngineMode>();
+        check::<QueueKind>();
+        check::<SchedulerKind>();
+        check::<ScalingMode>();
+        check::<WorkloadKind>();
+        check::<CloudletDistribution>();
+        check::<GridBackend>();
+        check::<MrPipeline>();
+        check::<SpeculativeExecution>();
+    }
+
+    #[test]
+    fn knob_summary_matches_defaults() {
+        let rows = knob_summary();
+        let mut keys: Vec<&str> = rows.iter().map(|(k, _, _)| *k).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), rows.len(), "knob keys are unique");
+        let engine = rows.iter().find(|(k, _, _)| *k == "desEngine").unwrap();
+        assert_eq!(engine.2, "nextCompletion");
+        let queue = rows.iter().find(|(k, _, _)| *k == "eventQueue").unwrap();
+        assert_eq!(queue.2, "calendar");
+        assert!(queue.1.contains("heap"));
+        // every advertised default re-parses through its own knob
+        for (key, variants, default) in &rows {
+            assert!(
+                variants.split('|').any(|v| v == *default),
+                "{key}: default {default} must be an advertised variant"
+            );
+        }
     }
 
     #[test]

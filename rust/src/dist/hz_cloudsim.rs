@@ -134,7 +134,7 @@ pub fn run_cloudsim_baseline_with(
 ) -> Result<DistReport> {
     cfg.validate()?;
     let scenario = run_scenario_with_binder(cfg, false, Box::<RoundRobinBinder>::default());
-    let mut t = scenario.events_processed as f64 * EVENT_COST
+    let mut t = des_core_cost(scenario.successes(), scenario.vms.len())
         + scenario.bind_steps as f64 * BIND_STEP_COST;
     let mut wall = Duration::ZERO;
     if cfg.workload.is_loaded() {
@@ -210,7 +210,10 @@ pub fn run_distributed_full(
     distribute_entities(&mut cluster, &scenario.cloudlets, &vms)?;
 
     // --- the unparallelizable DES core runs on the master ---
-    cluster.advance_busy(master, scenario.events_processed as f64 * EVENT_COST);
+    cluster.advance_busy(
+        master,
+        des_core_cost(scenario.successes(), scenario.vms.len()),
+    );
 
     // --- binding/search phase, split per strategy ---
     let bind_cost = scenario.bind_steps as f64 * BIND_STEP_COST;

@@ -135,7 +135,7 @@ pub fn run_matchmaking_baseline(cfg: &SimConfig) -> Result<DistReport> {
     let scenario = run_scenario_with_binder(cfg, true, Box::<MatchmakingBinder>::default());
     let resident = scenario.cloudlets.len() as u64 * MATCH_CONTEXT_BYTES;
     let gc = GridCluster::gc_factor_for_occupancy(resident as f64 / cfg.node_heap_bytes as f64);
-    let t = scenario.events_processed as f64 * EVENT_COST
+    let t = des_core_cost(scenario.successes(), scenario.vms.len())
         + scenario.bind_steps as f64 * MATCH_STEP_COST * gc;
     Ok(mm_report(None, &scenario, 1, t, Duration::ZERO, 1.0))
 }
@@ -168,7 +168,10 @@ pub fn run_matchmaking_distributed(
     crate::dist::hz_cloudsim::distribute_entities(&mut cluster, &scenario.cloudlets, &scenario.vms)?;
 
     // the DES core (entity bookkeeping) stays on the master
-    cluster.advance_busy(master, scenario.events_processed as f64 * EVENT_COST);
+    cluster.advance_busy(
+        master,
+        des_core_cost(scenario.successes(), scenario.vms.len()),
+    );
 
     // admission: each member pins its slice of match contexts
     let per_member = scenario.cloudlets.len().div_ceil(n);

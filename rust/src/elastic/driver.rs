@@ -159,7 +159,10 @@ pub fn run_adaptive(
     monitor.sample(&main); // baseline
 
     // master pays the core event loop up front
-    main.advance_busy(master, scenario.events_processed as f64 * EVENT_COST);
+    main.advance_busy(
+        master,
+        des_core_cost(scenario.successes(), scenario.vms.len()),
+    );
 
     let mut rows: Vec<LoadRow> = Vec::new();
     let mut events: Vec<ScaleEvent> = Vec::new();

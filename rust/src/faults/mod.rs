@@ -55,15 +55,12 @@ impl SpeculativeExecution {
 impl std::str::FromStr for SpeculativeExecution {
     type Err = String;
 
-    /// Parse the `speculativeExecution` property value (case-insensitive)
-    /// — the one parser shared by every entry point, mirroring
-    /// [`crate::mapreduce::MrPipeline`].
+    /// Parse the `speculativeExecution` property value — delegates to the
+    /// unified [`crate::config::ConfigKnob`] parser, so variants,
+    /// case-insensitivity and the error shape come from the same place as
+    /// every other knob (mirroring [`crate::mapreduce::MrPipeline`]).
     fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
-        match s.to_ascii_lowercase().as_str() {
-            "on" => Ok(SpeculativeExecution::On),
-            "off" => Ok(SpeculativeExecution::Off),
-            other => Err(format!("speculativeExecution must be on|off, got {other}")),
-        }
+        crate::config::ConfigKnob::parse_knob(s)
     }
 }
 

@@ -33,7 +33,10 @@ pub mod util;
 /// Commonly used types, re-exported for examples and benches.
 pub mod prelude {
     pub use crate::bench::{BenchReport, ScenarioOutcome};
-    pub use crate::config::{CloudletDistribution, Properties, SimConfig, WorkloadKind};
+    pub use crate::config::{
+        knob_summary, CloudletDistribution, ConfigKnob, GridBackend, Properties, SimConfig,
+        WorkloadKind,
+    };
     pub use crate::dist::{run_cloudsim_baseline, run_distributed, DistReport};
     pub use crate::error::{C2SError, Result};
     pub use crate::faults::{FaultEvent, FaultPlan, SpeculativeExecution};

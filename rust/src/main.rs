@@ -21,7 +21,7 @@
 //! `--config` loads the paper-style `cloud2sim.properties`.)
 
 use cloud2sim::bench::{self, BenchReport, CurveReport};
-use cloud2sim::config::{Properties, SimConfig};
+use cloud2sim::config::{knob_summary, ConfigKnob, GridBackend, Properties, SimConfig};
 use cloud2sim::dist::matchmaking::{run_matchmaking_baseline, run_matchmaking_distributed};
 use cloud2sim::dist::{run_cloudsim_baseline, run_distributed_full, Strategy};
 use cloud2sim::elastic::{run_adaptive, HealthMeasure};
@@ -179,14 +179,15 @@ fn cmd_mapreduce(args: &Args) -> Result<()> {
         job.pipeline = p.parse().map_err(C2SError::Config)?;
     }
     let heap = cfg.node_heap_bytes;
-    let backend = args.get("backend").unwrap_or("infinispan");
+    let backend = GridBackend::parse_knob(args.get("backend").unwrap_or("infinispan"))
+        .map_err(C2SError::Config)?;
     let r = match backend {
-        "hazelcast" => run_hz_wordcount(corpus, job, instances, heap)?,
-        "infinispan" => run_inf_wordcount(corpus, job, instances, heap)?,
-        other => return Err(C2SError::Config(format!("unknown backend {other}"))),
+        GridBackend::Hazelcast => run_hz_wordcount(corpus, job, instances, heap)?,
+        GridBackend::Infinispan => run_inf_wordcount(corpus, job, instances, heap)?,
     };
     println!(
-        "{backend} MR: map()={} reduce()={} time={:.2}s instances={} conserved={}",
+        "{} MR: map()={} reduce()={} time={:.2}s instances={} conserved={}",
+        backend.canonical(),
         r.map_invocations,
         r.reduce_invocations,
         r.sim_time_s,
@@ -409,6 +410,10 @@ fn cmd_info() -> Result<()> {
             }
         }
         Err(e) => println!("PJRT: unavailable — {e}"),
+    }
+    println!("config knobs (cloud2sim.properties keys, case-insensitive):");
+    for (key, variants, default) in knob_summary() {
+        println!("  {key:<22} {variants:<40} default={default}");
     }
     println!("benches: cargo bench   (one target per paper table/figure)");
     println!(

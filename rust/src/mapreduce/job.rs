@@ -45,14 +45,12 @@ pub enum MrPipeline {
 impl std::str::FromStr for MrPipeline {
     type Err = String;
 
-    /// Parse the `mrPipeline` property / `--pipeline` flag value
-    /// (case-insensitive) — the one parser shared by every entry point.
+    /// Parse the `mrPipeline` property / `--pipeline` flag value —
+    /// delegates to the unified [`crate::config::ConfigKnob`] parser, so
+    /// variants, case-insensitivity and the error shape come from the
+    /// same place as every other knob.
     fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
-        match s.to_ascii_lowercase().as_str() {
-            "sequential" => Ok(MrPipeline::Sequential),
-            "parallel" => Ok(MrPipeline::Parallel),
-            other => Err(format!("mrPipeline must be sequential|parallel, got {other}")),
-        }
+        crate::config::ConfigKnob::parse_knob(s)
     }
 }
 

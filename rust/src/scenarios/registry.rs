@@ -24,6 +24,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             pes_per_host: 8,
             vms: 200,
             cloudlets: 400,
+            tenants: 1,
             loaded: true,
             distribution: CloudletDistribution::Uniform,
             variable_vms: false,
@@ -44,6 +45,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             pes_per_host: 8,
             vms: 1,
             cloudlets: 1,
+            tenants: 1,
             loaded: false,
             distribution: CloudletDistribution::Uniform,
             variable_vms: false,
@@ -72,6 +74,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             pes_per_host: 8,
             vms: 100,
             cloudlets: 1200,
+            tenants: 1,
             loaded: false,
             distribution: CloudletDistribution::Variable,
             variable_vms: false,
@@ -92,6 +95,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             pes_per_host: 8,
             vms: 200,
             cloudlets: 600,
+            tenants: 1,
             loaded: true,
             distribution: CloudletDistribution::BurstyTail {
                 head_pct: 27,
@@ -120,6 +124,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             // driver's EWMA load dynamics — see the integration test
             // `elastic_closed_loop_scales_out_and_back_in`.
             cloudlets: 1100,
+            tenants: 1,
             loaded: true,
             distribution: CloudletDistribution::BurstyTail {
                 head_pct: 27,
@@ -150,6 +155,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             pes_per_host: 8,
             vms: 200,
             cloudlets: 400,
+            tenants: 1,
             loaded: true,
             distribution: CloudletDistribution::Uniform,
             variable_vms: false,
@@ -172,6 +178,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             pes_per_host: 8,
             vms: 250,
             cloudlets: 100_000,
+            tenants: 1,
             loaded: false,
             distribution: CloudletDistribution::Uniform,
             variable_vms: true,
@@ -195,6 +202,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             pes_per_host: 8,
             vms: 1,
             cloudlets: 1,
+            tenants: 1,
             loaded: false,
             distribution: CloudletDistribution::Uniform,
             variable_vms: false,
@@ -229,6 +237,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             pes_per_host: 8,
             vms: 1,
             cloudlets: 1,
+            tenants: 1,
             loaded: false,
             distribution: CloudletDistribution::Uniform,
             variable_vms: false,
@@ -270,6 +279,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
             // forces a scale-out (so there is a non-master member to kill)
             // and the light tail drains the cluster back down
             cloudlets: 1100,
+            tenants: 1,
             loaded: true,
             distribution: CloudletDistribution::BurstyTail {
                 head_pct: 27,
@@ -295,6 +305,30 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 slow_member_skew: 1.0,
                 speculative: false,
             }),
+        },
+        ScenarioSpec {
+            name: "megascale_multitenant",
+            summary: "1M cloudlets from 4 concurrent tenant brokers on the \
+                      streaming store, refereed bit-for-bit by a heap-queue \
+                      rerun and per-tenant solo decompositions",
+            paper_ref: "§3.1 concurrent simulations of multiple tenants / \
+                        §3 \"as fast as the technology it simulates\"",
+            kind: ScenarioKind::MegascaleMultitenant,
+            datacenters: 25,
+            hosts_per_datacenter: 2,
+            pes_per_host: 8,
+            vms: 256,
+            cloudlets: 1_000_000,
+            tenants: 4,
+            loaded: false,
+            distribution: CloudletDistribution::Uniform,
+            variable_vms: true,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1],
+            grid_workers: 1,
+            mr: None,
+            elastic: None,
+            faults: None,
         },
     ]
 }
@@ -352,6 +386,7 @@ mod tests {
             "megascale_wordcount",
             "mr_straggler_speculative",
             "member_churn_elastic",
+            "megascale_multitenant",
         ] {
             assert!(find(required).is_some(), "missing {required}");
         }
@@ -403,5 +438,24 @@ mod tests {
         // every VM must place: one PE each against the PE pool
         let pes = spec.datacenters * spec.hosts_per_datacenter * spec.pes_per_host;
         assert!(pes >= spec.vms, "{pes} PEs for {} VMs", spec.vms);
+    }
+
+    #[test]
+    fn multitenant_shape_hits_the_floors() {
+        let spec = find("megascale_multitenant").unwrap();
+        // the ISSUE floors: >= 1M cloudlets, >= 4 tenants, 250+ VMs
+        assert!(spec.cloudlets >= 1_000_000, "cloudlet floor shrank");
+        assert!(spec.tenants >= 4, "tenant floor shrank");
+        assert!(spec.vms >= 250, "VM floor shrank");
+        assert!(spec.variable_vms, "heterogeneous VMs are the point");
+        // every VM must place (the solo-slice referee decomposition is
+        // only valid when no VM creation fails or retries)
+        let pes = spec.datacenters * spec.hosts_per_datacenter * spec.pes_per_host;
+        assert!(pes >= spec.vms, "{pes} PEs for {} VMs", spec.vms);
+        // tenants own disjoint slices of vm.id % tenants; equal-size
+        // ownership keeps the fairness extras meaningful
+        assert_eq!(spec.vms % spec.tenants, 0, "uneven VM ownership");
+        // classic scenarios stay single-tenant
+        assert_eq!(find("megascale_broker").unwrap().tenants, 1);
     }
 }

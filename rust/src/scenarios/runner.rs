@@ -22,9 +22,13 @@ use crate::mapreduce::{
 use crate::runtime::workload::NativeBurnModel;
 use crate::scenarios::spec::{MrBackend, ScenarioKind, ScenarioSpec};
 use crate::sim::broker::RoundRobinBinder;
+use crate::sim::cloudlet_store::RetentionMode;
 use crate::sim::des::EngineMode;
 use crate::sim::queue::QueueKind;
-use crate::sim::scenario::{run_scenario_custom, ScenarioResult};
+use crate::sim::scenario::{
+    run_multitenant_scenario, run_scenario_custom, run_single_tenant_slice, ScenarioResult,
+};
+use crate::sim::TenantReport;
 use crate::util::stats::{mean, stddev};
 
 /// Runner options.
@@ -194,6 +198,7 @@ fn run_once(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ScenarioKind::MegascaleMapReduce => megascale_mapreduce(spec, quick),
         ScenarioKind::MrStragglerSpeculative => mr_straggler_speculative(spec, quick),
         ScenarioKind::MemberChurnElastic => member_churn_elastic(spec, quick),
+        ScenarioKind::MegascaleMultitenant => megascale_multitenant(spec, quick),
     }
 }
 
@@ -715,6 +720,206 @@ fn member_churn_elastic(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
     Ok(m)
 }
 
+/// Multi-tenant megascale DES: `spec.tenants` brokers stream disjoint
+/// cloudlet slices concurrently against shared datacenters on the
+/// memory-lean streaming store. One workload, three runs:
+///
+/// 1. **Headline**: streaming retention, next-completion engine, calendar
+///    queue — per-tenant digests instead of per-cloudlet rows, so peak
+///    heap scales with active VMs, not submitted cloudlets.
+/// 2. **Referee 1**: the same run on the seed heap queue — the final
+///    clock, the event count and every per-tenant statistic must match
+///    bit-for-bit or the scenario errors out.
+/// 3. **Referee 2**: each tenant's slice re-run *alone* (same generator,
+///    same VM ownership, same windows). Tenants own disjoint VM subsets
+///    (`vm.id % tenants`), so concurrency must not move one bit of any
+///    tenant's statistics — the decomposition is the isolation proof.
+fn megascale_multitenant(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
+    let tenants = spec.tenants.max(1) as u32;
+    let cfg = SimConfig {
+        des_engine: EngineMode::NextCompletion,
+        event_queue: QueueKind::Indexed,
+        ..spec.sim_config(quick)
+    };
+    let t0 = Instant::now();
+    let combined =
+        run_multitenant_scenario(&cfg, tenants, spec.variable_vms, RetentionMode::Streaming);
+    let wall_combined = t0.elapsed().as_secs_f64();
+
+    if combined.failed != 0 {
+        return Err(C2SError::Other(format!(
+            "{}: {} cloudlets failed to place",
+            spec.name, combined.failed
+        )));
+    }
+    if combined.completed != cfg.no_of_cloudlets as u64 {
+        return Err(C2SError::Other(format!(
+            "{}: completed {} of {} cloudlets",
+            spec.name, combined.completed, cfg.no_of_cloudlets
+        )));
+    }
+
+    // referee 1: the heap-backed queue must reproduce everything
+    let cfg_heap = SimConfig {
+        event_queue: QueueKind::Heap,
+        ..cfg.clone()
+    };
+    let t1 = Instant::now();
+    let heap =
+        run_multitenant_scenario(&cfg_heap, tenants, spec.variable_vms, RetentionMode::Streaming);
+    let wall_heap = t1.elapsed().as_secs_f64();
+    if combined.sim_clock.to_bits() != heap.sim_clock.to_bits() {
+        return Err(C2SError::Other(format!(
+            "{}: calendar-vs-heap queue clock drifted: {} vs {}",
+            spec.name, combined.sim_clock, heap.sim_clock
+        )));
+    }
+    if combined.events_processed != heap.events_processed {
+        return Err(C2SError::Other(format!(
+            "{}: queue implementations dispatched different event counts: {} vs {}",
+            spec.name, combined.events_processed, heap.events_processed
+        )));
+    }
+    for (a, b) in combined.tenants.iter().zip(&heap.tenants) {
+        check_tenant_exact(spec.name, "calendar-vs-heap queue", a, b)?;
+    }
+
+    // referee 2: per-tenant solo decomposition
+    let t2 = Instant::now();
+    for a in &combined.tenants {
+        let solo = run_single_tenant_slice(
+            &cfg,
+            tenants,
+            a.tenant,
+            spec.variable_vms,
+            RetentionMode::Streaming,
+        );
+        let b = solo
+            .tenants
+            .iter()
+            .find(|r| r.tenant == a.tenant)
+            .ok_or_else(|| {
+                C2SError::Other(format!(
+                    "{}: solo run lost tenant {}",
+                    spec.name, a.tenant
+                ))
+            })?;
+        check_tenant_exact(spec.name, "combined-vs-solo decomposition", a, b)?;
+    }
+    let wall_solo = t2.elapsed().as_secs_f64();
+
+    // fairness: tenants draw from the same distribution over same-size VM
+    // subsets, so their tail latencies must stay in a narrow band
+    let p99_max = combined
+        .tenants
+        .iter()
+        .map(|t| t.p99_turnaround)
+        .fold(f64::MIN, f64::max);
+    let p99_min = combined
+        .tenants
+        .iter()
+        .map(|t| t.p99_turnaround)
+        .fold(f64::MAX, f64::min);
+    let p99_spread = if p99_min > 0.0 { p99_max / p99_min } else { f64::NAN };
+    let bytes_per_cloudlet = if combined.submitted > 0 {
+        combined.peak_heap_bytes as f64 / combined.submitted as f64
+    } else {
+        f64::NAN
+    };
+
+    let mut m = empty_measured(combined.sim_clock);
+    m.events_dispatched = Some(combined.events_processed);
+    m.headline_wall_s = Some(wall_combined);
+    m.extras = vec![
+        ("cloudlets_ok".to_string(), combined.completed as f64),
+        ("tenants".to_string(), combined.tenants.len() as f64),
+        ("created_vms".to_string(), combined.created_vms as f64),
+        ("peak_active".to_string(), combined.peak_active as f64),
+        (
+            "peak_heap_bytes".to_string(),
+            combined.peak_heap_bytes as f64,
+        ),
+        ("bytes_per_cloudlet".to_string(), bytes_per_cloudlet),
+        ("p99_spread_ratio".to_string(), p99_spread),
+        (
+            "events_dispatched".to_string(),
+            combined.events_processed as f64,
+        ),
+    ];
+    for t in &combined.tenants {
+        m.extras
+            .push((format!("tenant_{}_completed", t.tenant), t.completed as f64));
+        m.extras
+            .push((format!("tenant_{}_mean_s", t.tenant), t.mean_turnaround));
+        m.extras
+            .push((format!("tenant_{}_p99_s", t.tenant), t.p99_turnaround));
+    }
+    m.wall_extras = vec![
+        ("wall_combined_s".to_string(), wall_combined),
+        ("wall_referee_s".to_string(), wall_heap),
+        ("wall_solo_total_s".to_string(), wall_solo),
+    ];
+    Ok(m)
+}
+
+/// Fail with a drift report unless two runs agree bit-for-bit on one
+/// tenant's whole statistics block: counts exactly, the turnaround sum,
+/// mean and digest quantiles by f64 bit pattern.
+fn check_tenant_exact(
+    scenario: &str,
+    what: &str,
+    a: &TenantReport,
+    b: &TenantReport,
+) -> Result<()> {
+    let drift = |field: &str, x: String, y: String| {
+        Err(C2SError::Other(format!(
+            "{scenario}: {what} drifted on tenant {} {field}: {x} vs {y}",
+            a.tenant
+        )))
+    };
+    if a.tenant != b.tenant {
+        return drift("id", a.tenant.to_string(), b.tenant.to_string());
+    }
+    if a.registered != b.registered {
+        return drift("registered", a.registered.to_string(), b.registered.to_string());
+    }
+    if a.completed != b.completed {
+        return drift("completed", a.completed.to_string(), b.completed.to_string());
+    }
+    if a.failed != b.failed {
+        return drift("failed", a.failed.to_string(), b.failed.to_string());
+    }
+    if a.sum_turnaround.to_bits() != b.sum_turnaround.to_bits() {
+        return drift(
+            "sum_turnaround",
+            a.sum_turnaround.to_string(),
+            b.sum_turnaround.to_string(),
+        );
+    }
+    if a.mean_turnaround.to_bits() != b.mean_turnaround.to_bits() {
+        return drift(
+            "mean_turnaround",
+            a.mean_turnaround.to_string(),
+            b.mean_turnaround.to_string(),
+        );
+    }
+    if a.p50_turnaround.to_bits() != b.p50_turnaround.to_bits() {
+        return drift(
+            "p50_turnaround",
+            a.p50_turnaround.to_string(),
+            b.p50_turnaround.to_string(),
+        );
+    }
+    if a.p99_turnaround.to_bits() != b.p99_turnaround.to_bits() {
+        return drift(
+            "p99_turnaround",
+            a.p99_turnaround.to_string(),
+            b.p99_turnaround.to_string(),
+        );
+    }
+    Ok(())
+}
+
 /// Fail with a drift report unless two fault-plan variants of the same
 /// job agree bit-for-bit on every *result* quantity. Unlike
 /// [`check_mr_bit_exact`] this deliberately skips `sim_time_s` and
@@ -1002,6 +1207,39 @@ mod tests {
         assert!(extra("entries_migrated") > 0.0, "the victim's entries re-home");
         assert!(out.scale_events.iter().any(|e| e.action == "crash"));
         assert!(out.scale_events.iter().any(|e| e.action == "rejoin"));
+    }
+
+    #[test]
+    fn multitenant_scenario_holds_isolation_and_memory_budget() {
+        // the in-run referees hard-error on any per-tenant drift (heap
+        // queue + solo decompositions), so this passing IS the bit-exact
+        // multi-tenant isolation check
+        let spec = find("megascale_multitenant").unwrap();
+        let out = run_spec(&spec, &quick_opts()).unwrap();
+        let extra = |k: &str| {
+            out.extras
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing extra {k}"))
+        };
+        assert_eq!(
+            extra("cloudlets_ok"),
+            spec.sim_config(true).no_of_cloudlets as f64
+        );
+        assert_eq!(extra("tenants"), spec.tenants as f64);
+        assert_eq!(extra("created_vms"), spec.vms as f64);
+        // streaming retention: far below the 56-byte retained row
+        let bpc = extra("bytes_per_cloudlet");
+        assert!(bpc > 0.0 && bpc < 56.0, "bytes/cloudlet {bpc}");
+        // same distribution over same-size VM subsets → tight tail band
+        let spread = extra("p99_spread_ratio");
+        assert!(spread >= 1.0 && spread <= 1.5, "p99 spread {spread}");
+        assert!(extra("peak_active") > 0.0);
+        assert!(out.events_per_sec.unwrap_or(0.0) > 0.0, "{out:?}");
+        for t in 0..spec.tenants {
+            assert!(extra(&format!("tenant_{t}_p99_s")) > 0.0);
+        }
     }
 
     #[test]

@@ -48,6 +48,12 @@ pub enum ScenarioKind {
     /// refereed in-run against the fault-free closed loop — every cloudlet
     /// must still complete.
     MemberChurnElastic,
+    /// Multi-tenant DES at scale: several tenant brokers stream disjoint
+    /// cloudlet populations concurrently against shared datacenters on the
+    /// memory-lean streaming store. Refereed in-run by a heap-queue rerun
+    /// and by per-tenant solo-slice decompositions — every per-tenant
+    /// statistic must match bit-for-bit.
+    MegascaleMultitenant,
 }
 
 impl ScenarioKind {
@@ -63,6 +69,7 @@ impl ScenarioKind {
             ScenarioKind::MegascaleMapReduce => "megascale-mapreduce",
             ScenarioKind::MrStragglerSpeculative => "mr-straggler-speculative",
             ScenarioKind::MemberChurnElastic => "member-churn-elastic",
+            ScenarioKind::MegascaleMultitenant => "megascale-multitenant",
         }
     }
 }
@@ -178,6 +185,10 @@ pub struct ScenarioSpec {
     pub vms: usize,
     /// Cloudlets submitted.
     pub cloudlets: usize,
+    /// Concurrent tenants sharing the datacenters (1 = classic
+    /// single-broker run). Each tenant's broker streams its disjoint
+    /// cloudlet slice against the VMs it owns (`vm.id % tenants`).
+    pub tenants: usize,
     /// Whether cloudlets carry the burn workload (`isLoaded`).
     pub loaded: bool,
     /// Cloudlet length distribution.
@@ -211,8 +222,15 @@ impl ScenarioSpec {
             self.kind,
             ScenarioKind::Elastic | ScenarioKind::MemberChurnElastic
         );
+        // quick mode divides by 2 for the classic static kinds; the
+        // million-cloudlet multitenant run needs a much deeper cut to keep
+        // the debug-mode test suite fast (its full size is CI-release only)
+        let quick_divisor = match self.kind {
+            ScenarioKind::MegascaleMultitenant => 50,
+            _ => 2,
+        };
         let cloudlets = if quick && !keeps_shape {
-            (self.cloudlets / 2).max(16)
+            (self.cloudlets / quick_divisor).max(16)
         } else {
             self.cloudlets
         };
@@ -271,6 +289,7 @@ mod tests {
             pes_per_host: 4,
             vms: 8,
             cloudlets: 64,
+            tenants: 1,
             loaded: true,
             distribution: CloudletDistribution::Uniform,
             variable_vms: false,
@@ -349,6 +368,20 @@ mod tests {
             ScenarioKind::MemberChurnElastic.tag(),
             "member-churn-elastic"
         );
+        assert_eq!(
+            ScenarioKind::MegascaleMultitenant.tag(),
+            "megascale-multitenant"
+        );
+    }
+
+    #[test]
+    fn multitenant_quick_mode_cuts_deeper() {
+        let mut s = spec();
+        s.kind = ScenarioKind::MegascaleMultitenant;
+        s.cloudlets = 1_000_000;
+        s.tenants = 4;
+        assert_eq!(s.sim_config(true).no_of_cloudlets, 20_000);
+        assert_eq!(s.sim_config(false).no_of_cloudlets, 1_000_000);
     }
 
     #[test]

@@ -7,12 +7,26 @@
 //! evaluation scenarios use [`RoundRobinBinder`] (§5.1.1) and the fair
 //! matchmaking binder (§5.1.2, implemented in `dist::matchmaking` and
 //! reusable here).
+//!
+//! Tenancy is first-class: every broker carries a [`TenantId`] and several
+//! brokers with distinct tenants can submit concurrently against shared
+//! datacenters ([`Broker::new`]). Single-tenant callers use
+//! [`Broker::single_tenant`]. Cloudlets are registered into the shared
+//! [`CloudletStore`] at bind time — the broker keeps only counters, and
+//! submissions travel as compact [`SubmitEntry`] batches, so broker-side
+//! heap is O(VMs + in-flight window), not O(submitted cloudlets).
+//!
+//! For workloads too large to pre-materialize, a [`CloudletSource`] feeds
+//! cloudlets in windows: the broker keeps `inflight_target` cloudlets
+//! outstanding and pulls the next window on each completion notice — the
+//! megascale multi-tenant scenario's streaming mode.
 
 use std::collections::HashMap;
 
 use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
+use crate::sim::cloudlet_store::{SharedStore, TenantId};
 use crate::sim::des::SimCtx;
-use crate::sim::event::{EntityId, EventData, EventTag, SimEvent};
+use crate::sim::event::{EntityId, EventData, EventTag, SimEvent, SubmitEntry};
 use crate::sim::vm::Vm;
 
 /// Cloudlet → VM binding policy.
@@ -56,20 +70,44 @@ impl CloudletBinder for RoundRobinBinder {
     }
 }
 
+/// A pull-based cloudlet generator for workloads too large to hold in
+/// memory. The broker calls [`CloudletSource::next_window`] whenever its
+/// in-flight count drops below target, so only one window is ever
+/// materialized per pull.
+pub trait CloudletSource {
+    /// Append the next window of cloudlets to `out`; return how many were
+    /// appended (`0` means the source is exhausted and will not be asked
+    /// again).
+    fn next_window(&mut self, out: &mut Vec<Cloudlet>) -> usize;
+
+    /// Total cloudlets this source will eventually produce (for
+    /// `all_done` accounting).
+    fn total(&self) -> usize;
+}
+
 /// The broker entity.
 pub struct Broker {
+    /// Tenant this broker submits for.
+    pub tenant: TenantId,
     /// Broker id (user id in cloudlet terms).
     pub user_id: usize,
     /// Datacenter entity ids, in submission order.
     datacenters: Vec<EntityId>,
     /// VM requests to place.
     vm_requests: Vec<Vm>,
-    /// Cloudlets to schedule.
+    /// Pre-materialized cloudlets to schedule (eager mode).
     cloudlets: Vec<Cloudlet>,
+    /// Streaming workload source (replaces `cloudlets` when set).
+    source: Option<Box<dyn CloudletSource>>,
+    /// In-flight cloudlet target for the streaming source.
+    inflight_target: u64,
+    source_exhausted: bool,
     binder: Box<dyn CloudletBinder>,
     /// Submit one batched event per datacenter instead of one event per
     /// cloudlet (the next-completion engine's default).
     batch_submit: bool,
+    /// Shared cloudlet arena (registration + results).
+    store: SharedStore,
     // --- runtime state ---
     /// Successfully created VMs.
     pub created_vms: Vec<Vm>,
@@ -80,8 +118,12 @@ pub struct Broker {
     /// Creation attempts per VM id (gives up after one full DC cycle).
     retry_attempts: HashMap<usize, usize>,
     pending_acks: usize,
-    /// Finished cloudlets.
-    pub finished: Vec<Cloudlet>,
+    /// Cloudlets dispatched to datacenters.
+    pub submitted: u64,
+    /// Completion notices received back from datacenters.
+    pub returned: u64,
+    /// Cloudlets that failed at bind time (never dispatched).
+    pub failed_at_bind: u64,
     /// Binding search steps (workload accounting).
     pub bind_steps: u64,
     /// Events handled (cost accounting).
@@ -89,36 +131,68 @@ pub struct Broker {
 }
 
 impl Broker {
-    /// New broker with a binding policy.
+    /// New broker submitting for `tenant` with a binding policy, sharing
+    /// the simulation-wide cloudlet arena.
     pub fn new(
+        tenant: TenantId,
         user_id: usize,
         datacenters: Vec<EntityId>,
         vm_requests: Vec<Vm>,
         cloudlets: Vec<Cloudlet>,
         binder: Box<dyn CloudletBinder>,
+        store: SharedStore,
     ) -> Self {
         Self {
+            tenant,
             user_id,
             datacenters,
             vm_requests,
             cloudlets,
+            source: None,
+            inflight_target: 0,
+            source_exhausted: false,
             binder,
             batch_submit: true,
+            store,
             created_vms: Vec::new(),
             vm_dc: HashMap::new(),
             retry_idx: HashMap::new(),
             retry_attempts: HashMap::new(),
             pending_acks: 0,
-            finished: Vec::new(),
+            submitted: 0,
+            returned: 0,
+            failed_at_bind: 0,
             bind_steps: 0,
             events_handled: 0,
         }
+    }
+
+    /// Single-tenant convenience: tenant id 0 (the seed behaviour).
+    pub fn single_tenant(
+        user_id: usize,
+        datacenters: Vec<EntityId>,
+        vm_requests: Vec<Vm>,
+        cloudlets: Vec<Cloudlet>,
+        binder: Box<dyn CloudletBinder>,
+        store: SharedStore,
+    ) -> Self {
+        Self::new(0, user_id, datacenters, vm_requests, cloudlets, binder, store)
     }
 
     /// Per-cloudlet submission events (the seed polling engine's volume);
     /// `true` groups submissions into one event per datacenter.
     pub fn with_batch_submit(mut self, batch: bool) -> Self {
         self.batch_submit = batch;
+        self
+    }
+
+    /// Stream cloudlets from `source` instead of an eager `Vec`, keeping
+    /// about `inflight_target` cloudlets outstanding. Refills happen on
+    /// completion notices, so memory stays O(window), independent of the
+    /// total cloudlet count.
+    pub fn with_source(mut self, source: Box<dyn CloudletSource>, inflight_target: u64) -> Self {
+        self.source = Some(source);
+        self.inflight_target = inflight_target.max(1);
         self
     }
 
@@ -134,56 +208,107 @@ impl Broker {
             ctx.schedule(0.0, self_id, dc, EventTag::VmCreate, EventData::Vm(Box::new(vm)));
         }
         if self.pending_acks == 0 {
-            self.submit_cloudlets(self_id, ctx);
+            self.begin_submission(self_id, ctx);
         }
     }
 
-    fn submit_cloudlets(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
-        let mut cloudlets = std::mem::take(&mut self.cloudlets);
+    fn begin_submission(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
+        if self.source.is_some() {
+            self.refill_from_source(self_id, ctx);
+        } else {
+            let cloudlets = std::mem::take(&mut self.cloudlets);
+            self.submit_window(cloudlets, self_id, ctx);
+        }
+    }
+
+    /// Pull windows from the source until the in-flight target is met (or
+    /// the source runs dry).
+    fn refill_from_source(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
+        while !self.source_exhausted && self.submitted - self.returned < self.inflight_target {
+            let mut window = Vec::new();
+            let n = self
+                .source
+                .as_mut()
+                .expect("streaming source")
+                .next_window(&mut window);
+            if n == 0 {
+                self.source_exhausted = true;
+                break;
+            }
+            self.submit_window(window, self_id, ctx);
+        }
+    }
+
+    /// Bind one window, register every cloudlet into the arena, and
+    /// dispatch compact submit batches (one pooled buffer per datacenter,
+    /// first-touch order).
+    fn submit_window(&mut self, mut cloudlets: Vec<Cloudlet>, self_id: EntityId, ctx: &mut SimCtx) {
         self.binder.bind(&mut cloudlets, &self.created_vms);
         self.bind_steps = self.binder.search_steps();
+        let mut store = self.store.borrow_mut();
         if self.batch_submit {
             // one event per datacenter; per-VM submission order is a
             // subsequence of the global order, so scheduler state evolves
             // identically to per-cloudlet submission
             let mut order: Vec<EntityId> = Vec::new();
-            let mut per_dc: HashMap<EntityId, Vec<Cloudlet>> = HashMap::new();
+            let mut per_dc: HashMap<EntityId, Vec<SubmitEntry>> = HashMap::new();
             for c in cloudlets {
+                let id = store.register(&c, self.tenant);
                 if c.status == CloudletStatus::Failed || c.vm_id.is_none() {
-                    self.finished.push(c);
-                    continue;
-                }
-                let dc = self.vm_dc[&c.vm_id.unwrap()];
-                let batch = per_dc.entry(dc).or_default();
-                if batch.is_empty() {
-                    order.push(dc);
-                }
-                batch.push(c);
-            }
-            for dc in order {
-                let batch = per_dc.remove(&dc).expect("batched datacenter");
-                ctx.schedule(
-                    0.0,
-                    self_id,
-                    dc,
-                    EventTag::CloudletSubmit,
-                    EventData::Cloudlets(batch),
-                );
-            }
-        } else {
-            for c in cloudlets {
-                if c.status == CloudletStatus::Failed || c.vm_id.is_none() {
-                    self.finished.push(c);
+                    store.record_fail(id, self.tenant, false);
+                    self.failed_at_bind += 1;
                     continue;
                 }
                 let vm_id = c.vm_id.unwrap();
                 let dc = self.vm_dc[&vm_id];
+                let batch = per_dc.entry(dc).or_insert_with(|| store.pool.acquire());
+                if batch.is_empty() {
+                    order.push(dc);
+                }
+                batch.push(SubmitEntry {
+                    id: id.0,
+                    vm: vm_id as u32,
+                    tenant: self.tenant,
+                    length_mi: c.length_mi,
+                });
+            }
+            for dc in order {
+                let batch = per_dc.remove(&dc).expect("batched datacenter");
+                store.mark_dispatched(batch.len() as u64);
+                self.submitted += batch.len() as u64;
                 ctx.schedule(
                     0.0,
                     self_id,
                     dc,
                     EventTag::CloudletSubmit,
-                    EventData::Cloudlet(Box::new(c)),
+                    EventData::SubmitBatch(batch),
+                );
+            }
+        } else {
+            for c in cloudlets {
+                let id = store.register(&c, self.tenant);
+                if c.status == CloudletStatus::Failed || c.vm_id.is_none() {
+                    store.record_fail(id, self.tenant, false);
+                    self.failed_at_bind += 1;
+                    continue;
+                }
+                let vm_id = c.vm_id.unwrap();
+                let dc = self.vm_dc[&vm_id];
+                let mut batch = store.pool.acquire();
+                batch.push(SubmitEntry {
+                    id: id.0,
+                    vm: vm_id as u32,
+                    tenant: self.tenant,
+                    length_mi: c.length_mi,
+                });
+                store.mark_dispatched(1);
+                self.submitted += 1;
+                ctx.schedule(
+                    0.0,
+                    self_id,
+                    dc,
+                    EventTag::CloudletSubmit,
+                    EventData::SubmitBatch(batch),
                 );
             }
         }
@@ -218,21 +343,29 @@ impl Broker {
                 }
                 if self.pending_acks == 0 {
                     self.created_vms.sort_by_key(|v| v.id);
-                    self.submit_cloudlets(self_id, ctx);
+                    self.begin_submission(self_id, ctx);
                 }
             }
-            EventTag::CloudletReturn => match ev.data {
-                EventData::Cloudlet(c) => self.finished.push(*c),
-                EventData::Cloudlets(cs) => self.finished.extend(cs),
-                _ => {}
-            },
+            EventTag::CloudletReturn => {
+                if let EventData::CloudletsDone(n) = ev.data {
+                    self.returned += n as u64;
+                    if self.source.is_some() {
+                        self.refill_from_source(self_id, ctx);
+                    }
+                }
+            }
             _ => {}
         }
     }
 
+    /// Cloudlets that reached a terminal state (returned or bind-failed).
+    pub fn terminal_count(&self) -> u64 {
+        self.returned + self.failed_at_bind
+    }
+
     /// True when every cloudlet has come back.
     pub fn all_done(&self, expected: usize) -> bool {
-        self.finished.len() >= expected
+        self.terminal_count() >= expected as u64
     }
 }
 

@@ -1,8 +1,20 @@
 //! Cloudlet schedulers: how a VM's MIPS capacity is shared among the
 //! cloudlets bound to it (CloudSim's `CloudletSchedulerSpaceShared` /
 //! `CloudletSchedulerTimeShared`).
+//!
+//! The scheduler is id-based: it holds compact [`SubmitEntry`]-derived
+//! records (dense cloudlet id + tenant + remaining work + timestamps), not
+//! owned `Cloudlet` structs — per-cloudlet identity and results live in the
+//! `CloudletStore` arena. Completions come out as [`FinishedRec`]s carrying
+//! the exact virtual-time stamps.
+//!
+//! **Determinism contract:** the f64 operation order in [`VmScheduler::update`],
+//! [`VmScheduler::submit_entry`] and [`VmScheduler::next_completion_delay`]
+//! is bit-for-bit the seed order (rate before decrement, `dt.max(0.0)`
+//! guard, `swap_remove` sweep then sort-by-id, `(remaining/rate).max(0.0)`
+//! min-by). Every engine/queue/batching referee in the repo leans on this.
 
-use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
+use crate::sim::event::SubmitEntry;
 use std::collections::VecDeque;
 
 /// Sharing discipline.
@@ -14,10 +26,37 @@ pub enum SchedulerKind {
     TimeShared,
 }
 
-#[derive(Debug, Clone)]
-struct Running {
-    cloudlet: Cloudlet,
+/// A completed cloudlet with its exact virtual-time stamps, ready to be
+/// recorded into the `CloudletStore`.
+#[derive(Debug, Clone, Copy)]
+pub struct FinishedRec {
+    /// Dense arena id.
+    pub id: u32,
+    /// Owning tenant.
+    pub tenant: u32,
+    /// Submission instant (scheduler clock at `submit_entry`).
+    pub submit: f64,
+    /// Execution start instant.
+    pub start: f64,
+    /// Completion instant.
+    pub finish: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Active {
+    id: u32,
+    tenant: u32,
     remaining_mi: f64,
+    submit: f64,
+    start: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct WaitingEntry {
+    id: u32,
+    tenant: u32,
+    length_mi: u64,
+    submit: f64,
 }
 
 /// Per-VM scheduler state.
@@ -28,14 +67,14 @@ pub struct VmScheduler {
     capacity_mips: f64,
     /// PE count (space-shared concurrency limit: one cloudlet per PE).
     pes: usize,
-    running: Vec<Running>,
-    waiting: VecDeque<Cloudlet>,
+    running: Vec<Active>,
+    waiting: VecDeque<WaitingEntry>,
     last_update: f64,
     /// Version counter guarding stale `VmProcessingUpdate` events.
     pub version: u64,
     /// Cloudlets finished during `submit`-triggered updates, parked until
     /// the datacenter drains them.
-    pending_finished: Vec<Cloudlet>,
+    pending_finished: Vec<FinishedRec>,
 }
 
 impl VmScheduler {
@@ -68,8 +107,8 @@ impl VmScheduler {
     }
 
     /// Advance all running cloudlets to `now`, moving finished ones out.
-    /// Returns finished cloudlets (status set, finish time stamped).
-    pub fn update(&mut self, now: f64) -> Vec<Cloudlet> {
+    /// Returns finished records (finish time stamped), sorted by id.
+    pub fn update(&mut self, now: f64) -> Vec<FinishedRec> {
         let dt = (now - self.last_update).max(0.0);
         self.last_update = now;
         let rate = self.rate();
@@ -82,10 +121,14 @@ impl VmScheduler {
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].remaining_mi <= 1e-6 {
-                let mut r = self.running.swap_remove(i);
-                r.cloudlet.status = CloudletStatus::Success;
-                r.cloudlet.finish_time = now;
-                finished.push(r.cloudlet);
+                let r = self.running.swap_remove(i);
+                finished.push(FinishedRec {
+                    id: r.id,
+                    tenant: r.tenant,
+                    submit: r.submit,
+                    start: r.start,
+                    finish: now,
+                });
             } else {
                 i += 1;
             }
@@ -93,14 +136,15 @@ impl VmScheduler {
         // space-shared: admit queued work onto freed PEs
         if self.kind == SchedulerKind::SpaceShared {
             while self.running.len() < self.pes {
-                let Some(mut c) = self.waiting.pop_front() else {
+                let Some(w) = self.waiting.pop_front() else {
                     break;
                 };
-                c.status = CloudletStatus::InExec;
-                c.start_time = now;
-                self.running.push(Running {
-                    remaining_mi: c.length_mi as f64,
-                    cloudlet: c,
+                self.running.push(Active {
+                    id: w.id,
+                    tenant: w.tenant,
+                    remaining_mi: w.length_mi as f64,
+                    submit: w.submit,
+                    start: now,
                 });
             }
         }
@@ -111,31 +155,36 @@ impl VmScheduler {
 
     /// Submit a cloudlet at time `now`; it starts immediately if capacity
     /// allows (or always, for time-shared).
-    pub fn submit(&mut self, mut cloudlet: Cloudlet, now: f64) {
+    pub fn submit_entry(&mut self, entry: SubmitEntry, now: f64) {
         // bring existing work up to date first so shares are fair
         let done = self.update(now);
         self.pending_finished.extend(done);
-        cloudlet.submit_time = now;
         match self.kind {
             SchedulerKind::TimeShared => {
-                cloudlet.status = CloudletStatus::InExec;
-                cloudlet.start_time = now;
-                self.running.push(Running {
-                    remaining_mi: cloudlet.length_mi as f64,
-                    cloudlet,
+                self.running.push(Active {
+                    id: entry.id,
+                    tenant: entry.tenant,
+                    remaining_mi: entry.length_mi as f64,
+                    submit: now,
+                    start: now,
                 });
             }
             SchedulerKind::SpaceShared => {
                 if self.running.len() < self.pes {
-                    cloudlet.status = CloudletStatus::InExec;
-                    cloudlet.start_time = now;
-                    self.running.push(Running {
-                        remaining_mi: cloudlet.length_mi as f64,
-                        cloudlet,
+                    self.running.push(Active {
+                        id: entry.id,
+                        tenant: entry.tenant,
+                        remaining_mi: entry.length_mi as f64,
+                        submit: now,
+                        start: now,
                     });
                 } else {
-                    cloudlet.status = CloudletStatus::Queued;
-                    self.waiting.push_back(cloudlet);
+                    self.waiting.push_back(WaitingEntry {
+                        id: entry.id,
+                        tenant: entry.tenant,
+                        length_mi: entry.length_mi,
+                        submit: now,
+                    });
                 }
             }
         }
@@ -172,13 +221,9 @@ impl VmScheduler {
     pub fn is_idle(&self) -> bool {
         self.running.is_empty() && self.waiting.is_empty()
     }
-}
 
-// finished cloudlets produced as a side effect of `submit` (an update ran)
-// are parked here until the datacenter collects them.
-impl VmScheduler {
-    /// Drain cloudlets finished during `submit`-triggered updates.
-    pub fn drain_pending_finished(&mut self) -> Vec<Cloudlet> {
+    /// Drain records finished during `submit`-triggered updates.
+    pub fn drain_pending_finished(&mut self) -> Vec<FinishedRec> {
         std::mem::take(&mut self.pending_finished)
     }
 }
@@ -187,16 +232,21 @@ impl VmScheduler {
 mod tests {
     use super::*;
 
-    fn cl(id: usize, mi: u64) -> Cloudlet {
-        Cloudlet::new(id, 0, mi, 1)
+    fn se(id: u32, mi: u64) -> SubmitEntry {
+        SubmitEntry {
+            id,
+            vm: 0,
+            tenant: 0,
+            length_mi: mi,
+        }
     }
 
     #[test]
     fn space_shared_runs_per_pe() {
         // 1 PE, 1000 MIPS: two 1000-MI cloudlets run back-to-back
         let mut s = VmScheduler::new(SchedulerKind::SpaceShared, 1000.0, 1);
-        s.submit(cl(0, 1000), 0.0);
-        s.submit(cl(1, 1000), 0.0);
+        s.submit_entry(se(0, 1000), 0.0);
+        s.submit_entry(se(1, 1000), 0.0);
         assert_eq!(s.next_completion_delay(0.0), Some(1.0));
         let fin = s.update(1.0);
         assert_eq!(fin.len(), 1);
@@ -205,7 +255,7 @@ mod tests {
         let fin = s.update(2.0);
         assert_eq!(fin.len(), 1);
         assert_eq!(fin[0].id, 1);
-        assert!((fin[0].finish_time - 2.0).abs() < 1e-9);
+        assert!((fin[0].finish - 2.0).abs() < 1e-9);
         assert!(s.is_idle());
     }
 
@@ -213,8 +263,8 @@ mod tests {
     fn time_shared_splits_capacity() {
         // 1000 MIPS shared by two 1000-MI cloudlets: both finish at t=2
         let mut s = VmScheduler::new(SchedulerKind::TimeShared, 1000.0, 1);
-        s.submit(cl(0, 1000), 0.0);
-        s.submit(cl(1, 1000), 0.0);
+        s.submit_entry(se(0, 1000), 0.0);
+        s.submit_entry(se(1, 1000), 0.0);
         let d = s.next_completion_delay(0.0).unwrap();
         assert!((d - 2.0).abs() < 1e-9, "shared rate halves progress: {d}");
         let fin = s.update(2.0);
@@ -226,8 +276,8 @@ mod tests {
         // c0 alone for 1s (1000 MI done of 2000), then c1 arrives;
         // both at 500 MIPS: c0 needs 2 more seconds, c1 needs 2.
         let mut s = VmScheduler::new(SchedulerKind::TimeShared, 1000.0, 1);
-        s.submit(cl(0, 2000), 0.0);
-        s.submit(cl(1, 1000), 1.0);
+        s.submit_entry(se(0, 2000), 0.0);
+        s.submit_entry(se(1, 1000), 1.0);
         let d = s.next_completion_delay(1.0).unwrap();
         assert!((d - 2.0).abs() < 1e-9, "{d}");
         let fin = s.update(3.0);
@@ -238,9 +288,9 @@ mod tests {
     fn space_shared_multi_pe_concurrency() {
         // 2 PEs, 2000 total MIPS → 1000 per PE: two cloudlets in parallel
         let mut s = VmScheduler::new(SchedulerKind::SpaceShared, 2000.0, 2);
-        s.submit(cl(0, 1000), 0.0);
-        s.submit(cl(1, 1000), 0.0);
-        s.submit(cl(2, 1000), 0.0); // queued
+        s.submit_entry(se(0, 1000), 0.0);
+        s.submit_entry(se(1, 1000), 0.0);
+        s.submit_entry(se(2, 1000), 0.0); // queued
         assert_eq!(s.load(), 3);
         let fin = s.update(1.0);
         assert_eq!(fin.len(), 2);
@@ -253,7 +303,7 @@ mod tests {
     fn next_completion_time_is_now_plus_delay() {
         let mut s = VmScheduler::new(SchedulerKind::TimeShared, 1000.0, 1);
         assert_eq!(s.next_completion_time(3.0), None, "idle VM never wakes");
-        s.submit(cl(0, 500), 3.0);
+        s.submit_entry(se(0, 500), 3.0);
         let d = s.next_completion_delay(3.0).unwrap();
         let t = s.next_completion_time(3.0).unwrap();
         assert_eq!(t.to_bits(), (3.0 + d).to_bits(), "bit-identical instant");
@@ -264,19 +314,34 @@ mod tests {
     fn version_increments_on_change() {
         let mut s = VmScheduler::new(SchedulerKind::TimeShared, 1000.0, 1);
         let v0 = s.version;
-        s.submit(cl(0, 100), 0.0);
+        s.submit_entry(se(0, 100), 0.0);
         assert!(s.version > v0);
     }
 
     #[test]
     fn start_times_stamped() {
         let mut s = VmScheduler::new(SchedulerKind::SpaceShared, 1000.0, 1);
-        s.submit(cl(0, 1000), 5.0);
-        s.submit(cl(1, 1000), 5.0);
+        s.submit_entry(se(0, 1000), 5.0);
+        s.submit_entry(se(1, 1000), 5.0);
         let fin = s.update(6.0);
-        assert!((fin[0].start_time - 5.0).abs() < 1e-9);
-        assert!((fin[0].submit_time - 5.0).abs() < 1e-9);
+        assert!((fin[0].start - 5.0).abs() < 1e-9);
+        assert!((fin[0].submit - 5.0).abs() < 1e-9);
         let fin = s.update(7.0);
-        assert!((fin[0].start_time - 6.0).abs() < 1e-9, "queued start when PE freed");
+        assert!((fin[0].start - 6.0).abs() < 1e-9, "queued start when PE freed");
+    }
+
+    #[test]
+    fn tenant_rides_through_to_finish() {
+        let mut s = VmScheduler::new(SchedulerKind::SpaceShared, 1000.0, 1);
+        let mut e = se(7, 500);
+        e.tenant = 3;
+        s.submit_entry(e, 0.0);
+        let mut q = se(8, 500);
+        q.tenant = 2;
+        s.submit_entry(q, 0.0); // queued behind the single PE
+        let fin = s.update(0.5);
+        assert_eq!((fin[0].id, fin[0].tenant), (7, 3));
+        let fin = s.update(1.0);
+        assert_eq!((fin[0].id, fin[0].tenant), (8, 2), "tenant survives the wait queue");
     }
 }

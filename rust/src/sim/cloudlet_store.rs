@@ -1,0 +1,502 @@
+//! Struct-of-arrays cloudlet storage: the memory-lean core of the
+//! million-cloudlet multi-tenant scenarios.
+//!
+//! The seed pipeline moved whole boxed [`Cloudlet`] structs broker →
+//! datacenter → broker and retained every finished cloudlet, so peak heap
+//! scaled with *submitted* work. [`CloudletStore`] replaces that ownership
+//! shuffle with one arena keyed by a dense [`CloudletId`]:
+//!
+//! * **Retained mode** keeps parallel `Vec`s (length / tenant / VM binding /
+//!   status / timestamps) and can [`CloudletStore::materialize`] the exact
+//!   `Vec<Cloudlet>` the seed path produced — bit-for-bit, including the
+//!   per-cloudlet submit/start/finish instants.
+//! * **Streaming mode** keeps *nothing* per cloudlet: only fixed-size
+//!   per-tenant digests and per-`(tenant, vm)` accumulators survive, so peak
+//!   heap scales with **active** VMs and in-flight windows, not with the
+//!   number of cloudlets ever submitted.
+//!
+//! Both modes update the same streaming aggregates, which is what lets the
+//! property tests assert retained-vs-streaming equivalence and lets the
+//! `megascale_multitenant` referee compare a combined multi-tenant run
+//! against its single-tenant decomposition bit-for-bit:
+//!
+//! * per-`(tenant, vm)` turnaround sums accumulate in per-VM completion
+//!   order (invariant across tenant interleavings, because one VM only ever
+//!   serves one tenant's cloudlets) and fold in `BTreeMap` key order at
+//!   report time — so the mean is a bit-deterministic f64;
+//! * latency quantiles come from a fixed 256-bucket log₁₀ histogram whose
+//!   u64 bucket counts commute — order-insensitive by construction.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
+use crate::sim::event::SubmitEntry;
+use crate::sim::queue::EventPool;
+
+/// Dense arena index of a registered cloudlet (the broker→datacenter
+/// hand-off currency; display ids resolve only at report time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CloudletId(pub u32);
+
+/// Tenant identity: which broker's workload a cloudlet belongs to.
+pub type TenantId = u32;
+
+/// Sentinel for "not bound to any VM".
+const NO_VM: u32 = u32::MAX;
+
+/// What the store keeps per registered cloudlet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetentionMode {
+    /// Full per-cloudlet SoA arrays; [`CloudletStore::materialize`] works.
+    Retained,
+    /// Streaming digests only — O(tenants + VMs) state, O(1) per cloudlet.
+    Streaming,
+}
+
+/// Modeled bytes per registered cloudlet in [`RetentionMode::Retained`]
+/// (the SoA rows: ids, length, binding, status, three timestamps).
+pub const RETAINED_BYTES_PER_CLOUDLET: u64 = 56;
+
+/// Modeled bytes per *in-flight* cloudlet (scheduler entry + submit-batch
+/// slot) — the term that dominates streaming-mode peak heap.
+pub const ACTIVE_ENTRY_BYTES: u64 = 48;
+
+/// Histogram resolution of the per-tenant turnaround digest.
+pub const DIGEST_BUCKETS: usize = 256;
+const DIGEST_LOG10_LO: f64 = -6.0;
+const DIGEST_LOG10_SPAN: f64 = 12.0;
+
+/// Per-`(tenant, vm)` streaming accumulator.
+#[derive(Debug, Clone, Copy, Default)]
+struct VmAgg {
+    count: u64,
+    sum_turnaround: f64,
+}
+
+/// Per-tenant counters + fixed-size latency digest.
+#[derive(Debug, Clone)]
+struct TenantAgg {
+    registered: u64,
+    completed: u64,
+    failed: u64,
+    buckets: Vec<u64>,
+}
+
+impl TenantAgg {
+    fn new() -> Self {
+        Self {
+            registered: 0,
+            completed: 0,
+            failed: 0,
+            buckets: vec![0; DIGEST_BUCKETS],
+        }
+    }
+}
+
+/// Digest bucket for a turnaround value (clamped log₁₀ scale over
+/// `[1e-6, 1e6)` seconds).
+fn bucket_of(turnaround: f64) -> usize {
+    let l = turnaround.max(1e-9).log10();
+    let idx = ((l - DIGEST_LOG10_LO) * (DIGEST_BUCKETS as f64 / DIGEST_LOG10_SPAN)) as isize;
+    idx.clamp(0, DIGEST_BUCKETS as isize - 1) as usize
+}
+
+/// Lower edge (seconds) of a digest bucket — what quantile queries report.
+fn bucket_edge(idx: usize) -> f64 {
+    10f64.powf(DIGEST_LOG10_LO + idx as f64 * DIGEST_LOG10_SPAN / DIGEST_BUCKETS as f64)
+}
+
+/// Smallest bucket edge at or above the `q`-quantile of the digest.
+fn digest_quantile(buckets: &[u64], count: u64, q: f64) -> f64 {
+    if count == 0 {
+        return 0.0;
+    }
+    let target = ((q * count as f64).ceil()).max(1.0) as u64;
+    let mut seen = 0u64;
+    for (idx, &b) in buckets.iter().enumerate() {
+        seen += b;
+        if seen >= target {
+            return bucket_edge(idx);
+        }
+    }
+    bucket_edge(DIGEST_BUCKETS - 1)
+}
+
+/// Report-time view of one tenant's streaming stats.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    /// Tenant id.
+    pub tenant: TenantId,
+    /// Cloudlets registered for this tenant (submitted workload).
+    pub registered: u64,
+    /// Cloudlets completed successfully.
+    pub completed: u64,
+    /// Cloudlets failed (at bind or at dispatch).
+    pub failed: u64,
+    /// Exact turnaround sum, folded from per-VM accumulators in VM-id
+    /// order (bit-deterministic across tenant interleavings).
+    pub sum_turnaround: f64,
+    /// `sum_turnaround / completed` (0 when nothing completed).
+    pub mean_turnaround: f64,
+    /// Digest median turnaround (bucket lower edge, seconds).
+    pub p50_turnaround: f64,
+    /// Digest 99th-percentile turnaround (bucket lower edge, seconds).
+    pub p99_turnaround: f64,
+}
+
+/// The struct-of-arrays cloudlet arena shared by brokers and datacenters
+/// (single-threaded DES ⇒ `Rc<RefCell<_>>`, see [`SharedStore`]).
+pub struct CloudletStore {
+    mode: RetentionMode,
+    // --- retained SoA rows (empty in Streaming mode) ---
+    ext_id: Vec<u32>,
+    user: Vec<u32>,
+    tenant: Vec<u32>,
+    length_mi: Vec<u64>,
+    pes: Vec<u32>,
+    vm: Vec<u32>,
+    status: Vec<CloudletStatus>,
+    submit: Vec<f64>,
+    start: Vec<f64>,
+    finish: Vec<f64>,
+    // --- always-on streaming aggregates ---
+    vm_aggs: BTreeMap<(u32, u32), VmAgg>,
+    tenants: BTreeMap<u32, TenantAgg>,
+    registered: u64,
+    completed: u64,
+    failed: u64,
+    active_now: u64,
+    peak_active: u64,
+    /// Free-list of submit-batch payload buffers: the broker acquires a
+    /// buffer per datacenter batch, the datacenter drains it and recycles
+    /// it here, so steady-state submission allocates nothing per window.
+    pub pool: EventPool<SubmitEntry>,
+}
+
+/// Shared handle: one store per simulation, shared by its entities.
+pub type SharedStore = Rc<RefCell<CloudletStore>>;
+
+impl CloudletStore {
+    /// Empty store in the given retention mode.
+    pub fn new(mode: RetentionMode) -> Self {
+        Self {
+            mode,
+            ext_id: Vec::new(),
+            user: Vec::new(),
+            tenant: Vec::new(),
+            length_mi: Vec::new(),
+            pes: Vec::new(),
+            vm: Vec::new(),
+            status: Vec::new(),
+            submit: Vec::new(),
+            start: Vec::new(),
+            finish: Vec::new(),
+            vm_aggs: BTreeMap::new(),
+            tenants: BTreeMap::new(),
+            registered: 0,
+            completed: 0,
+            failed: 0,
+            active_now: 0,
+            peak_active: 0,
+            pool: EventPool::new(),
+        }
+    }
+
+    /// Shared empty store.
+    pub fn shared(mode: RetentionMode) -> SharedStore {
+        Rc::new(RefCell::new(Self::new(mode)))
+    }
+
+    /// Retention mode of this store.
+    pub fn mode(&self) -> RetentionMode {
+        self.mode
+    }
+
+    /// Register a bound (or bind-failed) cloudlet, assigning its dense id.
+    /// Captures the cloudlet's current field values; in Streaming mode only
+    /// the counters move.
+    pub fn register(&mut self, c: &Cloudlet, tenant: TenantId) -> CloudletId {
+        assert!(self.registered < u32::MAX as u64, "cloudlet arena full");
+        let id = CloudletId(self.registered as u32);
+        self.registered += 1;
+        self.tenants.entry(tenant).or_insert_with(TenantAgg::new).registered += 1;
+        if self.mode == RetentionMode::Retained {
+            self.ext_id.push(c.id as u32);
+            self.user.push(c.user_id as u32);
+            self.tenant.push(tenant);
+            self.length_mi.push(c.length_mi);
+            self.pes.push(c.pes as u32);
+            self.vm.push(c.vm_id.map(|v| v as u32).unwrap_or(NO_VM));
+            self.status.push(c.status);
+            self.submit.push(c.submit_time);
+            self.start.push(c.start_time);
+            self.finish.push(c.finish_time);
+        }
+        id
+    }
+
+    /// Count `n` cloudlets as dispatched (in flight at a datacenter).
+    pub fn mark_dispatched(&mut self, n: u64) {
+        self.active_now += n;
+        self.peak_active = self.peak_active.max(self.active_now);
+    }
+
+    /// Record a failure. `was_dispatched` distinguishes a datacenter-side
+    /// failure (decrements the in-flight gauge) from a bind-time failure
+    /// (which never entered a datacenter).
+    pub fn record_fail(&mut self, id: CloudletId, tenant: TenantId, was_dispatched: bool) {
+        self.failed += 1;
+        self.tenants.entry(tenant).or_insert_with(TenantAgg::new).failed += 1;
+        if was_dispatched {
+            debug_assert!(self.active_now > 0);
+            self.active_now -= 1;
+        }
+        if self.mode == RetentionMode::Retained {
+            self.status[id.0 as usize] = CloudletStatus::Failed;
+        }
+    }
+
+    /// Record a completion with the scheduler's exact virtual-time stamps.
+    pub fn record_finish(
+        &mut self,
+        id: CloudletId,
+        tenant: TenantId,
+        vm: u32,
+        submit: f64,
+        start: f64,
+        finish: f64,
+    ) {
+        self.completed += 1;
+        debug_assert!(self.active_now > 0);
+        self.active_now -= 1;
+        let turnaround = finish - submit;
+        let agg = self.vm_aggs.entry((tenant, vm)).or_default();
+        agg.count += 1;
+        agg.sum_turnaround += turnaround;
+        let t = self.tenants.entry(tenant).or_insert_with(TenantAgg::new);
+        t.completed += 1;
+        t.buckets[bucket_of(turnaround)] += 1;
+        if self.mode == RetentionMode::Retained {
+            let i = id.0 as usize;
+            self.status[i] = CloudletStatus::Success;
+            self.vm[i] = vm;
+            self.submit[i] = submit;
+            self.start[i] = start;
+            self.finish[i] = finish;
+        }
+    }
+
+    /// Cloudlets registered so far.
+    pub fn registered(&self) -> u64 {
+        self.registered
+    }
+    /// Cloudlets completed successfully.
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+    /// Cloudlets failed.
+    pub fn failed(&self) -> u64 {
+        self.failed
+    }
+    /// Cloudlets currently in flight.
+    pub fn active_now(&self) -> u64 {
+        self.active_now
+    }
+    /// High-water mark of in-flight cloudlets.
+    pub fn peak_active(&self) -> u64 {
+        self.peak_active
+    }
+
+    /// Modeled peak heap of the cloudlet pipeline: retained rows (zero in
+    /// Streaming mode) + in-flight entries at their high-water mark + the
+    /// fixed digest/accumulator state. This is the quantity the
+    /// `megascale_multitenant` CI gate holds to a per-submitted-cloudlet
+    /// byte budget.
+    pub fn peak_heap_bytes(&self) -> u64 {
+        let per_row = match self.mode {
+            RetentionMode::Retained => RETAINED_BYTES_PER_CLOUDLET,
+            RetentionMode::Streaming => 0,
+        };
+        self.registered * per_row
+            + self.peak_active * ACTIVE_ENTRY_BYTES
+            + self.tenants.len() as u64 * (DIGEST_BUCKETS as u64 * 8 + 64)
+            + self.vm_aggs.len() as u64 * 32
+    }
+
+    /// Rebuild the seed-shaped `Vec<Cloudlet>` (terminal cloudlets only,
+    /// sorted by display id). Retained mode only.
+    pub fn materialize(&self) -> Vec<Cloudlet> {
+        assert_eq!(
+            self.mode,
+            RetentionMode::Retained,
+            "materialize needs RetentionMode::Retained"
+        );
+        let mut out: Vec<Cloudlet> = (0..self.registered as usize)
+            .filter(|&i| {
+                matches!(self.status[i], CloudletStatus::Success | CloudletStatus::Failed)
+            })
+            .map(|i| Cloudlet {
+                id: self.ext_id[i] as usize,
+                user_id: self.user[i] as usize,
+                length_mi: self.length_mi[i],
+                pes: self.pes[i] as usize,
+                status: self.status[i],
+                vm_id: match self.vm[i] {
+                    NO_VM => None,
+                    v => Some(v as usize),
+                },
+                submit_time: self.submit[i],
+                start_time: self.start[i],
+                finish_time: self.finish[i],
+            })
+            .collect();
+        out.sort_by_key(|c| c.id);
+        out
+    }
+
+    /// Per-tenant streaming reports, in tenant-id order.
+    pub fn tenant_reports(&self) -> Vec<TenantReport> {
+        self.tenants
+            .iter()
+            .map(|(&tenant, agg)| {
+                let mut sum = 0.0;
+                let mut count = 0u64;
+                for (_, va) in self.vm_aggs.range((tenant, 0)..=(tenant, u32::MAX)) {
+                    sum += va.sum_turnaround;
+                    count += va.count;
+                }
+                debug_assert_eq!(count, agg.completed);
+                TenantReport {
+                    tenant,
+                    registered: agg.registered,
+                    completed: agg.completed,
+                    failed: agg.failed,
+                    sum_turnaround: sum,
+                    mean_turnaround: if count > 0 { sum / count as f64 } else { 0.0 },
+                    p50_turnaround: digest_quantile(&agg.buckets, agg.completed, 0.50),
+                    p99_turnaround: digest_quantile(&agg.buckets, agg.completed, 0.99),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_cloudlet(id: usize, vm: Option<usize>, status: CloudletStatus) -> Cloudlet {
+        let mut c = Cloudlet::new(id, id % 3, 1000 + id as u64, 1);
+        c.vm_id = vm;
+        c.status = status;
+        c
+    }
+
+    #[test]
+    fn retained_materialize_round_trips_exactly() {
+        let mut s = CloudletStore::new(RetentionMode::Retained);
+        let a = s.register(&sample_cloudlet(1, Some(7), CloudletStatus::Queued), 0);
+        let b = s.register(&sample_cloudlet(0, None, CloudletStatus::Failed), 0);
+        s.record_fail(b, 0, false);
+        s.mark_dispatched(1);
+        s.record_finish(a, 0, 7, 0.25, 0.25, 2.75);
+        let out = s.materialize();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].id, 0, "sorted by display id");
+        assert_eq!(out[0].status, CloudletStatus::Failed);
+        assert_eq!(out[1].id, 1);
+        assert_eq!(out[1].status, CloudletStatus::Success);
+        assert_eq!(out[1].vm_id, Some(7));
+        assert_eq!(out[1].submit_time.to_bits(), 0.25f64.to_bits());
+        assert_eq!(out[1].finish_time.to_bits(), 2.75f64.to_bits());
+        assert_eq!(out[1].length_mi, 1001);
+    }
+
+    #[test]
+    fn non_terminal_cloudlets_stay_out_of_materialize() {
+        let mut s = CloudletStore::new(RetentionMode::Retained);
+        s.register(&sample_cloudlet(0, Some(1), CloudletStatus::Queued), 0);
+        assert!(s.materialize().is_empty(), "in-flight at sim end is not a result");
+    }
+
+    #[test]
+    fn streaming_matches_retained_aggregates_bit_for_bit() {
+        let mut r = CloudletStore::new(RetentionMode::Retained);
+        let mut s = CloudletStore::new(RetentionMode::Streaming);
+        for store in [&mut r, &mut s] {
+            for i in 0..100usize {
+                let tenant = (i % 4) as u32;
+                let c = sample_cloudlet(i, Some(i % 8), CloudletStatus::Queued);
+                let id = store.register(&c, tenant);
+                store.mark_dispatched(1);
+                let submit = i as f64 * 0.125;
+                let finish = submit + 1.5 + (i % 7) as f64 * 0.25;
+                store.record_finish(id, tenant, (i % 8) as u32, submit, submit, finish);
+            }
+        }
+        let (ra, sa) = (r.tenant_reports(), s.tenant_reports());
+        assert_eq!(ra.len(), sa.len());
+        for (x, y) in ra.iter().zip(&sa) {
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.sum_turnaround.to_bits(), y.sum_turnaround.to_bits());
+            assert_eq!(x.mean_turnaround.to_bits(), y.mean_turnaround.to_bits());
+            assert_eq!(x.p50_turnaround.to_bits(), y.p50_turnaround.to_bits());
+            assert_eq!(x.p99_turnaround.to_bits(), y.p99_turnaround.to_bits());
+        }
+        assert_eq!(s.peak_active(), r.peak_active());
+        assert!(
+            s.peak_heap_bytes() < r.peak_heap_bytes(),
+            "streaming drops the per-cloudlet rows"
+        );
+    }
+
+    #[test]
+    fn digest_quantiles_land_within_bucket_tolerance() {
+        let mut s = CloudletStore::new(RetentionMode::Streaming);
+        let mut exact: Vec<f64> = Vec::new();
+        for i in 0..1000usize {
+            let c = sample_cloudlet(i, Some(0), CloudletStatus::Queued);
+            let id = s.register(&c, 0);
+            s.mark_dispatched(1);
+            let turnaround = 0.01 + (i as f64) * 0.01; // 0.01 .. 10.0
+            exact.push(turnaround);
+            s.record_finish(id, 0, 0, 0.0, 0.0, turnaround);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rep = &s.tenant_reports()[0];
+        let tol = DIGEST_LOG10_SPAN / DIGEST_BUCKETS as f64; // one bucket in log10
+        for (q, got) in [(0.50, rep.p50_turnaround), (0.99, rep.p99_turnaround)] {
+            let want = exact[((q * 1000.0).ceil() as usize - 1).min(999)];
+            let dl = (got.log10() - want.log10()).abs();
+            assert!(dl <= tol + 1e-12, "q={q}: got {got}, want {want}, dlog {dl}");
+        }
+    }
+
+    #[test]
+    fn peak_active_tracks_high_water_mark() {
+        let mut s = CloudletStore::new(RetentionMode::Streaming);
+        let mut ids = Vec::new();
+        for i in 0..10usize {
+            ids.push(s.register(&sample_cloudlet(i, Some(0), CloudletStatus::Queued), 0));
+        }
+        s.mark_dispatched(10);
+        for (i, id) in ids.iter().enumerate().take(6) {
+            s.record_finish(*id, 0, 0, 0.0, 0.0, 1.0 + i as f64);
+        }
+        s.mark_dispatched(2);
+        assert_eq!(s.active_now(), 6);
+        assert_eq!(s.peak_active(), 10, "peak is the high-water mark, not current");
+    }
+
+    #[test]
+    fn bucket_edges_monotone_and_clamped() {
+        assert!(bucket_edge(0) < bucket_edge(1));
+        assert_eq!(bucket_of(0.0), 0, "zero turnaround clamps to the low edge");
+        assert_eq!(bucket_of(1e12), DIGEST_BUCKETS - 1, "huge values clamp high");
+        let b = bucket_of(1.0);
+        assert!(bucket_edge(b) <= 1.0 && 1.0 < bucket_edge(b + 1));
+    }
+}

@@ -1,27 +1,28 @@
 //! Datacenter: "the resource provider which simulates
 //! infrastructure-as-a-service" (§2.1.1). Handles VM creation requests via
 //! its allocation policy and drives cloudlet execution via per-VM
-//! schedulers, returning finished cloudlets to their broker.
+//! schedulers, recording finished cloudlets into the shared
+//! [`CloudletStore`] and notifying brokers with completion *counts* — no
+//! cloudlet struct ever travels back through the event queue.
 //!
 //! Two engine modes drive cloudlet progress ([`EngineMode`]):
 //!
 //! * **Polling** (the seed behaviour): every submit re-schedules a
 //!   version-guarded `VmProcessingUpdate`; stale timers are dispatched and
-//!   discarded, and every finished cloudlet returns in its own event.
-//! * **Next-completion** (the [`Datacenter::new`] default; the calibrated
-//!   distribution pipeline opts into polling via `SimConfig`): exactly
-//!   one wake-up is armed per VM at
+//!   discarded, and every finished cloudlet is notified in its own event.
+//! * **Next-completion** (the default everywhere since the §3.3 cost model
+//!   moved to per-completion units): exactly one wake-up is armed per VM at
 //!   [`VmScheduler::next_completion_time`], re-armed via queue
 //!   *cancellation* on every submit/finish, so no stale timer is ever
-//!   dispatched; finished cloudlets return in batches. Virtual-time
+//!   dispatched; completions are notified in batches. Virtual-time
 //!   results are bit-identical to polling — the scheduler advances through
 //!   the same `(submit, completion)` instants either way — but total event
 //!   volume drops from O(cloudlets × updates) toward O(VMs + completions).
 
 use std::collections::{HashMap, HashSet};
 
-use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
-use crate::sim::cloudlet_scheduler::{SchedulerKind, VmScheduler};
+use crate::sim::cloudlet_scheduler::{FinishedRec, SchedulerKind, VmScheduler};
+use crate::sim::cloudlet_store::{CloudletId, CloudletStore, RetentionMode, SharedStore};
 use crate::sim::des::{EngineMode, SimCtx};
 use crate::sim::event::{EntityId, EventData, EventTag, SimEvent};
 use crate::sim::host::Host;
@@ -42,17 +43,21 @@ pub struct Datacenter {
     schedulers: HashMap<usize, VmScheduler>,
     /// VMs placed here.
     pub vms: HashMap<usize, Vm>,
-    /// Broker entity that owns each VM (for cloudlet returns).
+    /// Broker entity that owns each VM (for completion notices).
     vm_owner: HashMap<usize, EntityId>,
     /// The armed wake-up per VM (next-completion mode only).
     pending_wakeup: HashMap<usize, EventHandle>,
+    /// Shared cloudlet arena (all results land here).
+    store: SharedStore,
     /// Per-event processing cost accounting (fed to the §3.3 model).
     pub events_handled: u64,
 }
 
 impl Datacenter {
     /// Build a datacenter with `hosts`, the default allocation policy and
-    /// the default next-completion engine.
+    /// the default next-completion engine. The private store created here
+    /// is normally replaced via [`Datacenter::with_store`] so all entities
+    /// of one simulation share an arena.
     pub fn new(dc_id: usize, hosts: Vec<Host>, scheduler_kind: SchedulerKind) -> Self {
         Self {
             dc_id,
@@ -64,6 +69,7 @@ impl Datacenter {
             vms: HashMap::new(),
             vm_owner: HashMap::new(),
             pending_wakeup: HashMap::new(),
+            store: CloudletStore::shared(RetentionMode::Retained),
             events_handled: 0,
         }
     }
@@ -77,6 +83,12 @@ impl Datacenter {
     /// Select the engine mode (polling reproduces the seed event volume).
     pub fn with_engine(mut self, engine: EngineMode) -> Self {
         self.engine = engine;
+        self
+    }
+
+    /// Share the simulation-wide cloudlet arena with this datacenter.
+    pub fn with_store(mut self, store: SharedStore) -> Self {
+        self.store = store;
         self
     }
 
@@ -109,36 +121,35 @@ impl Datacenter {
 
     fn handle_cloudlet_submit(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
         let owner = ev.src;
-        let cloudlets: Vec<Cloudlet> = match ev.data {
-            EventData::Cloudlet(c) => vec![*c],
-            EventData::Cloudlets(cs) => cs,
+        let entries = match ev.data {
+            EventData::SubmitBatch(es) => es,
             _ => return,
         };
-        let mut failed: Vec<Cloudlet> = Vec::new();
+        let mut failed: u32 = 0;
         // VM ids that received work, in first-touch order (deterministic);
         // membership via the set so a megascale batch stays O(cloudlets)
         let mut touched: Vec<usize> = Vec::new();
         let mut touched_set: HashSet<usize> = HashSet::new();
-        for mut c in cloudlets {
-            let Some(vm_id) = c.vm_id else {
-                // unbound cloudlet: fail it straight back
-                c.status = CloudletStatus::Failed;
-                failed.push(c);
-                continue;
-            };
+        for e in &entries {
+            let vm_id = e.vm as usize;
             self.vm_owner.entry(vm_id).or_insert(owner);
             let Some(sched) = self.schedulers.get_mut(&vm_id) else {
-                c.status = CloudletStatus::Failed;
-                failed.push(c);
+                // VM never created here: fail the cloudlet straight back
+                self.store
+                    .borrow_mut()
+                    .record_fail(CloudletId(e.id), e.tenant, true);
+                failed += 1;
                 continue;
             };
-            sched.submit(c, ctx.clock());
+            sched.submit_entry(*e, ctx.clock());
             if touched_set.insert(vm_id) {
                 touched.push(vm_id);
             }
         }
-        if !failed.is_empty() {
-            self.send_returns(self_id, owner, failed, ctx);
+        // the batch buffer is drained: recycle it for the next window
+        self.store.borrow_mut().pool.recycle(entries);
+        if failed > 0 {
+            self.send_done(self_id, owner, failed, ctx);
         }
         for vm_id in touched {
             // a submit may have completed earlier work
@@ -149,7 +160,7 @@ impl Datacenter {
                 .drain_pending_finished();
             if !done.is_empty() {
                 let to = self.vm_owner[&vm_id];
-                self.send_returns(self_id, to, done, ctx);
+                self.record_and_notify(self_id, to, vm_id, done, ctx);
             }
             self.reschedule_update(self_id, vm_id, ctx);
         }
@@ -173,41 +184,62 @@ impl Datacenter {
         let owner = self.vm_owner.get(&vm_id).copied();
         if let Some(to) = owner {
             if !finished.is_empty() {
-                self.send_returns(self_id, to, finished, ctx);
+                self.record_and_notify(self_id, to, vm_id, finished, ctx);
             }
         }
         self.reschedule_update(self_id, vm_id, ctx);
     }
 
-    /// Return finished/failed cloudlets to their broker: one event per
-    /// cloudlet under polling (the seed event volume), one batch under
-    /// next-completion.
-    fn send_returns(
+    /// Record finished cloudlets into the arena, then notify the broker.
+    fn record_and_notify(
         &self,
         self_id: EntityId,
         to: EntityId,
-        mut done: Vec<Cloudlet>,
+        vm_id: usize,
+        done: Vec<FinishedRec>,
         ctx: &mut SimCtx,
     ) {
+        let n = done.len() as u32;
+        {
+            let mut store = self.store.borrow_mut();
+            for r in &done {
+                store.record_finish(
+                    CloudletId(r.id),
+                    r.tenant,
+                    vm_id as u32,
+                    r.submit,
+                    r.start,
+                    r.finish,
+                );
+            }
+        }
+        self.send_done(self_id, to, n, ctx);
+    }
+
+    /// Notify a broker that `n` cloudlets reached a terminal state: one
+    /// event per cloudlet under polling (the seed event volume), one
+    /// counted batch under next-completion.
+    fn send_done(&self, self_id: EntityId, to: EntityId, n: u32, ctx: &mut SimCtx) {
         match self.engine {
             EngineMode::Polling => {
-                for c in done {
+                for _ in 0..n {
                     ctx.schedule(
                         0.0,
                         self_id,
                         to,
                         EventTag::CloudletReturn,
-                        EventData::Cloudlet(Box::new(c)),
+                        EventData::CloudletsDone(1),
                     );
                 }
             }
             EngineMode::NextCompletion => {
-                let data = if done.len() == 1 {
-                    EventData::Cloudlet(Box::new(done.pop().expect("one cloudlet")))
-                } else {
-                    EventData::Cloudlets(done)
-                };
-                ctx.schedule(0.0, self_id, to, EventTag::CloudletReturn, data);
+                ctx.schedule(
+                    0.0,
+                    self_id,
+                    to,
+                    EventTag::CloudletReturn,
+                    EventData::CloudletsDone(n),
+                );
             }
         }
     }
@@ -267,13 +299,18 @@ mod tests {
     // unit tests here cover the allocation/ack path in isolation, under
     // both engine modes.
     use super::*;
-    use crate::sim::cloudlet::Cloudlet;
+    use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
     use crate::sim::des::{Entity, Simulation};
+    use crate::sim::event::SubmitEntry;
 
     /// Minimal harness entity wrapping a Datacenter + a probe broker.
     enum Ent {
         Dc(Datacenter),
-        Probe { acks: Vec<bool>, returns: usize },
+        Probe {
+            store: SharedStore,
+            acks: Vec<bool>,
+            returns: usize,
+        },
     }
 
     impl Entity for Ent {
@@ -289,7 +326,7 @@ mod tests {
         fn process(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
             match self {
                 Ent::Dc(dc) => dc.process(self_id, ev, ctx),
-                Ent::Probe { acks, returns } => match ev.tag {
+                Ent::Probe { store, acks, returns } => match ev.tag {
                     EventTag::VmCreateAck => {
                         let EventData::VmAck(vm, ok) = ev.data else {
                             return;
@@ -299,21 +336,31 @@ mod tests {
                             // run one cloudlet on the created VM
                             let mut c = Cloudlet::new(0, 0, 2000, 1);
                             c.vm_id = Some(vm.id);
+                            c.status = CloudletStatus::Queued;
+                            let mut s = store.borrow_mut();
+                            let id = s.register(&c, 0);
+                            s.mark_dispatched(1);
+                            let mut batch = s.pool.acquire();
+                            batch.push(SubmitEntry {
+                                id: id.0,
+                                vm: vm.id as u32,
+                                tenant: 0,
+                                length_mi: c.length_mi,
+                            });
+                            drop(s);
                             ctx.schedule(
                                 0.0,
                                 self_id,
                                 0,
                                 EventTag::CloudletSubmit,
-                                EventData::Cloudlet(Box::new(c)),
+                                EventData::SubmitBatch(batch),
                             );
                         }
                     }
                     EventTag::CloudletReturn => {
-                        *returns += match &ev.data {
-                            EventData::Cloudlet(_) => 1,
-                            EventData::Cloudlets(cs) => cs.len(),
-                            _ => 0,
-                        };
+                        if let EventData::CloudletsDone(n) = ev.data {
+                            *returns += n as usize;
+                        }
                     }
                     _ => {}
                 },
@@ -322,19 +369,24 @@ mod tests {
     }
 
     fn run_probe(engine: EngineMode) -> (Vec<bool>, usize, f64, u64) {
+        let store = CloudletStore::shared(RetentionMode::Retained);
         let mut sim = Simulation::new();
         let dc = Datacenter::new(0, vec![Host::new(0, 4, 2000, 8192)], SchedulerKind::TimeShared)
-            .with_engine(engine);
+            .with_engine(engine)
+            .with_store(store.clone());
         sim.add_entity(Ent::Dc(dc));
         let probe = sim.add_entity(Ent::Probe {
+            store: store.clone(),
             acks: Vec::new(),
             returns: 0,
         });
         let stats = sim.run(10_000);
-        let Ent::Probe { acks, returns } = sim.entity(probe) else {
+        let Ent::Probe { acks, returns, .. } = sim.entity(probe) else {
             unreachable!()
         };
-        (acks.clone(), *returns, stats.clock, stats.events_processed)
+        let (acks, returns) = (acks.clone(), *returns);
+        assert_eq!(store.borrow().completed(), returns as u64);
+        (acks, returns, stats.clock, stats.events_processed)
     }
 
     #[test]
@@ -354,5 +406,57 @@ mod tests {
         assert_eq!(ret_p, ret_n);
         assert_eq!(clock_p.to_bits(), clock_n.to_bits(), "bit-exact virtual time");
         assert!(events_n <= events_p, "{events_n} vs {events_p}");
+    }
+
+    #[test]
+    fn missing_vm_fails_cloudlet_into_store() {
+        let store = CloudletStore::shared(RetentionMode::Retained);
+        let mut s = store.borrow_mut();
+        let mut c = Cloudlet::new(7, 0, 100, 1);
+        c.vm_id = Some(42);
+        let id = s.register(&c, 3);
+        s.mark_dispatched(1);
+        let mut batch = s.pool.acquire();
+        batch.push(SubmitEntry { id: id.0, vm: 42, tenant: 3, length_mi: 100 });
+        drop(s);
+
+        // entity 0 fires the batch at entity 1 (a host-less datacenter)
+        enum E2 {
+            Drive(Option<Vec<SubmitEntry>>),
+            Dc(Box<Datacenter>),
+        }
+        impl Entity for E2 {
+            fn start(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
+                if let E2::Drive(b) = self {
+                    ctx.schedule(
+                        0.0,
+                        self_id,
+                        1,
+                        EventTag::CloudletSubmit,
+                        EventData::SubmitBatch(b.take().expect("batch")),
+                    );
+                }
+            }
+            fn process(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
+                if let E2::Dc(dc) = self {
+                    dc.process(self_id, ev, ctx)
+                }
+            }
+        }
+        let mut sim = Simulation::new();
+        sim.add_entity(E2::Drive(Some(batch)));
+        sim.add_entity(E2::Dc(Box::new(
+            Datacenter::new(1, Vec::new(), SchedulerKind::TimeShared).with_store(store.clone()),
+        )));
+        sim.run(100);
+        let s = store.borrow();
+        assert_eq!(s.failed(), 1, "missing VM fails the cloudlet");
+        assert_eq!(s.active_now(), 0, "in-flight gauge returns to zero");
+        let t3 = s
+            .tenant_reports()
+            .into_iter()
+            .find(|t| t.tenant == 3)
+            .expect("tenant 3 report");
+        assert_eq!(t3.failed, 1);
     }
 }

@@ -28,10 +28,11 @@ pub enum EngineMode {
     /// Exactly one armed wake-up per VM at its earliest completion,
     /// re-armed (via queue cancellation) on submit/finish; submissions and
     /// returns travel in batches. Event volume is O(VMs + completions)
-    /// with identical virtual-time results. This is the sim-core default
-    /// ([`crate::sim::datacenter::Datacenter::new`]); the calibrated
-    /// distribution pipeline keeps [`EngineMode::Polling`] because its
-    /// §3.3 per-event cost constant is anchored to the seed volume.
+    /// with identical virtual-time results. This is the default everywhere
+    /// — sim core and config alike — now that the §3.3 cost model charges
+    /// per *completion* (`dist::cost::des_core_cost`), making the
+    /// accounting independent of dispatched event volume. `Polling` stays
+    /// available as the CloudSim-faithful referee mode.
     NextCompletion,
 }
 

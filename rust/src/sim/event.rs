@@ -1,14 +1,30 @@
 //! Simulation events: the scheduling operations of CloudSim's Fig 2.1.
 //!
 //! [`SimEvent`] is the unit the hot loop moves through the event queue, so
-//! its payload is kept small: the bulky entity payloads (`Vm`, `Cloudlet`)
-//! are boxed, and the hot-path wake-up token (`VmProcessingUpdate` under
+//! its payload is kept small: the bulky entity payloads (`Vm`) are boxed,
+//! and the hot-path wake-up token (`VmProcessingUpdate` under
 //! next-completion scheduling) is a plain `(vm_id, version)` pair — no
-//! allocation per event. Batched submissions/returns amortize one `Vec`
-//! across a whole group of cloudlets.
+//! allocation per event. Cloudlets never ride in events at all: submission
+//! carries compact [`SubmitEntry`] records (24 bytes, `Copy`) in a pooled
+//! `Vec`, and returns carry only a completion *count* — the per-cloudlet
+//! state lives in the shared `CloudletStore` arena.
 
-use crate::sim::cloudlet::Cloudlet;
 use crate::sim::vm::Vm;
+
+/// Compact broker→datacenter submission record: everything the scheduler
+/// needs to run one cloudlet, keyed by its dense `CloudletId`. Display
+/// ids, PEs and timestamps live in the `CloudletStore`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitEntry {
+    /// Dense arena id (`CloudletId.0`).
+    pub id: u32,
+    /// Target VM id (already bound by the broker's binder).
+    pub vm: u32,
+    /// Owning tenant.
+    pub tenant: u32,
+    /// Cloudlet length in million instructions.
+    pub length_mi: u64,
+}
 
 /// Entity address inside one simulation.
 pub type EntityId = usize;
@@ -44,10 +60,13 @@ pub enum EventData {
     Vm(Box<Vm>),
     /// VM creation acknowledgement `(vm, success)`.
     VmAck(Box<Vm>, bool),
-    /// Single cloudlet submission / return.
-    Cloudlet(Box<Cloudlet>),
-    /// Batched cloudlet submission / return (next-completion engine).
-    Cloudlets(Vec<Cloudlet>),
+    /// Batched cloudlet submission: compact entries in a pooled buffer
+    /// (one entry per event under the polling engine's unbatched mode, one
+    /// buffer per datacenter under batched submission).
+    SubmitBatch(Vec<SubmitEntry>),
+    /// Datacenter→broker completion notice: `n` cloudlets finished (or
+    /// failed dispatch). Results live in the shared `CloudletStore`.
+    CloudletsDone(u32),
     /// Scheduler update token `(vm_id, version)` — allocation-free, the
     /// hot tag of the DES inner loop.
     UpdateToken(usize, u64),
@@ -122,5 +141,7 @@ mod tests {
         // keeps the hot loop's copies bounded regardless of entity size
         assert!(std::mem::size_of::<EventData>() <= 40);
         assert!(std::mem::size_of::<SimEvent>() <= 96);
+        // the submission record is the megascale per-cloudlet wire cost
+        assert!(std::mem::size_of::<SubmitEntry>() <= 24);
     }
 }

@@ -10,18 +10,23 @@
 //!   hosts, cloudlets (applications) running on VMs.
 //! * [`vm_allocation`] — `VmAllocationPolicySimple` (most free PEs first).
 //! * [`cloudlet_scheduler`] — space-shared and time-shared cloudlet
-//!   schedulers.
+//!   schedulers (id-based; per-cloudlet state lives in the store).
+//! * [`cloudlet_store`] — the struct-of-arrays cloudlet arena: dense
+//!   `CloudletId`s, retained-vs-streaming retention, per-tenant digests,
+//!   pooled submit buffers. The memory backbone of megascale runs.
 //! * [`datacenter`] — the IaaS resource provider entity.
 //! * [`broker`] — `DatacenterBroker`: VM creation and round-robin
-//!   application scheduling; the extension point the paper's distributed
+//!   application scheduling; tenant-aware, with optional streaming
+//!   cloudlet sources; the extension point the paper's distributed
 //!   brokers subclass.
-//! * [`scenario`] — glue: build + run a whole scenario, producing the
-//!   scheduling decisions and accounting data the distribution layer
-//!   consumes.
+//! * [`scenario`] — glue: build + run a whole scenario (single- or
+//!   multi-tenant), producing the scheduling decisions and accounting
+//!   data the distribution layer consumes.
 
 pub mod broker;
 pub mod cloudlet;
 pub mod cloudlet_scheduler;
+pub mod cloudlet_store;
 pub mod datacenter;
 pub mod des;
 pub mod event;
@@ -33,7 +38,8 @@ pub mod vm;
 pub mod vm_allocation;
 
 pub use cloudlet::{Cloudlet, CloudletStatus};
+pub use cloudlet_store::{CloudletId, CloudletStore, RetentionMode, SharedStore, TenantId, TenantReport};
 pub use host::Host;
 pub use pe::{Pe, PeStatus};
-pub use scenario::{run_scenario, ScenarioResult};
+pub use scenario::{run_scenario, MultiTenantResult, ScenarioResult};
 pub use vm::Vm;

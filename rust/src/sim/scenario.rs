@@ -1,10 +1,23 @@
-//! Scenario builder + runner: wires datacenters, hosts, a broker and the
+//! Scenario builder + runner: wires datacenters, hosts, brokers and the
 //! entity dispatcher together, producing the scheduling outcome and the
 //! cost-accounting data the distribution layer consumes.
+//!
+//! All cloudlet state flows through one shared [`CloudletStore`] arena per
+//! simulation; the single-tenant entry points materialize the seed-shaped
+//! `Vec<Cloudlet>` from it, while [`run_multitenant_scenario`] runs several
+//! tenant brokers concurrently against shared datacenters with *streaming*
+//! retention — per-tenant digests instead of per-cloudlet rows, so a
+//! million-cloudlet run's heap scales with active VMs and in-flight
+//! windows. [`run_single_tenant_slice`] re-runs exactly one tenant's slice
+//! of the same workload in isolation; because tenants own disjoint VM
+//! subsets and every per-VM float sequence depends only on that VM's own
+//! submit/completion instants, the solo run's per-tenant stats are
+//! bit-identical to the combined run's — the multi-tenant referee.
 
 use crate::config::{CloudletDistribution, SimConfig};
-use crate::sim::broker::{Broker, CloudletBinder, RoundRobinBinder};
+use crate::sim::broker::{Broker, CloudletBinder, CloudletSource, RoundRobinBinder};
 use crate::sim::cloudlet::Cloudlet;
+use crate::sim::cloudlet_store::{CloudletStore, RetentionMode, TenantId, TenantReport};
 use crate::sim::datacenter::Datacenter;
 use crate::sim::des::{EngineMode, Entity, SimCtx, Simulation};
 use crate::sim::event::{EntityId, SimEvent};
@@ -48,6 +61,11 @@ pub struct ScenarioResult {
     pub events_processed: u64,
     /// Binding search steps (parallelizable scheduling workload).
     pub bind_steps: u64,
+    /// High-water mark of in-flight cloudlets.
+    pub peak_active: u64,
+    /// Modeled peak heap of the cloudlet pipeline (see
+    /// [`CloudletStore::peak_heap_bytes`]).
+    pub peak_heap_bytes: u64,
 }
 
 impl ScenarioResult {
@@ -149,17 +167,34 @@ pub fn run_scenario_custom(
     cloudlet_variable: bool,
     binder: Box<dyn CloudletBinder>,
 ) -> ScenarioResult {
+    run_scenario_custom_batch(cfg, vm_variable, cloudlet_variable, binder, None)
+}
+
+/// Like [`run_scenario_custom`] with an explicit submission-batching
+/// override (`None` follows the engine mode) — the store property tests
+/// sweep engine × queue × batching with this.
+pub fn run_scenario_custom_batch(
+    cfg: &SimConfig,
+    vm_variable: bool,
+    cloudlet_variable: bool,
+    binder: Box<dyn CloudletBinder>,
+    batch_submit: Option<bool>,
+) -> ScenarioResult {
+    let store = CloudletStore::shared(RetentionMode::Retained);
     let mut sim: Simulation<CloudEntity> = Simulation::with_queue(make_queue(cfg.event_queue));
     let mut dc_ids = Vec::new();
     for d in 0..cfg.no_of_datacenters {
-        let dc = Datacenter::new(d, make_hosts(cfg), cfg.scheduler).with_engine(cfg.des_engine);
+        let dc = Datacenter::new(d, make_hosts(cfg), cfg.scheduler)
+            .with_engine(cfg.des_engine)
+            .with_store(store.clone());
         dc_ids.push(sim.add_entity(CloudEntity::Dc(dc)));
     }
     let vms = make_vms(cfg, vm_variable);
     let cloudlets = make_cloudlets(cfg, cloudlet_variable);
     let n_cloudlets = cloudlets.len();
-    let broker = Broker::new(0, dc_ids.clone(), vms, cloudlets, binder)
-        .with_batch_submit(cfg.des_engine == EngineMode::NextCompletion);
+    let batch = batch_submit.unwrap_or(cfg.des_engine == EngineMode::NextCompletion);
+    let broker = Broker::single_tenant(0, dc_ids.clone(), vms, cloudlets, binder, store.clone())
+        .with_batch_submit(batch);
     let broker_id = sim.add_entity(CloudEntity::Broker(broker));
 
     let stats = sim.run(50_000_000);
@@ -167,10 +202,10 @@ pub fn run_scenario_custom(
     let CloudEntity::Broker(b) = sim.entity(broker_id) else {
         unreachable!()
     };
-    let mut cloudlets = b.finished.clone();
-    cloudlets.sort_by_key(|c| c.id);
     let mut vms = b.created_vms.clone();
     vms.sort_by_key(|v| v.id);
+    let s = store.borrow();
+    let cloudlets = s.materialize();
     debug_assert!(
         cloudlets.len() == n_cloudlets,
         "all cloudlets must terminate: {}/{}",
@@ -183,12 +218,215 @@ pub fn run_scenario_custom(
         sim_clock: stats.clock,
         events_processed: stats.events_processed,
         bind_steps: b.bind_steps,
+        peak_active: s.peak_active(),
+        peak_heap_bytes: s.peak_heap_bytes(),
     }
 }
 
 /// Run the default round-robin scheduling scenario (§5.1.1).
 pub fn run_scenario(cfg: &SimConfig) -> ScenarioResult {
     run_scenario_with_binder(cfg, false, Box::<RoundRobinBinder>::default())
+}
+
+// --- multi-tenant megascale ---------------------------------------------
+
+/// Outcome of a multi-tenant run: per-tenant streaming reports plus the
+/// global counters. No per-cloudlet data — that is the point.
+#[derive(Debug, Clone)]
+pub struct MultiTenantResult {
+    /// Per-tenant streaming stats, in tenant-id order.
+    pub tenants: Vec<TenantReport>,
+    /// Final simulated clock.
+    pub sim_clock: f64,
+    /// Total DES events dispatched.
+    pub events_processed: u64,
+    /// Cloudlets dispatched to datacenters (all brokers).
+    pub submitted: u64,
+    /// Cloudlets completed successfully.
+    pub completed: u64,
+    /// Cloudlets failed.
+    pub failed: u64,
+    /// High-water mark of in-flight cloudlets.
+    pub peak_active: u64,
+    /// Modeled peak heap of the cloudlet pipeline.
+    pub peak_heap_bytes: u64,
+    /// Successfully created VMs across all brokers.
+    pub created_vms: usize,
+}
+
+/// Per-tenant share of an `n`-cloudlet workload (remainder spread over the
+/// first tenants).
+fn tenant_quota(n: usize, tenants: u32, t: u32) -> usize {
+    n / tenants as usize + usize::from((t as usize) < n % tenants as usize)
+}
+
+/// Streaming per-tenant workload generator: window-sized slices of the
+/// tenant's cloudlet quota, with lengths drawn from the configured
+/// distribution using a tenant-salted seed. Global display ids stripe by
+/// tenant (`id = tenant + local_index × tenants`) so the combined and solo
+/// runs mint identical ids.
+struct TenantWorkload {
+    rng: SplitMix64,
+    dist: CloudletDistribution,
+    length_mi: u64,
+    tenant: u32,
+    tenants: u32,
+    quota: usize,
+    produced: usize,
+    window: usize,
+}
+
+impl TenantWorkload {
+    fn new(cfg: &SimConfig, tenants: u32, tenant: u32, quota: usize, window: usize) -> Self {
+        let salt = (tenant as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Self {
+            rng: SplitMix64::new(cfg.seed ^ 0xC10D1E7 ^ salt),
+            dist: cfg.cloudlet_distribution,
+            length_mi: cfg.cloudlet_length_mi,
+            tenant,
+            tenants,
+            quota,
+            produced: 0,
+            window: window.max(1),
+        }
+    }
+}
+
+impl CloudletSource for TenantWorkload {
+    fn next_window(&mut self, out: &mut Vec<Cloudlet>) -> usize {
+        let n = self.window.min(self.quota - self.produced);
+        for _ in 0..n {
+            let local = self.produced;
+            let len = match self.dist {
+                CloudletDistribution::Uniform => self.length_mi,
+                CloudletDistribution::Variable => self
+                    .rng
+                    .gen_range(self.length_mi / 2, self.length_mi * 3 / 2 + 1),
+                CloudletDistribution::BurstyTail {
+                    head_pct,
+                    tail_divisor,
+                } => {
+                    let head = self.quota * head_pct as usize / 100;
+                    if local < head {
+                        self.length_mi
+                    } else {
+                        (self.length_mi / tail_divisor).max(1)
+                    }
+                }
+            };
+            let id = self.tenant as usize + local * self.tenants as usize;
+            out.push(Cloudlet::new(id, self.tenant as usize, len, 1));
+            self.produced += 1;
+        }
+        n
+    }
+
+    fn total(&self) -> usize {
+        self.quota
+    }
+}
+
+/// Run `cfg.no_of_cloudlets` cloudlets split across `tenants` concurrent
+/// brokers against shared datacenters. Tenant `t` owns the VMs with
+/// `vm.id % tenants == t` and streams its quota through a windowed
+/// [`CloudletSource`], so memory is O(active), not O(submitted).
+pub fn run_multitenant_scenario(
+    cfg: &SimConfig,
+    tenants: u32,
+    vm_variable: bool,
+    mode: RetentionMode,
+) -> MultiTenantResult {
+    run_multitenant_inner(cfg, tenants, vm_variable, mode, None)
+}
+
+/// Referee decomposition: run only `tenant`'s slice of the same workload
+/// (same VMs, same generator, same windows) alone. Per-tenant stats must
+/// be bit-identical to the combined run's.
+pub fn run_single_tenant_slice(
+    cfg: &SimConfig,
+    tenants: u32,
+    tenant: TenantId,
+    vm_variable: bool,
+    mode: RetentionMode,
+) -> MultiTenantResult {
+    run_multitenant_inner(cfg, tenants, vm_variable, mode, Some(tenant))
+}
+
+fn run_multitenant_inner(
+    cfg: &SimConfig,
+    tenants: u32,
+    vm_variable: bool,
+    mode: RetentionMode,
+    only: Option<TenantId>,
+) -> MultiTenantResult {
+    assert!(tenants >= 1, "need at least one tenant");
+    let store = CloudletStore::shared(mode);
+    let mut sim: Simulation<CloudEntity> = Simulation::with_queue(make_queue(cfg.event_queue));
+    let mut dc_ids = Vec::new();
+    for d in 0..cfg.no_of_datacenters {
+        let dc = Datacenter::new(d, make_hosts(cfg), cfg.scheduler)
+            .with_engine(cfg.des_engine)
+            .with_store(store.clone());
+        dc_ids.push(sim.add_entity(CloudEntity::Dc(dc)));
+    }
+    let all_vms = make_vms(cfg, vm_variable);
+    let mut broker_ids = Vec::new();
+    for t in 0..tenants {
+        if let Some(o) = only {
+            if t != o {
+                continue;
+            }
+        }
+        let vm_reqs: Vec<Vm> = all_vms
+            .iter()
+            .filter(|v| (v.id as u32) % tenants == t)
+            .cloned()
+            .collect();
+        assert!(!vm_reqs.is_empty(), "tenant {t} owns no VMs — too many tenants");
+        let quota = tenant_quota(cfg.no_of_cloudlets, tenants, t);
+        // windows are a multiple of the tenant's VM count so round-robin
+        // binding lines up exactly with a single eager bind, and the
+        // in-flight target covers two windows of headroom
+        let window = vm_reqs.len() * 32;
+        let inflight = (window * 2) as u64;
+        let source = TenantWorkload::new(cfg, tenants, t, quota, window);
+        let broker = Broker::new(
+            t,
+            t as usize,
+            dc_ids.clone(),
+            vm_reqs,
+            Vec::new(),
+            Box::<RoundRobinBinder>::default(),
+            store.clone(),
+        )
+        .with_batch_submit(cfg.des_engine == EngineMode::NextCompletion)
+        .with_source(Box::new(source), inflight);
+        broker_ids.push(sim.add_entity(CloudEntity::Broker(broker)));
+    }
+
+    let stats = sim.run(200_000_000);
+
+    let mut submitted = 0u64;
+    let mut created_vms = 0usize;
+    for id in broker_ids {
+        let CloudEntity::Broker(b) = sim.entity(id) else {
+            unreachable!()
+        };
+        submitted += b.submitted;
+        created_vms += b.created_vms.len();
+    }
+    let s = store.borrow();
+    MultiTenantResult {
+        tenants: s.tenant_reports(),
+        sim_clock: stats.clock,
+        events_processed: stats.events_processed,
+        submitted,
+        completed: s.completed(),
+        failed: s.failed(),
+        peak_active: s.peak_active(),
+        peak_heap_bytes: s.peak_heap_bytes(),
+        created_vms,
+    }
 }
 
 #[cfg(test)]
@@ -314,5 +552,92 @@ mod tests {
         cfg.no_of_cloudlets = 64;
         let r2 = run_scenario(&cfg);
         assert!(r2.sim_clock > r1.sim_clock);
+    }
+
+    fn mt_cfg() -> SimConfig {
+        SimConfig {
+            no_of_datacenters: 4,
+            hosts_per_datacenter: 2,
+            pes_per_host: 8,
+            no_of_vms: 16,
+            no_of_cloudlets: 2000,
+            cloudlet_length_mi: 1000,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn multitenant_completes_every_quota() {
+        let r = run_multitenant_scenario(&mt_cfg(), 4, false, RetentionMode::Streaming);
+        assert_eq!(r.tenants.len(), 4);
+        assert_eq!(r.completed, 2000);
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.created_vms, 16);
+        let total: u64 = r.tenants.iter().map(|t| t.completed).sum();
+        assert_eq!(total, 2000);
+        // quotas: 2000 / 4 tenants
+        assert!(r.tenants.iter().all(|t| t.completed == 500), "{:?}", r.tenants);
+        assert!(r.peak_active > 0 && r.peak_active < 2000, "windowed submission");
+    }
+
+    #[test]
+    fn multitenant_solo_slice_is_bit_identical() {
+        let cfg = mt_cfg();
+        let combined = run_multitenant_scenario(&cfg, 4, false, RetentionMode::Streaming);
+        for t in 0..4u32 {
+            let solo = run_single_tenant_slice(&cfg, 4, t, false, RetentionMode::Streaming);
+            assert_eq!(solo.tenants.len(), 1);
+            let (c, s) = (&combined.tenants[t as usize], &solo.tenants[0]);
+            assert_eq!(c.tenant, t);
+            assert_eq!(c.completed, s.completed);
+            assert_eq!(c.failed, s.failed);
+            assert_eq!(
+                c.sum_turnaround.to_bits(),
+                s.sum_turnaround.to_bits(),
+                "tenant {t} turnaround sum must not feel other tenants"
+            );
+            assert_eq!(c.mean_turnaround.to_bits(), s.mean_turnaround.to_bits());
+            assert_eq!(c.p50_turnaround.to_bits(), s.p50_turnaround.to_bits());
+            assert_eq!(c.p99_turnaround.to_bits(), s.p99_turnaround.to_bits());
+        }
+    }
+
+    #[test]
+    fn multitenant_variable_lengths_differ_per_tenant() {
+        let cfg = SimConfig {
+            cloudlet_distribution: CloudletDistribution::Variable,
+            ..mt_cfg()
+        };
+        let r = run_multitenant_scenario(&cfg, 4, false, RetentionMode::Streaming);
+        assert_eq!(r.completed, 2000);
+        // tenant-salted generators: means should not all collide exactly
+        let means: std::collections::HashSet<u64> =
+            r.tenants.iter().map(|t| t.mean_turnaround.to_bits()).collect();
+        assert!(means.len() > 1, "salted workloads should differ: {:?}", r.tenants);
+    }
+
+    #[test]
+    fn multitenant_streaming_heap_beats_retained() {
+        let cfg = mt_cfg();
+        let lean = run_multitenant_scenario(&cfg, 4, false, RetentionMode::Streaming);
+        let fat = run_multitenant_scenario(&cfg, 4, false, RetentionMode::Retained);
+        assert_eq!(lean.completed, fat.completed);
+        assert_eq!(lean.sim_clock.to_bits(), fat.sim_clock.to_bits());
+        assert!(
+            lean.peak_heap_bytes < fat.peak_heap_bytes,
+            "{} vs {}",
+            lean.peak_heap_bytes,
+            fat.peak_heap_bytes
+        );
+    }
+
+    #[test]
+    fn tenant_quota_spreads_remainder() {
+        assert_eq!(tenant_quota(10, 4, 0), 3);
+        assert_eq!(tenant_quota(10, 4, 1), 3);
+        assert_eq!(tenant_quota(10, 4, 2), 2);
+        assert_eq!(tenant_quota(10, 4, 3), 2);
+        let total: usize = (0..4).map(|t| tenant_quota(10, 4, t)).sum();
+        assert_eq!(total, 10);
     }
 }

@@ -1,0 +1,288 @@
+//! Cloudlet-store properties: the struct-of-arrays arena must be
+//! invisible at the virtual-time level. Every engine × queue × submission
+//! batching shape produces bit-identical results; streaming retention
+//! agrees with full retention on every aggregate; the fixed-size digest
+//! tracks exact quantiles within one log₁₀ bucket; and a combined
+//! multi-tenant run decomposes bit-for-bit into its single-tenant slices.
+
+use cloud2sim::config::{CloudletDistribution, SimConfig};
+use cloud2sim::sim::broker::RoundRobinBinder;
+use cloud2sim::sim::cloudlet::Cloudlet;
+use cloud2sim::sim::cloudlet_scheduler::SchedulerKind;
+use cloud2sim::sim::cloudlet_store::{CloudletStore, RetentionMode, DIGEST_BUCKETS};
+use cloud2sim::sim::des::EngineMode;
+use cloud2sim::sim::queue::QueueKind;
+use cloud2sim::sim::scenario::{
+    run_multitenant_scenario, run_scenario_custom_batch, run_single_tenant_slice,
+    MultiTenantResult, ScenarioResult,
+};
+use cloud2sim::sim::TenantReport;
+use cloud2sim::util::proptest::{forall, Gen};
+
+fn random_cfg(g: &mut Gen) -> SimConfig {
+    SimConfig {
+        no_of_datacenters: g.usize(1..4),
+        hosts_per_datacenter: g.usize(1..3),
+        pes_per_host: g.usize(1..5),
+        no_of_vms: g.usize(1..7),
+        no_of_cloudlets: g.usize(1..33),
+        cloudlet_length_mi: g.u64(100..5_000),
+        cloudlet_distribution: if g.bool(0.5) {
+            CloudletDistribution::Uniform
+        } else {
+            CloudletDistribution::Variable
+        },
+        scheduler: if g.bool(0.5) {
+            SchedulerKind::TimeShared
+        } else {
+            SchedulerKind::SpaceShared
+        },
+        seed: g.u64(0..u64::MAX - 1),
+        ..SimConfig::default()
+    }
+}
+
+fn run_shape(
+    cfg: &SimConfig,
+    engine: EngineMode,
+    queue: QueueKind,
+    batch: Option<bool>,
+) -> ScenarioResult {
+    let cfg = SimConfig {
+        des_engine: engine,
+        event_queue: queue,
+        ..cfg.clone()
+    };
+    run_scenario_custom_batch(&cfg, false, false, Box::<RoundRobinBinder>::default(), batch)
+}
+
+fn assert_same_virtual(a: &ScenarioResult, b: &ScenarioResult, what: &str) {
+    assert_eq!(a.sim_clock.to_bits(), b.sim_clock.to_bits(), "{what}: clock");
+    assert_eq!(a.cloudlets.len(), b.cloudlets.len(), "{what}: cloudlet count");
+    for (x, y) in a.cloudlets.iter().zip(&b.cloudlets) {
+        assert_eq!(x.id, y.id, "{what}: id order");
+        assert_eq!(x.status, y.status, "{what}: status of {}", x.id);
+        assert_eq!(x.vm_id, y.vm_id, "{what}: binding of {}", x.id);
+        assert_eq!(
+            x.finish_time.to_bits(),
+            y.finish_time.to_bits(),
+            "{what}: finish of {}",
+            x.id
+        );
+        assert_eq!(
+            x.start_time.to_bits(),
+            y.start_time.to_bits(),
+            "{what}: start of {}",
+            x.id
+        );
+    }
+    assert_eq!(a.peak_active, b.peak_active, "{what}: peak in-flight");
+}
+
+/// The SoA store path is bit-exact across the full engine × queue ×
+/// submission-batching grid: batching groups the same submissions into
+/// fewer events without moving a single virtual timestamp.
+#[test]
+fn prop_store_path_bit_exact_across_engine_queue_batching() {
+    forall("store-engine-queue-batching", 40, |g: &mut Gen| {
+        let cfg = random_cfg(g);
+        let reference = run_shape(&cfg, EngineMode::NextCompletion, QueueKind::Indexed, None);
+        let mut per_shape: Vec<(String, ScenarioResult)> = Vec::new();
+        for engine in [EngineMode::NextCompletion, EngineMode::Polling] {
+            for queue in [QueueKind::Heap, QueueKind::Indexed] {
+                for batch in [Some(false), Some(true)] {
+                    let what = format!("{engine:?}/{queue:?}/batch={batch:?}");
+                    let r = run_shape(&cfg, engine, queue, batch);
+                    assert_same_virtual(&reference, &r, &what);
+                    per_shape.push((what, r));
+                }
+            }
+        }
+        // the queue never changes the dispatched-event count; batching and
+        // the engine may (that is their point), but only downward relative
+        // to unbatched polling — the seed's event volume. Shapes index as
+        // engine*4 + queue*2 + batch, so the other-queue twin is idx ^ 2.
+        for (idx, (what, r)) in per_shape.iter().enumerate() {
+            let (_, twin) = &per_shape[idx ^ 2];
+            assert_eq!(r.events_processed, twin.events_processed, "{what}: queue changed volume");
+        }
+        let seed_volume = per_shape[4].1.events_processed; // Polling/Heap/unbatched
+        for (what, r) in &per_shape {
+            assert!(
+                r.events_processed <= seed_volume,
+                "{what} dispatched more than unbatched polling: {} vs {seed_volume}",
+                r.events_processed
+            );
+        }
+    });
+}
+
+fn assert_reports_bit_equal(a: &[TenantReport], b: &[TenantReport], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tenant count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.tenant, y.tenant, "{what}: tenant order");
+        assert_eq!(x.registered, y.registered, "{what}: registered of {}", x.tenant);
+        assert_eq!(x.completed, y.completed, "{what}: completed of {}", x.tenant);
+        assert_eq!(x.failed, y.failed, "{what}: failed of {}", x.tenant);
+        for (label, u, v) in [
+            ("sum", x.sum_turnaround, y.sum_turnaround),
+            ("mean", x.mean_turnaround, y.mean_turnaround),
+            ("p50", x.p50_turnaround, y.p50_turnaround),
+            ("p99", x.p99_turnaround, y.p99_turnaround),
+        ] {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{what}: {label} turnaround of tenant {} ({u} vs {v})",
+                x.tenant
+            );
+        }
+    }
+}
+
+fn multitenant_cfg(g: &mut Gen, tenants: u32) -> SimConfig {
+    // capacity always covers the VM fleet (single-PE VMs), so no workload
+    // ever fails and the completion counts are exact
+    let vms = tenants as usize * g.usize(1..3);
+    SimConfig {
+        no_of_datacenters: g.usize(1..3),
+        hosts_per_datacenter: 2,
+        pes_per_host: 8,
+        no_of_vms: vms,
+        no_of_cloudlets: g.usize(tenants as usize * 4..240),
+        cloudlet_length_mi: g.u64(100..5_000),
+        cloudlet_distribution: if g.bool(0.5) {
+            CloudletDistribution::Uniform
+        } else {
+            CloudletDistribution::Variable
+        },
+        seed: g.u64(0..u64::MAX - 1),
+        ..SimConfig::default()
+    }
+}
+
+/// Streaming retention is observationally identical to full retention —
+/// same clock, same event volume, same per-tenant aggregates to the last
+/// bit — while modelling strictly less peak heap.
+#[test]
+fn prop_streaming_matches_retained_everywhere() {
+    forall("streaming-vs-retained", 30, |g: &mut Gen| {
+        let tenants = g.usize(1..5) as u32;
+        let cfg = multitenant_cfg(g, tenants);
+        let retained = run_multitenant_scenario(&cfg, tenants, false, RetentionMode::Retained);
+        let streaming = run_multitenant_scenario(&cfg, tenants, false, RetentionMode::Streaming);
+        assert_eq!(
+            retained.sim_clock.to_bits(),
+            streaming.sim_clock.to_bits(),
+            "retention mode moved the clock"
+        );
+        assert_eq!(retained.events_processed, streaming.events_processed);
+        assert_eq!(retained.submitted, streaming.submitted);
+        assert_eq!(retained.completed, streaming.completed);
+        assert_eq!(retained.failed, streaming.failed);
+        assert_eq!(retained.peak_active, streaming.peak_active);
+        assert_reports_bit_equal(&retained.tenants, &streaming.tenants, "retained-vs-streaming");
+        assert_eq!(streaming.completed, cfg.no_of_cloudlets as u64);
+        assert_eq!(streaming.failed, 0);
+        assert!(
+            streaming.peak_heap_bytes < retained.peak_heap_bytes,
+            "streaming must drop the per-cloudlet rows: {} vs {}",
+            streaming.peak_heap_bytes,
+            retained.peak_heap_bytes
+        );
+    });
+}
+
+/// A combined multi-tenant run decomposes exactly: running any tenant's
+/// slice alone (same VMs, same generator, same windows) reproduces that
+/// tenant's combined-run report bit-for-bit.
+#[test]
+fn prop_combined_run_decomposes_into_solo_slices() {
+    forall("multitenant-decomposition", 20, |g: &mut Gen| {
+        let tenants = g.usize(2..5) as u32;
+        let cfg = multitenant_cfg(g, tenants);
+        let combined = run_multitenant_scenario(&cfg, tenants, false, RetentionMode::Streaming);
+        assert_eq!(combined.tenants.len(), tenants as usize);
+        for t in 0..tenants {
+            let solo: MultiTenantResult =
+                run_single_tenant_slice(&cfg, tenants, t, false, RetentionMode::Streaming);
+            assert_eq!(solo.tenants.len(), 1, "solo slice reports one tenant");
+            assert_reports_bit_equal(
+                std::slice::from_ref(&combined.tenants[t as usize]),
+                &solo.tenants,
+                &format!("combined-vs-solo tenant {t}"),
+            );
+        }
+    });
+}
+
+/// The 256-bucket log₁₀ digest never strays more than one bucket width
+/// (12/256 of a decade) from the exact empirical quantile, across
+/// magnitudes spanning the digest's whole dynamic range.
+#[test]
+fn prop_digest_quantiles_track_exact_within_one_bucket() {
+    forall("digest-quantile-tolerance", 150, |g: &mut Gen| {
+        let n = g.usize(1..400);
+        let mut s = CloudletStore::new(RetentionMode::Streaming);
+        let mut exact: Vec<f64> = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = Cloudlet::new(i, 0, 100, 1);
+            let id = s.register(&c, 0);
+            s.mark_dispatched(1);
+            // magnitudes across the digest's [1e-6, 1e6) span
+            let turnaround = 10f64.powf(g.f64(-5.0..5.0));
+            exact.push(turnaround);
+            s.record_finish(id, 0, 0, 0.0, 0.0, turnaround);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rep = &s.tenant_reports()[0];
+        assert_eq!(rep.completed, n as u64);
+        let tol = 12.0 / DIGEST_BUCKETS as f64; // one bucket, in log10
+        for (q, got) in [(0.50, rep.p50_turnaround), (0.99, rep.p99_turnaround)] {
+            let rank = ((q * n as f64).ceil() as usize).max(1) - 1;
+            let want = exact[rank.min(n - 1)];
+            let dlog = (got.log10() - want.log10()).abs();
+            assert!(
+                dlog <= tol + 1e-9,
+                "q={q}: digest {got} vs exact {want} (dlog {dlog} > {tol})"
+            );
+        }
+    });
+}
+
+/// The headline memory claim, end to end: quadrupling the submitted
+/// cloudlet count leaves streaming-mode peak heap essentially flat, while
+/// retained mode grows with every row it keeps.
+#[test]
+fn streaming_peak_heap_is_flat_in_cloudlet_count() {
+    let base = SimConfig {
+        no_of_datacenters: 2,
+        hosts_per_datacenter: 2,
+        pes_per_host: 4,
+        no_of_vms: 8,
+        no_of_cloudlets: 2_000,
+        cloudlet_length_mi: 1_000,
+        ..SimConfig::default()
+    };
+    let big = SimConfig {
+        no_of_cloudlets: 8_000,
+        ..base.clone()
+    };
+    let s_small = run_multitenant_scenario(&base, 4, false, RetentionMode::Streaming);
+    let s_big = run_multitenant_scenario(&big, 4, false, RetentionMode::Streaming);
+    let r_big = run_multitenant_scenario(&big, 4, false, RetentionMode::Retained);
+    assert_eq!(s_small.completed, 2_000);
+    assert_eq!(s_big.completed, 8_000);
+    assert!(
+        s_big.peak_heap_bytes < s_small.peak_heap_bytes * 3 / 2,
+        "streaming heap grew with submitted count: {} -> {}",
+        s_small.peak_heap_bytes,
+        s_big.peak_heap_bytes
+    );
+    assert!(
+        r_big.peak_heap_bytes > s_big.peak_heap_bytes * 4,
+        "retained should dwarf streaming at 8k cloudlets: {} vs {}",
+        r_big.peak_heap_bytes,
+        s_big.peak_heap_bytes
+    );
+}
