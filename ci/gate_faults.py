@@ -26,8 +26,13 @@ def _scenario(report, name):
     return None
 
 
-def check_faults(churn_report, straggler_report):
-    """Pure gate core: parsed reports -> (lines, failures, events_doc)."""
+def check_faults(churn_report, straggler_report, failover_report=None):
+    """Pure gate core: parsed reports -> (lines, failures, events_doc).
+
+    ``failover_report`` is optional so the original two-report invocation
+    keeps working; when given it must contain ``megascale_dc_failover``
+    with live datacenter-crash evidence.
+    """
     lines, failures = [], []
     events_doc = {}
 
@@ -70,6 +75,44 @@ def check_faults(churn_report, straggler_report):
             failures.append("no fault events were injected")
         events_doc["mr_straggler_speculative"] = {"extras": dict(se)}
 
+    if failover_report is not None:
+        failover = _scenario(failover_report, "megascale_dc_failover")
+        if failover is None:
+            failures.append("megascale_dc_failover missing from its report")
+        else:
+            fe = failover.get("extras", {})
+            for key in ("dc_crashes", "dc_recovers", "rebound",
+                        "retries_exhausted", "cloudlets_failed"):
+                if key in fe:
+                    lines.append(f"{key:<19}: {fe[key]:.0f}")
+            if not fe.get("dc_crashes", 0) >= 1:
+                failures.append("the datacenter fault plan never crashed a dc")
+            if not fe.get("rebound", 0) > 0:
+                failures.append("the dc crash must interrupt and re-bind work")
+            if not fe.get("fault_fingerprint", 0) > 0:
+                failures.append("fault-log fingerprint evidence missing")
+            ok = fe.get("cloudlets_ok", 0)
+            failed = fe.get("cloudlets_failed", 0)
+            if not ok > 0:
+                failures.append("referee parity evidence missing (cloudlets_ok)")
+            if not failed <= ok:
+                failures.append(
+                    f"failures unbounded: {failed:.0f} failed vs {ok:.0f} ok"
+                )
+            tenants = int(fe.get("tenants", 0))
+            for t in range(tenants):
+                if not fe.get(f"tenant_{t}_completed", 0) > 0:
+                    failures.append(f"tenant {t} starved under the dc crash")
+            actions = [ev.get("action") for ev in failover.get("scale_events", [])]
+            if "dc-crash" not in actions or "dc-recover" not in actions:
+                failures.append(
+                    f"dc-crash/dc-recover missing from the scale-event log: {actions}"
+                )
+            events_doc["megascale_dc_failover"] = {
+                "scale_events": failover.get("scale_events", []),
+                "extras": dict(fe),
+            }
+
     return lines, failures, events_doc
 
 
@@ -88,6 +131,12 @@ def main(argv=None):
         help="mr_straggler_speculative report (default: %(default)s)",
     )
     p.add_argument(
+        "failover",
+        nargs="?",
+        default=None,
+        help="optional megascale_dc_failover report (e.g. BENCH_dc_failover.json)",
+    )
+    p.add_argument(
         "--events-out",
         default="BENCH_fault_events.json",
         help="where to write the fault-event log artifact (default: %(default)s)",
@@ -97,7 +146,13 @@ def main(argv=None):
         churn_report = json.load(f)
     with open(args.straggler) as f:
         straggler_report = json.load(f)
-    lines, failures, events_doc = check_faults(churn_report, straggler_report)
+    failover_report = None
+    if args.failover is not None:
+        with open(args.failover) as f:
+            failover_report = json.load(f)
+    lines, failures, events_doc = check_faults(
+        churn_report, straggler_report, failover_report
+    )
     for line in lines:
         print(line)
     with open(args.events_out, "w") as f:

@@ -313,6 +313,32 @@ def fault_reports(crashes=2.0, wins=3.0, lost=0.0):
     return churn, straggler
 
 
+def failover_report(dc_crashes=1.0, rebound=215.0, fingerprint=7.3e12,
+                    ok=999_785.0, failed=215.0, tenants=4.0, starved=None,
+                    with_events=True):
+    extras = {
+        "dc_crashes": dc_crashes, "dc_recovers": dc_crashes,
+        "rebound": rebound, "retries_exhausted": 0.0,
+        "fault_fingerprint": fingerprint,
+        "cloudlets_ok": ok, "cloudlets_failed": failed,
+        "tenants": tenants,
+    }
+    for t in range(int(tenants)):
+        extras[f"tenant_{t}_completed"] = 0.0 if t == starved else ok / tenants
+    return {
+        "schema": "cloud2sim-bench/2",
+        "scenarios": [{
+            "name": "megascale_dc_failover",
+            "extras": extras,
+            "scale_events": (
+                [{"at": 300.0, "action": "dc-crash", "instances_after": 2},
+                 {"at": 900.0, "action": "dc-recover", "instances_after": 2}]
+                if with_events else []
+            ),
+        }],
+    }
+
+
 class TestFaultGate(unittest.TestCase):
     def test_passing_reports(self):
         churn, straggler = fault_reports()
@@ -332,6 +358,61 @@ class TestFaultGate(unittest.TestCase):
         churn, straggler = fault_reports(lost=3.0)
         _, failures, _ = gate_faults.check_faults(churn, straggler)
         self.assertTrue(any("lose" in f for f in failures), failures)
+
+    def test_failover_passing_report(self):
+        churn, straggler = fault_reports()
+        lines, failures, doc = gate_faults.check_faults(
+            churn, straggler, failover_report()
+        )
+        self.assertEqual(failures, [])
+        self.assertIn("megascale_dc_failover", doc)
+        self.assertEqual(len(doc["megascale_dc_failover"]["scale_events"]), 2)
+        self.assertTrue(any("rebound" in l for l in lines), lines)
+
+    def test_failover_defanged_plan_fails(self):
+        churn, straggler = fault_reports()
+        _, failures, _ = gate_faults.check_faults(
+            churn, straggler, failover_report(dc_crashes=0.0, with_events=False)
+        )
+        self.assertTrue(any("never crashed" in f for f in failures), failures)
+        self.assertTrue(
+            any("dc-crash/dc-recover missing" in f for f in failures), failures
+        )
+
+    def test_failover_no_rebind_fails(self):
+        churn, straggler = fault_reports()
+        _, failures, _ = gate_faults.check_faults(
+            churn, straggler, failover_report(rebound=0.0)
+        )
+        self.assertTrue(any("re-bind" in f for f in failures), failures)
+
+    def test_failover_starved_tenant_fails(self):
+        churn, straggler = fault_reports()
+        _, failures, _ = gate_faults.check_faults(
+            churn, straggler, failover_report(starved=2)
+        )
+        self.assertTrue(any("starved" in f for f in failures), failures)
+
+    def test_failover_unbounded_failures_fail(self):
+        churn, straggler = fault_reports()
+        _, failures, _ = gate_faults.check_faults(
+            churn, straggler, failover_report(ok=100.0, failed=5_000.0)
+        )
+        self.assertTrue(any("unbounded" in f for f in failures), failures)
+
+    def test_failover_missing_fingerprint_fails(self):
+        churn, straggler = fault_reports()
+        _, failures, _ = gate_faults.check_faults(
+            churn, straggler, failover_report(fingerprint=0.0)
+        )
+        self.assertTrue(any("fingerprint" in f for f in failures), failures)
+
+    def test_failover_missing_scenario(self):
+        churn, straggler = fault_reports()
+        _, failures, _ = gate_faults.check_faults(
+            churn, straggler, {"scenarios": []}
+        )
+        self.assertTrue(any("missing" in f for f in failures), failures)
 
 
 if __name__ == "__main__":

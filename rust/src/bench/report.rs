@@ -322,6 +322,8 @@ fn action_code(action: &str) -> f64 {
         "in" => 2.0,
         "crash" => 3.0,
         "rejoin" => 4.0,
+        "dc-crash" => 5.0,
+        "dc-recover" => 6.0,
         _ => 0.0,
     }
 }
@@ -423,6 +425,18 @@ pub fn compare_with_wall_tolerance(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn every_fault_surface_action_has_a_distinct_code() {
+        let actions = ["out", "in", "crash", "rejoin", "dc-crash", "dc-recover"];
+        for (i, a) in actions.iter().enumerate() {
+            assert_eq!(action_code(a), (i + 1) as f64);
+            for b in actions.iter().skip(i + 1) {
+                assert_ne!(action_code(a), action_code(b), "{a} vs {b}");
+            }
+        }
+        assert_eq!(action_code("unknown"), 0.0);
+    }
 
     fn outcome(name: &str, virt: f64) -> ScenarioOutcome {
         ScenarioOutcome {

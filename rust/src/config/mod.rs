@@ -397,6 +397,22 @@ pub struct SimConfig {
     /// Speculative backup execution of straggler map tasks
     /// (`speculativeExecution=on|off`).
     pub speculative_execution: SpeculativeExecution,
+    /// Crash one datacenter at this virtual time (`dcCrashAt`, seconds
+    /// relative to run start; unset = no DC crash). Its in-flight
+    /// cloudlets fail into the brokers' deterministic re-bind path.
+    pub dc_crash_at: Option<f64>,
+    /// Bring the crashed datacenter back at this virtual time
+    /// (`dcRecoverAt`); requires `dcCrashAt` and must be strictly later.
+    pub dc_recover_at: Option<f64>,
+    /// Explicit datacenter victim id (`dcVictim`, `< noOfDatacenters`);
+    /// unset draws the victim from the seeded DC stream.
+    pub dc_victim: Option<usize>,
+    /// Re-bind attempts per crash-failed cloudlet before it counts as
+    /// failed (`retryBudget`).
+    pub retry_budget: u32,
+    /// Base of the exponential re-bind backoff in virtual seconds
+    /// (`retryBackoffBase`, ≥ 0; attempt `k` waits `base · 2^(k−1)`).
+    pub retry_backoff_base: f64,
 }
 
 impl Default for SimConfig {
@@ -440,6 +456,11 @@ impl Default for SimConfig {
             member_rejoin_at: None,
             slow_member_skew: 1.0,
             speculative_execution: SpeculativeExecution::default(),
+            dc_crash_at: None,
+            dc_recover_at: None,
+            dc_victim: None,
+            retry_budget: FaultPlan::default().retry_budget,
+            retry_backoff_base: FaultPlan::default().retry_backoff_base,
         }
     }
 }
@@ -510,6 +531,17 @@ impl SimConfig {
         }
         if let Some(v) = props.get_f64("memberRejoinAt")? {
             c.member_rejoin_at = Some(v);
+        }
+        get!("retryBudget", retry_budget, get_u32);
+        get!("retryBackoffBase", retry_backoff_base, get_f64);
+        if let Some(v) = props.get_f64("dcCrashAt")? {
+            c.dc_crash_at = Some(v);
+        }
+        if let Some(v) = props.get_f64("dcRecoverAt")? {
+            c.dc_recover_at = Some(v);
+        }
+        if let Some(v) = props.get_usize("dcVictim")? {
+            c.dc_victim = Some(v);
         }
 
         // Every closed-choice key parses through the one ConfigKnob
@@ -599,6 +631,44 @@ impl SimConfig {
                 Some(_) => {}
             }
         }
+        // DC-scoped fault keys share the ConfigKnob error shape:
+        // "<key> must be <constraint>, got <value>".
+        if let Some(crash) = self.dc_crash_at {
+            if !crash.is_finite() || crash < 0.0 {
+                return Err(C2SError::Config(format!(
+                    "dcCrashAt must be a finite non-negative virtual time, got {crash}"
+                )));
+            }
+        }
+        if let Some(recover) = self.dc_recover_at {
+            match self.dc_crash_at {
+                None => {
+                    return Err(C2SError::Config(format!(
+                        "dcRecoverAt must accompany dcCrashAt, got {recover} with no crash"
+                    )))
+                }
+                Some(crash) if !(recover > crash) => {
+                    return Err(C2SError::Config(format!(
+                        "dcRecoverAt must be strictly after dcCrashAt ({crash}), got {recover}"
+                    )))
+                }
+                Some(_) => {}
+            }
+        }
+        if let Some(victim) = self.dc_victim {
+            if victim >= self.no_of_datacenters {
+                return Err(C2SError::Config(format!(
+                    "dcVictim must be below noOfDatacenters ({}), got {victim}",
+                    self.no_of_datacenters
+                )));
+            }
+        }
+        if !self.retry_backoff_base.is_finite() || self.retry_backoff_base < 0.0 {
+            return Err(C2SError::Config(format!(
+                "retryBackoffBase must be a finite non-negative virtual time, got {}",
+                self.retry_backoff_base
+            )));
+        }
         Ok(())
     }
 
@@ -610,6 +680,11 @@ impl SimConfig {
             member_rejoin_at: self.member_rejoin_at,
             slow_member_skew: self.slow_member_skew,
             speculative: self.speculative_execution,
+            dc_crash_at: self.dc_crash_at,
+            dc_recover_at: self.dc_recover_at,
+            dc_victim: self.dc_victim,
+            retry_budget: self.retry_budget,
+            retry_backoff_base: self.retry_backoff_base,
         }
     }
 }
@@ -850,6 +925,64 @@ mod tests {
         assert!(SimConfig::from_properties(&p).is_err());
         // a well-formed schedule passes
         let p = Properties::parse("memberCrashAt=2.0\nmemberRejoinAt=2.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_ok());
+    }
+
+    #[test]
+    fn dc_fault_keys_parse_and_round_trip() {
+        let d = SimConfig::default();
+        assert_eq!(d.dc_crash_at, None);
+        assert_eq!(d.retry_budget, 3);
+        assert!(d.fault_plan().is_noop());
+        let p = Properties::parse(
+            "dcCrashAt=300.0\ndcRecoverAt=900.0\ndcVictim=2\n\
+             retryBudget=5\nretryBackoffBase=0.25\n",
+        )
+        .unwrap();
+        let c = SimConfig::from_properties(&p).unwrap();
+        assert_eq!(c.dc_crash_at, Some(300.0));
+        assert_eq!(c.dc_recover_at, Some(900.0));
+        assert_eq!(c.dc_victim, Some(2));
+        assert_eq!(c.retry_budget, 5);
+        assert_eq!(c.retry_backoff_base, 0.25);
+        // the typed plan carries exactly the parsed schedule
+        let plan = c.fault_plan();
+        assert!(!plan.is_noop());
+        assert_eq!(plan.dc_crash_at, Some(300.0));
+        assert_eq!(plan.dc_recover_at, Some(900.0));
+        assert_eq!(plan.dc_victim, Some(2));
+        assert_eq!(plan.retry_budget, 5);
+        assert_eq!(plan.retry_backoff_base.to_bits(), 0.25f64.to_bits());
+        assert_eq!(plan.dc_crash_victim(c.no_of_datacenters), Some(2));
+    }
+
+    #[test]
+    fn dc_fault_keys_validated() {
+        // recover without a crash
+        let p = Properties::parse("dcRecoverAt=5.0\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("dcRecoverAt must"), "{e}");
+        // crash-after-recover (and even equality) rejected: strictly <
+        let p = Properties::parse("dcCrashAt=9.0\ndcRecoverAt=5.0\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("strictly after"), "{e}");
+        let p = Properties::parse("dcCrashAt=9.0\ndcRecoverAt=9.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err(), "equal times rejected");
+        // negative / non-finite crash time
+        let p = Properties::parse("dcCrashAt=-1.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        // victim out of range (default 15 datacenters)
+        let p = Properties::parse("dcVictim=15\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("dcVictim must be below noOfDatacenters"), "{e}");
+        let p = Properties::parse("dcVictim=14\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_ok(), "in-range victim ok");
+        // negative backoff base
+        let p = Properties::parse("retryBackoffBase=-0.5\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("retryBackoffBase must"), "{e}");
+        // a well-formed DC schedule passes end to end
+        let p = Properties::parse("dcCrashAt=2.0\ndcRecoverAt=2.5\ndcVictim=0\n").unwrap();
         assert!(SimConfig::from_properties(&p).is_ok());
     }
 }

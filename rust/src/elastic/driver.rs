@@ -17,6 +17,7 @@ use crate::elastic::ias::{IasAction, IntelligentAdaptiveScaler};
 use crate::elastic::probe::AdaptiveScalerProbe;
 use crate::elastic::scaler::{DynamicScaler, ScaleDecision};
 use crate::error::Result;
+use crate::faults::{FaultEvent, FaultKind};
 use crate::grid::cluster::{GridCluster, GridConfig};
 use crate::runtime::workload::WorkloadModel;
 use crate::sim::broker::RoundRobinBinder;
@@ -109,6 +110,10 @@ pub struct ElasticReport {
     /// Map entries promoted from backups and re-homed by partition
     /// rebuilds across the whole run (`map.entries_migrated`).
     pub entries_migrated: u64,
+    /// Structured fault log in the simulation-wide [`FaultEvent`] format —
+    /// the same fingerprintable surface the datacenter-crash scenarios
+    /// emit, so grid-member and datacenter faults compare uniformly.
+    pub fault_events: Vec<crate::faults::FaultEvent>,
 }
 
 /// Run the loaded round-robin scenario with adaptive scaling over at most
@@ -180,6 +185,7 @@ pub fn run_adaptive(
     let mut crashes = 0usize;
     let mut rejoins = 0usize;
     let mut tasks_reexecuted: u64 = 0;
+    let mut fault_events: Vec<FaultEvent> = Vec::new();
 
     // workload: remaining cloudlet MI lengths, re-partitioned every round
     // over whatever members currently exist
@@ -264,6 +270,12 @@ pub fn run_adaptive(
                     action: ScaleAction::Crash,
                     instances_after: main.size(),
                 });
+                fault_events.push(FaultEvent {
+                    at: now - t_start,
+                    kind: FaultKind::Crash,
+                    member: (n - 1) as u64,
+                    detail: format!("re-queued {} tasks onto {} survivors", tasks_reexecuted, main.size()),
+                });
             }
         }
         if let Some(rejoin_at) = rejoin_pending {
@@ -276,6 +288,12 @@ pub fn run_adaptive(
                     at: now - t_start,
                     action: ScaleAction::Rejoin,
                     instances_after: main.size(),
+                });
+                fault_events.push(FaultEvent {
+                    at: now - t_start,
+                    kind: FaultKind::Rejoin,
+                    member: main.size() as u64,
+                    detail: format!("cluster back to {} members", main.size()),
                 });
             }
         }
@@ -365,6 +383,7 @@ pub fn run_adaptive(
         tasks_reexecuted,
         entries_lost: main.metrics.counter("map.entries_lost"),
         entries_migrated: main.metrics.counter("map.entries_migrated"),
+        fault_events,
     })
 }
 

@@ -21,12 +21,17 @@
 //! first-result-wins with both attempts producing the same deterministic
 //! output.
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use crate::util::rng::SplitMix64;
 
 /// Domain-separation constants mixed into [`FaultPlan::seed`] so the crash
-/// victim and the straggler are drawn from independent streams.
+/// victim, the straggler and the datacenter victim are drawn from
+/// independent streams.
 const CRASH_STREAM: u64 = 0xC4A5_11FA_17BA_D001;
 const STRAGGLER_STREAM: u64 = 0x51_0C0F_FEE5_10F2;
+const DC_CRASH_STREAM: u64 = 0xDC_FA11_0C4A_5D01;
 
 /// Whether straggler map tasks get a speculative backup attempt on the
 /// least-loaded survivor (`speculativeExecution` in
@@ -88,6 +93,15 @@ pub enum FaultKind {
     SpeculativeWin,
     /// The straggling primary beat its speculative backup.
     SpeculativeLoss,
+    /// A whole datacenter crashed, failing its in-flight cloudlets.
+    DcCrash,
+    /// The crashed datacenter came back online.
+    DcRecover,
+    /// A broker re-bound crash-failed cloudlets to surviving same-tenant
+    /// VMs under the retry/backoff policy.
+    Rebind,
+    /// Cloudlets ran out of retry budget and were recorded as failed.
+    RetryExhausted,
 }
 
 impl std::fmt::Display for FaultKind {
@@ -99,6 +113,10 @@ impl std::fmt::Display for FaultKind {
             FaultKind::Straggler => "straggler",
             FaultKind::SpeculativeWin => "speculative-win",
             FaultKind::SpeculativeLoss => "speculative-loss",
+            FaultKind::DcCrash => "dc-crash",
+            FaultKind::DcRecover => "dc-recover",
+            FaultKind::Rebind => "rebind",
+            FaultKind::RetryExhausted => "retry-exhausted",
         })
     }
 }
@@ -134,13 +152,39 @@ impl FaultEvent {
     }
 }
 
+/// Shared fault log: one per simulation, appended to by every entity the
+/// fault plan touches (single-threaded DES ⇒ `Rc<RefCell<_>>`, like
+/// `SharedStore`). Entries append in dispatch order, which the DES makes
+/// deterministic, so the log fingerprints bit-stably.
+pub type SharedFaultLog = Rc<RefCell<Vec<FaultEvent>>>;
+
+/// FNV-1a over the newline-joined [`FaultEvent::fingerprint`] strings: one
+/// u64 that changes if any event's kind, subject, detail or raw f64
+/// timestamp bits change — the quantity the `megascale_dc_failover`
+/// referees compare across reruns, worker counts, queues and engines.
+pub fn log_fingerprint(events: &[FaultEvent]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for e in events {
+        for b in e.fingerprint().as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h ^= b'\n' as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
 /// A declarative, seeded fault schedule (the `faultSeed` /
 /// `memberCrashAt` / `memberRejoinAt` / `slowMemberSkew` /
-/// `speculativeExecution` properties).
+/// `speculativeExecution` properties, plus the datacenter-scoped
+/// `dcCrashAt` / `dcRecoverAt` / `dcVictim` / `retryBudget` /
+/// `retryBackoffBase` keys that reach the DES core).
 ///
 /// Times are virtual seconds **relative to the start** of whatever run the
-/// plan is injected into (a MapReduce job or an elastic driver session);
-/// this keeps one plan meaningful across quick and full scenario modes.
+/// plan is injected into (a MapReduce job, an elastic driver session or a
+/// DES scenario); this keeps one plan meaningful across quick and full
+/// scenario modes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultPlan {
     /// Seed for victim/straggler selection (`faultSeed`).
@@ -157,6 +201,22 @@ pub struct FaultPlan {
     /// Speculative backup execution of straggler tasks
     /// (`speculativeExecution`).
     pub speculative: SpeculativeExecution,
+    /// Crash one datacenter at this virtual time (`dcCrashAt`), failing
+    /// its in-flight cloudlets into the brokers' re-bind path.
+    pub dc_crash_at: Option<f64>,
+    /// Bring the crashed datacenter back at this virtual time
+    /// (`dcRecoverAt`); requires `dc_crash_at` and must be strictly later.
+    pub dc_recover_at: Option<f64>,
+    /// Explicit datacenter victim id (`dcVictim`); `None` draws one from
+    /// the seeded DC stream.
+    pub dc_victim: Option<usize>,
+    /// Re-bind attempts per crash-failed cloudlet before it lands in the
+    /// per-tenant failed count (`retryBudget`).
+    pub retry_budget: u32,
+    /// Base of the exponential re-bind backoff in virtual seconds
+    /// (`retryBackoffBase`): attempt `k` waits `base · 2^(k−1)` — a
+    /// power-of-two multiply, so every delay is f64-bit-reproducible.
+    pub retry_backoff_base: f64,
 }
 
 impl Default for FaultPlan {
@@ -167,6 +227,11 @@ impl Default for FaultPlan {
             member_rejoin_at: None,
             slow_member_skew: 1.0,
             speculative: SpeculativeExecution::default(),
+            dc_crash_at: None,
+            dc_recover_at: None,
+            dc_victim: None,
+            retry_budget: 3,
+            retry_backoff_base: 0.5,
         }
     }
 }
@@ -174,7 +239,34 @@ impl Default for FaultPlan {
 impl FaultPlan {
     /// True when the plan injects nothing (no crash, no skew).
     pub fn is_noop(&self) -> bool {
-        self.member_crash_at.is_none() && self.slow_member_skew <= 1.0
+        self.member_crash_at.is_none()
+            && self.slow_member_skew <= 1.0
+            && self.dc_crash_at.is_none()
+    }
+
+    /// Deterministically pick the datacenter to crash among `n_dcs`:
+    /// the explicit [`FaultPlan::dc_victim`] when set, otherwise a draw
+    /// from the seeded DC stream. `None` when no DC crash is scheduled or
+    /// there are no datacenters. Any datacenter may be the victim — there
+    /// is no master among them.
+    pub fn dc_crash_victim(&self, n_dcs: usize) -> Option<usize> {
+        if self.dc_crash_at.is_none() || n_dcs == 0 {
+            return None;
+        }
+        if let Some(v) = self.dc_victim {
+            return (v < n_dcs).then_some(v);
+        }
+        let mut rng = SplitMix64::new(self.seed ^ DC_CRASH_STREAM);
+        Some((rng.next_u64() % n_dcs as u64) as usize)
+    }
+
+    /// Virtual-time backoff before re-bind attempt `attempt` (1-based):
+    /// `retry_backoff_base · 2^(attempt−1)`, computed as an exact
+    /// power-of-two multiply so the delay (and hence every downstream
+    /// event timestamp) is bit-reproducible.
+    pub fn rebind_backoff(&self, attempt: u32) -> f64 {
+        let shift = attempt.saturating_sub(1).min(32);
+        self.retry_backoff_base * ((1u64 << shift) as f64)
     }
 
     /// Deterministically pick the crash victim's member *offset* in an
@@ -282,6 +374,77 @@ mod tests {
         assert_eq!(SpeculativeExecution::On.to_string(), "on");
         assert_eq!(SpeculativeExecution::Off.to_string(), "off");
         assert!(!SpeculativeExecution::default().is_on());
+    }
+
+    #[test]
+    fn dc_victim_explicit_seeded_and_range_checked() {
+        let mut plan = FaultPlan {
+            dc_crash_at: Some(30.0),
+            ..FaultPlan::default()
+        };
+        assert!(!plan.is_noop());
+        // seeded draw: deterministic and in range
+        let v = plan.dc_crash_victim(8).expect("crash scheduled");
+        assert!(v < 8);
+        assert_eq!(plan.dc_crash_victim(8), Some(v), "deterministic");
+        // explicit victim wins; out-of-range yields None
+        plan.dc_victim = Some(3);
+        assert_eq!(plan.dc_crash_victim(8), Some(3));
+        assert_eq!(plan.dc_crash_victim(2), None, "victim 3 of 2 DCs");
+        // no crash scheduled → no victim
+        plan.dc_crash_at = None;
+        assert_eq!(plan.dc_crash_victim(8), None);
+        assert!(plan.is_noop());
+        // independent stream: seeds move the DC victim too
+        let hits: std::collections::BTreeSet<usize> = (0..64u64)
+            .filter_map(|s| {
+                FaultPlan {
+                    seed: s,
+                    dc_crash_at: Some(1.0),
+                    ..FaultPlan::default()
+                }
+                .dc_crash_victim(8)
+            })
+            .collect();
+        assert!(hits.len() > 3, "DC victim stuck: {hits:?}");
+    }
+
+    #[test]
+    fn rebind_backoff_doubles_exactly() {
+        let plan = FaultPlan {
+            retry_backoff_base: 0.5,
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.rebind_backoff(1).to_bits(), 0.5f64.to_bits());
+        assert_eq!(plan.rebind_backoff(2).to_bits(), 1.0f64.to_bits());
+        assert_eq!(plan.rebind_backoff(3).to_bits(), 2.0f64.to_bits());
+        assert_eq!(plan.rebind_backoff(4).to_bits(), 4.0f64.to_bits());
+        // the shift saturates instead of overflowing
+        assert!(plan.rebind_backoff(200).is_finite());
+    }
+
+    #[test]
+    fn log_fingerprint_is_order_and_bit_sensitive() {
+        let a = FaultEvent {
+            at: 30.0,
+            kind: FaultKind::DcCrash,
+            member: 2,
+            detail: "failed 5 in-flight across 3 vms".into(),
+        };
+        let b = FaultEvent {
+            at: 30.5,
+            kind: FaultKind::Rebind,
+            member: 1,
+            detail: "re-bound 5".into(),
+        };
+        let fwd = log_fingerprint(&[a.clone(), b.clone()]);
+        assert_eq!(fwd, log_fingerprint(&[a.clone(), b.clone()]), "stable");
+        assert_ne!(fwd, log_fingerprint(&[b.clone(), a.clone()]), "ordered");
+        assert_ne!(fwd, log_fingerprint(&[a.clone()]), "length-sensitive");
+        let mut shifted = a.clone();
+        shifted.at = f64::from_bits(a.at.to_bits() + 1);
+        assert_ne!(fwd, log_fingerprint(&[shifted, b]), "1-ulp sensitive");
+        assert_eq!(log_fingerprint(&[]), 0xcbf2_9ce4_8422_2325, "FNV basis");
     }
 
     #[test]

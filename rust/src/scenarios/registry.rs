@@ -257,10 +257,9 @@ pub fn registry() -> Vec<ScenarioSpec> {
             faults: Some(FaultShape {
                 // the paper's arXiv id, as a stable seed
                 fault_seed: 1601_03980,
-                member_crash_at: None,
-                member_rejoin_at: None,
                 slow_member_skew: 6.0,
                 speculative: true,
+                ..FaultShape::default()
             }),
         },
         ScenarioSpec {
@@ -302,8 +301,7 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 fault_seed: 1601_03980,
                 member_crash_at: Some(5.0),
                 member_rejoin_at: Some(15.0),
-                slow_member_skew: 1.0,
-                speculative: false,
+                ..FaultShape::default()
             }),
         },
         ScenarioSpec {
@@ -329,6 +327,42 @@ pub fn registry() -> Vec<ScenarioSpec> {
             mr: None,
             elastic: None,
             faults: None,
+        },
+        ScenarioSpec {
+            name: "megascale_dc_failover",
+            summary: "1M cloudlets from 4 tenants on partitioned datacenters; \
+                      one datacenter crashes mid-run and its tenant re-binds \
+                      the fallout under a deterministic retry/backoff policy",
+            paper_ref: "§3.1 concurrent multi-tenant simulations / §4.3.3 \
+                        surviving a dynamically changing cluster, extended \
+                        to datacenter-level fault injection",
+            kind: ScenarioKind::MegascaleDcFailover,
+            // 24 datacenters split 6-per-tenant: the victim (dc 2, tenant
+            // 2's) leaves five survivors to absorb the re-bound fallout
+            datacenters: 24,
+            hosts_per_datacenter: 2,
+            pes_per_host: 8,
+            vms: 256,
+            cloudlets: 1_000_000,
+            tenants: 4,
+            loaded: false,
+            distribution: CloudletDistribution::Uniform,
+            variable_vms: true,
+            scheduler: SchedulerKind::TimeShared,
+            nodes: &[1],
+            grid_workers: 1,
+            mr: None,
+            elastic: None,
+            faults: Some(FaultShape {
+                fault_seed: 1601_03980,
+                // both instants sit inside the quick-mode (~2000 s) and
+                // full-size (~100k s) makespans, so the crash window is
+                // live at every scenario scale
+                dc_crash_at: Some(300.0),
+                dc_recover_at: Some(900.0),
+                dc_victim: Some(2),
+                ..FaultShape::default()
+            }),
         },
     ]
 }
@@ -387,6 +421,7 @@ mod tests {
             "mr_straggler_speculative",
             "member_churn_elastic",
             "megascale_multitenant",
+            "megascale_dc_failover",
         ] {
             assert!(find(required).is_some(), "missing {required}");
         }
@@ -457,5 +492,37 @@ mod tests {
         assert_eq!(spec.vms % spec.tenants, 0, "uneven VM ownership");
         // classic scenarios stay single-tenant
         assert_eq!(find("megascale_broker").unwrap().tenants, 1);
+    }
+
+    #[test]
+    fn dc_failover_shape_supports_the_recovery_referee() {
+        let spec = find("megascale_dc_failover").unwrap();
+        assert!(spec.cloudlets >= 1_000_000, "cloudlet floor shrank");
+        assert!(spec.tenants >= 4, "tenant floor shrank");
+        let f = spec.faults.as_ref().expect("fault shape");
+        let crash = f.dc_crash_at.expect("a crash is the scenario");
+        let recover = f.dc_recover_at.expect("recovery exercises VM re-create");
+        assert!(crash < recover, "must recover after crashing");
+        assert!(f.retry_budget > 0, "re-binding is the scenario");
+        assert!(f.retry_backoff_base > 0.0);
+        // partitioned datacenters: every tenant owns dcs % tenants, so the
+        // explicit victim pins which tenant the crash touches, and the
+        // victim tenant keeps survivors to re-bind onto
+        assert_eq!(spec.datacenters % spec.tenants, 0, "uneven dc ownership");
+        assert!(
+            spec.datacenters / spec.tenants >= 2,
+            "the victim tenant needs surviving datacenters"
+        );
+        assert!(f.dc_victim.unwrap() < spec.datacenters);
+        // every VM must place even when one tenant's fleet crowds onto
+        // its own datacenters: per-tenant PEs >= per-tenant VMs
+        let tenant_pes =
+            (spec.datacenters / spec.tenants) * spec.hosts_per_datacenter * spec.pes_per_host;
+        assert!(tenant_pes >= spec.vms / spec.tenants);
+        assert_eq!(spec.vms % spec.tenants, 0, "uneven VM ownership");
+        // the sim config round-trips the whole dc fault surface
+        let cfg = spec.sim_config(true);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.fault_plan().dc_crash_victim(spec.datacenters), f.dc_victim);
     }
 }

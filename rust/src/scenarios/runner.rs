@@ -13,7 +13,7 @@ use crate::dist::matchmaking::{run_matchmaking_baseline, run_matchmaking_distrib
 use crate::dist::{run_cloudsim_baseline, run_distributed};
 use crate::elastic::{run_adaptive, HealthMeasure};
 use crate::error::{C2SError, Result};
-use crate::faults::{FaultPlan, SpeculativeExecution};
+use crate::faults::{log_fingerprint, FaultKind, FaultPlan, SpeculativeExecution};
 use crate::grid::parallel::resolve_workers;
 use crate::mapreduce::{
     run_hz_wordcount_faulted, run_hz_wordcount_with_workers, run_inf_wordcount_faulted,
@@ -26,7 +26,8 @@ use crate::sim::cloudlet_store::RetentionMode;
 use crate::sim::des::EngineMode;
 use crate::sim::queue::QueueKind;
 use crate::sim::scenario::{
-    run_multitenant_scenario, run_scenario_custom, run_single_tenant_slice, ScenarioResult,
+    run_multitenant_faulted, run_multitenant_scenario, run_scenario_custom,
+    run_single_tenant_slice, run_single_tenant_slice_partitioned, ScenarioResult,
 };
 use crate::sim::TenantReport;
 use crate::util::stats::{mean, stddev};
@@ -199,6 +200,7 @@ fn run_once(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ScenarioKind::MrStragglerSpeculative => mr_straggler_speculative(spec, quick),
         ScenarioKind::MemberChurnElastic => member_churn_elastic(spec, quick),
         ScenarioKind::MegascaleMultitenant => megascale_multitenant(spec, quick),
+        ScenarioKind::MegascaleDcFailover => megascale_dc_failover(spec, quick),
     }
 }
 
@@ -707,6 +709,12 @@ fn member_churn_elastic(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ),
         ("cloudlets_ok".to_string(), faulted.cloudlets_ok as f64),
         ("peak_instances".to_string(), faulted.peak_instances as f64),
+        // the unified fault-surface fingerprint (>> 12 keeps it exactly
+        // representable as f64), shared format with the DC crash model
+        (
+            "fault_fingerprint".to_string(),
+            (log_fingerprint(&faulted.fault_events) >> 12) as f64,
+        ),
         ("sim_time_nofault_s".to_string(), clean.sim_time_s),
         (
             "churn_virtual_overhead_s".to_string(),
@@ -862,6 +870,244 @@ fn megascale_multitenant(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
     Ok(m)
 }
 
+/// Multi-tenant megascale DES with a datacenter crash mid-run: one
+/// datacenter (`dcVictim`) fails at `dcCrashAt`, failing its in-flight
+/// cloudlets; the owning broker re-binds each onto a surviving
+/// same-tenant VM under the bounded retry/backoff policy, and the
+/// datacenter recovers at `dcRecoverAt`. Datacenters are partitioned by
+/// tenant (`dc % tenants`) so the crash touches exactly one tenant.
+///
+/// 1. **Headline**: streaming retention, next-completion engine, calendar
+///    queue, the fault plan armed.
+/// 2. **Referee 1**: the same run at a different worker count — the fault
+///    log fingerprint, the final clock, the event count and every
+///    per-tenant statistic must match bit-for-bit or the scenario errors
+///    out.
+/// 3. **Referee 2**: the same run on the seed heap queue — same bit-exact
+///    comparison.
+/// 4. **Referee 3**: the seed polling engine — the fault log and every
+///    per-tenant statistic must still match bit-for-bit (the final clock
+///    may trail a stale poll tick, so across engines it is ordered, not
+///    bit-compared).
+/// 5. **Recovery referee**: every *unaffected* tenant's slice re-run
+///    alone with no fault plan at all — the crash must not move one bit
+///    of any unaffected tenant's statistics. Faults move clocks and
+///    placements, never unaffected tenants' data.
+fn megascale_dc_failover(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
+    let tenants = spec.tenants.max(1) as u32;
+    let cfg = SimConfig {
+        des_engine: EngineMode::NextCompletion,
+        event_queue: QueueKind::Indexed,
+        ..spec.sim_config(quick)
+    };
+    let plan = cfg.fault_plan();
+    if plan.dc_crash_at.is_none() {
+        return Err(C2SError::Config(format!(
+            "{} has no dcCrashAt fault plan",
+            spec.name
+        )));
+    }
+    let victim = plan.dc_crash_victim(cfg.no_of_datacenters).ok_or_else(|| {
+        C2SError::Config(format!("{}: no datacenter to crash", spec.name))
+    })?;
+    let victim_tenant = (victim as u32) % tenants;
+
+    let t0 = Instant::now();
+    let combined =
+        run_multitenant_faulted(&cfg, tenants, spec.variable_vms, RetentionMode::Streaming);
+    let wall_combined = t0.elapsed().as_secs_f64();
+
+    let fp = log_fingerprint(&combined.fault_events);
+    let count_kind = |k: FaultKind| {
+        combined
+            .fault_events
+            .iter()
+            .filter(|e| e.kind == k)
+            .count() as u64
+    };
+    let dc_crashes = count_kind(FaultKind::DcCrash);
+    let dc_recovers = count_kind(FaultKind::DcRecover);
+    if dc_crashes == 0 {
+        return Err(C2SError::Other(format!(
+            "{}: the datacenter fault plan never fired",
+            spec.name
+        )));
+    }
+    if combined.rebound == 0 {
+        return Err(C2SError::Other(format!(
+            "{}: the crash interrupted no cloudlet that was re-bound",
+            spec.name
+        )));
+    }
+    // conservation: every registered cloudlet reaches a terminal state
+    if combined.completed + combined.failed != cfg.no_of_cloudlets as u64 {
+        return Err(C2SError::Other(format!(
+            "{}: {} completed + {} failed != {} registered",
+            spec.name, combined.completed, combined.failed, cfg.no_of_cloudlets
+        )));
+    }
+    for t in &combined.tenants {
+        if t.completed + t.failed != t.registered {
+            return Err(C2SError::Other(format!(
+                "{}: tenant {} leaked cloudlets: {} + {} != {}",
+                spec.name, t.tenant, t.completed, t.failed, t.registered
+            )));
+        }
+        if t.tenant != victim_tenant && (t.failed != 0 || t.rebound != 0) {
+            return Err(C2SError::Other(format!(
+                "{}: the dc-{} crash bled into tenant {} ({} failed, {} rebound)",
+                spec.name, victim, t.tenant, t.failed, t.rebound
+            )));
+        }
+    }
+
+    // one comparator closure for referees 1-3
+    let check_against = |what: &str,
+                         other: &crate::sim::scenario::MultiTenantResult,
+                         compare_clock: bool|
+     -> Result<()> {
+        let ofp = log_fingerprint(&other.fault_events);
+        if fp != ofp {
+            return Err(C2SError::Other(format!(
+                "{}: {what} fault-log fingerprint drifted: {fp:016x} vs {ofp:016x}",
+                spec.name
+            )));
+        }
+        if compare_clock {
+            if combined.sim_clock.to_bits() != other.sim_clock.to_bits() {
+                return Err(C2SError::Other(format!(
+                    "{}: {what} virtual clock drifted: {} vs {}",
+                    spec.name, combined.sim_clock, other.sim_clock
+                )));
+            }
+            if combined.events_processed != other.events_processed {
+                return Err(C2SError::Other(format!(
+                    "{}: {what} dispatched different event counts: {} vs {}",
+                    spec.name, combined.events_processed, other.events_processed
+                )));
+            }
+        }
+        for (a, b) in combined.tenants.iter().zip(&other.tenants) {
+            check_tenant_exact(spec.name, what, a, b)?;
+        }
+        Ok(())
+    };
+
+    // referee 1: a different worker count must reproduce everything
+    let cfg_workers = SimConfig {
+        grid_workers: if cfg.grid_workers == 1 { 4 } else { 1 },
+        ..cfg.clone()
+    };
+    let rerun =
+        run_multitenant_faulted(&cfg_workers, tenants, spec.variable_vms, RetentionMode::Streaming);
+    check_against("worker-count rerun", &rerun, true)?;
+
+    // referee 2: the heap-backed queue must reproduce everything
+    let cfg_heap = SimConfig {
+        event_queue: QueueKind::Heap,
+        ..cfg.clone()
+    };
+    let t1 = Instant::now();
+    let heap =
+        run_multitenant_faulted(&cfg_heap, tenants, spec.variable_vms, RetentionMode::Streaming);
+    let wall_heap = t1.elapsed().as_secs_f64();
+    check_against("calendar-vs-heap queue", &heap, true)?;
+
+    // referee 3: the polling engine pays more events for the same fault
+    // log and tenant statistics; its final clock may trail a stale tick
+    let cfg_polling = SimConfig {
+        des_engine: EngineMode::Polling,
+        event_queue: QueueKind::Heap,
+        ..cfg.clone()
+    };
+    let t2 = Instant::now();
+    let polling =
+        run_multitenant_faulted(&cfg_polling, tenants, spec.variable_vms, RetentionMode::Streaming);
+    let wall_polling = t2.elapsed().as_secs_f64();
+    check_against("next-completion-vs-polling engine", &polling, false)?;
+    if combined.sim_clock > polling.sim_clock {
+        return Err(C2SError::Other(format!(
+            "{}: next-completion clock {} beyond the polling clock {}",
+            spec.name, combined.sim_clock, polling.sim_clock
+        )));
+    }
+
+    // recovery referee: unaffected tenants must be bit-exact against their
+    // fault-free solo twins — the crash never moved their data
+    let t3 = Instant::now();
+    for a in combined.tenants.iter().filter(|t| t.tenant != victim_tenant) {
+        let solo = run_single_tenant_slice_partitioned(
+            &cfg,
+            tenants,
+            a.tenant,
+            spec.variable_vms,
+            RetentionMode::Streaming,
+        );
+        let b = solo
+            .tenants
+            .iter()
+            .find(|r| r.tenant == a.tenant)
+            .ok_or_else(|| {
+                C2SError::Other(format!("{}: solo run lost tenant {}", spec.name, a.tenant))
+            })?;
+        check_tenant_exact(spec.name, "faulted-vs-fault-free recovery", a, b)?;
+    }
+    let wall_solo = t3.elapsed().as_secs_f64();
+
+    let mut m = empty_measured(combined.sim_clock);
+    m.events_dispatched = Some(combined.events_processed);
+    m.headline_wall_s = Some(wall_combined);
+    m.scale_events = combined
+        .fault_events
+        .iter()
+        .filter(|e| matches!(e.kind, FaultKind::DcCrash | FaultKind::DcRecover))
+        .map(|e| ScaleEventOut {
+            at: e.at,
+            action: e.kind.to_string(),
+            instances_after: e.member,
+        })
+        .collect();
+    m.extras = vec![
+        // >> 12 keeps the fingerprint exactly representable as f64
+        ("fault_fingerprint".to_string(), (fp >> 12) as f64),
+        ("dc_crashes".to_string(), dc_crashes as f64),
+        ("dc_recovers".to_string(), dc_recovers as f64),
+        ("rebound".to_string(), combined.rebound as f64),
+        (
+            "retries_exhausted".to_string(),
+            combined.retries_exhausted as f64,
+        ),
+        ("cloudlets_ok".to_string(), combined.completed as f64),
+        ("cloudlets_failed".to_string(), combined.failed as f64),
+        ("victim_dc".to_string(), victim as f64),
+        ("victim_tenant".to_string(), victim_tenant as f64),
+        ("tenants".to_string(), combined.tenants.len() as f64),
+        ("created_vms".to_string(), combined.created_vms as f64),
+        ("peak_active".to_string(), combined.peak_active as f64),
+        (
+            "fault_events".to_string(),
+            combined.fault_events.len() as f64,
+        ),
+    ];
+    for t in &combined.tenants {
+        m.extras
+            .push((format!("tenant_{}_completed", t.tenant), t.completed as f64));
+        m.extras
+            .push((format!("tenant_{}_failed", t.tenant), t.failed as f64));
+        m.extras
+            .push((format!("tenant_{}_rebound", t.tenant), t.rebound as f64));
+        m.extras
+            .push((format!("tenant_{}_p99_s", t.tenant), t.p99_turnaround));
+    }
+    m.wall_extras = vec![
+        ("wall_combined_s".to_string(), wall_combined),
+        ("wall_referee_s".to_string(), wall_heap),
+        ("wall_polling_s".to_string(), wall_polling),
+        ("wall_solo_total_s".to_string(), wall_solo),
+    ];
+    Ok(m)
+}
+
 /// Fail with a drift report unless two runs agree bit-for-bit on one
 /// tenant's whole statistics block: counts exactly, the turnaround sum,
 /// mean and digest quantiles by f64 bit pattern.
@@ -888,6 +1134,16 @@ fn check_tenant_exact(
     }
     if a.failed != b.failed {
         return drift("failed", a.failed.to_string(), b.failed.to_string());
+    }
+    if a.rebound != b.rebound {
+        return drift("rebound", a.rebound.to_string(), b.rebound.to_string());
+    }
+    if a.retries_exhausted != b.retries_exhausted {
+        return drift(
+            "retries_exhausted",
+            a.retries_exhausted.to_string(),
+            b.retries_exhausted.to_string(),
+        );
     }
     if a.sum_turnaround.to_bits() != b.sum_turnaround.to_bits() {
         return drift(
@@ -1205,6 +1461,7 @@ mod tests {
         assert!(extra("tasks_reexecuted") > 0.0);
         assert_eq!(extra("entries_lost"), 0.0);
         assert!(extra("entries_migrated") > 0.0, "the victim's entries re-home");
+        assert!(extra("fault_fingerprint") > 0.0, "unified fault surface");
         assert!(out.scale_events.iter().any(|e| e.action == "crash"));
         assert!(out.scale_events.iter().any(|e| e.action == "rejoin"));
     }
@@ -1240,6 +1497,44 @@ mod tests {
         for t in 0..spec.tenants {
             assert!(extra(&format!("tenant_{t}_p99_s")) > 0.0);
         }
+    }
+
+    #[test]
+    fn dc_failover_scenario_rebinds_and_isolates_tenants() {
+        // the in-run referees hard-error on any fault-log fingerprint or
+        // per-tenant drift (worker-count + heap-queue + polling-engine
+        // reruns, plus the fault-free solo twins of every unaffected
+        // tenant), so this passing IS the recovery-referee check
+        let spec = find("megascale_dc_failover").unwrap();
+        let out = run_spec(&spec, &quick_opts()).unwrap();
+        let extra = |k: &str| {
+            out.extras
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing extra {k}"))
+        };
+        assert!(extra("dc_crashes") >= 1.0);
+        assert!(extra("dc_recovers") >= 1.0);
+        assert!(extra("rebound") > 0.0, "the crash must interrupt work");
+        assert!(extra("fault_fingerprint") > 0.0);
+        // conservation: every cloudlet terminal, failures bounded by the
+        // victim tenant's registered share
+        let cfg = spec.sim_config(true);
+        assert_eq!(
+            extra("cloudlets_ok") + extra("cloudlets_failed"),
+            cfg.no_of_cloudlets as f64
+        );
+        let victim_tenant = extra("victim_tenant") as u32;
+        for t in 0..spec.tenants as u32 {
+            if t != victim_tenant {
+                assert_eq!(extra(&format!("tenant_{t}_failed")), 0.0);
+                assert_eq!(extra(&format!("tenant_{t}_rebound")), 0.0);
+            }
+        }
+        assert!(extra(&format!("tenant_{victim_tenant}_rebound")) > 0.0);
+        assert!(out.scale_events.iter().any(|e| e.action == "dc-crash"));
+        assert!(out.scale_events.iter().any(|e| e.action == "dc-recover"));
     }
 
     #[test]

@@ -54,6 +54,14 @@ pub enum ScenarioKind {
     /// and by per-tenant solo-slice decompositions — every per-tenant
     /// statistic must match bit-for-bit.
     MegascaleMultitenant,
+    /// The multi-tenant megascale run with one datacenter crashed mid-run:
+    /// its in-flight cloudlets fail and the owning tenant's broker re-binds
+    /// them to surviving same-tenant VMs under a deterministic retry/backoff
+    /// policy. Refereed in-run by fault-log fingerprint identity across
+    /// reruns, worker counts, queues and engines, and by fault-free
+    /// solo-slice decomposition of every unaffected tenant — faults move
+    /// clocks and placements, never unaffected tenants' data.
+    MegascaleDcFailover,
 }
 
 impl ScenarioKind {
@@ -70,6 +78,7 @@ impl ScenarioKind {
             ScenarioKind::MrStragglerSpeculative => "mr-straggler-speculative",
             ScenarioKind::MemberChurnElastic => "member-churn-elastic",
             ScenarioKind::MegascaleMultitenant => "megascale-multitenant",
+            ScenarioKind::MegascaleDcFailover => "megascale-dc-failover",
         }
     }
 }
@@ -162,6 +171,39 @@ pub struct FaultShape {
     /// Run speculative backups for the straggler's chunks
     /// (`speculativeExecution=on`).
     pub speculative: bool,
+    /// Virtual time at which one datacenter crashes (`dcCrashAt`).
+    pub dc_crash_at: Option<f64>,
+    /// Virtual time at which the crashed datacenter comes back
+    /// (`dcRecoverAt`; strictly after the crash).
+    pub dc_recover_at: Option<f64>,
+    /// Explicit crash-victim datacenter id (`dcVictim`); `None` draws one
+    /// from the seeded DC stream.
+    pub dc_victim: Option<usize>,
+    /// Re-bind attempts per crash-failed cloudlet (`retryBudget`).
+    pub retry_budget: u32,
+    /// Base of the exponential re-bind backoff in virtual seconds
+    /// (`retryBackoffBase`).
+    pub retry_backoff_base: f64,
+}
+
+impl Default for FaultShape {
+    /// The no-fault shape: every injection knob off, retry policy at the
+    /// [`crate::faults::FaultPlan`] defaults.
+    fn default() -> Self {
+        let plan = crate::faults::FaultPlan::default();
+        Self {
+            fault_seed: plan.seed,
+            member_crash_at: None,
+            member_rejoin_at: None,
+            slow_member_skew: 1.0,
+            speculative: false,
+            dc_crash_at: None,
+            dc_recover_at: None,
+            dc_victim: None,
+            retry_budget: plan.retry_budget,
+            retry_backoff_base: plan.retry_backoff_base,
+        }
+    }
 }
 
 /// One named, fully declarative scenario.
@@ -226,7 +268,7 @@ impl ScenarioSpec {
         // million-cloudlet multitenant run needs a much deeper cut to keep
         // the debug-mode test suite fast (its full size is CI-release only)
         let quick_divisor = match self.kind {
-            ScenarioKind::MegascaleMultitenant => 50,
+            ScenarioKind::MegascaleMultitenant | ScenarioKind::MegascaleDcFailover => 50,
             _ => 2,
         };
         let cloudlets = if quick && !keeps_shape {
@@ -269,6 +311,11 @@ impl ScenarioSpec {
             } else {
                 SpeculativeExecution::Off
             };
+            cfg.dc_crash_at = f.dc_crash_at;
+            cfg.dc_recover_at = f.dc_recover_at;
+            cfg.dc_victim = f.dc_victim;
+            cfg.retry_budget = f.retry_budget;
+            cfg.retry_backoff_base = f.retry_backoff_base;
         }
         cfg
     }
@@ -372,6 +419,10 @@ mod tests {
             ScenarioKind::MegascaleMultitenant.tag(),
             "megascale-multitenant"
         );
+        assert_eq!(
+            ScenarioKind::MegascaleDcFailover.tag(),
+            "megascale-dc-failover"
+        );
     }
 
     #[test]
@@ -394,6 +445,7 @@ mod tests {
             member_rejoin_at: Some(8.0),
             slow_member_skew: 4.0,
             speculative: true,
+            ..FaultShape::default()
         });
         let cfg = s.sim_config(false);
         cfg.validate().unwrap();
@@ -407,5 +459,37 @@ mod tests {
         // churn keeps its exact shape in quick mode, like Elastic
         s.kind = ScenarioKind::MemberChurnElastic;
         assert_eq!(s.sim_config(true).no_of_cloudlets, 64);
+    }
+
+    #[test]
+    fn dc_fault_shape_flows_into_sim_config() {
+        let mut s = spec();
+        s.kind = ScenarioKind::MegascaleDcFailover;
+        s.cloudlets = 1_000_000;
+        s.faults = Some(FaultShape {
+            dc_crash_at: Some(300.0),
+            dc_recover_at: Some(900.0),
+            dc_victim: Some(1),
+            retry_budget: 2,
+            retry_backoff_base: 0.25,
+            ..FaultShape::default()
+        });
+        let cfg = s.sim_config(false);
+        cfg.validate().unwrap();
+        let plan = cfg.fault_plan();
+        assert_eq!(plan.dc_crash_at, Some(300.0));
+        assert_eq!(plan.dc_recover_at, Some(900.0));
+        assert_eq!(plan.dc_victim, Some(1));
+        assert_eq!(plan.retry_budget, 2);
+        assert_eq!(plan.retry_backoff_base, 0.25);
+        assert!(!plan.is_noop());
+        // quick mode cuts the failover megascale as deep as the fault-free one
+        assert_eq!(s.sim_config(true).no_of_cloudlets, 20_000);
+        // the default shape injects nothing
+        assert!(SimConfig {
+            ..spec().sim_config(false)
+        }
+        .fault_plan()
+        .is_noop());
     }
 }

@@ -21,12 +21,13 @@
 //! outstanding and pulls the next window on each completion notice — the
 //! megascale multi-tenant scenario's streaming mode.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
+use crate::faults::{FaultEvent, FaultKind, FaultPlan, SharedFaultLog};
 use crate::sim::cloudlet::{Cloudlet, CloudletStatus};
-use crate::sim::cloudlet_store::{SharedStore, TenantId};
+use crate::sim::cloudlet_store::{CloudletId, SharedStore, TenantId};
 use crate::sim::des::SimCtx;
-use crate::sim::event::{EntityId, EventData, EventTag, SimEvent, SubmitEntry};
+use crate::sim::event::{DcFailNotice, EntityId, EventData, EventTag, SimEvent, SubmitEntry};
 use crate::sim::vm::Vm;
 
 /// Cloudlet → VM binding policy.
@@ -108,6 +109,13 @@ pub struct Broker {
     batch_submit: bool,
     /// Shared cloudlet arena (registration + results).
     store: SharedStore,
+    /// Re-dispatch budget per crashed cloudlet (0 = fail immediately).
+    retry_budget: u32,
+    /// First-retry delay in virtual seconds; doubles per attempt
+    /// (exact power-of-two multiply, bit-reproducible).
+    retry_backoff_base: f64,
+    /// Shared fault log for rebind / retry-exhausted events.
+    fault_log: Option<SharedFaultLog>,
     // --- runtime state ---
     /// Successfully created VMs.
     pub created_vms: Vec<Vm>,
@@ -118,12 +126,29 @@ pub struct Broker {
     /// Creation attempts per VM id (gives up after one full DC cycle).
     retry_attempts: HashMap<usize, usize>,
     pending_acks: usize,
+    /// Re-dispatch attempts per crashed cloudlet (dense id).
+    rebind_attempts: HashMap<u32, u32>,
+    /// VMs lost to a datacenter crash, with the dc they lived in; re-created
+    /// there on recovery.
+    lost_vms: Vec<(Vm, EntityId)>,
+    /// VM ids with a post-recovery re-create in flight (their acks must not
+    /// touch `pending_acks`).
+    recreating: HashSet<usize>,
+    /// Round-robin cursor over surviving VMs for crash re-binds.
+    rebind_cursor: usize,
     /// Cloudlets dispatched to datacenters.
     pub submitted: u64,
     /// Completion notices received back from datacenters.
     pub returned: u64,
+    /// Dispatched cloudlets returned by datacenter-crash fallout instead of
+    /// completion (each re-dispatch increments `submitted` again).
+    pub crash_returned: u64,
     /// Cloudlets that failed at bind time (never dispatched).
     pub failed_at_bind: u64,
+    /// Crash-failed cloudlets successfully re-bound to a surviving VM.
+    pub rebound: u64,
+    /// Crash-failed cloudlets dropped after the retry budget ran out.
+    pub retries_exhausted: u64,
     /// Binding search steps (workload accounting).
     pub bind_steps: u64,
     /// Events handled (cost accounting).
@@ -154,14 +179,24 @@ impl Broker {
             binder,
             batch_submit: true,
             store,
+            retry_budget: FaultPlan::default().retry_budget,
+            retry_backoff_base: FaultPlan::default().retry_backoff_base,
+            fault_log: None,
             created_vms: Vec::new(),
             vm_dc: HashMap::new(),
             retry_idx: HashMap::new(),
             retry_attempts: HashMap::new(),
             pending_acks: 0,
+            rebind_attempts: HashMap::new(),
+            lost_vms: Vec::new(),
+            recreating: HashSet::new(),
+            rebind_cursor: 0,
             submitted: 0,
             returned: 0,
+            crash_returned: 0,
             failed_at_bind: 0,
+            rebound: 0,
+            retries_exhausted: 0,
             bind_steps: 0,
             events_handled: 0,
         }
@@ -183,6 +218,21 @@ impl Broker {
     /// `true` groups submissions into one event per datacenter.
     pub fn with_batch_submit(mut self, batch: bool) -> Self {
         self.batch_submit = batch;
+        self
+    }
+
+    /// Deterministic crash-retry policy: each cloudlet failed by a
+    /// datacenter crash is re-bound at most `budget` times, with an
+    /// exponential backoff starting at `backoff_base` virtual seconds.
+    pub fn with_retry_policy(mut self, budget: u32, backoff_base: f64) -> Self {
+        self.retry_budget = budget;
+        self.retry_backoff_base = backoff_base;
+        self
+    }
+
+    /// Record rebind / retry-exhausted events into a shared fault log.
+    pub fn with_fault_log(mut self, log: SharedFaultLog) -> Self {
+        self.fault_log = Some(log);
         self
     }
 
@@ -224,7 +274,9 @@ impl Broker {
     /// Pull windows from the source until the in-flight target is met (or
     /// the source runs dry).
     fn refill_from_source(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
-        while !self.source_exhausted && self.submitted - self.returned < self.inflight_target {
+        while !self.source_exhausted
+            && self.submitted - (self.returned + self.crash_returned) < self.inflight_target
+        {
             let mut window = Vec::new();
             let n = self
                 .source
@@ -314,6 +366,125 @@ impl Broker {
         }
     }
 
+    /// Exponential backoff for re-dispatch attempt `attempt` (1-based):
+    /// `base * 2^(attempt-1)`, an exact power-of-two multiply so every
+    /// retry instant is f64-bit-reproducible.
+    fn rebind_backoff(&self, attempt: u32) -> f64 {
+        let shift = attempt.saturating_sub(1).min(32);
+        self.retry_backoff_base * ((1u64 << shift) as f64)
+    }
+
+    /// Datacenter-crash fallout: drop the dead VMs from the live set, then
+    /// re-bind every failed entry to a surviving VM of this tenant under
+    /// the bounded retry budget. Exhausted entries land in the store's
+    /// per-tenant failed counters — they never vanish.
+    fn handle_dc_crash_notice(&mut self, notice: DcFailNotice, src: EntityId, self_id: EntityId, ctx: &mut SimCtx) {
+        for &dead in &notice.dead_vms {
+            let dead = dead as usize;
+            if let Some(pos) = self.created_vms.iter().position(|v| v.id == dead) {
+                let vm = self.created_vms.remove(pos);
+                self.vm_dc.remove(&vm.id);
+                self.lost_vms.push((vm, src));
+            }
+        }
+        self.crash_returned += notice.failed.len() as u64;
+        let mut exhausted: u64 = 0;
+        let mut rebound_now: u64 = 0;
+        {
+            let mut store = self.store.borrow_mut();
+            // bucket re-binds by (backoff delay, datacenter), first-touch
+            // order, so re-dispatch events stay batched and deterministic
+            let mut order: Vec<(u64, EntityId)> = Vec::new();
+            let mut buckets: HashMap<(u64, EntityId), Vec<SubmitEntry>> = HashMap::new();
+            for mut e in notice.failed {
+                let attempts = {
+                    let a = self.rebind_attempts.entry(e.id).or_insert(0);
+                    *a += 1;
+                    *a
+                };
+                if attempts > self.retry_budget || self.created_vms.is_empty() {
+                    // the crash already took it off the active gauge
+                    store.record_fail(CloudletId(e.id), e.tenant, false);
+                    store.record_retry_exhausted(e.tenant, 1);
+                    self.rebind_attempts.remove(&e.id);
+                    exhausted += 1;
+                    continue;
+                }
+                let delay = self.rebind_backoff(attempts);
+                let vm = &self.created_vms[self.rebind_cursor % self.created_vms.len()];
+                self.rebind_cursor += 1;
+                e.vm = vm.id as u32;
+                let dc = self.vm_dc[&vm.id];
+                let key = (delay.to_bits(), dc);
+                let batch = buckets.entry(key).or_insert_with(|| store.pool.acquire());
+                if batch.is_empty() {
+                    order.push(key);
+                }
+                batch.push(e);
+                rebound_now += 1;
+            }
+            for key in order {
+                let batch = buckets.remove(&key).expect("bucketed rebind");
+                let n = batch.len() as u64;
+                store.mark_dispatched(n);
+                store.record_rebound(self.tenant, n);
+                self.submitted += n;
+                self.rebound += n;
+                ctx.schedule(
+                    f64::from_bits(key.0),
+                    self_id,
+                    key.1,
+                    EventTag::CloudletSubmit,
+                    EventData::SubmitBatch(batch),
+                );
+            }
+        }
+        if let Some(log) = &self.fault_log {
+            let now = ctx.clock();
+            if rebound_now > 0 {
+                log.borrow_mut().push(FaultEvent {
+                    at: now,
+                    kind: FaultKind::Rebind,
+                    member: self.tenant as u64,
+                    detail: format!("re-bound {rebound_now} from dc-{}", notice.dc),
+                });
+            }
+            if exhausted > 0 {
+                log.borrow_mut().push(FaultEvent {
+                    at: now,
+                    kind: FaultKind::RetryExhausted,
+                    member: self.tenant as u64,
+                    detail: format!(
+                        "dropped {exhausted} from dc-{} after budget {}",
+                        notice.dc, self.retry_budget
+                    ),
+                });
+            }
+        }
+        self.retries_exhausted += exhausted;
+        // crash fallout lowered the in-flight gauge: pull the next windows
+        if self.source.is_some() {
+            self.refill_from_source(self_id, ctx);
+        }
+    }
+
+    /// The crashed datacenter is back: re-create the VMs it took down.
+    fn handle_dc_recover_notice(&mut self, src: EntityId, self_id: EntityId, ctx: &mut SimCtx) {
+        let mut to_recreate: Vec<Vm> = Vec::new();
+        self.lost_vms.retain(|(vm, dc)| {
+            if *dc == src {
+                to_recreate.push(vm.clone());
+                false
+            } else {
+                true
+            }
+        });
+        for vm in to_recreate {
+            self.recreating.insert(vm.id);
+            ctx.schedule(0.0, self_id, src, EventTag::VmCreate, EventData::Vm(Box::new(vm)));
+        }
+    }
+
     /// Handle one event.
     pub fn process(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
         self.events_handled += 1;
@@ -322,6 +493,16 @@ impl Broker {
                 let EventData::VmAck(vm, ok) = ev.data else {
                     return;
                 };
+                if self.recreating.remove(&vm.id) {
+                    // post-recovery re-create: never part of the start-up
+                    // ack barrier, so leave `pending_acks` alone
+                    if ok {
+                        self.vm_dc.insert(vm.id, ev.src);
+                        self.created_vms.push(*vm);
+                        self.created_vms.sort_by_key(|v| v.id);
+                    }
+                    return;
+                }
                 if ok {
                     self.vm_dc.insert(vm.id, ev.src);
                     self.created_vms.push(*vm);
@@ -354,13 +535,22 @@ impl Broker {
                     }
                 }
             }
+            EventTag::DcCrashNotice => {
+                if let EventData::DcFail(notice) = ev.data {
+                    self.handle_dc_crash_notice(*notice, ev.src, self_id, ctx);
+                }
+            }
+            EventTag::DcRecoverNotice => {
+                self.handle_dc_recover_notice(ev.src, self_id, ctx);
+            }
             _ => {}
         }
     }
 
-    /// Cloudlets that reached a terminal state (returned or bind-failed).
+    /// Cloudlets that reached a terminal state (returned, bind-failed, or
+    /// dropped after the crash-retry budget).
     pub fn terminal_count(&self) -> u64 {
-        self.returned + self.failed_at_bind
+        self.returned + self.failed_at_bind + self.retries_exhausted
     }
 
     /// True when every cloudlet has come back.

@@ -47,6 +47,9 @@ struct Active {
     id: u32,
     tenant: u32,
     remaining_mi: f64,
+    /// Original length, kept so a crash can re-issue the cloudlet from
+    /// scratch (re-execution semantics: partial progress dies with the VM).
+    length_mi: u64,
     submit: f64,
     start: f64,
 }
@@ -143,6 +146,7 @@ impl VmScheduler {
                     id: w.id,
                     tenant: w.tenant,
                     remaining_mi: w.length_mi as f64,
+                    length_mi: w.length_mi,
                     submit: w.submit,
                     start: now,
                 });
@@ -165,6 +169,7 @@ impl VmScheduler {
                     id: entry.id,
                     tenant: entry.tenant,
                     remaining_mi: entry.length_mi as f64,
+                    length_mi: entry.length_mi,
                     submit: now,
                     start: now,
                 });
@@ -175,6 +180,7 @@ impl VmScheduler {
                         id: entry.id,
                         tenant: entry.tenant,
                         remaining_mi: entry.length_mi as f64,
+                        length_mi: entry.length_mi,
                         submit: now,
                         start: now,
                     });
@@ -225,6 +231,43 @@ impl VmScheduler {
     /// Drain records finished during `submit`-triggered updates.
     pub fn drain_pending_finished(&mut self) -> Vec<FinishedRec> {
         std::mem::take(&mut self.pending_finished)
+    }
+
+    /// Crash path: take *everything* — running and queued — off this
+    /// scheduler as fresh [`SubmitEntry`]s (full original length: partial
+    /// progress dies with the VM), sorted by dense id, leaving the
+    /// scheduler empty. `vm` stamps the entries with the dying VM's id so
+    /// the broker knows which binding failed.
+    ///
+    /// Deliberately does **not** advance the clock first: the running-set
+    /// *membership* at the crash instant is engine-invariant (state only
+    /// mutates at submit/completion events, which both engines process at
+    /// bit-identical times), whereas a partial `update(now)` would feed
+    /// engine-dependent intermediate floats into the drained set.
+    pub fn drain_all(&mut self, vm: u32) -> Vec<SubmitEntry> {
+        debug_assert!(
+            self.pending_finished.is_empty(),
+            "pending completions must be drained before a crash event"
+        );
+        let mut out: Vec<SubmitEntry> = self
+            .running
+            .drain(..)
+            .map(|r| SubmitEntry {
+                id: r.id,
+                vm,
+                tenant: r.tenant,
+                length_mi: r.length_mi,
+            })
+            .chain(self.waiting.drain(..).map(|w| SubmitEntry {
+                id: w.id,
+                vm,
+                tenant: w.tenant,
+                length_mi: w.length_mi,
+            }))
+            .collect();
+        out.sort_by_key(|e| e.id);
+        self.version += 1;
+        out
     }
 }
 
@@ -328,6 +371,24 @@ mod tests {
         assert!((fin[0].submit - 5.0).abs() < 1e-9);
         let fin = s.update(7.0);
         assert!((fin[0].start - 6.0).abs() < 1e-9, "queued start when PE freed");
+    }
+
+    #[test]
+    fn drain_all_takes_running_and_waiting_at_full_length() {
+        let mut s = VmScheduler::new(SchedulerKind::SpaceShared, 1000.0, 1);
+        s.submit_entry(se(5, 1000), 0.0);
+        s.submit_entry(se(2, 800), 0.0); // queued behind the single PE
+        s.update(0.5); // id 5 half done — progress must not survive
+        let v0 = s.version;
+        let drained = s.drain_all(9);
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].id, 2, "sorted by dense id");
+        assert_eq!(drained[1].id, 5);
+        assert_eq!(drained[1].length_mi, 1000, "full length, not remaining");
+        assert!(drained.iter().all(|e| e.vm == 9), "stamped with dead VM");
+        assert!(s.is_idle());
+        assert!(s.version > v0);
+        assert!(s.drain_all(9).is_empty(), "second drain finds nothing");
     }
 
     #[test]

@@ -81,6 +81,8 @@ struct TenantAgg {
     registered: u64,
     completed: u64,
     failed: u64,
+    rebound: u64,
+    retries_exhausted: u64,
     buckets: Vec<u64>,
 }
 
@@ -90,6 +92,8 @@ impl TenantAgg {
             registered: 0,
             completed: 0,
             failed: 0,
+            rebound: 0,
+            retries_exhausted: 0,
             buckets: vec![0; DIGEST_BUCKETS],
         }
     }
@@ -133,8 +137,14 @@ pub struct TenantReport {
     pub registered: u64,
     /// Cloudlets completed successfully.
     pub completed: u64,
-    /// Cloudlets failed (at bind or at dispatch).
+    /// Cloudlets failed (at bind, at dispatch, or after the crash-retry
+    /// budget ran out — retries-exhausted cloudlets count here too).
     pub failed: u64,
+    /// Crash-failed cloudlets re-bound to a surviving VM (a cloudlet
+    /// re-bound twice counts twice).
+    pub rebound: u64,
+    /// Crash-failed cloudlets dropped after the retry budget ran out.
+    pub retries_exhausted: u64,
     /// Exact turnaround sum, folded from per-VM accumulators in VM-id
     /// order (bit-deterministic across tenant interleavings).
     pub sum_turnaround: f64,
@@ -258,6 +268,27 @@ impl CloudletStore {
         }
     }
 
+    /// Take `n` cloudlets off the in-flight gauge because their datacenter
+    /// crashed. Not a terminal record: the broker either re-dispatches them
+    /// (via [`CloudletStore::mark_dispatched`]) or fails them (via
+    /// [`CloudletStore::record_fail`] with `was_dispatched = false`).
+    pub fn record_crash_interrupt(&mut self, n: u64) {
+        debug_assert!(self.active_now >= n, "crash interrupt exceeds in-flight");
+        self.active_now -= n;
+    }
+
+    /// Count `n` crash-failed cloudlets of `tenant` as re-bound.
+    pub fn record_rebound(&mut self, tenant: TenantId, n: u64) {
+        self.tenants.entry(tenant).or_insert_with(TenantAgg::new).rebound += n;
+    }
+
+    /// Count `n` crash-failed cloudlets of `tenant` as dropped with their
+    /// retry budget exhausted (the caller also records the terminal
+    /// failure via [`CloudletStore::record_fail`]).
+    pub fn record_retry_exhausted(&mut self, tenant: TenantId, n: u64) {
+        self.tenants.entry(tenant).or_insert_with(TenantAgg::new).retries_exhausted += n;
+    }
+
     /// Record a completion with the scheduler's exact virtual-time stamps.
     pub fn record_finish(
         &mut self,
@@ -373,6 +404,8 @@ impl CloudletStore {
                     registered: agg.registered,
                     completed: agg.completed,
                     failed: agg.failed,
+                    rebound: agg.rebound,
+                    retries_exhausted: agg.retries_exhausted,
                     sum_turnaround: sum,
                     mean_turnaround: if count > 0 { sum / count as f64 } else { 0.0 },
                     p50_turnaround: digest_quantile(&agg.buckets, agg.completed, 0.50),
@@ -489,6 +522,35 @@ mod tests {
         s.mark_dispatched(2);
         assert_eq!(s.active_now(), 6);
         assert_eq!(s.peak_active(), 10, "peak is the high-water mark, not current");
+    }
+
+    #[test]
+    fn crash_interrupt_and_retry_accounting_conserves() {
+        let mut s = CloudletStore::new(RetentionMode::Streaming);
+        let mut ids = Vec::new();
+        for i in 0..4usize {
+            ids.push(s.register(&sample_cloudlet(i, Some(0), CloudletStatus::Queued), 1));
+        }
+        s.mark_dispatched(4);
+        // the datacenter crashes with all four in flight
+        s.record_crash_interrupt(4);
+        assert_eq!(s.active_now(), 0, "crash drains the in-flight gauge");
+        // broker re-binds three, drops one with its budget exhausted
+        s.record_rebound(1, 3);
+        s.mark_dispatched(3);
+        s.record_retry_exhausted(1, 1);
+        s.record_fail(ids[3], 1, false);
+        for (i, id) in ids.iter().take(3).enumerate() {
+            s.record_finish(*id, 1, 0, 0.0, 0.0, 1.0 + i as f64);
+        }
+        let rep = &s.tenant_reports()[0];
+        assert_eq!(rep.registered, 4);
+        assert_eq!(rep.completed, 3);
+        assert_eq!(rep.failed, 1, "exhausted retries land in failed");
+        assert_eq!(rep.rebound, 3);
+        assert_eq!(rep.retries_exhausted, 1);
+        assert_eq!(rep.completed + rep.failed, rep.registered, "nothing vanishes");
+        assert_eq!(s.active_now(), 0);
     }
 
     #[test]

@@ -21,10 +21,11 @@
 
 use std::collections::{HashMap, HashSet};
 
+use crate::faults::{FaultEvent, FaultKind, SharedFaultLog};
 use crate::sim::cloudlet_scheduler::{FinishedRec, SchedulerKind, VmScheduler};
 use crate::sim::cloudlet_store::{CloudletId, CloudletStore, RetentionMode, SharedStore};
 use crate::sim::des::{EngineMode, SimCtx};
-use crate::sim::event::{EntityId, EventData, EventTag, SimEvent};
+use crate::sim::event::{DcFailNotice, EntityId, EventData, EventTag, SimEvent};
 use crate::sim::host::Host;
 use crate::sim::queue::EventHandle;
 use crate::sim::vm::Vm;
@@ -49,6 +50,16 @@ pub struct Datacenter {
     pending_wakeup: HashMap<usize, EventHandle>,
     /// Shared cloudlet arena (all results land here).
     store: SharedStore,
+    /// False while crashed by the fault plan: VM creation is refused and
+    /// submissions bounce back to their broker as crash notices.
+    alive: bool,
+    /// Fault schedule for *this* datacenter: `(crash_at, recover_at)`.
+    fault: Option<(f64, Option<f64>)>,
+    /// Shared fault log (entries appended in dispatch order).
+    fault_log: Option<SharedFaultLog>,
+    /// Brokers to notify when this datacenter recovers, in the order
+    /// their VMs died (deterministic first-touch over sorted VM ids).
+    crashed_owners: Vec<EntityId>,
     /// Per-event processing cost accounting (fed to the §3.3 model).
     pub events_handled: u64,
 }
@@ -70,6 +81,10 @@ impl Datacenter {
             vm_owner: HashMap::new(),
             pending_wakeup: HashMap::new(),
             store: CloudletStore::shared(RetentionMode::Retained),
+            alive: true,
+            fault: None,
+            fault_log: None,
+            crashed_owners: Vec::new(),
             events_handled: 0,
         }
     }
@@ -92,11 +107,60 @@ impl Datacenter {
         self
     }
 
+    /// Schedule this datacenter to crash at `crash_at` (virtual seconds)
+    /// and, optionally, to come back at `recover_at`.
+    pub fn with_fault(mut self, crash_at: f64, recover_at: Option<f64>) -> Self {
+        self.fault = Some((crash_at, recover_at));
+        self
+    }
+
+    /// Share the simulation-wide fault log with this datacenter.
+    pub fn with_fault_log(mut self, log: SharedFaultLog) -> Self {
+        self.fault_log = Some(log);
+        self
+    }
+
+    /// Entity bring-up: arm the fault plan's crash/recover timers. They
+    /// are scheduled here — before any broker entity starts — so their
+    /// sequence numbers sort ahead of every same-instant completion in
+    /// both engine modes, making the drained in-flight set engine-exact.
+    pub fn start(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
+        if let Some((crash_at, recover_at)) = self.fault {
+            ctx.schedule_at(crash_at, self_id, self_id, EventTag::DcCrash, EventData::None);
+            if let Some(r) = recover_at {
+                ctx.schedule_at(r, self_id, self_id, EventTag::DcRecover, EventData::None);
+            }
+        }
+    }
+
+    fn log_fault(&self, at: f64, kind: FaultKind, detail: String) {
+        if let Some(log) = &self.fault_log {
+            log.borrow_mut().push(FaultEvent {
+                at,
+                kind,
+                member: self.dc_id as u64,
+                detail,
+            });
+        }
+    }
+
     fn handle_vm_create(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
         let EventData::Vm(vm) = ev.data else {
             return;
         };
         let mut vm = *vm;
+        if !self.alive {
+            // a down datacenter refuses placements; the broker's
+            // create-retry cycle moves on to the next datacenter
+            ctx.schedule(
+                0.0,
+                self_id,
+                ev.src,
+                EventTag::VmCreateAck,
+                EventData::VmAck(Box::new(vm), false),
+            );
+            return;
+        }
         let ok = match self.policy.select_host(&self.hosts, &vm) {
             Some(h) if self.hosts[h].allocate(&vm) => {
                 vm.host = Some(h);
@@ -125,6 +189,30 @@ impl Datacenter {
             EventData::SubmitBatch(es) => es,
             _ => return,
         };
+        if !self.alive {
+            // down: bounce the whole batch back as crash fallout so the
+            // broker's re-bind/backoff path decides what happens next
+            let mut failed: Vec<_> = entries;
+            failed.sort_by_key(|e| e.id);
+            self.store
+                .borrow_mut()
+                .record_crash_interrupt(failed.len() as u64);
+            if !self.crashed_owners.contains(&owner) {
+                self.crashed_owners.push(owner);
+            }
+            ctx.schedule(
+                0.0,
+                self_id,
+                owner,
+                EventTag::DcCrashNotice,
+                EventData::DcFail(Box::new(DcFailNotice {
+                    dc: self.dc_id,
+                    dead_vms: Vec::new(),
+                    failed,
+                })),
+            );
+            return;
+        }
         let mut failed: u32 = 0;
         // VM ids that received work, in first-touch order (deterministic);
         // membership via the set so a megascale batch stays O(cloudlets)
@@ -281,6 +369,112 @@ impl Datacenter {
         }
     }
 
+    /// The fault plan's crash instant: every VM here dies, every in-flight
+    /// cloudlet fails back to its broker, and the datacenter refuses work
+    /// until [`Datacenter::handle_dc_recover`].
+    ///
+    /// Deterministic by construction: VMs drain in sorted-id order, owners
+    /// are notified in first-touch order over that same sweep, and the
+    /// per-VM scheduler state at this instant is engine-invariant (see
+    /// `VmScheduler::drain_all`). Cancelling the armed wake-ups keeps the
+    /// next-completion calendar clean; under polling, the stale
+    /// version-guarded timers simply find no scheduler and are discarded.
+    fn handle_dc_crash(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
+        self.alive = false;
+        let now = ctx.clock();
+        let mut vm_ids: Vec<usize> = self.schedulers.keys().copied().collect();
+        vm_ids.sort_unstable();
+        // group the fallout per owning broker, first-touch over sorted ids
+        let mut owners: Vec<EntityId> = Vec::new();
+        let mut fallout: HashMap<EntityId, DcFailNotice> = HashMap::new();
+        let mut total_failed = 0u64;
+        for &vm_id in &vm_ids {
+            let owner = self.vm_owner[&vm_id];
+            let drained = self
+                .schedulers
+                .get_mut(&vm_id)
+                .expect("sorted sweep")
+                .drain_all(vm_id as u32);
+            total_failed += drained.len() as u64;
+            if !fallout.contains_key(&owner) {
+                owners.push(owner);
+                fallout.insert(
+                    owner,
+                    DcFailNotice {
+                        dc: self.dc_id,
+                        dead_vms: Vec::new(),
+                        failed: Vec::new(),
+                    },
+                );
+            }
+            let notice = fallout.get_mut(&owner).expect("just inserted");
+            notice.dead_vms.push(vm_id as u32);
+            notice.failed.extend(drained);
+        }
+        // interrupted work leaves the in-flight gauge without a terminal
+        // record — it re-enters through the broker's re-bind path
+        self.store.borrow_mut().record_crash_interrupt(total_failed);
+        // disarm every next-completion wake-up (never dispatched, never
+        // counted); polling's stale tokens die on the missing scheduler
+        for (_, h) in self.pending_wakeup.drain() {
+            ctx.cancel(h);
+        }
+        // free host capacity: the dead VMs are gone for good
+        for &vm_id in &vm_ids {
+            let vm = &self.vms[&vm_id];
+            if let Some(h) = vm.host {
+                self.hosts[h].deallocate(vm);
+            }
+        }
+        self.schedulers.clear();
+        self.vms.clear();
+        self.vm_owner.clear();
+        self.log_fault(
+            now,
+            FaultKind::DcCrash,
+            format!(
+                "failed {total_failed} in-flight across {} vms",
+                vm_ids.len()
+            ),
+        );
+        for owner in owners {
+            if !self.crashed_owners.contains(&owner) {
+                self.crashed_owners.push(owner);
+            }
+            let mut notice = fallout.remove(&owner).expect("grouped above");
+            notice.failed.sort_by_key(|e| e.id);
+            ctx.schedule(
+                0.0,
+                self_id,
+                owner,
+                EventTag::DcCrashNotice,
+                EventData::DcFail(Box::new(notice)),
+            );
+        }
+    }
+
+    /// The fault plan's recovery instant: accept work again and tell every
+    /// broker whose VMs died here that placements are possible once more.
+    fn handle_dc_recover(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
+        self.alive = true;
+        let now = ctx.clock();
+        let owners = std::mem::take(&mut self.crashed_owners);
+        self.log_fault(
+            now,
+            FaultKind::DcRecover,
+            format!("notified {} brokers", owners.len()),
+        );
+        for owner in owners {
+            ctx.schedule(
+                0.0,
+                self_id,
+                owner,
+                EventTag::DcRecoverNotice,
+                EventData::None,
+            );
+        }
+    }
+
     /// Handle one event (called by the scenario entity dispatcher).
     pub fn process(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
         self.events_handled += 1;
@@ -288,6 +482,8 @@ impl Datacenter {
             EventTag::VmCreate => self.handle_vm_create(self_id, ev, ctx),
             EventTag::CloudletSubmit => self.handle_cloudlet_submit(self_id, ev, ctx),
             EventTag::VmProcessingUpdate => self.handle_update(self_id, ev, ctx),
+            EventTag::DcCrash => self.handle_dc_crash(self_id, ctx),
+            EventTag::DcRecover => self.handle_dc_recover(self_id, ctx),
             _ => {}
         }
     }

@@ -45,10 +45,34 @@ pub enum EventTag {
     /// this is the version-guarded periodic update; under next-completion
     /// scheduling it is the single armed wake-up per VM.
     VmProcessingUpdate,
+    /// Internal datacenter timer: the fault plan's crash instant.
+    DcCrash,
+    /// Internal datacenter timer: the fault plan's recovery instant.
+    DcRecover,
+    /// Datacenter→broker: the datacenter crashed (or bounced a submission
+    /// while down); the payload carries the dead VMs and failed entries.
+    DcCrashNotice,
+    /// Datacenter→broker: the crashed datacenter is back online.
+    DcRecoverNotice,
     /// Entity bring-up.
     Start,
     /// End of simulation marker.
     End,
+}
+
+/// Payload of a [`EventTag::DcCrashNotice`]: which of the receiving
+/// broker's VMs died with the datacenter and which in-flight entries
+/// failed. Boxed in [`EventData`] so the hot-loop event stays small.
+#[derive(Debug, Clone)]
+pub struct DcFailNotice {
+    /// Crashed datacenter id.
+    pub dc: usize,
+    /// The receiving broker's VMs that died (sorted by id; empty when a
+    /// submission merely bounced off an already-down datacenter).
+    pub dead_vms: Vec<u32>,
+    /// In-flight entries that failed, sorted by dense id. `vm` still
+    /// names the dead VM; the broker re-binds it before re-dispatch.
+    pub failed: Vec<SubmitEntry>,
 }
 
 /// Event payloads.
@@ -70,6 +94,8 @@ pub enum EventData {
     /// Scheduler update token `(vm_id, version)` — allocation-free, the
     /// hot tag of the DES inner loop.
     UpdateToken(usize, u64),
+    /// Datacenter crash fallout (see [`DcFailNotice`]).
+    DcFail(Box<DcFailNotice>),
 }
 
 /// A scheduled simulation event.

@@ -14,7 +14,11 @@
 //! submit/completion instants, the solo run's per-tenant stats are
 //! bit-identical to the combined run's — the multi-tenant referee.
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use crate::config::{CloudletDistribution, SimConfig};
+use crate::faults::{FaultEvent, FaultPlan, SharedFaultLog};
 use crate::sim::broker::{Broker, CloudletBinder, CloudletSource, RoundRobinBinder};
 use crate::sim::cloudlet::Cloudlet;
 use crate::sim::cloudlet_store::{CloudletStore, RetentionMode, TenantId, TenantReport};
@@ -36,8 +40,11 @@ pub enum CloudEntity {
 
 impl Entity for CloudEntity {
     fn start(&mut self, self_id: EntityId, ctx: &mut SimCtx) {
-        if let CloudEntity::Broker(b) = self {
-            b.start(self_id, ctx);
+        match self {
+            // datacenters start first (smaller entity ids), so fault timers
+            // outrank any same-instant completion in both DES engines
+            CloudEntity::Dc(d) => d.start(self_id, ctx),
+            CloudEntity::Broker(b) => b.start(self_id, ctx),
         }
     }
     fn process(&mut self, self_id: EntityId, ev: SimEvent, ctx: &mut SimCtx) {
@@ -252,6 +259,12 @@ pub struct MultiTenantResult {
     pub peak_heap_bytes: u64,
     /// Successfully created VMs across all brokers.
     pub created_vms: usize,
+    /// Crash-failed cloudlets re-bound to surviving VMs (all brokers).
+    pub rebound: u64,
+    /// Crash-failed cloudlets dropped after the retry budget (all brokers).
+    pub retries_exhausted: u64,
+    /// Shared fault log, in processing order (empty when no fault plan).
+    pub fault_events: Vec<FaultEvent>,
 }
 
 /// Per-tenant share of an `n`-cloudlet workload (remainder spread over the
@@ -336,7 +349,7 @@ pub fn run_multitenant_scenario(
     vm_variable: bool,
     mode: RetentionMode,
 ) -> MultiTenantResult {
-    run_multitenant_inner(cfg, tenants, vm_variable, mode, None)
+    run_multitenant_inner(cfg, tenants, vm_variable, mode, None, false, None)
 }
 
 /// Referee decomposition: run only `tenant`'s slice of the same workload
@@ -349,7 +362,36 @@ pub fn run_single_tenant_slice(
     vm_variable: bool,
     mode: RetentionMode,
 ) -> MultiTenantResult {
-    run_multitenant_inner(cfg, tenants, vm_variable, mode, Some(tenant))
+    run_multitenant_inner(cfg, tenants, vm_variable, mode, Some(tenant), false, None)
+}
+
+/// Multi-tenant run with *partitioned* datacenters (tenant `t` submits only
+/// to datacenters with `dc % tenants == t`) and the config's fault plan
+/// armed: the victim datacenter crashes mid-run, its in-flight cloudlets
+/// fail, and each tenant's broker re-binds its own under the deterministic
+/// retry/backoff policy. Partitioning is what makes the recovery referee
+/// sharp: a datacenter crash can only touch the single tenant that owns it.
+pub fn run_multitenant_faulted(
+    cfg: &SimConfig,
+    tenants: u32,
+    vm_variable: bool,
+    mode: RetentionMode,
+) -> MultiTenantResult {
+    let plan = cfg.fault_plan();
+    run_multitenant_inner(cfg, tenants, vm_variable, mode, None, true, Some(&plan))
+}
+
+/// Fault-free partitioned solo slice: the recovery referee's twin for
+/// tenants whose datacenters never crashed. Must be bit-identical to the
+/// faulted combined run's slice for every unaffected tenant.
+pub fn run_single_tenant_slice_partitioned(
+    cfg: &SimConfig,
+    tenants: u32,
+    tenant: TenantId,
+    vm_variable: bool,
+    mode: RetentionMode,
+) -> MultiTenantResult {
+    run_multitenant_inner(cfg, tenants, vm_variable, mode, Some(tenant), true, None)
 }
 
 fn run_multitenant_inner(
@@ -358,15 +400,35 @@ fn run_multitenant_inner(
     vm_variable: bool,
     mode: RetentionMode,
     only: Option<TenantId>,
+    partition_dcs: bool,
+    fault: Option<&FaultPlan>,
 ) -> MultiTenantResult {
     assert!(tenants >= 1, "need at least one tenant");
+    if partition_dcs {
+        assert!(
+            cfg.no_of_datacenters >= tenants as usize,
+            "partitioned datacenters need at least one datacenter per tenant"
+        );
+    }
+    let fault_log: Option<SharedFaultLog> = fault.map(|_| Rc::new(RefCell::new(Vec::new())));
+    let victim = fault.and_then(|p| p.dc_crash_victim(cfg.no_of_datacenters));
     let store = CloudletStore::shared(mode);
     let mut sim: Simulation<CloudEntity> = Simulation::with_queue(make_queue(cfg.event_queue));
     let mut dc_ids = Vec::new();
     for d in 0..cfg.no_of_datacenters {
-        let dc = Datacenter::new(d, make_hosts(cfg), cfg.scheduler)
+        let mut dc = Datacenter::new(d, make_hosts(cfg), cfg.scheduler)
             .with_engine(cfg.des_engine)
             .with_store(store.clone());
+        if victim == Some(d) {
+            let plan = fault.expect("victim implies a fault plan");
+            dc = dc.with_fault(
+                plan.dc_crash_at.expect("victim implies a crash instant"),
+                plan.dc_recover_at,
+            );
+        }
+        if let Some(log) = &fault_log {
+            dc = dc.with_fault_log(log.clone());
+        }
         dc_ids.push(sim.add_entity(CloudEntity::Dc(dc)));
     }
     let all_vms = make_vms(cfg, vm_variable);
@@ -377,6 +439,16 @@ fn run_multitenant_inner(
                 continue;
             }
         }
+        let tenant_dcs: Vec<EntityId> = if partition_dcs {
+            dc_ids
+                .iter()
+                .enumerate()
+                .filter(|(d, _)| (*d as u32) % tenants == t)
+                .map(|(_, &id)| id)
+                .collect()
+        } else {
+            dc_ids.clone()
+        };
         let vm_reqs: Vec<Vm> = all_vms
             .iter()
             .filter(|v| (v.id as u32) % tenants == t)
@@ -390,10 +462,10 @@ fn run_multitenant_inner(
         let window = vm_reqs.len() * 32;
         let inflight = (window * 2) as u64;
         let source = TenantWorkload::new(cfg, tenants, t, quota, window);
-        let broker = Broker::new(
+        let mut broker = Broker::new(
             t,
             t as usize,
-            dc_ids.clone(),
+            tenant_dcs,
             vm_reqs,
             Vec::new(),
             Box::<RoundRobinBinder>::default(),
@@ -401,6 +473,12 @@ fn run_multitenant_inner(
         )
         .with_batch_submit(cfg.des_engine == EngineMode::NextCompletion)
         .with_source(Box::new(source), inflight);
+        if let Some(plan) = fault {
+            broker = broker.with_retry_policy(plan.retry_budget, plan.retry_backoff_base);
+        }
+        if let Some(log) = &fault_log {
+            broker = broker.with_fault_log(log.clone());
+        }
         broker_ids.push(sim.add_entity(CloudEntity::Broker(broker)));
     }
 
@@ -408,12 +486,16 @@ fn run_multitenant_inner(
 
     let mut submitted = 0u64;
     let mut created_vms = 0usize;
+    let mut rebound = 0u64;
+    let mut retries_exhausted = 0u64;
     for id in broker_ids {
         let CloudEntity::Broker(b) = sim.entity(id) else {
             unreachable!()
         };
         submitted += b.submitted;
         created_vms += b.created_vms.len();
+        rebound += b.rebound;
+        retries_exhausted += b.retries_exhausted;
     }
     let s = store.borrow();
     MultiTenantResult {
@@ -426,6 +508,11 @@ fn run_multitenant_inner(
         peak_active: s.peak_active(),
         peak_heap_bytes: s.peak_heap_bytes(),
         created_vms,
+        rebound,
+        retries_exhausted,
+        fault_events: fault_log
+            .map(|log| log.borrow().clone())
+            .unwrap_or_default(),
     }
 }
 
@@ -629,6 +716,90 @@ mod tests {
             lean.peak_heap_bytes,
             fat.peak_heap_bytes
         );
+    }
+
+    fn faulted_cfg() -> SimConfig {
+        SimConfig {
+            no_of_datacenters: 6,
+            hosts_per_datacenter: 2,
+            pes_per_host: 8,
+            no_of_vms: 12,
+            no_of_cloudlets: 2000,
+            cloudlet_length_mi: 1000,
+            dc_crash_at: Some(20.0),
+            dc_recover_at: Some(60.0),
+            dc_victim: Some(1),
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn dc_crash_rebinds_and_conserves_every_cloudlet() {
+        // 2 tenants × 3 datacenters each; dc 1 (tenant 1's) crashes at t=20
+        let r = run_multitenant_faulted(&faulted_cfg(), 2, false, RetentionMode::Streaming);
+        use crate::faults::FaultKind;
+        let crashes = r.fault_events.iter().filter(|e| e.kind == FaultKind::DcCrash).count();
+        let recovers = r.fault_events.iter().filter(|e| e.kind == FaultKind::DcRecover).count();
+        assert_eq!(crashes, 1, "{:?}", r.fault_events);
+        assert_eq!(recovers, 1);
+        assert!(r.rebound > 0, "in-flight cloudlets must re-bind to survivors");
+        for t in &r.tenants {
+            assert_eq!(
+                t.completed + t.failed,
+                t.registered,
+                "tenant {}: cloudlets must never vanish",
+                t.tenant
+            );
+        }
+        assert_eq!(r.completed + r.failed, 2000);
+        let victim_tenant = &r.tenants[1];
+        assert!(victim_tenant.rebound > 0, "the crash hits tenant 1's datacenter");
+        assert_eq!(r.tenants[0].rebound, 0, "tenant 0 never touches dc 1");
+    }
+
+    #[test]
+    fn dc_crash_fault_log_is_bit_identical_across_reruns() {
+        use crate::faults::log_fingerprint;
+        let a = run_multitenant_faulted(&faulted_cfg(), 2, false, RetentionMode::Streaming);
+        let b = run_multitenant_faulted(&faulted_cfg(), 2, false, RetentionMode::Streaming);
+        assert!(!a.fault_events.is_empty());
+        assert_eq!(log_fingerprint(&a.fault_events), log_fingerprint(&b.fault_events));
+        assert_eq!(a.sim_clock.to_bits(), b.sim_clock.to_bits());
+    }
+
+    #[test]
+    fn unaffected_tenant_slice_is_bit_exact_despite_the_crash() {
+        // dc 1 belongs to tenant 1; tenant 0's fault-free partitioned solo
+        // run must match the faulted combined run bit-for-bit
+        let cfg = faulted_cfg();
+        let faulted = run_multitenant_faulted(&cfg, 2, false, RetentionMode::Streaming);
+        let solo = run_single_tenant_slice_partitioned(&cfg, 2, 0, false, RetentionMode::Streaming);
+        let (c, s) = (&faulted.tenants[0], &solo.tenants[0]);
+        assert_eq!(c.registered, s.registered);
+        assert_eq!(c.completed, s.completed);
+        assert_eq!(c.failed, s.failed);
+        assert_eq!(
+            c.sum_turnaround.to_bits(),
+            s.sum_turnaround.to_bits(),
+            "faults must move only the victim tenant's data"
+        );
+        assert_eq!(c.mean_turnaround.to_bits(), s.mean_turnaround.to_bits());
+        assert_eq!(c.p50_turnaround.to_bits(), s.p50_turnaround.to_bits());
+        assert_eq!(c.p99_turnaround.to_bits(), s.p99_turnaround.to_bits());
+    }
+
+    #[test]
+    fn retry_budget_zero_fails_interrupted_cloudlets() {
+        let cfg = SimConfig {
+            retry_budget: 0,
+            dc_recover_at: None,
+            ..faulted_cfg()
+        };
+        let r = run_multitenant_faulted(&cfg, 2, false, RetentionMode::Streaming);
+        assert_eq!(r.rebound, 0, "budget 0 means no re-binds");
+        assert!(r.retries_exhausted > 0, "interrupted cloudlets land in failed");
+        assert_eq!(r.completed + r.failed, 2000, "still conserved");
+        assert_eq!(r.tenants[1].retries_exhausted, r.retries_exhausted);
     }
 
     #[test]

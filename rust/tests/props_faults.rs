@@ -19,12 +19,19 @@
 //! Uses the in-repo `util::proptest` harness (the offline vendor set has
 //! no proptest crate).
 
-use cloud2sim::faults::{FaultPlan, SpeculativeExecution};
+use cloud2sim::config::SimConfig;
+use cloud2sim::faults::{log_fingerprint, FaultKind, FaultPlan, SpeculativeExecution};
 use cloud2sim::grid::backend::BackendProfile;
 use cloud2sim::grid::cluster::{GridCluster, GridConfig};
 use cloud2sim::grid::serialize::InMemoryFormat;
 use cloud2sim::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
 use cloud2sim::mapreduce::{Corpus, CorpusConfig, JobConfig, MapReduceEngine};
+use cloud2sim::sim::cloudlet_store::{RetentionMode, TenantReport};
+use cloud2sim::sim::des::EngineMode;
+use cloud2sim::sim::queue::QueueKind;
+use cloud2sim::sim::scenario::{
+    run_multitenant_faulted, run_single_tenant_slice_partitioned, MultiTenantResult,
+};
 use cloud2sim::util::proptest::{forall, Gen};
 
 /// One randomized faulted-job shape. The fuzzed fault axes: crash point
@@ -84,6 +91,7 @@ impl Case {
             } else {
                 SpeculativeExecution::Off
             },
+            ..FaultPlan::default()
         }
     }
 
@@ -92,6 +100,193 @@ impl Case {
     fn chunks(&self) -> usize {
         self.files * ((self.lines + self.chunk_lines - 1) / self.chunk_lines)
     }
+}
+
+/// One randomized datacenter-crash shape for the DES fault model. The
+/// fuzzed axes: tenant count, datacenters per tenant, VM/cloudlet
+/// population, cloudlet length, crash/recover instants, explicit-vs-drawn
+/// victim, retry budget, backoff base and fault seed.
+#[derive(Debug, Clone)]
+struct DcCase {
+    tenants: u32,
+    dcs_per_tenant: usize,
+    vms_per_tenant: usize,
+    cloudlets: usize,
+    length_mi: u64,
+    crash_at: f64,
+    recover_after: f64,
+    explicit_victim: Option<usize>,
+    retry_budget: u32,
+    backoff_base: f64,
+    fault_seed: u64,
+}
+
+impl DcCase {
+    fn draw(g: &mut Gen) -> Self {
+        let tenants = g.usize(2..5) as u32;
+        Self {
+            tenants,
+            // 1 dc/tenant is the everything-lost edge; >1 leaves survivors
+            dcs_per_tenant: g.usize(1..4),
+            vms_per_tenant: g.usize(6..12),
+            cloudlets: g.usize(200..600),
+            length_mi: g.u64(500..2000),
+            crash_at: g.f64(1.0..50.0),
+            recover_after: g.f64(5.0..50.0),
+            explicit_victim: None, // filled after dcs is known
+            retry_budget: [0u32, 1, 3][g.usize(0..3)],
+            backoff_base: g.f64(0.1..2.0),
+            fault_seed: g.u64(0..u64::MAX),
+        }
+    }
+
+    fn dcs(&self) -> usize {
+        self.tenants as usize * self.dcs_per_tenant
+    }
+
+    fn cfg(&self, engine: EngineMode, queue: QueueKind) -> SimConfig {
+        SimConfig {
+            no_of_datacenters: self.dcs(),
+            hosts_per_datacenter: 2,
+            pes_per_host: 8,
+            no_of_vms: self.tenants as usize * self.vms_per_tenant,
+            no_of_cloudlets: self.cloudlets,
+            cloudlet_length_mi: self.length_mi,
+            dc_crash_at: Some(self.crash_at),
+            dc_recover_at: Some(self.crash_at + self.recover_after),
+            dc_victim: self.explicit_victim,
+            retry_budget: self.retry_budget,
+            retry_backoff_base: self.backoff_base,
+            fault_seed: self.fault_seed,
+            des_engine: engine,
+            event_queue: queue,
+            ..SimConfig::default()
+        }
+    }
+}
+
+/// Bit-stable snapshot of one tenant's whole statistics block.
+fn tenant_bits(t: &TenantReport) -> (u32, u64, u64, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        t.tenant,
+        t.registered,
+        t.completed,
+        t.failed,
+        t.rebound,
+        t.retries_exhausted,
+        t.sum_turnaround.to_bits(),
+        t.mean_turnaround.to_bits(),
+        t.p50_turnaround.to_bits(),
+        t.p99_turnaround.to_bits(),
+    )
+}
+
+fn conserves(r: &MultiTenantResult, case: &DcCase) {
+    for t in &r.tenants {
+        assert_eq!(
+            t.completed + t.failed,
+            t.registered,
+            "tenant {} leaked cloudlets: {case:?}",
+            t.tenant
+        );
+    }
+    assert_eq!(
+        r.completed + r.failed,
+        case.cloudlets as u64,
+        "cloudlets vanished: {case:?}"
+    );
+}
+
+#[test]
+fn dc_crash_fault_logs_are_bit_identical_across_engines_and_queues() {
+    forall("dc-crash-determinism", 24, |g: &mut Gen| {
+        let mut case = DcCase::draw(g);
+        if g.bool(0.5) {
+            case.explicit_victim = Some(g.usize(0..case.dcs()));
+        }
+        let a = run_multitenant_faulted(
+            &case.cfg(EngineMode::NextCompletion, QueueKind::Indexed),
+            case.tenants,
+            false,
+            RetentionMode::Streaming,
+        );
+        let b = run_multitenant_faulted(
+            &case.cfg(EngineMode::NextCompletion, QueueKind::Heap),
+            case.tenants,
+            false,
+            RetentionMode::Streaming,
+        );
+        let c = run_multitenant_faulted(
+            &case.cfg(EngineMode::Polling, QueueKind::Heap),
+            case.tenants,
+            false,
+            RetentionMode::Streaming,
+        );
+        // one fault log, down to the bits, across queue AND engine
+        let fp = log_fingerprint(&a.fault_events);
+        assert_eq!(fp, log_fingerprint(&b.fault_events), "{case:?}");
+        assert_eq!(fp, log_fingerprint(&c.fault_events), "{case:?}");
+        // queues additionally agree on the final clock; the polling
+        // engine's clock is ordered, never behind
+        assert_eq!(a.sim_clock.to_bits(), b.sim_clock.to_bits(), "{case:?}");
+        assert!(a.sim_clock <= c.sim_clock, "{case:?}");
+        for ((x, y), z) in a.tenants.iter().zip(&b.tenants).zip(&c.tenants) {
+            assert_eq!(tenant_bits(x), tenant_bits(y), "{case:?}");
+            assert_eq!(tenant_bits(x), tenant_bits(z), "{case:?}");
+        }
+        // the crash always fires and logs exactly one crash + one recover
+        let crashes = a.fault_events.iter().filter(|e| e.kind == FaultKind::DcCrash).count();
+        let recovers = a.fault_events.iter().filter(|e| e.kind == FaultKind::DcRecover).count();
+        assert_eq!(crashes, 1, "{case:?}");
+        assert_eq!(recovers, 1, "{case:?}");
+        conserves(&a, &case);
+        if case.retry_budget == 0 {
+            // budget 0 never re-binds: interrupted work fails immediately
+            assert_eq!(a.rebound, 0, "{case:?}");
+        }
+    });
+}
+
+#[test]
+fn dc_crash_never_moves_an_unaffected_tenants_bits() {
+    forall("dc-crash-isolation", 24, |g: &mut Gen| {
+        let mut case = DcCase::draw(g);
+        if g.bool(0.5) {
+            case.explicit_victim = Some(g.usize(0..case.dcs()));
+        }
+        let cfg = case.cfg(EngineMode::NextCompletion, QueueKind::Indexed);
+        let victim = cfg
+            .fault_plan()
+            .dc_crash_victim(cfg.no_of_datacenters)
+            .expect("a victim always resolves");
+        let victim_tenant = (victim as u32) % case.tenants;
+        let faulted =
+            run_multitenant_faulted(&cfg, case.tenants, false, RetentionMode::Streaming);
+        conserves(&faulted, &case);
+        for t in &faulted.tenants {
+            if t.tenant == victim_tenant {
+                continue;
+            }
+            // the crash touched one tenant's datacenter partition only
+            assert_eq!(t.failed, 0, "{case:?}");
+            assert_eq!(t.rebound, 0, "{case:?}");
+            assert_eq!(t.retries_exhausted, 0, "{case:?}");
+            // and the fault-free solo twin reproduces the slice bit-exactly
+            let solo = run_single_tenant_slice_partitioned(
+                &cfg,
+                case.tenants,
+                t.tenant,
+                false,
+                RetentionMode::Streaming,
+            );
+            let twin = solo
+                .tenants
+                .iter()
+                .find(|r| r.tenant == t.tenant)
+                .expect("solo run keeps its tenant");
+            assert_eq!(tenant_bits(t), tenant_bits(twin), "{case:?}");
+        }
+    });
 }
 
 /// Everything the fault contracts cover, f64s captured as raw bits.
