@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Gate the transport-fault / split-brain recovery evidence.
+
+``mr_partition_splitbrain`` referees itself in-run: the worker-count
+rerun must reproduce the fault-log fingerprint and clock bits, and the
+fault-free twin must match every result statistic bit-for-bit — any
+drift hard-errors before a report exists. This gate re-asserts the
+*evidence of injection* from the JSON — deliveries were dropped and
+retried, the receiver deduplicated at least one duplicate, the partition
+cut and healed, the split-brain merge was recorded — so a silently
+defanged link-fault plan fails CI even when parity trivially holds.
+Given a second report from an independent run it also cross-checks the
+fingerprint and every deterministic quantity byte-for-byte.
+
+The pure core :func:`check_partition` takes the parsed report(s) and
+returns ``(lines, failures, events_doc)`` so ``ci/test_gates.py`` can
+unit-test the logic without touching disk.
+"""
+
+import argparse
+import json
+import sys
+
+
+def _scenario(report, name):
+    for s in report.get("scenarios", []):
+        if s.get("name") == name:
+            return s
+    return None
+
+
+def check_partition(report, rerun_report=None):
+    """Pure gate core: parsed report(s) -> (lines, failures, events_doc).
+
+    ``rerun_report`` is optional; when given it must contain the same
+    scenario and agree on the fingerprint, the virtual time and every
+    extra exactly (the run-twice determinism contract, re-checked here
+    on the transport surface specifically).
+    """
+    lines, failures = [], []
+    events_doc = {}
+
+    s = _scenario(report, "mr_partition_splitbrain")
+    if s is None:
+        failures.append("mr_partition_splitbrain missing from its report")
+        return lines, failures, events_doc
+
+    e = s.get("extras", {})
+    for key in (
+        "net_messages",
+        "net_retries",
+        "net_dropped",
+        "net_deduplicated",
+        "split_brain_merges",
+        "fault_events",
+    ):
+        if key in e:
+            lines.append(f"{key:<19}: {e[key]:.0f}")
+    if "partition_virtual_overhead_s" in e:
+        lines.append(
+            f"partition overhead : {e['partition_virtual_overhead_s']:.3f} s (virtual)"
+        )
+
+    if not e.get("net_retries", 0) > 0:
+        failures.append("lossy links must force at least one ack-timeout retry")
+    if not e.get("net_deduplicated", 0) >= 1:
+        failures.append("receiver-side dedup must catch at least one duplicate")
+    if not e.get("net_dropped", 0) > 0:
+        failures.append("the link-fault plan never dropped a delivery attempt")
+    if not e.get("split_brain_merges", 0) >= 1:
+        failures.append("no split-brain merge was recorded")
+    if not e.get("fault_fingerprint", 0) > 0:
+        failures.append("fault-log fingerprint evidence missing")
+    if not e.get("emitted_pairs", 0) > 0:
+        failures.append("referee parity evidence missing (emitted_pairs)")
+    if not e.get("sim_time_nofault_s", 0) > 0:
+        failures.append("the fault-free twin's virtual time is missing")
+    if e.get("partition_virtual_overhead_s", -1) < 0:
+        failures.append("the partition may not make the job faster than clean")
+
+    actions = [ev.get("action") for ev in s.get("scale_events", [])]
+    for needed in ("link-partition", "split-brain", "link-heal", "split-brain-merge"):
+        if needed not in actions:
+            failures.append(f"{needed} missing from the scale-event log: {actions}")
+
+    if rerun_report is not None:
+        r = _scenario(rerun_report, "mr_partition_splitbrain")
+        if r is None:
+            failures.append("mr_partition_splitbrain missing from the rerun report")
+        else:
+            if s.get("virtual_s") != r.get("virtual_s"):
+                failures.append(
+                    "virtual time drifted between runs: "
+                    f"{s.get('virtual_s')} vs {r.get('virtual_s')}"
+                )
+            re_extras = r.get("extras", {})
+            for key, val in e.items():
+                if re_extras.get(key) != val:
+                    failures.append(
+                        f"extra {key} drifted between runs: "
+                        f"{val} vs {re_extras.get(key)}"
+                    )
+            if s.get("scale_events") != r.get("scale_events"):
+                failures.append("the partition scale-event log drifted between runs")
+
+    events_doc["mr_partition_splitbrain"] = {
+        "scale_events": s.get("scale_events", []),
+        "extras": dict(e),
+    }
+    return lines, failures, events_doc
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument(
+        "report",
+        nargs="?",
+        default="BENCH_partition.json",
+        help="mr_partition_splitbrain report (default: %(default)s)",
+    )
+    p.add_argument(
+        "rerun",
+        nargs="?",
+        default=None,
+        help="optional second run of the same scenario for the byte-equality check",
+    )
+    p.add_argument(
+        "--events-out",
+        default="BENCH_partition_events.json",
+        help="where to write the transport fault-event artifact (default: %(default)s)",
+    )
+    args = p.parse_args(argv)
+    with open(args.report) as f:
+        report = json.load(f)
+    rerun_report = None
+    if args.rerun is not None:
+        with open(args.rerun) as f:
+            rerun_report = json.load(f)
+    lines, failures, events_doc = check_partition(report, rerun_report)
+    for line in lines:
+        print(line)
+    with open(args.events_out, "w") as f:
+        json.dump(events_doc, f, indent=2, sort_keys=True)
+    for failure in failures:
+        print(f"FAIL {failure}", file=sys.stderr)
+    if failures:
+        return 1
+    print("partition gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

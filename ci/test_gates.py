@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import gate_curve
 import gate_faults
 import gate_multitenant
+import gate_partition
 import gate_wordcount
 
 
@@ -412,6 +413,93 @@ class TestFaultGate(unittest.TestCase):
         _, failures, _ = gate_faults.check_faults(
             churn, straggler, {"scenarios": []}
         )
+        self.assertTrue(any("missing" in f for f in failures), failures)
+
+
+def partition_report(retries=42.0, dedup=7.0, dropped=31.0, merges=1.0,
+                     fingerprint=8.1e12, overhead=3.5, virtual_s=17.25,
+                     with_events=True):
+    actions = ["link-partition", "split-brain", "link-heal", "split-brain-merge"]
+    return {
+        "schema": "cloud2sim-bench/2",
+        "scenarios": [{
+            "name": "mr_partition_splitbrain",
+            "virtual_s": virtual_s,
+            "extras": {
+                "net_messages": 1200.0, "net_bytes": 4.2e6,
+                "net_retries": retries, "net_dropped": dropped,
+                "net_deduplicated": dedup, "split_brain_merges": merges,
+                "fault_fingerprint": fingerprint, "fault_events": 60.0,
+                "sim_time_nofault_s": virtual_s - overhead,
+                "partition_virtual_overhead_s": overhead,
+                "reduce_invocations": 900.0, "emitted_pairs": 48_000.0,
+            },
+            "scale_events": (
+                [{"at": 0.001 + i, "action": a, "instances_after": 2}
+                 for i, a in enumerate(actions)]
+                if with_events else []
+            ),
+        }],
+    }
+
+
+class TestPartitionGate(unittest.TestCase):
+    def test_passing_report(self):
+        lines, failures, doc = gate_partition.check_partition(partition_report())
+        self.assertEqual(failures, [])
+        self.assertIn("mr_partition_splitbrain", doc)
+        self.assertEqual(len(doc["mr_partition_splitbrain"]["scale_events"]), 4)
+        self.assertTrue(any("net_retries" in l for l in lines), lines)
+
+    def test_defanged_links_fail(self):
+        _, failures, _ = gate_partition.check_partition(
+            partition_report(retries=0.0, dedup=0.0, dropped=0.0)
+        )
+        self.assertTrue(any("retry" in f for f in failures), failures)
+        self.assertTrue(any("dedup" in f for f in failures), failures)
+        self.assertTrue(any("dropped" in f for f in failures), failures)
+
+    def test_missing_merge_fails(self):
+        _, failures, _ = gate_partition.check_partition(
+            partition_report(merges=0.0, with_events=False)
+        )
+        self.assertTrue(any("merge" in f for f in failures), failures)
+        self.assertTrue(
+            any("link-partition missing" in f for f in failures), failures
+        )
+
+    def test_missing_fingerprint_fails(self):
+        _, failures, _ = gate_partition.check_partition(
+            partition_report(fingerprint=0.0)
+        )
+        self.assertTrue(any("fingerprint" in f for f in failures), failures)
+
+    def test_negative_overhead_fails(self):
+        _, failures, _ = gate_partition.check_partition(
+            partition_report(overhead=-0.5)
+        )
+        self.assertTrue(any("faster" in f for f in failures), failures)
+
+    def test_rerun_agreement_passes(self):
+        _, failures, _ = gate_partition.check_partition(
+            partition_report(), partition_report()
+        )
+        self.assertEqual(failures, [])
+
+    def test_rerun_drift_fails(self):
+        _, failures, _ = gate_partition.check_partition(
+            partition_report(), partition_report(virtual_s=17.26)
+        )
+        self.assertTrue(any("drifted between runs" in f for f in failures), failures)
+        _, failures, _ = gate_partition.check_partition(
+            partition_report(), partition_report(retries=43.0)
+        )
+        self.assertTrue(
+            any("net_retries drifted" in f for f in failures), failures
+        )
+
+    def test_missing_scenario(self):
+        _, failures, _ = gate_partition.check_partition({"scenarios": []})
         self.assertTrue(any("missing" in f for f in failures), failures)
 
 

@@ -324,6 +324,11 @@ fn action_code(action: &str) -> f64 {
         "rejoin" => 4.0,
         "dc-crash" => 5.0,
         "dc-recover" => 6.0,
+        "unreachable" => 7.0,
+        "link-partition" => 8.0,
+        "link-heal" => 9.0,
+        "split-brain" => 10.0,
+        "split-brain-merge" => 11.0,
         _ => 0.0,
     }
 }
@@ -428,7 +433,19 @@ mod tests {
 
     #[test]
     fn every_fault_surface_action_has_a_distinct_code() {
-        let actions = ["out", "in", "crash", "rejoin", "dc-crash", "dc-recover"];
+        let actions = [
+            "out",
+            "in",
+            "crash",
+            "rejoin",
+            "dc-crash",
+            "dc-recover",
+            "unreachable",
+            "link-partition",
+            "link-heal",
+            "split-brain",
+            "split-brain-merge",
+        ];
         for (i, a) in actions.iter().enumerate() {
             assert_eq!(action_code(a), (i + 1) as f64);
             for b in actions.iter().skip(i + 1) {

@@ -413,6 +413,30 @@ pub struct SimConfig {
     /// Base of the exponential re-bind backoff in virtual seconds
     /// (`retryBackoffBase`, ≥ 0; attempt `k` waits `base · 2^(k−1)`).
     pub retry_backoff_base: f64,
+    /// Per-message link drop probability (`linkDropProb`, in `[0, 1)`;
+    /// 0 = lossless links).
+    pub link_drop_prob: f64,
+    /// Per-delivery duplication probability (`linkDupProb`, in `[0, 1]`;
+    /// duplicates are discarded by receiver-side dedup).
+    pub link_dup_prob: f64,
+    /// Uniform per-delivery latency jitter ceiling in virtual seconds
+    /// (`linkJitter`, ≥ 0; 0 = deterministic latency only).
+    pub link_jitter: f64,
+    /// Open a bidirectional network partition at this virtual time
+    /// (`linkPartitionAt`, seconds relative to run start; unset = no
+    /// partition). The minority group is workload-defined (the youngest
+    /// members).
+    pub link_partition_at: Option<f64>,
+    /// Heal the partition at this virtual time (`linkHealAt`); requires
+    /// `linkPartitionAt` and must be strictly later. Unset with a
+    /// partition scheduled = the partition never heals.
+    pub link_heal_at: Option<f64>,
+    /// Delivery attempts per message before the sender declares the peer
+    /// unreachable (`deliveryRetryBudget`, ≥ 1).
+    pub delivery_retry_budget: u32,
+    /// Base of the exponential ack-timeout backoff in virtual seconds
+    /// (`deliveryBackoffBase`, ≥ 0; attempt `k` waits `base · 2^(k−1)`).
+    pub delivery_backoff_base: f64,
 }
 
 impl Default for SimConfig {
@@ -461,6 +485,13 @@ impl Default for SimConfig {
             dc_victim: None,
             retry_budget: FaultPlan::default().retry_budget,
             retry_backoff_base: FaultPlan::default().retry_backoff_base,
+            link_drop_prob: 0.0,
+            link_dup_prob: 0.0,
+            link_jitter: 0.0,
+            link_partition_at: None,
+            link_heal_at: None,
+            delivery_retry_budget: FaultPlan::default().delivery_retry_budget,
+            delivery_backoff_base: FaultPlan::default().delivery_backoff_base,
         }
     }
 }
@@ -543,6 +574,17 @@ impl SimConfig {
         if let Some(v) = props.get_usize("dcVictim")? {
             c.dc_victim = Some(v);
         }
+        get!("linkDropProb", link_drop_prob, get_f64);
+        get!("linkDupProb", link_dup_prob, get_f64);
+        get!("linkJitter", link_jitter, get_f64);
+        if let Some(v) = props.get_f64("linkPartitionAt")? {
+            c.link_partition_at = Some(v);
+        }
+        if let Some(v) = props.get_f64("linkHealAt")? {
+            c.link_heal_at = Some(v);
+        }
+        get!("deliveryRetryBudget", delivery_retry_budget, get_u32);
+        get!("deliveryBackoffBase", delivery_backoff_base, get_f64);
 
         // Every closed-choice key parses through the one ConfigKnob
         // implementation — same variants, same error shape everywhere.
@@ -669,6 +711,58 @@ impl SimConfig {
                 self.retry_backoff_base
             )));
         }
+        // Transport-fault keys follow the same error shape.
+        if !self.link_drop_prob.is_finite() || !(0.0..1.0).contains(&self.link_drop_prob) {
+            return Err(C2SError::Config(format!(
+                "linkDropProb must be a probability in [0, 1), got {}",
+                self.link_drop_prob
+            )));
+        }
+        if !self.link_dup_prob.is_finite() || !(0.0..=1.0).contains(&self.link_dup_prob) {
+            return Err(C2SError::Config(format!(
+                "linkDupProb must be a probability in [0, 1], got {}",
+                self.link_dup_prob
+            )));
+        }
+        if !self.link_jitter.is_finite() || self.link_jitter < 0.0 {
+            return Err(C2SError::Config(format!(
+                "linkJitter must be a finite non-negative virtual time, got {}",
+                self.link_jitter
+            )));
+        }
+        if let Some(cut) = self.link_partition_at {
+            if !cut.is_finite() || cut < 0.0 {
+                return Err(C2SError::Config(format!(
+                    "linkPartitionAt must be a finite non-negative virtual time, got {cut}"
+                )));
+            }
+        }
+        if let Some(heal) = self.link_heal_at {
+            match self.link_partition_at {
+                None => {
+                    return Err(C2SError::Config(format!(
+                        "linkHealAt must accompany linkPartitionAt, got {heal} with no partition"
+                    )))
+                }
+                Some(cut) if !(heal > cut) => {
+                    return Err(C2SError::Config(format!(
+                        "linkHealAt must be strictly after linkPartitionAt ({cut}), got {heal}"
+                    )))
+                }
+                Some(_) => {}
+            }
+        }
+        if self.delivery_retry_budget == 0 {
+            return Err(C2SError::Config(
+                "deliveryRetryBudget must be at least 1 attempt".into(),
+            ));
+        }
+        if !self.delivery_backoff_base.is_finite() || self.delivery_backoff_base < 0.0 {
+            return Err(C2SError::Config(format!(
+                "deliveryBackoffBase must be a finite non-negative virtual time, got {}",
+                self.delivery_backoff_base
+            )));
+        }
         Ok(())
     }
 
@@ -685,6 +779,13 @@ impl SimConfig {
             dc_victim: self.dc_victim,
             retry_budget: self.retry_budget,
             retry_backoff_base: self.retry_backoff_base,
+            link_drop_prob: self.link_drop_prob,
+            link_dup_prob: self.link_dup_prob,
+            link_jitter: self.link_jitter,
+            link_partition_at: self.link_partition_at,
+            link_heal_at: self.link_heal_at,
+            delivery_retry_budget: self.delivery_retry_budget,
+            delivery_backoff_base: self.delivery_backoff_base,
         }
     }
 }
@@ -983,6 +1084,86 @@ mod tests {
         assert!(e.contains("retryBackoffBase must"), "{e}");
         // a well-formed DC schedule passes end to end
         let p = Properties::parse("dcCrashAt=2.0\ndcRecoverAt=2.5\ndcVictim=0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_ok());
+    }
+
+    #[test]
+    fn link_fault_keys_parse_and_round_trip() {
+        let d = SimConfig::default();
+        assert_eq!(d.link_drop_prob, 0.0);
+        assert_eq!(d.link_partition_at, None);
+        assert_eq!(d.delivery_retry_budget, 6);
+        assert!(d.fault_plan().is_noop(), "defaults inject nothing");
+        let p = Properties::parse(
+            "linkDropProb=0.15\nlinkDupProb=0.5\nlinkJitter=0.002\n\
+             linkPartitionAt=0.001\nlinkHealAt=12.0\n\
+             deliveryRetryBudget=16\ndeliveryBackoffBase=0.1\n",
+        )
+        .unwrap();
+        let c = SimConfig::from_properties(&p).unwrap();
+        assert_eq!(c.link_drop_prob, 0.15);
+        assert_eq!(c.link_dup_prob, 0.5);
+        assert_eq!(c.link_jitter, 0.002);
+        assert_eq!(c.link_partition_at, Some(0.001));
+        assert_eq!(c.link_heal_at, Some(12.0));
+        assert_eq!(c.delivery_retry_budget, 16);
+        assert_eq!(c.delivery_backoff_base, 0.1);
+        // the typed plan carries exactly the parsed schedule
+        let plan = c.fault_plan();
+        assert!(!plan.is_noop());
+        assert!(plan.has_link_faults());
+        assert_eq!(plan.link_drop_prob, 0.15);
+        assert_eq!(plan.link_dup_prob, 0.5);
+        assert_eq!(plan.link_jitter.to_bits(), 0.002f64.to_bits());
+        assert_eq!(plan.link_partition_at, Some(0.001));
+        assert_eq!(plan.link_heal_at, Some(12.0));
+        assert_eq!(plan.delivery_retry_budget, 16);
+        assert_eq!(plan.delivery_backoff_base.to_bits(), 0.1f64.to_bits());
+    }
+
+    #[test]
+    fn link_fault_keys_validated() {
+        // drop probability 1.0 would never deliver anything: [0, 1) only
+        let p = Properties::parse("linkDropProb=1.0\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("linkDropProb must"), "{e}");
+        let p = Properties::parse("linkDropProb=-0.1\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        // dup probability may be exactly 1.0 (every delivery duplicated)
+        let p = Properties::parse("linkDupProb=1.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_ok());
+        let p = Properties::parse("linkDupProb=1.5\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err());
+        // negative jitter
+        let p = Properties::parse("linkJitter=-0.001\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("linkJitter must"), "{e}");
+        // heal without a partition
+        let p = Properties::parse("linkHealAt=5.0\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("linkHealAt must accompany"), "{e}");
+        // heal-before-partition (and equality) rejected: strictly after
+        let p = Properties::parse("linkPartitionAt=9.0\nlinkHealAt=5.0\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("strictly after"), "{e}");
+        let p = Properties::parse("linkPartitionAt=9.0\nlinkHealAt=9.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_err(), "equal times rejected");
+        // a partition that never heals is a legal schedule
+        let p = Properties::parse("linkPartitionAt=9.0\n").unwrap();
+        assert!(SimConfig::from_properties(&p).is_ok());
+        // zero retry budget would mean no first attempt at all
+        let p = Properties::parse("deliveryRetryBudget=0\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("deliveryRetryBudget must"), "{e}");
+        // negative backoff base
+        let p = Properties::parse("deliveryBackoffBase=-0.5\n").unwrap();
+        let e = SimConfig::from_properties(&p).unwrap_err().to_string();
+        assert!(e.contains("deliveryBackoffBase must"), "{e}");
+        // a well-formed transport schedule passes end to end
+        let p = Properties::parse(
+            "linkDropProb=0.2\nlinkPartitionAt=2.0\nlinkHealAt=2.5\n",
+        )
+        .unwrap();
         assert!(SimConfig::from_properties(&p).is_ok());
     }
 }

@@ -48,6 +48,9 @@ pub enum ScaleAction {
     Crash,
     /// The crashed member restarted and rejoined (`memberRejoinAt`).
     Rejoin,
+    /// A member exhausted the reliable-delivery retry budget on a
+    /// heartbeat and was evicted through the churn path (link faults).
+    Unreachable,
 }
 
 impl std::fmt::Display for ScaleAction {
@@ -57,6 +60,7 @@ impl std::fmt::Display for ScaleAction {
             ScaleAction::In => write!(f, "in"),
             ScaleAction::Crash => write!(f, "crash"),
             ScaleAction::Rejoin => write!(f, "rejoin"),
+            ScaleAction::Unreachable => write!(f, "unreachable"),
         }
     }
 }
@@ -114,6 +118,19 @@ pub struct ElasticReport {
     /// the same fingerprintable surface the datacenter-crash scenarios
     /// emit, so grid-member and datacenter faults compare uniformly.
     pub fault_events: Vec<crate::faults::FaultEvent>,
+    /// Members evicted after a heartbeat exhausted the delivery retry
+    /// budget (0 without link faults).
+    pub unreachable_evictions: usize,
+    /// Network messages sent on the main cluster over the whole run.
+    pub net_messages: u64,
+    /// Network payload bytes moved on the main cluster.
+    pub net_bytes: u64,
+    /// Reliable-delivery ack-timeout retries (0 without link faults).
+    pub net_retries: u64,
+    /// Delivery attempts lost to drops or the partition window.
+    pub net_dropped: u64,
+    /// Duplicated deliveries discarded by receiver-side dedup.
+    pub net_deduplicated: u64,
 }
 
 /// Run the loaded round-robin scenario with adaptive scaling over at most
@@ -186,6 +203,13 @@ pub fn run_adaptive(
     let mut rejoins = 0usize;
     let mut tasks_reexecuted: u64 = 0;
     let mut fault_events: Vec<FaultEvent> = Vec::new();
+    let mut unreachable_evictions = 0usize;
+    // transport faults: arm the seeded link-fault layer on the main
+    // cluster. A scheduled partition window cuts the first Initiator slot
+    // (offset 1) off from the master; the heartbeat loop below then evicts
+    // it once the delivery budget runs out. Fault-free plans leave the net
+    // model untouched so clean virtual times stay bit-identical.
+    main.net.arm_link_faults(&plan, t_start, vec![1]);
 
     // workload: remaining cloudlet MI lengths, re-partitioned every round
     // over whatever members currently exist
@@ -245,8 +269,31 @@ pub fn run_adaptive(
             }
         }
 
+        // --- reliable heartbeats (link faults only) ---
+        // the master pings every peer through the ack/retry layer; a peer
+        // that exhausts the delivery budget is unreachable and evicted
+        // through the same churn path a crash takes. Fault-free runs skip
+        // this entirely, keeping their virtual times bit-identical.
+        let mut evicted_peers = 0usize;
+        if main.net.has_faults() && main.size() > 1 {
+            for peer in main.members().into_iter().skip(1) {
+                if !main.probe_member(master, peer)? {
+                    unreachable_evictions += 1;
+                    evicted_peers += 1;
+                    events.push(ScaleEvent {
+                        at: main.clock(master) - t_start,
+                        action: ScaleAction::Unreachable,
+                        instances_after: main.size(),
+                    });
+                }
+            }
+        }
+
         let now = main.clock(master);
         let mut event = format!("Health Monitoring (round {round})");
+        if evicted_peers > 0 {
+            event = format!("Member Unreachable - {evicted_peers} evicted");
+        }
 
         // --- fault injection: member crash / rejoin ---
         if let Some(crash_at) = crash_pending {
@@ -367,6 +414,9 @@ pub fn run_adaptive(
         debug_assert!(ias.is_terminated());
     }
     let t_end = main.barrier();
+    // transport fault log appends after the driver's own churn events —
+    // same ordering contract as the MapReduce engine
+    fault_events.extend(main.net.drain_fault_log());
 
     Ok(ElasticReport {
         sim_time_s: t_end - t_start,
@@ -384,6 +434,12 @@ pub fn run_adaptive(
         entries_lost: main.metrics.counter("map.entries_lost"),
         entries_migrated: main.metrics.counter("map.entries_migrated"),
         fault_events,
+        unreachable_evictions,
+        net_messages: main.net.messages,
+        net_bytes: main.net.bytes,
+        net_retries: main.net.retries,
+        net_dropped: main.net.dropped,
+        net_deduplicated: main.net.deduplicated,
     })
 }
 
@@ -501,6 +557,58 @@ mod tests {
         assert_eq!(r.cloudlets_ok, referee.cloudlets_ok);
         assert_eq!(referee.crashes, 0);
         assert_eq!(referee.tasks_reexecuted, 0);
+    }
+
+    #[test]
+    fn lossy_links_delay_but_never_lose_work() {
+        let mut model = NativeBurnModel::default();
+        let cfg = SimConfig {
+            link_drop_prob: 0.4,
+            link_dup_prob: 1.0,
+            link_jitter: 0.001,
+            delivery_retry_budget: 16,
+            delivery_backoff_base: 0.01,
+            ..loaded_cfg()
+        };
+        let r = run_adaptive(&cfg, 5, HealthMeasure::LoadAverage, &mut model).unwrap();
+        assert!(r.net_retries > 0, "drops force ack-timeout retries: {r:?}");
+        assert!(
+            r.net_deduplicated > 0,
+            "dup probability 1.0 makes every delivered heartbeat arrive twice"
+        );
+        assert_eq!(r.unreachable_evictions, 0, "budget 16 always suffices here");
+        assert!(r.fault_events.iter().any(|e| e.kind == FaultKind::LinkDrop));
+        // data parity with a fault-free run: lossy links move clocks only
+        let mut clean_model = NativeBurnModel::default();
+        let clean =
+            run_adaptive(&loaded_cfg(), 5, HealthMeasure::LoadAverage, &mut clean_model)
+                .unwrap();
+        assert_eq!(r.cloudlets_ok, clean.cloudlets_ok);
+        assert_eq!(clean.net_retries, 0);
+        assert_eq!(clean.net_deduplicated, 0);
+        assert_eq!(clean.unreachable_evictions, 0);
+    }
+
+    #[test]
+    fn partitioned_peer_is_evicted_through_the_churn_path() {
+        let mut model = NativeBurnModel::default();
+        let cfg = SimConfig {
+            link_partition_at: Some(0.0), // window opens at once, never heals
+            delivery_retry_budget: 3,
+            delivery_backoff_base: 0.01,
+            ..loaded_cfg()
+        };
+        let r = run_adaptive(&cfg, 5, HealthMeasure::LoadAverage, &mut model).unwrap();
+        assert!(r.unreachable_evictions >= 1, "{r:?}");
+        assert!(r.events.iter().any(|e| e.action == ScaleAction::Unreachable));
+        assert!(
+            r.fault_events
+                .iter()
+                .any(|e| e.kind == FaultKind::MemberUnreachable),
+            "evictions surface in the fingerprintable fault log"
+        );
+        assert!(r.rows.iter().any(|row| row.event.contains("Unreachable")));
+        assert_eq!(r.cloudlets_ok, 400, "evictions delay work, never lose it");
     }
 
     #[test]

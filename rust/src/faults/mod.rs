@@ -32,6 +32,10 @@ use crate::util::rng::SplitMix64;
 const CRASH_STREAM: u64 = 0xC4A5_11FA_17BA_D001;
 const STRAGGLER_STREAM: u64 = 0x51_0C0F_FEE5_10F2;
 const DC_CRASH_STREAM: u64 = 0xDC_FA11_0C4A_5D01;
+/// Stream for per-message transport draws (drop/dup/jitter). Public so the
+/// [`crate::grid::net::LinkFaultModel`] can derive its per-message hashes
+/// from `faultSeed ^ TRANSPORT_STREAM` without re-stating the constant.
+pub const TRANSPORT_STREAM: u64 = 0x5EA7_1D07_11CC_F00D;
 
 /// Whether straggler map tasks get a speculative backup attempt on the
 /// least-loaded survivor (`speculativeExecution` in
@@ -102,6 +106,25 @@ pub enum FaultKind {
     Rebind,
     /// Cloudlets ran out of retry budget and were recorded as failed.
     RetryExhausted,
+    /// The link fault model dropped a message attempt (sender times out
+    /// and retries with exponential backoff).
+    LinkDrop,
+    /// The link fault model duplicated a delivered message; the receiver's
+    /// sequence-number dedup discarded the copy.
+    LinkDup,
+    /// A scheduled bidirectional partition cut the minority group off.
+    LinkPartition,
+    /// The scheduled partition healed; both sides can talk again.
+    LinkHeal,
+    /// The partition split the cluster into two sub-clusters, each with
+    /// its own elected master (hazelcast#2359-style split brain).
+    SplitBrain,
+    /// On heal the smaller side merged back: members re-paid `init_cost`,
+    /// the partition table re-formed, map entries were reconciled.
+    SplitBrainMerge,
+    /// A sender exhausted `deliveryRetryBudget` on one peer; the failure
+    /// feeds the member-churn path (`GridCluster::leave`).
+    MemberUnreachable,
 }
 
 impl std::fmt::Display for FaultKind {
@@ -117,6 +140,13 @@ impl std::fmt::Display for FaultKind {
             FaultKind::DcRecover => "dc-recover",
             FaultKind::Rebind => "rebind",
             FaultKind::RetryExhausted => "retry-exhausted",
+            FaultKind::LinkDrop => "link-drop",
+            FaultKind::LinkDup => "link-dup",
+            FaultKind::LinkPartition => "link-partition",
+            FaultKind::LinkHeal => "link-heal",
+            FaultKind::SplitBrain => "split-brain",
+            FaultKind::SplitBrainMerge => "split-brain-merge",
+            FaultKind::MemberUnreachable => "member-unreachable",
         })
     }
 }
@@ -217,6 +247,30 @@ pub struct FaultPlan {
     /// (`retryBackoffBase`): attempt `k` waits `base · 2^(k−1)` — a
     /// power-of-two multiply, so every delay is f64-bit-reproducible.
     pub retry_backoff_base: f64,
+    /// Per-message drop probability on every link (`linkDropProb`,
+    /// in `[0, 1)`); dropped attempts time out and retry under the
+    /// reliable-delivery backoff.
+    pub link_drop_prob: f64,
+    /// Per-message duplication probability (`linkDupProb`, in `[0, 1)`);
+    /// duplicates are discarded by receiver-side sequence-number dedup.
+    pub link_dup_prob: f64,
+    /// Max extra per-delivery latency jitter in virtual seconds
+    /// (`linkJitter` ≥ 0); each delivery draws uniformly from
+    /// `[0, jitter)` on the transport stream.
+    pub link_jitter: f64,
+    /// Cut a bidirectional partition between the minority member group
+    /// and the rest at this virtual time (`linkPartitionAt`).
+    pub link_partition_at: Option<f64>,
+    /// Heal the scheduled partition at this virtual time (`linkHealAt`);
+    /// requires `link_partition_at` and must be strictly later.
+    pub link_heal_at: Option<f64>,
+    /// Delivery attempts per message before the sender declares the peer
+    /// unreachable (`deliveryRetryBudget`).
+    pub delivery_retry_budget: u32,
+    /// Base of the exponential ack-timeout backoff in virtual seconds
+    /// (`deliveryBackoffBase`): retry `k` waits `base · 2^(k−1)` — the
+    /// same exact power-of-two multiply as [`FaultPlan::rebind_backoff`].
+    pub delivery_backoff_base: f64,
 }
 
 impl Default for FaultPlan {
@@ -232,16 +286,41 @@ impl Default for FaultPlan {
             dc_victim: None,
             retry_budget: 3,
             retry_backoff_base: 0.5,
+            link_drop_prob: 0.0,
+            link_dup_prob: 0.0,
+            link_jitter: 0.0,
+            link_partition_at: None,
+            link_heal_at: None,
+            delivery_retry_budget: 6,
+            delivery_backoff_base: 0.1,
         }
     }
 }
 
 impl FaultPlan {
-    /// True when the plan injects nothing (no crash, no skew).
+    /// True when the plan injects nothing (no crash, no skew, no link
+    /// faults).
     pub fn is_noop(&self) -> bool {
         self.member_crash_at.is_none()
             && self.slow_member_skew <= 1.0
             && self.dc_crash_at.is_none()
+            && !self.has_link_faults()
+    }
+
+    /// True when any transport-level fault is configured: lossy or
+    /// duplicating or jittery links, or a scheduled partition.
+    pub fn has_link_faults(&self) -> bool {
+        self.link_drop_prob > 0.0
+            || self.link_dup_prob > 0.0
+            || self.link_jitter > 0.0
+            || self.link_partition_at.is_some()
+    }
+
+    /// Seed of the per-message transport stream — domain-separated from
+    /// the crash/straggler/DC victim draws so adding link faults never
+    /// shifts which member crashes.
+    pub fn transport_seed(&self) -> u64 {
+        self.seed ^ TRANSPORT_STREAM
     }
 
     /// Deterministically pick the datacenter to crash among `n_dcs`:
@@ -267,6 +346,15 @@ impl FaultPlan {
     pub fn rebind_backoff(&self, attempt: u32) -> f64 {
         let shift = attempt.saturating_sub(1).min(32);
         self.retry_backoff_base * ((1u64 << shift) as f64)
+    }
+
+    /// Virtual-time ack timeout before delivery retry `attempt` (1-based):
+    /// `delivery_backoff_base · 2^(attempt−1)` — the transport twin of
+    /// [`FaultPlan::rebind_backoff`], bit-reproducible for the same
+    /// power-of-two reason.
+    pub fn delivery_backoff(&self, attempt: u32) -> f64 {
+        let shift = attempt.saturating_sub(1).min(32);
+        self.delivery_backoff_base * ((1u64 << shift) as f64)
     }
 
     /// Deterministically pick the crash victim's member *offset* in an
@@ -445,6 +533,54 @@ mod tests {
         shifted.at = f64::from_bits(a.at.to_bits() + 1);
         assert_ne!(fwd, log_fingerprint(&[shifted, b]), "1-ulp sensitive");
         assert_eq!(log_fingerprint(&[]), 0xcbf2_9ce4_8422_2325, "FNV basis");
+    }
+
+    #[test]
+    fn delivery_backoff_doubles_exactly() {
+        let plan = FaultPlan {
+            delivery_backoff_base: 0.25,
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.delivery_backoff(1).to_bits(), 0.25f64.to_bits());
+        assert_eq!(plan.delivery_backoff(2).to_bits(), 0.5f64.to_bits());
+        assert_eq!(plan.delivery_backoff(3).to_bits(), 1.0f64.to_bits());
+        assert_eq!(plan.delivery_backoff(4).to_bits(), 2.0f64.to_bits());
+        assert!(plan.delivery_backoff(200).is_finite(), "shift saturates");
+    }
+
+    #[test]
+    fn link_faults_break_noop_and_separate_streams() {
+        let mut plan = FaultPlan::default();
+        assert!(!plan.has_link_faults());
+        plan.link_drop_prob = 0.1;
+        assert!(plan.has_link_faults());
+        assert!(!plan.is_noop());
+        plan.link_drop_prob = 0.0;
+        plan.link_partition_at = Some(5.0);
+        assert!(plan.has_link_faults() && !plan.is_noop());
+        // transport stream is domain-separated from every victim draw
+        assert_ne!(plan.transport_seed(), plan.seed);
+        assert_ne!(plan.transport_seed(), plan.seed ^ CRASH_STREAM);
+        assert_ne!(plan.transport_seed(), plan.seed ^ STRAGGLER_STREAM);
+        assert_ne!(plan.transport_seed(), plan.seed ^ DC_CRASH_STREAM);
+    }
+
+    #[test]
+    fn transport_fault_kinds_render_distinctly() {
+        let kinds = [
+            FaultKind::LinkDrop,
+            FaultKind::LinkDup,
+            FaultKind::LinkPartition,
+            FaultKind::LinkHeal,
+            FaultKind::SplitBrain,
+            FaultKind::SplitBrainMerge,
+            FaultKind::MemberUnreachable,
+        ];
+        let names: std::collections::BTreeSet<String> =
+            kinds.iter().map(|k| k.to_string()).collect();
+        assert_eq!(names.len(), kinds.len(), "display strings collide");
+        assert!(names.contains("split-brain-merge"));
+        assert!(names.contains("member-unreachable"));
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::error::{C2SError, Result};
 use crate::grid::backend::BackendProfile;
 use crate::grid::map::DistMapState;
 use crate::grid::member::{MemberId, Membership, MembershipEvent};
-use crate::grid::net::{NetModel, Topology};
+use crate::grid::net::{Delivery, NetModel, Topology};
 use crate::grid::partition::PartitionTable;
 use crate::grid::serialize::InMemoryFormat;
 use crate::metrics::Metrics;
@@ -205,9 +205,7 @@ impl GridCluster {
         }
         // entries living in partitions owned by the leaver: lost outright
         // without backups, otherwise they survive and migrate
-        let owned: Vec<u32> = (0..self.table.partition_count())
-            .filter(|&p| self.table.owner(p) == offset)
-            .collect();
+        let owned = self.table.owned_by(offset);
         let mut lost = 0u64;
         let mut migrated = 0u64;
         if self.table.backup_count() == 0 {
@@ -216,12 +214,7 @@ impl GridCluster {
             }
         } else {
             for m in self.maps.values() {
-                migrated += m
-                    .partition_stats()
-                    .iter()
-                    .filter(|(p, _, _)| owned.contains(p))
-                    .map(|(_, entries, _)| entries)
-                    .sum::<u64>();
+                migrated += m.entries_in_partitions(&owned);
             }
         }
         self.membership.leave(id);
@@ -311,6 +304,13 @@ impl GridCluster {
             .ok_or_else(|| C2SError::Cluster(format!("{id} is not a member")))
     }
 
+    /// The master one side of a partition would elect: the oldest member
+    /// among the given offsets (split-brain election preview; same
+    /// first-joiner rule as [`GridCluster::master`]).
+    pub fn sub_master(&self, offsets: &[usize]) -> Option<NodeId> {
+        self.membership.sub_master(offsets)
+    }
+
     /// Drain membership events (listeners).
     pub fn drain_membership_events(&mut self) -> Vec<MembershipEvent> {
         self.membership.drain_events()
@@ -388,6 +388,70 @@ impl GridCluster {
                 st.clock = t0;
             }
         }
+    }
+
+    // ---------------- reliable transport / split brain ----------------
+
+    /// Reliable delivery of `bytes` between two member offsets through the
+    /// transport-fault layer, anchored at the sender's current clock.
+    /// Without an armed fault model the cost is bit-for-bit one
+    /// [`NetModel::transfer`]. The caller charges [`Delivery::cost`] to
+    /// whichever clock the message serializes on (the sender for shuffle
+    /// traffic, the master for result collection).
+    pub fn reliable_send(&mut self, src_off: usize, dst_off: usize, bytes: u64) -> Result<Delivery> {
+        let src = *self
+            .member_cache
+            .get(src_off)
+            .ok_or_else(|| C2SError::Cluster(format!("no member at offset {src_off}")))?;
+        if dst_off >= self.member_cache.len() {
+            return Err(C2SError::Cluster(format!("no member at offset {dst_off}")));
+        }
+        let now = self.clock(src);
+        Ok(self.net.send(src_off as u64, dst_off as u64, bytes, now))
+    }
+
+    /// Heal a split brain: merge the minority member `offsets` back into
+    /// the cluster Hazelcast-style. Each returning member fast-forwards to
+    /// the heal instant, re-pays the backend's instance-init cost `F`
+    /// (rejoining is a fresh instance start, §3.3) and exchanges one merge
+    /// control message; the merge policy deterministically reconciles
+    /// every distributed-map entry homed on the returning side, and the
+    /// partition table re-forms through the normal rebuild path. Returns
+    /// the number of reconciled entries.
+    pub fn split_brain_heal(&mut self, offsets: &[usize], heal_at: f64) -> Result<u64> {
+        let ids: Vec<NodeId> = offsets
+            .iter()
+            .map(|&o| {
+                self.member_cache
+                    .get(o)
+                    .copied()
+                    .ok_or_else(|| C2SError::Cluster(format!("no member at offset {o}")))
+            })
+            .collect::<Result<_>>()?;
+        let init = self.cfg.backend.init_cost;
+        let mut reconciled = 0u64;
+        for &o in offsets {
+            let owned = self.table.owned_by(o);
+            for m in self.maps.values() {
+                reconciled += m.entries_in_partitions(&owned);
+            }
+        }
+        for id in ids {
+            // rejoining cannot start before the link is back...
+            if let Some(st) = self.nodes.get_mut(&id) {
+                if st.clock < heal_at {
+                    st.clock = heal_at;
+                }
+            }
+            // ...then the member re-initializes and runs the merge round
+            self.advance_busy(id, init);
+            let c = self.net.control();
+            self.advance(id, c);
+        }
+        self.rebuild_partition_table();
+        self.metrics.add("map.entries_reconciled", reconciled);
+        self.metrics.incr("cluster.split_brain_merges");
+        Ok(reconciled)
     }
 
     // ---------------- heap / memory model ----------------
@@ -596,6 +660,34 @@ mod tests {
         assert_eq!(c.metrics.counter("map.entries_lost"), lost);
         assert_eq!(c.metrics.counter("map.entries_migrated"), 0);
         assert_eq!(c.map_len("churn") as u64, 200 - lost);
+    }
+
+    #[test]
+    fn reliable_send_clean_matches_transfer() {
+        let mut c = cluster(2);
+        let mut twin = NetModel::for_topology(c.cfg.topology);
+        let d = c.reliable_send(1, 0, 4_096).unwrap();
+        assert_eq!(d.cost.to_bits(), twin.transfer(4_096).to_bits());
+        assert!(d.delivered && d.attempts == 1);
+        assert!(c.reliable_send(9, 0, 1).is_err(), "unknown sender offset");
+        assert!(c.reliable_send(0, 9, 1).is_err(), "unknown receiver offset");
+    }
+
+    #[test]
+    fn split_brain_heal_repays_init_and_reconciles() {
+        let mut c = populated(1, 4);
+        let m3 = c.members()[3];
+        let busy0 = c.busy(m3);
+        let heal_at = c.max_clock() + 50.0;
+        let merged = c.split_brain_heal(&[3], heal_at).unwrap();
+        assert!(merged > 0, "the returning side owns entries to reconcile");
+        assert!(c.clock(m3) >= heal_at + c.cfg.backend.init_cost);
+        assert!(c.busy(m3) - busy0 >= c.cfg.backend.init_cost - 1e-12);
+        assert_eq!(c.metrics.counter("cluster.split_brain_merges"), 1);
+        assert_eq!(c.metrics.counter("map.entries_reconciled"), merged);
+        assert_eq!(c.size(), 4, "a heal keeps every member");
+        assert_eq!(c.map_len("churn"), 200, "the merge policy loses nothing");
+        assert!(c.split_brain_heal(&[7], 0.0).is_err(), "stale offsets rejected");
     }
 
     #[test]

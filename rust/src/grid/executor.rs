@@ -15,6 +15,7 @@
 //! [`crate::grid::parallel`]: their bodies receive a per-node
 //! [`crate::grid::parallel::NodeCtx`] shard and can run on real OS threads.
 
+use crate::error::Result;
 use crate::grid::cluster::{GridCluster, NodeId};
 use crate::grid::partition::partition_of;
 use crate::grid::serialize::GridKey;
@@ -93,6 +94,32 @@ impl GridCluster {
         }
         let done = self.clock(target) + self.net.control();
         self.set_clock_at_least(caller, done);
+    }
+
+    /// Reliable liveness probe from `caller` to `target` through the
+    /// transport-fault layer: one small control message with ack/retry
+    /// semantics. The caller pays the full delivery cost, backoff waits
+    /// included. When the retry budget runs out the peer is declared
+    /// unreachable and evicted through the normal churn path
+    /// ([`GridCluster::leave`]) — entry loss/migration and master failover
+    /// follow exactly as for a crash. Returns whether the peer answered.
+    pub fn probe_member(&mut self, caller: NodeId, target: NodeId) -> Result<bool> {
+        if caller == target {
+            return Ok(true);
+        }
+        let c_off = self.offset_of(caller)?;
+        let t_off = self.offset_of(target)?;
+        let d = self.reliable_send(c_off, t_off, 64)?;
+        self.advance(caller, d.cost);
+        self.metrics.incr("executor.probes");
+        if d.delivered {
+            return Ok(true);
+        }
+        self.net
+            .note_unreachable(c_off as u64, t_off as u64, self.clock(caller));
+        self.metrics.incr("membership.unreachable_evictions");
+        self.leave(target)?;
+        Ok(false)
     }
 
     pub(crate) fn set_clock_at_least(&mut self, node: NodeId, t: f64) {
@@ -174,6 +201,35 @@ mod tests {
             count.load(Ordering::SeqCst),
             2,
             "sequential mode stops at the first error"
+        );
+    }
+
+    #[test]
+    fn probe_evicts_unreachable_member() {
+        use crate::faults::{FaultKind, FaultPlan};
+        let mut c = cluster(3);
+        c.barrier();
+        let t0 = c.max_clock();
+        let plan = FaultPlan {
+            link_partition_at: Some(0.0),
+            link_heal_at: None, // never heals: the peer stays dark
+            delivery_retry_budget: 3,
+            delivery_backoff_base: 0.25,
+            ..FaultPlan::default()
+        };
+        c.net.arm_link_faults(&plan, t0, vec![2]);
+        let [master, healthy, cut]: [NodeId; 3] = c.members().try_into().unwrap();
+        assert!(c.probe_member(master, master).unwrap(), "self probe is free");
+        assert!(c.probe_member(master, healthy).unwrap(), "same-side peer answers");
+        let before = c.clock(master);
+        assert!(!c.probe_member(master, cut).unwrap(), "cut peer unreachable");
+        assert!(c.clock(master) > before, "backoff waits charged to the prober");
+        assert_eq!(c.size(), 2, "unreachable peer evicted via the churn path");
+        assert_eq!(c.metrics.counter("membership.unreachable_evictions"), 1);
+        let log = c.net.drain_fault_log();
+        assert!(
+            log.iter().any(|e| e.kind == FaultKind::MemberUnreachable),
+            "eviction logged: {log:?}"
         );
     }
 

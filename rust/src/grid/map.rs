@@ -93,6 +93,15 @@ impl DistMapState {
         out.into_iter().map(|(p, (n, b))| (p, n, b)).collect()
     }
 
+    /// Entries homed in any of `partitions` — the migration volume of a
+    /// member departure, or the reconcile volume of a split-brain merge.
+    pub fn entries_in_partitions(&self, partitions: &[PartitionId]) -> u64 {
+        self.entries
+            .values()
+            .filter(|e| partitions.contains(&e.partition))
+            .count() as u64
+    }
+
     /// Drop all entries living in the given partitions; returns how many
     /// were lost (backup-less member departure).
     pub fn drop_partitions(&mut self, parts: &[PartitionId]) -> u64 {
@@ -685,6 +694,22 @@ mod tests {
             total += c.map_local_keys(node, "xs").len();
         }
         assert_eq!(total, 300, "every key is local to exactly one member");
+    }
+
+    #[test]
+    fn entries_in_partitions_counts_homed_entries() {
+        let mut c = cluster(3);
+        let m = c.members()[0];
+        for i in 0..90 {
+            c.map_put(m, "xs", format!("k{i}"), &(i as u64)).unwrap();
+        }
+        let all: Vec<PartitionId> = (0..c.cfg.partition_count).collect();
+        let owned = c.partition_table().owned_by(1);
+        let state = c.maps.get("xs").unwrap();
+        assert_eq!(state.entries_in_partitions(&all), 90);
+        let n = state.entries_in_partitions(&owned);
+        assert!(n > 0 && n < 90, "one member homes a strict subset: {n}");
+        assert_eq!(state.entries_in_partitions(&[]), 0);
     }
 
     #[test]

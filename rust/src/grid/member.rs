@@ -115,6 +115,17 @@ impl Membership {
     pub fn drain_events(&mut self) -> Vec<MembershipEvent> {
         std::mem::take(&mut self.events)
     }
+
+    /// Master a sub-group would elect if it were partitioned off from the
+    /// rest of the cluster: the oldest member among `offsets` — the same
+    /// first-joiner rule as [`Membership::master`], applied to one side of a
+    /// split brain.
+    pub fn sub_master(&self, offsets: &[usize]) -> Option<MemberId> {
+        offsets
+            .iter()
+            .filter_map(|&o| self.members.get(o).copied())
+            .min()
+    }
 }
 
 #[cfg(test)]
@@ -175,6 +186,21 @@ mod tests {
         assert_eq!(m.offset_of(c), Some(2));
         m.leave(b);
         assert_eq!(m.offset_of(c), Some(1), "offsets compact after leave");
+    }
+
+    #[test]
+    fn sub_master_is_oldest_of_the_group() {
+        let mut m = Membership::new();
+        let a = m.join();
+        let b = m.join();
+        let c = m.join();
+        // Majority side {a, c} elects a (already master); minority side {b, c}
+        // would elect b — oldest member of that side.
+        assert_eq!(m.sub_master(&[0, 2]), Some(a));
+        assert_eq!(m.sub_master(&[1, 2]), Some(b));
+        assert_eq!(m.sub_master(&[2]), Some(c));
+        assert_eq!(m.sub_master(&[]), None);
+        assert_eq!(m.sub_master(&[99]), None, "stale offsets yield no master");
     }
 
     #[test]

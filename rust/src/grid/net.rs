@@ -1,12 +1,30 @@
 //! Simulated cluster network: the `C = f2(n, d, w, s)` communication-cost
-//! term of the paper's §3.3 model.
+//! term of the paper's §3.3 model, plus the deterministic transport-fault
+//! layer underneath it.
 //!
-//! The model is deliberately simple and fully observable: a remote operation
-//! between two members costs `base_latency + bytes / bandwidth`, where the
-//! base latency depends on the deployment topology (instances co-located in
-//! one machine, a LAN research-lab cluster, or geo-distributed — §3.3
-//! discusses all three). Message and byte counters feed Fig 5.8-style
-//! distribution statistics and the perf pass.
+//! The cost model is deliberately simple and fully observable: a remote
+//! operation between two members costs `base_latency + bytes / bandwidth`,
+//! where the base latency depends on the deployment topology (instances
+//! co-located in one machine, a LAN research-lab cluster, or
+//! geo-distributed — §3.3 discusses all three). Message and byte counters
+//! feed Fig 5.8-style distribution statistics and the perf pass.
+//!
+//! On top of that sits [`LinkFaultModel`] + [`NetModel::send`]: a seeded
+//! lossy/partitioned-link model and the reliable-delivery machinery real
+//! Hazelcast gets from TCP — per-link monotone sequence numbers,
+//! ack/timeout retry with exponential backoff in virtual time (exact
+//! power-of-two multiplies, mirroring the fault plan's `rebind_backoff`),
+//! receiver-side dedup of duplicated deliveries, and a bounded retry
+//! budget after which the sender reports the peer unreachable. Every
+//! per-message draw is hashed statelessly from `(seed, src, dst, seq,
+//! attempt)` on the dedicated transport SplitMix64 stream, so fault logs
+//! are bit-identical across reruns and worker counts. Without a fault
+//! model armed, [`NetModel::send`] degenerates byte-for-byte into
+//! [`NetModel::transfer`].
+
+use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+use crate::util::rng::SplitMix64;
+use std::collections::BTreeMap;
 
 /// Deployment topology presets (§3.3: "If all the Hazelcast or Infinispan
 /// instances reside inside a single computer, latency will be lower...").
@@ -20,6 +38,133 @@ pub enum Topology {
     GeoDistributed,
 }
 
+/// Outcome of one reliable send ([`NetModel::send`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Delivery {
+    /// Total virtual time the sender spends: backoff waits for every lost
+    /// attempt, then wire time + ack latency for the delivered one.
+    pub cost: f64,
+    /// Delivery attempts made (1 = delivered first try).
+    pub attempts: u32,
+    /// False when the retry budget ran out — the peer is unreachable.
+    pub delivered: bool,
+    /// True when the link duplicated the delivered message and the
+    /// receiver's sequence-number dedup discarded the copy.
+    pub duplicated: bool,
+}
+
+/// Seeded per-link fault model: drop probability, duplication, delay
+/// jitter, and one scheduled bidirectional partition between a minority
+/// member group and the rest of the cluster.
+///
+/// Times inside the model are *absolute* virtual times; event timestamps
+/// in the log are relative to `t_origin` (the run start), matching every
+/// other [`FaultEvent`] producer.
+#[derive(Debug, Clone)]
+pub struct LinkFaultModel {
+    seed: u64,
+    drop_prob: f64,
+    dup_prob: f64,
+    jitter: f64,
+    retry_budget: u32,
+    backoff_base: f64,
+    /// Absolute partition window `[partition_at, heal_at)`; `heal_at`
+    /// `None` means the partition never heals.
+    partition_at: Option<f64>,
+    heal_at: Option<f64>,
+    /// Member offsets on the minority side of the partition.
+    minority: Vec<u64>,
+    /// Run start, subtracted from event timestamps.
+    t_origin: f64,
+    /// Per-link monotone sequence numbers, keyed `(src, dst)`.
+    seqs: BTreeMap<(u64, u64), u64>,
+    /// Deterministic transport fault log (drained by the engine).
+    log: Vec<FaultEvent>,
+}
+
+impl LinkFaultModel {
+    /// Build the model from a fault plan, anchored at run start
+    /// `t_origin` with the given minority member offsets. Partition times
+    /// in the plan are relative to the run start.
+    pub fn from_plan(plan: &FaultPlan, t_origin: f64, minority: Vec<u64>) -> Self {
+        Self {
+            seed: plan.transport_seed(),
+            drop_prob: plan.link_drop_prob,
+            dup_prob: plan.link_dup_prob,
+            jitter: plan.link_jitter,
+            retry_budget: plan.delivery_retry_budget.max(1),
+            backoff_base: plan.delivery_backoff_base,
+            partition_at: plan.link_partition_at.map(|p| t_origin + p),
+            heal_at: plan.link_heal_at.map(|h| t_origin + h),
+            minority,
+            t_origin,
+            seqs: BTreeMap::new(),
+            log: Vec::new(),
+        }
+    }
+
+    /// Minority member offsets (the side that merges back on heal).
+    pub fn minority(&self) -> &[u64] {
+        &self.minority
+    }
+
+    /// Absolute heal time, when a heal is scheduled.
+    pub fn heal_at(&self) -> Option<f64> {
+        self.heal_at
+    }
+
+    /// Absolute partition time, when one is scheduled.
+    pub fn partition_at(&self) -> Option<f64> {
+        self.partition_at
+    }
+
+    /// True when the `src → dst` link is severed at absolute time `t`:
+    /// the partition window is open and exactly one endpoint sits on the
+    /// minority side (the cut is bidirectional, so direction is
+    /// irrelevant).
+    pub fn is_cut(&self, src: u64, dst: u64, t: f64) -> bool {
+        let Some(p) = self.partition_at else {
+            return false;
+        };
+        if t < p || self.heal_at.is_some_and(|h| t >= h) {
+            return false;
+        }
+        self.minority.contains(&src) != self.minority.contains(&dst)
+    }
+
+    /// Exponential ack-timeout before retrying after lost attempt
+    /// `attempt` (1-based): `base · 2^(attempt−1)`, an exact power-of-two
+    /// multiply.
+    fn backoff(&self, attempt: u32) -> f64 {
+        let shift = attempt.saturating_sub(1).min(32);
+        self.backoff_base * ((1u64 << shift) as f64)
+    }
+
+    /// Next per-link sequence number for `(src, dst)` (starts at 1).
+    fn next_seq(&mut self, src: u64, dst: u64) -> u64 {
+        let s = self.seqs.entry((src, dst)).or_insert(0);
+        *s += 1;
+        *s
+    }
+
+    /// Stateless per-message uniform draw in `[0, 1)`: hashed from the
+    /// transport seed, the link, the sequence number, the attempt and a
+    /// purpose salt — no generator state, so draw order can never depend
+    /// on worker count.
+    fn draw(&self, src: u64, dst: u64, seq: u64, attempt: u32, salt: u64) -> f64 {
+        let mut h = self.seed;
+        for v in [src, dst, seq, attempt as u64, salt] {
+            h = SplitMix64::new(h ^ v).next_u64();
+        }
+        SplitMix64::new(h).next_f64()
+    }
+
+    /// Drain the accumulated transport fault log.
+    pub fn drain_log(&mut self) -> Vec<FaultEvent> {
+        std::mem::take(&mut self.log)
+    }
+}
+
 /// Network cost model.
 #[derive(Debug, Clone)]
 pub struct NetModel {
@@ -31,6 +176,21 @@ pub struct NetModel {
     pub messages: u64,
     /// Payload bytes moved (counter).
     pub bytes: u64,
+    /// Reliable sends issued ([`NetModel::send`] calls).
+    pub sent: u64,
+    /// Reliable sends delivered within budget.
+    pub delivered: u64,
+    /// Delivery attempts beyond the first (ack-timeout retries).
+    pub retries: u64,
+    /// Delivery attempts lost to random drops or the partition.
+    pub dropped: u64,
+    /// Duplicated deliveries discarded by receiver-side dedup.
+    pub deduplicated: u64,
+    /// Reliable sends that exhausted the retry budget.
+    pub unreachable: u64,
+    /// The armed transport-fault layer; `None` = the perfectly reliable
+    /// seed transport (and [`NetModel::send`] ≡ [`NetModel::transfer`]).
+    pub faults: Option<LinkFaultModel>,
 }
 
 impl NetModel {
@@ -46,6 +206,13 @@ impl NetModel {
             bandwidth: bw,
             messages: 0,
             bytes: 0,
+            sent: 0,
+            delivered: 0,
+            retries: 0,
+            dropped: 0,
+            deduplicated: 0,
+            unreachable: 0,
+            faults: None,
         }
     }
 
@@ -67,10 +234,160 @@ impl NetModel {
         self.transfer(64)
     }
 
+    /// Arm the transport-fault layer from a fault plan (no-op when the
+    /// plan carries no link faults). `t_origin` anchors the plan's
+    /// relative partition window and the event timestamps; `minority`
+    /// lists the member offsets cut off by the scheduled partition.
+    pub fn arm_link_faults(&mut self, plan: &FaultPlan, t_origin: f64, minority: Vec<u64>) {
+        if plan.has_link_faults() {
+            self.faults = Some(LinkFaultModel::from_plan(plan, t_origin, minority));
+        }
+    }
+
+    /// True when a link fault model is armed.
+    pub fn has_faults(&self) -> bool {
+        self.faults.is_some()
+    }
+
+    /// Reliable delivery of `bytes` from member offset `src` to `dst`,
+    /// starting at absolute virtual time `now`.
+    ///
+    /// Without an armed fault model this is exactly one [`transfer`]
+    /// (identical cost, identical counters) — the clean path stays
+    /// bit-for-bit the seed transport. With faults armed, each attempt is
+    /// lost when the partition cuts the link at the attempt time or the
+    /// per-message drop draw fires; a lost attempt costs the exponential
+    /// ack-timeout backoff before the next try. The delivered attempt
+    /// costs wire time (+ seeded jitter) plus one ack latency; a
+    /// duplication draw then models the receiver discarding the extra
+    /// copy via its per-link sequence numbers. After `deliveryRetryBudget`
+    /// lost attempts the send gives up (`delivered == false`).
+    ///
+    /// [`transfer`]: NetModel::transfer
+    pub fn send(&mut self, src: u64, dst: u64, bytes: u64, now: f64) -> Delivery {
+        self.sent += 1;
+        if self.faults.is_none() {
+            let cost = self.transfer(bytes);
+            self.delivered += 1;
+            return Delivery {
+                cost,
+                attempts: 1,
+                delivered: true,
+                duplicated: false,
+            };
+        }
+        let (seq, budget, t_origin) = {
+            let f = self.faults.as_mut().expect("just checked");
+            (f.next_seq(src, dst), f.retry_budget, f.t_origin)
+        };
+        let mut events: Vec<FaultEvent> = Vec::new();
+        let mut cost = 0.0;
+        let mut t = now;
+        let mut attempts = 0u32;
+        let mut delivered = false;
+        let mut duplicated = false;
+        while attempts < budget {
+            attempts += 1;
+            let f = self.faults.as_ref().expect("armed");
+            let cut = f.is_cut(src, dst, t);
+            let lost = cut
+                || (f.drop_prob > 0.0 && f.draw(src, dst, seq, attempts, 1) < f.drop_prob);
+            if lost {
+                self.dropped += 1;
+                events.push(FaultEvent {
+                    at: t - t_origin,
+                    kind: FaultKind::LinkDrop,
+                    member: src,
+                    detail: format!(
+                        "-> member-{dst} seq {seq} attempt {attempts}{}",
+                        if cut { " (partitioned)" } else { "" }
+                    ),
+                });
+                if attempts < budget {
+                    let wait = f.backoff(attempts);
+                    cost += wait;
+                    t += wait;
+                    self.retries += 1;
+                }
+                continue;
+            }
+            let jit = if f.jitter > 0.0 {
+                f.draw(src, dst, seq, attempts, 2) * f.jitter
+            } else {
+                0.0
+            };
+            let dup = f.dup_prob > 0.0 && f.draw(src, dst, seq, attempts, 3) < f.dup_prob;
+            let wire = self.base_latency + bytes as f64 / self.bandwidth + jit;
+            self.messages += 1;
+            self.bytes += bytes;
+            // the ack rides back at base latency; payload-free
+            cost += wire + self.base_latency;
+            if dup {
+                // the duplicate still crosses the wire before the
+                // receiver's sequence check discards it
+                self.messages += 1;
+                self.bytes += bytes;
+                self.deduplicated += 1;
+                events.push(FaultEvent {
+                    at: t + wire - t_origin,
+                    kind: FaultKind::LinkDup,
+                    member: dst,
+                    detail: format!("<- member-{src} seq {seq} duplicate discarded"),
+                });
+            }
+            delivered = true;
+            self.delivered += 1;
+            duplicated = dup;
+            break;
+        }
+        if !delivered {
+            self.unreachable += 1;
+        }
+        self.faults
+            .as_mut()
+            .expect("armed")
+            .log
+            .extend(events);
+        Delivery {
+            cost,
+            attempts,
+            delivered,
+            duplicated,
+        }
+    }
+
+    /// Record a `MemberUnreachable` fault event after a reliable send
+    /// exhausted its retry budget (no-op without an armed model). `at_abs`
+    /// is the absolute virtual time of the verdict.
+    pub fn note_unreachable(&mut self, src: u64, dst: u64, at_abs: f64) {
+        if let Some(f) = self.faults.as_mut() {
+            f.log.push(FaultEvent {
+                at: at_abs - f.t_origin,
+                kind: FaultKind::MemberUnreachable,
+                member: dst,
+                detail: format!("sender member-{src} exhausted delivery retry budget"),
+            });
+        }
+    }
+
+    /// Drain the transport fault log (empty without an armed model).
+    pub fn drain_fault_log(&mut self) -> Vec<FaultEvent> {
+        self.faults
+            .as_mut()
+            .map(LinkFaultModel::drain_log)
+            .unwrap_or_default()
+    }
+
     /// Reset counters (benches reuse models across repetitions).
     pub fn reset_counters(&mut self) {
         self.messages = 0;
         self.bytes = 0;
+        self.sent = 0;
+        self.delivered = 0;
+        self.retries = 0;
+        self.dropped = 0;
+        self.deduplicated = 0;
+        self.unreachable = 0;
     }
 }
 
@@ -110,5 +427,157 @@ mod tests {
     fn local_is_free() {
         let mut net = NetModel::default();
         assert_eq!(net.local(), 0.0);
+    }
+
+    #[test]
+    fn clean_send_is_bitwise_transfer() {
+        let mut a = NetModel::default();
+        let mut b = NetModel::default();
+        for bytes in [0u64, 64, 1_000, 9_999_999] {
+            let t = a.transfer(bytes);
+            let d = b.send(3, 0, bytes, 42.5);
+            assert_eq!(t.to_bits(), d.cost.to_bits(), "clean send ≡ transfer");
+            assert!(d.delivered && d.attempts == 1 && !d.duplicated);
+        }
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(b.sent, 4);
+        assert_eq!(b.delivered, 4);
+        assert_eq!(b.retries + b.dropped + b.deduplicated + b.unreachable, 0);
+        assert!(b.drain_fault_log().is_empty());
+    }
+
+    fn lossy_plan() -> FaultPlan {
+        FaultPlan {
+            link_drop_prob: 0.4,
+            link_dup_prob: 0.3,
+            link_jitter: 0.001,
+            delivery_retry_budget: 16,
+            delivery_backoff_base: 0.1,
+            ..FaultPlan::default()
+        }
+    }
+
+    #[test]
+    fn lossy_sends_are_seed_deterministic() {
+        let run = || {
+            let mut net = NetModel::default();
+            net.arm_link_faults(&lossy_plan(), 10.0, vec![]);
+            let mut out = Vec::new();
+            for i in 0..200u64 {
+                let d = net.send(i % 5, (i + 1) % 5, 512 * (i + 1), 10.0 + i as f64);
+                out.push((d.cost.to_bits(), d.attempts, d.delivered, d.duplicated));
+            }
+            let log: Vec<String> = net
+                .drain_fault_log()
+                .iter()
+                .map(FaultEvent::fingerprint)
+                .collect();
+            (out, log, net.retries, net.dropped, net.deduplicated)
+        };
+        let (a, alog, ar, ad, adup) = run();
+        let (b, blog, br, bd, bdup) = run();
+        assert_eq!(a, b, "same seed → bit-identical outcomes");
+        assert_eq!(alog, blog, "same seed → bit-identical fault log");
+        assert_eq!((ar, ad, adup), (br, bd, bdup));
+        assert!(ar > 0, "drop_prob 0.4 over 200 sends must retry");
+        assert!(adup > 0, "dup_prob 0.3 over 200 sends must duplicate");
+    }
+
+    #[test]
+    fn partition_cuts_cross_links_until_heal() {
+        let plan = FaultPlan {
+            link_partition_at: Some(5.0),
+            link_heal_at: Some(9.0),
+            delivery_retry_budget: 16,
+            delivery_backoff_base: 0.5,
+            ..FaultPlan::default()
+        };
+        let mut net = NetModel::default();
+        net.arm_link_faults(&plan, 0.0, vec![3]);
+        // before the window: clean
+        let d = net.send(3, 0, 100, 1.0);
+        assert!(d.delivered && d.attempts == 1);
+        // inside the window, crossing the cut: retries ride past the heal.
+        // backoffs 0.5,1,2,4 from t=5 land the 5th attempt at t=12.5 ≥ 9
+        let d = net.send(3, 0, 100, 5.0);
+        assert!(d.delivered, "backoff ladder must outlive the partition");
+        assert_eq!(d.attempts, 5);
+        assert!(net.retries >= 4 && net.dropped >= 4);
+        // inside the window, both endpoints on the same side: unaffected
+        let d = net.send(1, 2, 100, 6.0);
+        assert!(d.delivered && d.attempts == 1, "majority-internal link");
+        let d = net.send(3, 3, 100, 6.0);
+        assert!(d.delivered && d.attempts == 1, "self link never cut");
+        // after the heal: clean again
+        let d = net.send(0, 3, 100, 9.0);
+        assert!(d.delivered && d.attempts == 1);
+        let cuts = net
+            .drain_fault_log()
+            .iter()
+            .filter(|e| e.kind == FaultKind::LinkDrop)
+            .count();
+        assert_eq!(cuts, 4, "each partitioned attempt logged");
+    }
+
+    #[test]
+    fn budget_exhaustion_reports_unreachable() {
+        let plan = FaultPlan {
+            link_partition_at: Some(0.0),
+            link_heal_at: None, // never heals
+            delivery_retry_budget: 3,
+            delivery_backoff_base: 0.25,
+            ..FaultPlan::default()
+        };
+        let mut net = NetModel::default();
+        net.arm_link_faults(&plan, 0.0, vec![2]);
+        let d = net.send(2, 0, 4_096, 1.0);
+        assert!(!d.delivered);
+        assert_eq!(d.attempts, 3);
+        // 2 backoffs paid (no wait after the final failed attempt)
+        assert_eq!(d.cost.to_bits(), (0.25f64 + 0.5).to_bits());
+        assert_eq!(net.unreachable, 1);
+        assert_eq!(net.dropped, 3);
+        assert_eq!(net.retries, 2);
+        assert_eq!(net.messages, 0, "nothing crossed the wire");
+    }
+
+    #[test]
+    fn conservation_delivered_plus_exhausted_is_sent() {
+        let mut net = NetModel::default();
+        net.arm_link_faults(
+            &FaultPlan {
+                link_drop_prob: 0.6,
+                delivery_retry_budget: 2,
+                ..FaultPlan::default()
+            },
+            0.0,
+            vec![],
+        );
+        for i in 0..500u64 {
+            net.send(i % 7, (i + 3) % 7, 128, i as f64 * 0.01);
+        }
+        assert_eq!(net.sent, 500);
+        assert_eq!(net.delivered + net.unreachable, net.sent);
+        assert!(net.unreachable > 0, "budget 2 at p=0.6 must exhaust sometimes");
+    }
+
+    #[test]
+    fn seq_numbers_are_per_link_monotone() {
+        let plan = FaultPlan {
+            link_dup_prob: 1.0, // every delivery duplicated → seq visible in log
+            ..FaultPlan::default()
+        };
+        let mut net = NetModel::default();
+        net.arm_link_faults(&plan, 0.0, vec![]);
+        net.send(0, 1, 8, 0.0);
+        net.send(0, 1, 8, 1.0);
+        net.send(1, 0, 8, 2.0); // independent reverse-direction link
+        let log = net.drain_fault_log();
+        let details: Vec<&str> = log.iter().map(|e| e.detail.as_str()).collect();
+        assert!(details[0].contains("seq 1"));
+        assert!(details[1].contains("seq 2"));
+        assert!(details[2].contains("seq 1"), "per-link, not global: {details:?}");
+        assert_eq!(net.deduplicated, 3);
     }
 }

@@ -86,6 +86,14 @@ impl PartitionTable {
         self.owner(partition_of(partition_key, self.partition_count))
     }
 
+    /// All partitions owned by one member offset — the departing (or
+    /// split-brain-merging) member's share of the table.
+    pub fn owned_by(&self, offset: usize) -> Vec<PartitionId> {
+        (0..self.partition_count)
+            .filter(|&p| self.owners[p as usize] == offset)
+            .collect()
+    }
+
     /// Number of partitions each member owns (Fig 5.8-style distribution).
     pub fn ownership_histogram(&self, member_count: usize) -> Vec<u32> {
         let mut h = vec![0u32; member_count];

@@ -115,6 +115,45 @@ impl<'a> MapReduceEngine<'a> {
         // compute discount on a single instance.
         let local_factor = if n == 1 { backend.local_mode_factor } else { 1.0 };
 
+        // ---- Transport faults: arm the lossy/partitioned-link layer ----
+        // The minority side of a scheduled partition is the youngest
+        // ⌈n/8⌉ members (the scenario's 2|14 split on 16 nodes); it elects
+        // its own master at cut time and merges back on heal. Everything
+        // below rides the reliable-delivery layer, so a clean plan leaves
+        // every send bit-for-bit a plain transfer.
+        let plan = self.faults.clone().unwrap_or_default();
+        let crash_off = plan.crash_offset(n);
+        let mut fault_events: Vec<FaultEvent> = Vec::new();
+        let mut minority_offsets: Vec<usize> = Vec::new();
+        if plan.has_link_faults() && n > 1 {
+            if plan.link_partition_at.is_some() {
+                minority_offsets = (n - (n / 8).max(1)..n).collect();
+            }
+            let minority: Vec<u64> = minority_offsets.iter().map(|&o| o as u64).collect();
+            cluster.net.arm_link_faults(&plan, t_start, minority);
+            if let Some(p_rel) = plan.link_partition_at {
+                fault_events.push(FaultEvent {
+                    at: p_rel,
+                    kind: FaultKind::LinkPartition,
+                    member: minority_offsets[0] as u64,
+                    detail: format!(
+                        "{}|{} member split",
+                        minority_offsets.len(),
+                        n - minority_offsets.len()
+                    ),
+                });
+                let sub = cluster
+                    .sub_master(&minority_offsets)
+                    .expect("minority side is non-empty");
+                fault_events.push(FaultEvent {
+                    at: p_rel,
+                    kind: FaultKind::SplitBrain,
+                    member: minority_offsets[0] as u64,
+                    detail: format!("minority elects {sub} as master"),
+                });
+            }
+        }
+
         // ---- Phase 1: input assignment + admission ----
         // Work is split at *chunk* granularity (file, line-range) — like
         // the real grids' partition-based splits — so parallelism is not
@@ -157,8 +196,6 @@ impl<'a> MapReduceEngine<'a> {
         // the victim's body does no work (its map output would die with it
         // anyway — map output lives on the worker, Dean & Ghemawat §3.3)
         // and its chunks are re-executed on survivors below.
-        let plan = self.faults.clone().unwrap_or_default();
-        let crash_off = plan.crash_offset(n);
         let chunks_ref = &chunks;
         let map_backend = &backend;
         let partition_count = cluster.cfg.partition_count;
@@ -195,7 +232,6 @@ impl<'a> MapReduceEngine<'a> {
         // only clocks, heap peaks and sim_time_s may move.
         let mut tasks_reexecuted: u64 = 0;
         let mut speculative_wins: u64 = 0;
-        let mut fault_events: Vec<FaultEvent> = Vec::new();
         if let Some(co) = crash_off {
             let crash_at = plan.member_crash_at.unwrap_or(0.0);
             let lost: Vec<(usize, usize, usize)> =
@@ -352,11 +388,44 @@ impl<'a> MapReduceEngine<'a> {
             }
         };
 
+        // ---- Split-brain heal: the minority merges back on link heal ----
+        // Hazelcast-style: re-pay init, reconcile map entries, re-form the
+        // partition table through the normal rebuild path. Runs before
+        // collect so the final gather crosses a whole cluster again.
+        let mut transport_split_brains = 0u32;
+        if !minority_offsets.is_empty() {
+            if let Some(h_abs) = cluster.net.faults.as_ref().and_then(|f| f.heal_at()) {
+                let h_rel = h_abs - t_start;
+                let reconciled = cluster
+                    .split_brain_heal(&minority_offsets, h_abs)
+                    .map_err(|e| self.release_on_err(cluster, &members, &reserved, e))?;
+                transport_split_brains = 1;
+                fault_events.push(FaultEvent {
+                    at: h_rel,
+                    kind: FaultKind::LinkHeal,
+                    member: minority_offsets[0] as u64,
+                    detail: "partition healed".into(),
+                });
+                fault_events.push(FaultEvent {
+                    at: h_rel,
+                    kind: FaultKind::SplitBrainMerge,
+                    member: minority_offsets[0] as u64,
+                    detail: format!(
+                        "{} members re-merged, {reconciled} entries reconciled",
+                        minority_offsets.len()
+                    ),
+                });
+                cluster.barrier();
+            }
+        }
+
         // ---- Phase 5 (shared): collect at the supervisor ----
         let result_bytes = reduce_invocations * SHUFFLE_ENTRY_BYTES;
         if n > 1 {
-            let wire = cluster.net.transfer(result_bytes);
-            cluster.advance_busy(master, wire);
+            let d = cluster
+                .reliable_send(n - 1, 0, result_bytes)
+                .map_err(|e| self.release_on_err(cluster, &members, &reserved, e))?;
+            cluster.advance_busy(master, d.cost);
         }
         let peak_heap = members.iter().map(|&m| cluster.heap_used(m)).max().unwrap_or(0);
 
@@ -375,12 +444,18 @@ impl<'a> MapReduceEngine<'a> {
             }
             cluster.metrics.add("cluster.split_brain", split_brain_events as u64);
         }
+        split_brain_events += transport_split_brains;
 
         // teardown
         for (i, m) in members.iter().enumerate() {
             cluster.release_scratch(*m, reserved[i]);
         }
         let t_end = cluster.barrier();
+
+        // Transport drops/dups were logged in send order (all sends issue
+        // from sequential supervisor code, so the order is worker-count
+        // independent); they append after the engine-level events.
+        fault_events.extend(cluster.net.drain_fault_log());
 
         Ok(JobResult {
             map_invocations: files as u64,
@@ -395,6 +470,11 @@ impl<'a> MapReduceEngine<'a> {
             tasks_reexecuted,
             speculative_wins,
             fault_events,
+            net_messages: cluster.net.messages,
+            net_bytes: cluster.net.bytes,
+            net_retries: cluster.net.retries,
+            net_dropped: cluster.net.dropped,
+            net_deduplicated: cluster.net.deduplicated,
         })
     }
 
@@ -468,6 +548,27 @@ impl<'a> MapReduceEngine<'a> {
         Ok((buckets, distinct, retained, emitted, cost_sum))
     }
 
+    /// Phase-3 wire costs: one reliable send per member to the supervisor
+    /// (member order, offset 0 the destination). Both pipeline tails call
+    /// this exact sequence from supervisor code, so the transport's
+    /// sequence numbers, counters and fault draws advance identically —
+    /// the tails stay bit-exact under link faults too. Clean plans make
+    /// every send a plain [`crate::grid::net::NetModel::transfer`].
+    fn shuffle_wires(cluster: &mut GridCluster, distincts: &[u64]) -> Vec<f64> {
+        let n = distincts.len();
+        if n <= 1 {
+            return vec![0.0; n];
+        }
+        (0..n)
+            .map(|i| {
+                cluster
+                    .reliable_send(i, 0, distincts[i] * SHUFFLE_ENTRY_BYTES)
+                    .expect("tail members are live")
+                    .cost
+            })
+            .collect()
+    }
+
     /// The seed shuffle/reduce/collect tail: every phase runs on the
     /// calling thread, one member after another. This is the in-run
     /// referee the parallel tail is compared against bit-for-bit.
@@ -493,11 +594,11 @@ impl<'a> MapReduceEngine<'a> {
         // iterating this map, and f64 addition is order-sensitive — sorted
         // iteration keeps sim_time_s bit-identical across runs (the
         // parallel engine's determinism contract is asserted exactly).
+        let wires = Self::shuffle_wires(cluster, distincts);
         let mut grouped: Vec<BTreeMap<String, Vec<i64>>> = vec![BTreeMap::new(); n];
         for (i, m) in members.iter().enumerate() {
             if n > 1 {
-                let wire = cluster.net.transfer(distincts[i] * SHUFFLE_ENTRY_BYTES);
-                cluster.advance_busy(*m, wire);
+                cluster.advance_busy(*m, wires[i]);
             }
             for (owner, bucket) in bucketed[i].drain(..).enumerate() {
                 for (k, v) in bucket {
@@ -574,16 +675,10 @@ impl<'a> MapReduceEngine<'a> {
                 owner_inputs[owner].push(bucket);
             }
         }
-        // Wire costs in member order, so the net model's counters advance
+        // Wire costs in member order through the reliable layer, so the
+        // net model's counters, sequence numbers and fault draws advance
         // in the same sequence as the sequential referee's.
-        let wires: Vec<f64> = if multi {
-            distincts
-                .iter()
-                .map(|d| cluster.net.transfer(d * SHUFFLE_ENTRY_BYTES))
-                .collect()
-        } else {
-            vec![0.0; n]
-        };
+        let wires = Self::shuffle_wires(cluster, distincts);
 
         // Phase 3b (threads): each owner charges its shuffle costs and
         // groups its keys. The `Mutex<Option<..>>` cells exist only to move
@@ -1042,6 +1137,52 @@ mod fault_tests {
         let fb: Vec<String> = b.fault_events.iter().map(|e| e.fingerprint()).collect();
         assert_eq!(fa, fb);
         assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+    }
+
+    #[test]
+    fn link_faults_move_clocks_never_data() {
+        let clean = run_with(None, 3);
+        let plan = FaultPlan {
+            link_drop_prob: 0.2,
+            link_dup_prob: 1.0, // every delivery duplicated → dedup must fire
+            link_jitter: 0.001,
+            link_partition_at: Some(0.0001),
+            link_heal_at: Some(2.0),
+            delivery_retry_budget: 16,
+            delivery_backoff_base: 0.05,
+            ..FaultPlan::default()
+        };
+        let faulted = run_with(Some(plan.clone()), 3);
+        // referee contract, now extended to the transport: data identical
+        assert_eq!(faulted.total_count, clean.total_count);
+        assert_eq!(faulted.emitted_pairs, clean.emitted_pairs);
+        assert_eq!(faulted.top_words, clean.top_words);
+        assert_eq!(faulted.reduce_invocations, clean.reduce_invocations);
+        assert!(faulted.is_conserved());
+        // but the partitioned shuffle really paid the backoff ladder
+        assert!(faulted.sim_time_s > clean.sim_time_s, "retries cost time");
+        assert!(faulted.net_retries > 0, "{faulted:?}");
+        assert!(faulted.net_dropped > 0);
+        assert!(faulted.net_deduplicated > 0);
+        assert_eq!(faulted.split_brain_events, 1, "one partition, one merge");
+        let kinds: Vec<_> = faulted.fault_events.iter().map(|e| e.kind).collect();
+        for k in [
+            FaultKind::LinkPartition,
+            FaultKind::SplitBrain,
+            FaultKind::LinkHeal,
+            FaultKind::SplitBrainMerge,
+            FaultKind::LinkDrop,
+            FaultKind::LinkDup,
+        ] {
+            assert!(kinds.contains(&k), "missing {k} in {kinds:?}");
+        }
+        assert_eq!(clean.net_retries + clean.net_dropped + clean.net_deduplicated, 0);
+        // same seed → bit-identical log and clocks
+        let again = run_with(Some(plan), 3);
+        let fa: Vec<String> = faulted.fault_events.iter().map(|e| e.fingerprint()).collect();
+        let fb: Vec<String> = again.fault_events.iter().map(|e| e.fingerprint()).collect();
+        assert_eq!(fa, fb);
+        assert_eq!(faulted.sim_time_s.to_bits(), again.sim_time_s.to_bits());
     }
 
     #[test]

@@ -108,6 +108,17 @@ pub struct JobResult {
     /// Deterministic fault log (empty without a fault plan) — same-seed
     /// runs must produce bit-identical logs at every worker count.
     pub fault_events: Vec<FaultEvent>,
+    /// Network messages sent over the whole run (Fig 5.8-style
+    /// distribution statistics, surfaced as BENCH extras).
+    pub net_messages: u64,
+    /// Network payload bytes moved over the whole run.
+    pub net_bytes: u64,
+    /// Reliable-delivery ack-timeout retries (0 without link faults).
+    pub net_retries: u64,
+    /// Delivery attempts lost to drops or the partition window.
+    pub net_dropped: u64,
+    /// Duplicated deliveries discarded by receiver-side dedup.
+    pub net_deduplicated: u64,
 }
 
 impl JobResult {
@@ -250,6 +261,11 @@ mod tests {
             tasks_reexecuted: 0,
             speculative_wins: 0,
             fault_events: vec![],
+            net_messages: 0,
+            net_bytes: 0,
+            net_retries: 0,
+            net_dropped: 0,
+            net_deduplicated: 0,
         };
         assert!(r.is_conserved());
     }

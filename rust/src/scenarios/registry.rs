@@ -364,6 +364,56 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 ..FaultShape::default()
             }),
         },
+        ScenarioSpec {
+            name: "mr_partition_splitbrain",
+            summary: "word count rides through lossy links and a mid-job 2|14 \
+                      split-brain partition that heals: retries, dedup and the \
+                      minority merge move clocks, never one result bit",
+            paper_ref: "§4.3.3 cluster splitting and merging (hazelcast#2359) \
+                        extended with deterministic transport faults",
+            kind: ScenarioKind::MrPartitionSplitbrain,
+            datacenters: 1,
+            hosts_per_datacenter: 1,
+            pes_per_host: 8,
+            vms: 1,
+            cloudlets: 1,
+            tenants: 1,
+            loaded: false,
+            distribution: CloudletDistribution::Uniform,
+            variable_vms: false,
+            scheduler: SchedulerKind::TimeShared,
+            // 16 members split 2|14: the youngest ceil(16/8) = 2 member
+            // offsets form the minority side
+            nodes: &[16],
+            grid_workers: 0,
+            mr: Some(MrShape {
+                files: 6,
+                distinct_files: 3,
+                lines_per_file: 4000,
+                zipf_s: 1.1,
+                vocab: 50_000,
+                backend: MrBackend::Infinispan,
+                quick_divisor: 4,
+            }),
+            elastic: None,
+            faults: Some(FaultShape {
+                // the paper's arXiv id, as a stable seed
+                fault_seed: 1601_03980,
+                link_drop_prob: 0.15,
+                link_dup_prob: 0.5,
+                link_jitter: 0.002,
+                // the cut opens mid-map at every scenario scale; the heal
+                // instant is deep enough that the minority's shuffle sends
+                // climb the whole backoff ladder, yet budget 16 (ladder
+                // sum 0.1 * (2^16 - 1) >> 12 s) guarantees delivery, so
+                // the job always rides through instead of failing over
+                link_partition_at: Some(0.001),
+                link_heal_at: Some(12.0),
+                delivery_retry_budget: 16,
+                delivery_backoff_base: 0.1,
+                ..FaultShape::default()
+            }),
+        },
     ]
 }
 
@@ -422,6 +472,7 @@ mod tests {
             "member_churn_elastic",
             "megascale_multitenant",
             "megascale_dc_failover",
+            "mr_partition_splitbrain",
         ] {
             assert!(find(required).is_some(), "missing {required}");
         }
@@ -524,5 +575,36 @@ mod tests {
         let cfg = spec.sim_config(true);
         cfg.validate().unwrap();
         assert_eq!(cfg.fault_plan().dc_crash_victim(spec.datacenters), f.dc_victim);
+    }
+
+    #[test]
+    fn partition_splitbrain_shape_supports_the_referees() {
+        let spec = find("mr_partition_splitbrain").unwrap();
+        let f = spec.faults.as_ref().expect("fault shape");
+        // 16 members cut 2|14: the engine derives the minority as the
+        // youngest ceil(n/8) offsets
+        assert_eq!(spec.nodes, &[16]);
+        let n = spec.nodes[0];
+        assert_eq!((n / 8).max(1), 2, "the advertised 2|14 split");
+        let cut = f.link_partition_at.expect("a partition is the scenario");
+        let heal = f.link_heal_at.expect("healing exercises the merge path");
+        assert!(cut < heal, "must heal after cutting");
+        // the cut opens before the map phase ends at either scale; the
+        // retry budget's backoff ladder reaches past the heal instant so
+        // delivery is guaranteed and results stay bit-identical
+        let plan = spec.sim_config(true).fault_plan();
+        let ladder: f64 = (1..=f.delivery_retry_budget).map(|k| plan.delivery_backoff(k)).sum();
+        assert!(
+            ladder > heal,
+            "budget {} must out-wait the partition: ladder {ladder} vs heal {heal}",
+            f.delivery_retry_budget
+        );
+        assert!(f.link_drop_prob > 0.0, "lossy links force retries");
+        assert!(f.link_dup_prob > 0.0, "duplication exercises dedup");
+        assert!(plan.has_link_faults());
+        // clean referee twin: same spec minus faults must be fault-free
+        let mut clean = spec.clone();
+        clean.faults = None;
+        assert!(clean.sim_config(true).fault_plan().is_noop());
     }
 }

@@ -201,6 +201,7 @@ fn run_once(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ScenarioKind::MemberChurnElastic => member_churn_elastic(spec, quick),
         ScenarioKind::MegascaleMultitenant => megascale_multitenant(spec, quick),
         ScenarioKind::MegascaleDcFailover => megascale_dc_failover(spec, quick),
+        ScenarioKind::MrPartitionSplitbrain => mr_partition_splitbrain(spec, quick),
     }
 }
 
@@ -310,6 +311,8 @@ fn mapreduce(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         if n == *spec.nodes.last().unwrap_or(&1) {
             extras.push(("reduce_invocations".to_string(), r.reduce_invocations as f64));
             extras.push(("emitted_pairs".to_string(), r.emitted_pairs as f64));
+            extras.push(("net_messages".to_string(), r.net_messages as f64));
+            extras.push(("net_bytes".to_string(), r.net_bytes as f64));
         }
     }
     let mut m = empty_measured(headline);
@@ -357,6 +360,8 @@ fn elastic(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ("final_instances".to_string(), report.final_instances as f64),
         ("cloudlets_ok".to_string(), report.cloudlets_ok as f64),
         ("rounds".to_string(), report.rows.len() as f64),
+        ("net_messages".to_string(), report.net_messages as f64),
+        ("net_bytes".to_string(), report.net_bytes as f64),
     ];
     Ok(m)
 }
@@ -529,6 +534,8 @@ fn megascale_mapreduce(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ("emitted_pairs".to_string(), par.emitted_pairs as f64),
         ("peak_heap_bytes".to_string(), par.peak_heap as f64),
         ("top10_count_sum".to_string(), top10_count_sum as f64),
+        ("net_messages".to_string(), par.net_messages as f64),
+        ("net_bytes".to_string(), par.net_bytes as f64),
     ];
     m.wall_extras = vec![
         ("wall_parallel_s".to_string(), wall_par),
@@ -611,6 +618,8 @@ fn mr_straggler_speculative(spec: &ScenarioSpec, quick: bool) -> Result<Measured
         ),
         ("reduce_invocations".to_string(), on.reduce_invocations as f64),
         ("emitted_pairs".to_string(), on.emitted_pairs as f64),
+        ("net_messages".to_string(), on.net_messages as f64),
+        ("net_bytes".to_string(), on.net_bytes as f64),
     ];
     m.wall_extras = vec![(
         "recovery_wall_overhead_s".to_string(),
@@ -720,6 +729,8 @@ fn member_churn_elastic(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
             "churn_virtual_overhead_s".to_string(),
             faulted.sim_time_s - clean.sim_time_s,
         ),
+        ("net_messages".to_string(), faulted.net_messages as f64),
+        ("net_bytes".to_string(), faulted.net_bytes as f64),
     ];
     m.wall_extras = vec![(
         "recovery_wall_overhead_s".to_string(),
@@ -1105,6 +1116,197 @@ fn megascale_dc_failover(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
         ("wall_polling_s".to_string(), wall_polling),
         ("wall_solo_total_s".to_string(), wall_solo),
     ];
+    Ok(m)
+}
+
+/// Word count over lossy links with a mid-job split-brain partition.
+///
+/// The link-fault layer drops, duplicates and jitters every wire under a
+/// dedicated SplitMix64 stream, and a scheduled partition cuts the two
+/// youngest members off mid-map (2|14 on 16 nodes). The minority elects
+/// its own sub-master; at `linkHealAt` it merges back Hazelcast-style
+/// (re-paid `init_cost`, partition table re-formed, map entries
+/// reconciled) and the job finishes through the ack/retry/dedup layer.
+///
+/// 1. **Headline**: the faulted run. Hard-errors unless the links
+///    actually retried, the receiver actually deduplicated, at least one
+///    delivery was dropped, and the partition/heal/split-brain/merge
+///    events are all on the fault log — a scenario where the faults never
+///    fired proves nothing.
+/// 2. **Referee 1**: the same plan at a different worker count — the
+///    fault-log fingerprint, the final clock bits and every result
+///    statistic must reproduce exactly.
+/// 3. **Referee 2**: the fault-free twin — results must match
+///    bit-for-bit. Transport faults move clocks, never data.
+fn mr_partition_splitbrain(spec: &ScenarioSpec, quick: bool) -> Result<Measured> {
+    let shape = spec
+        .mr
+        .as_ref()
+        .ok_or_else(|| C2SError::Config(format!("{} has no MapReduce shape", spec.name)))?;
+    let cfg = spec.sim_config(quick);
+    let heap = SimConfig::default().node_heap_bytes;
+    let workers = resolve_workers(spec.grid_workers);
+    let n = *spec.nodes.last().unwrap_or(&1);
+    let plan = cfg.fault_plan();
+    if !plan.has_link_faults() {
+        return Err(C2SError::Config(format!(
+            "{} has no link-fault plan",
+            spec.name
+        )));
+    }
+    let run = |plan: FaultPlan, workers: usize| -> Result<(JobResult, f64)> {
+        let corpus = Corpus::new(shape.corpus_config(quick));
+        let job = JobConfig::default();
+        let t0 = Instant::now();
+        let r = match shape.backend {
+            MrBackend::Hazelcast => {
+                run_hz_wordcount_faulted(corpus, job, n, heap, workers, plan)?
+            }
+            MrBackend::Infinispan => {
+                run_inf_wordcount_faulted(corpus, job, n, heap, workers, plan)?
+            }
+        };
+        Ok((r, t0.elapsed().as_secs_f64()))
+    };
+
+    let (faulted, wall_faulted) = run(plan.clone(), workers)?;
+
+    // the faults must actually have fired
+    let count_kind = |k: FaultKind| {
+        faulted.fault_events.iter().filter(|e| e.kind == k).count() as u64
+    };
+    if faulted.net_retries == 0 {
+        return Err(C2SError::Other(format!(
+            "{}: lossy links never forced an ack-timeout retry",
+            spec.name
+        )));
+    }
+    if faulted.net_deduplicated == 0 {
+        return Err(C2SError::Other(format!(
+            "{}: receiver-side dedup never caught a duplicate",
+            spec.name
+        )));
+    }
+    if faulted.net_dropped == 0 {
+        return Err(C2SError::Other(format!(
+            "{}: no delivery attempt was ever dropped",
+            spec.name
+        )));
+    }
+    for kind in [
+        FaultKind::LinkPartition,
+        FaultKind::SplitBrain,
+        FaultKind::LinkHeal,
+        FaultKind::SplitBrainMerge,
+    ] {
+        if count_kind(kind) == 0 {
+            return Err(C2SError::Other(format!(
+                "{}: no {kind} event on the fault log",
+                spec.name
+            )));
+        }
+    }
+    if faulted.split_brain_events == 0 {
+        return Err(C2SError::Other(format!(
+            "{}: the job never recorded the split-brain",
+            spec.name
+        )));
+    }
+    // the retry budget is sized so the ladder outlasts the partition
+    // window — nobody may have been evicted as unreachable
+    if count_kind(FaultKind::MemberUnreachable) != 0 {
+        return Err(C2SError::Other(format!(
+            "{}: the retry budget should have outlasted the partition, \
+             yet a member was evicted as unreachable",
+            spec.name
+        )));
+    }
+
+    // referee 1: a different worker count must reproduce the fault log
+    // fingerprint, the clock bits and every result statistic
+    let fp = log_fingerprint(&faulted.fault_events);
+    let rerun_workers = if workers == 1 { 4 } else { 1 };
+    let (rerun, _) = run(plan, rerun_workers)?;
+    let rfp = log_fingerprint(&rerun.fault_events);
+    if fp != rfp {
+        return Err(C2SError::Other(format!(
+            "{}: worker-count rerun fault-log fingerprint drifted: {fp:016x} vs {rfp:016x}",
+            spec.name
+        )));
+    }
+    if faulted.sim_time_s.to_bits() != rerun.sim_time_s.to_bits() {
+        return Err(C2SError::Other(format!(
+            "{}: worker-count rerun virtual clock drifted: {} vs {}",
+            spec.name, faulted.sim_time_s, rerun.sim_time_s
+        )));
+    }
+    check_mr_results_exact(spec.name, "worker-count rerun", &faulted, &rerun)?;
+
+    // referee 2: the fault-free twin — faults move clocks, never data
+    let (clean, wall_clean) = run(FaultPlan::default(), workers)?;
+    check_mr_results_exact(spec.name, "faulted-vs-nofault", &faulted, &clean)?;
+    if faulted.sim_time_s < clean.sim_time_s {
+        return Err(C2SError::Other(format!(
+            "{}: the partition made the job faster: {} vs {} clean",
+            spec.name, faulted.sim_time_s, clean.sim_time_s
+        )));
+    }
+
+    let mut m = empty_measured(faulted.sim_time_s);
+    m.pairs_emitted = Some(faulted.emitted_pairs);
+    m.headline_wall_s = Some(wall_faulted);
+    m.scale_events = faulted
+        .fault_events
+        .iter()
+        .filter(|e| {
+            matches!(
+                e.kind,
+                FaultKind::LinkPartition
+                    | FaultKind::SplitBrain
+                    | FaultKind::LinkHeal
+                    | FaultKind::SplitBrainMerge
+            )
+        })
+        .map(|e| ScaleEventOut {
+            at: e.at,
+            action: e.kind.to_string(),
+            instances_after: e.member,
+        })
+        .collect();
+    m.extras = vec![
+        // >> 12 keeps the fingerprint exactly representable as f64
+        ("fault_fingerprint".to_string(), (fp >> 12) as f64),
+        ("net_messages".to_string(), faulted.net_messages as f64),
+        ("net_bytes".to_string(), faulted.net_bytes as f64),
+        ("net_retries".to_string(), faulted.net_retries as f64),
+        ("net_dropped".to_string(), faulted.net_dropped as f64),
+        (
+            "net_deduplicated".to_string(),
+            faulted.net_deduplicated as f64,
+        ),
+        (
+            "split_brain_merges".to_string(),
+            count_kind(FaultKind::SplitBrainMerge) as f64,
+        ),
+        (
+            "fault_events".to_string(),
+            faulted.fault_events.len() as f64,
+        ),
+        ("sim_time_nofault_s".to_string(), clean.sim_time_s),
+        (
+            "partition_virtual_overhead_s".to_string(),
+            faulted.sim_time_s - clean.sim_time_s,
+        ),
+        (
+            "reduce_invocations".to_string(),
+            faulted.reduce_invocations as f64,
+        ),
+        ("emitted_pairs".to_string(), faulted.emitted_pairs as f64),
+    ];
+    m.wall_extras = vec![(
+        "recovery_wall_overhead_s".to_string(),
+        wall_faulted - wall_clean,
+    )];
     Ok(m)
 }
 
@@ -1535,6 +1737,38 @@ mod tests {
         assert!(extra(&format!("tenant_{victim_tenant}_rebound")) > 0.0);
         assert!(out.scale_events.iter().any(|e| e.action == "dc-crash"));
         assert!(out.scale_events.iter().any(|e| e.action == "dc-recover"));
+    }
+
+    #[test]
+    fn partition_splitbrain_scenario_holds_result_parity() {
+        // the in-run referees hard-error on any result or fault-log drift
+        // (worker-count rerun + fault-free twin), so this passing IS the
+        // "faults move clocks, never data" check for transport faults
+        let spec = find("mr_partition_splitbrain").unwrap();
+        let out = run_spec(&spec, &quick_opts()).unwrap();
+        let extra = |k: &str| {
+            out.extras
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing extra {k}"))
+        };
+        assert!(extra("net_retries") > 0.0, "lossy links must force retries");
+        assert!(extra("net_deduplicated") >= 1.0, "dedup must catch a dup");
+        assert!(extra("net_dropped") > 0.0);
+        assert!(extra("split_brain_merges") >= 1.0);
+        assert!(extra("fault_fingerprint") > 0.0);
+        assert!(
+            extra("partition_virtual_overhead_s") >= 0.0,
+            "the partition never speeds the job up"
+        );
+        assert!(out.scale_events.iter().any(|e| e.action == "link-partition"));
+        assert!(out.scale_events.iter().any(|e| e.action == "link-heal"));
+        assert!(out.scale_events.iter().any(|e| e.action == "split-brain"));
+        assert!(out
+            .scale_events
+            .iter()
+            .any(|e| e.action == "split-brain-merge"));
     }
 
     #[test]

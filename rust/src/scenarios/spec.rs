@@ -62,6 +62,14 @@ pub enum ScenarioKind {
     /// solo-slice decomposition of every unaffected tenant — faults move
     /// clocks and placements, never unaffected tenants' data.
     MegascaleDcFailover,
+    /// Word count under lossy links and a scheduled mid-job bidirectional
+    /// partition that splits the cluster 2|14 and later heals: the
+    /// minority side elects its own master (split-brain) and merges back
+    /// on heal, re-paying `init_cost`. Refereed in-run against the
+    /// fault-free twin (results bit-identical), a worker-count rerun
+    /// (fault-log fingerprint bit-identical), and nonzero
+    /// retry/dedup/merge counters.
+    MrPartitionSplitbrain,
 }
 
 impl ScenarioKind {
@@ -79,6 +87,7 @@ impl ScenarioKind {
             ScenarioKind::MemberChurnElastic => "member-churn-elastic",
             ScenarioKind::MegascaleMultitenant => "megascale-multitenant",
             ScenarioKind::MegascaleDcFailover => "megascale-dc-failover",
+            ScenarioKind::MrPartitionSplitbrain => "mr-partition-splitbrain",
         }
     }
 }
@@ -184,6 +193,24 @@ pub struct FaultShape {
     /// Base of the exponential re-bind backoff in virtual seconds
     /// (`retryBackoffBase`).
     pub retry_backoff_base: f64,
+    /// Per-message link drop probability (`linkDropProb`, `[0, 1)`).
+    pub link_drop_prob: f64,
+    /// Per-delivery duplication probability (`linkDupProb`, `[0, 1]`).
+    pub link_dup_prob: f64,
+    /// Uniform per-delivery latency jitter ceiling (`linkJitter`, ≥ 0).
+    pub link_jitter: f64,
+    /// Virtual time at which the bidirectional partition opens
+    /// (`linkPartitionAt`).
+    pub link_partition_at: Option<f64>,
+    /// Virtual time at which the partition heals (`linkHealAt`; strictly
+    /// after the cut).
+    pub link_heal_at: Option<f64>,
+    /// Delivery attempts before `MemberUnreachable`
+    /// (`deliveryRetryBudget`).
+    pub delivery_retry_budget: u32,
+    /// Base of the exponential ack-timeout backoff
+    /// (`deliveryBackoffBase`).
+    pub delivery_backoff_base: f64,
 }
 
 impl Default for FaultShape {
@@ -202,6 +229,13 @@ impl Default for FaultShape {
             dc_victim: None,
             retry_budget: plan.retry_budget,
             retry_backoff_base: plan.retry_backoff_base,
+            link_drop_prob: 0.0,
+            link_dup_prob: 0.0,
+            link_jitter: 0.0,
+            link_partition_at: None,
+            link_heal_at: None,
+            delivery_retry_budget: plan.delivery_retry_budget,
+            delivery_backoff_base: plan.delivery_backoff_base,
         }
     }
 }
@@ -316,6 +350,13 @@ impl ScenarioSpec {
             cfg.dc_victim = f.dc_victim;
             cfg.retry_budget = f.retry_budget;
             cfg.retry_backoff_base = f.retry_backoff_base;
+            cfg.link_drop_prob = f.link_drop_prob;
+            cfg.link_dup_prob = f.link_dup_prob;
+            cfg.link_jitter = f.link_jitter;
+            cfg.link_partition_at = f.link_partition_at;
+            cfg.link_heal_at = f.link_heal_at;
+            cfg.delivery_retry_budget = f.delivery_retry_budget;
+            cfg.delivery_backoff_base = f.delivery_backoff_base;
         }
         cfg
     }
@@ -423,6 +464,10 @@ mod tests {
             ScenarioKind::MegascaleDcFailover.tag(),
             "megascale-dc-failover"
         );
+        assert_eq!(
+            ScenarioKind::MrPartitionSplitbrain.tag(),
+            "mr-partition-splitbrain"
+        );
     }
 
     #[test]
@@ -491,5 +536,39 @@ mod tests {
         }
         .fault_plan()
         .is_noop());
+    }
+
+    #[test]
+    fn link_fault_shape_flows_into_sim_config() {
+        let mut s = spec();
+        s.kind = ScenarioKind::MrPartitionSplitbrain;
+        s.faults = Some(FaultShape {
+            fault_seed: 1601_03980,
+            link_drop_prob: 0.15,
+            link_dup_prob: 0.5,
+            link_jitter: 0.002,
+            link_partition_at: Some(0.001),
+            link_heal_at: Some(12.0),
+            delivery_retry_budget: 16,
+            delivery_backoff_base: 0.1,
+            ..FaultShape::default()
+        });
+        let cfg = s.sim_config(false);
+        cfg.validate().unwrap();
+        let plan = cfg.fault_plan();
+        assert!(plan.has_link_faults());
+        assert!(!plan.is_noop());
+        assert_eq!(plan.link_drop_prob, 0.15);
+        assert_eq!(plan.link_dup_prob, 0.5);
+        assert_eq!(plan.link_partition_at, Some(0.001));
+        assert_eq!(plan.link_heal_at, Some(12.0));
+        assert_eq!(plan.delivery_retry_budget, 16);
+        assert_eq!(plan.delivery_backoff_base.to_bits(), 0.1f64.to_bits());
+        // splitbrain is a static MR kind: quick mode halves the cloudlets
+        assert_eq!(s.sim_config(true).no_of_cloudlets, 32);
+        // the default shape leaves the transport clean
+        assert!(FaultShape::default().link_partition_at.is_none());
+        let clean = spec().sim_config(false).fault_plan();
+        assert!(!clean.has_link_faults());
     }
 }

@@ -145,6 +145,53 @@ fn fault_scenarios_render_identical_json_run_twice() {
     );
 }
 
+/// The split-brain scenario must be run-twice deterministic down to the
+/// rendered JSON bytes: the transport fault log fingerprint, the
+/// partition/heal/merge scale events and every net counter are virtual
+/// quantities. The scenario's own in-run referees (worker-count rerun,
+/// fault-free twin) already hard-error on drift, so this test is the
+/// outer byte-level check CI's partition gate stacks on top.
+#[test]
+fn partition_splitbrain_renders_identical_json_run_twice() {
+    let specs = vec![find("mr_partition_splitbrain").unwrap()];
+    let mut a = run_suite(&specs, &quick()).unwrap();
+    let mut b = run_suite(&specs, &quick()).unwrap();
+    let cmp = compare(&a, &b);
+    assert!(cmp.is_ok(), "nondeterminism detected:\n{}", cmp.describe());
+
+    let s = a.find("mr_partition_splitbrain").unwrap();
+    let extra = |k: &str| {
+        s.extras
+            .iter()
+            .find(|(key, _)| key == k)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("missing extra {k}"))
+    };
+    assert!(extra("net_retries") > 0.0, "{s:?}");
+    assert!(extra("net_deduplicated") >= 1.0, "{s:?}");
+    assert!(extra("split_brain_merges") >= 1.0, "{s:?}");
+    assert!(extra("fault_fingerprint") > 0.0, "{s:?}");
+    assert!(s.scale_events.iter().any(|e| e.action == "link-partition"));
+    assert!(s.scale_events.iter().any(|e| e.action == "link-heal"));
+
+    // byte-identical JSON once the wall-clock noise is pinned
+    for r in [&mut a, &mut b] {
+        for s in &mut r.scenarios {
+            s.wall_mean_s = 0.0;
+            s.wall_std_s = 0.0;
+            s.wall_clock_ms = 0.0;
+            s.events_per_sec = None;
+            s.pairs_per_sec = None;
+            s.wall_extras.clear();
+        }
+    }
+    assert_eq!(
+        a.render(),
+        b.render(),
+        "split-brain scenario JSON must be byte-identical run-to-run"
+    );
+}
+
 /// Serializing a report and parsing it back must preserve every gated
 /// quantity exactly (shortest-roundtrip float formatting end to end).
 #[test]

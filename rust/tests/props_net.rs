@@ -1,0 +1,327 @@
+//! Property tests for the deterministic transport-fault layer
+//! (`NetModel` + `LinkFaultModel` + the reliable ack/retry/dedup path):
+//! for any corpus shape, member count, worker count, backend profile,
+//! drop probability, duplication probability, jitter, partition window,
+//! retry budget and backoff base,
+//!
+//! 1. the same seed produces a **bit-identical fault log** (and virtual
+//!    times) across repeated runs and across executor worker counts —
+//!    per-message draws are keyed on `(src, dst, seq, attempt)`, never on
+//!    scheduling order,
+//! 2. when the backoff ladder outlasts the partition window, a run over
+//!    lossy/partitioned links produces results bit-identical to the
+//!    fault-free twin — transport faults move clocks, never data,
+//! 3. delivery is conserved: every reliably-sent message is either
+//!    delivered or surfaced as `MemberUnreachable`
+//!    (`delivered + unreachable == sent`), and
+//! 4. the clean path is genuinely clean: with no link faults armed the
+//!    wires still count messages and bytes, but never retry, drop or
+//!    deduplicate, and the transport fault log stays empty.
+//!
+//! Uses the in-repo `util::proptest` harness (the offline vendor set has
+//! no proptest crate).
+
+use cloud2sim::faults::{log_fingerprint, FaultKind, FaultPlan};
+use cloud2sim::grid::backend::BackendProfile;
+use cloud2sim::grid::cluster::{GridCluster, GridConfig};
+use cloud2sim::grid::serialize::InMemoryFormat;
+use cloud2sim::mapreduce::wordcount::{WordCountMapper, WordCountReducer};
+use cloud2sim::mapreduce::{Corpus, CorpusConfig, JobConfig, MapReduceEngine};
+use cloud2sim::util::proptest::{forall, Gen};
+
+/// One randomized lossy-link job shape. The fuzzed transport axes: drop
+/// probability, duplication probability, delay jitter, partition window
+/// (and whether one is scheduled at all), retry budget and backoff base
+/// — on top of the usual corpus/member/backend/worker-count axes.
+#[derive(Debug, Clone)]
+struct Case {
+    members: usize,
+    files: usize,
+    distinct_files: usize,
+    lines: usize,
+    vocab: usize,
+    zipf_s: f64,
+    hazelcast: bool,
+    chunk_lines: usize,
+    fault_seed: u64,
+    drop_prob: f64,
+    dup_prob: f64,
+    jitter: f64,
+    partition_at: Option<f64>,
+    heal_after: f64,
+    backoff_base: f64,
+}
+
+impl Case {
+    fn draw(g: &mut Gen) -> Self {
+        let files = g.usize(1..5);
+        Self {
+            // >= 2 members so a wire (and a minority side) can exist
+            members: g.usize(2..6),
+            files,
+            distinct_files: g.usize(1..files + 1),
+            lines: g.usize(20..100),
+            vocab: g.usize(40..2000),
+            zipf_s: g.f64(0.6..1.6),
+            hazelcast: g.bool(0.5),
+            chunk_lines: g.usize(5..60),
+            fault_seed: g.u64(0..u64::MAX),
+            drop_prob: if g.bool(0.8) { g.f64(0.05..0.6) } else { 0.0 },
+            dup_prob: if g.bool(0.7) { g.f64(0.1..0.9) } else { 0.0 },
+            jitter: if g.bool(0.5) { g.f64(0.0..0.01) } else { 0.0 },
+            partition_at: if g.bool(0.6) {
+                Some(g.f64(0.0..0.005))
+            } else {
+                None
+            },
+            heal_after: g.f64(0.5..20.0),
+            backoff_base: g.f64(0.05..0.3),
+        }
+    }
+
+    /// Budget 16 makes the exponential ladder
+    /// `base * (2^16 - 1) >= 0.05 * 65535 ≈ 3276s` — orders of magnitude
+    /// past any heal instant drawn here, so delivery always succeeds and
+    /// result parity with the clean twin is a hard contract, not luck.
+    fn plan(&self) -> FaultPlan {
+        FaultPlan {
+            seed: self.fault_seed,
+            link_drop_prob: self.drop_prob,
+            link_dup_prob: self.dup_prob,
+            link_jitter: self.jitter,
+            link_partition_at: self.partition_at,
+            link_heal_at: self.partition_at.map(|at| at + self.heal_after),
+            delivery_retry_budget: 16,
+            delivery_backoff_base: self.backoff_base,
+            ..FaultPlan::default()
+        }
+    }
+
+    fn has_link_faults(&self) -> bool {
+        self.drop_prob > 0.0
+            || self.dup_prob > 0.0
+            || self.jitter > 0.0
+            || self.partition_at.is_some()
+    }
+}
+
+/// Everything the transport contracts cover, f64s captured as raw bits,
+/// plus the `NetModel` counters read back off the cluster after the run.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    sim_time_bits: u64,
+    total_count: i64,
+    emitted_pairs: u64,
+    reduce_invocations: u64,
+    top_words: Vec<(String, i64)>,
+    net_sent: u64,
+    net_delivered: u64,
+    net_unreachable: u64,
+    net_retries: u64,
+    net_dropped: u64,
+    net_deduplicated: u64,
+    net_messages: u64,
+    net_bytes: u64,
+    split_brain_events: u32,
+    /// Bit-stable renderings of every fault event, in emission order.
+    fault_log: Vec<String>,
+}
+
+fn run(case: &Case, plan: &FaultPlan, workers: usize) -> Outcome {
+    let corpus = Corpus::new(CorpusConfig {
+        files: case.files,
+        distinct_files: case.distinct_files,
+        lines_per_file: case.lines,
+        vocab: case.vocab.max(2),
+        zipf_s: case.zipf_s,
+        ..CorpusConfig::default()
+    });
+    let job = JobConfig {
+        chunk_lines: case.chunk_lines,
+        ..JobConfig::default()
+    };
+    let backend = if case.hazelcast {
+        BackendProfile::hazelcast_like()
+    } else {
+        BackendProfile::infinispan_like()
+    };
+    let mapper = WordCountMapper;
+    let reducer = WordCountReducer;
+    let engine =
+        MapReduceEngine::new(corpus, job, &mapper, &reducer).with_fault_plan(plan.clone());
+    let mut cluster = GridCluster::with_members(
+        GridConfig {
+            backend,
+            in_memory_format: InMemoryFormat::Object,
+            node_heap_bytes: 64 * 1024 * 1024,
+            workers,
+            ..GridConfig::default()
+        },
+        case.members,
+    );
+    let r = engine.run(&mut cluster).expect("job fits the 64MB heap");
+    Outcome {
+        sim_time_bits: r.sim_time_s.to_bits(),
+        total_count: r.total_count,
+        emitted_pairs: r.emitted_pairs,
+        reduce_invocations: r.reduce_invocations,
+        top_words: r.top_words,
+        net_sent: cluster.net.sent,
+        net_delivered: cluster.net.delivered,
+        net_unreachable: cluster.net.unreachable,
+        net_retries: cluster.net.retries,
+        net_dropped: cluster.net.dropped,
+        net_deduplicated: cluster.net.deduplicated,
+        net_messages: cluster.net.messages,
+        net_bytes: cluster.net.bytes,
+        split_brain_events: r.split_brain_events,
+        fault_log: r.fault_events.iter().map(|e| e.fingerprint()).collect(),
+    }
+}
+
+#[test]
+fn same_seed_transport_fault_logs_are_bit_identical_across_runs_and_workers() {
+    forall("transport-log-determinism", 24, |g: &mut Gen| {
+        let case = Case::draw(g);
+        let plan = case.plan();
+        let threaded_workers = [2, 4][g.usize(0..2)];
+        let a = run(&case, &plan, 1);
+        let b = run(&case, &plan, 1);
+        let c = run(&case, &plan, threaded_workers);
+        // repeated runs AND different worker counts: one outcome, down to
+        // the fault-event bits and every net counter
+        assert_eq!(a, b, "re-run drifted: {case:?}");
+        assert_eq!(
+            a, c,
+            "worker count changed the transport schedule ({threaded_workers} workers): {case:?}"
+        );
+        // the fingerprint referee the scenario gate relies on
+        assert_eq!(
+            log_fingerprint(&[]),
+            log_fingerprint(&[]),
+            "fingerprint is a pure function"
+        );
+        if case.partition_at.is_some() {
+            // a scheduled partition always logs its cut, the split-brain
+            // election, the heal and the merge — in that order on the log
+            for needle in ["link-partition", "split-brain", "link-heal", "split-brain-merge"] {
+                assert!(
+                    a.fault_log.iter().any(|l| l.contains(needle)),
+                    "missing {needle}: {case:?}"
+                );
+            }
+            assert!(a.split_brain_events >= 1, "{case:?}");
+        }
+    });
+}
+
+#[test]
+fn transport_faults_move_clocks_never_results() {
+    forall("transport-result-parity", 24, |g: &mut Gen| {
+        let case = Case::draw(g);
+        let plan = case.plan();
+        let faulted = run(&case, &plan, 2);
+        let clean = run(&case, &FaultPlan::default(), 2);
+        // the budget outlasts every partition drawn here, so data parity
+        // is exact — transport faults move clocks, never data
+        assert_eq!(faulted.total_count, clean.total_count, "{case:?}");
+        assert_eq!(faulted.emitted_pairs, clean.emitted_pairs, "{case:?}");
+        assert_eq!(
+            faulted.reduce_invocations, clean.reduce_invocations,
+            "{case:?}"
+        );
+        assert_eq!(faulted.top_words, clean.top_words, "{case:?}");
+        // conservation: every reliably-sent message reaches a terminal
+        // state, and the generous budget means none went unreachable
+        assert_eq!(
+            faulted.net_delivered + faulted.net_unreachable,
+            faulted.net_sent,
+            "{case:?}"
+        );
+        assert_eq!(faulted.net_unreachable, 0, "{case:?}");
+        // retries and drops only ever come from armed link faults
+        if !case.has_link_faults() {
+            assert_eq!(faulted.net_retries, 0, "{case:?}");
+            assert_eq!(faulted.net_dropped, 0, "{case:?}");
+            assert_eq!(faulted.net_deduplicated, 0, "{case:?}");
+        }
+        // lossy/partitioned wires only ever add virtual time
+        assert!(
+            f64::from_bits(faulted.sim_time_bits) >= f64::from_bits(clean.sim_time_bits),
+            "{case:?}"
+        );
+    });
+}
+
+#[test]
+fn the_clean_path_is_genuinely_clean() {
+    forall("transport-clean-path", 24, |g: &mut Gen| {
+        let mut case = Case::draw(g);
+        // strip every link-fault axis; the seed and shape axes stay fuzzed
+        case.drop_prob = 0.0;
+        case.dup_prob = 0.0;
+        case.jitter = 0.0;
+        case.partition_at = None;
+        let plan = case.plan();
+        assert!(!plan.has_link_faults(), "{case:?}");
+        let out = run(&case, &plan, 2);
+        // the wires still meter traffic (Fig 5.8-style statistics) ...
+        assert!(out.net_messages > 0, "{case:?}");
+        assert!(out.net_bytes > 0, "{case:?}");
+        // ... but the reliable layer never has anything to repair
+        assert_eq!(out.net_retries, 0, "{case:?}");
+        assert_eq!(out.net_dropped, 0, "{case:?}");
+        assert_eq!(out.net_deduplicated, 0, "{case:?}");
+        assert_eq!(out.net_unreachable, 0, "{case:?}");
+        assert_eq!(out.split_brain_events, 0, "{case:?}");
+        assert!(
+            !out.fault_log.iter().any(|l| l.contains("link-")
+                || l.contains("split-brain")
+                || l.contains("member-unreachable")),
+            "clean runs log no transport event: {case:?}"
+        );
+    });
+}
+
+#[test]
+fn exhausted_budgets_surface_unreachable_and_conserve_deliveries() {
+    // a partition that never heals with a tiny budget: the sender must
+    // give up, count the message unreachable and keep the conservation
+    // invariant — directly on the NetModel, away from the MR engine
+    let plan = FaultPlan {
+        link_partition_at: Some(0.0),
+        link_heal_at: None,
+        delivery_retry_budget: 3,
+        delivery_backoff_base: 0.01,
+        ..FaultPlan::default()
+    };
+    let mut cluster = GridCluster::with_members(GridConfig::default(), 4);
+    cluster.net.arm_link_faults(&plan, 0.0, vec![3]);
+    let sender = cluster.members()[0];
+    let mut unreachable_seen = 0u64;
+    for i in 0..50u64 {
+        let d = cluster
+            .reliable_send(0, 3, 100 + i)
+            .expect("send never errors, it reports");
+        if !d.delivered {
+            unreachable_seen += 1;
+            // the caller's half of the contract, as `probe_member` does it
+            let at = cluster.clock(sender);
+            cluster.net.note_unreachable(0, 3, at);
+        }
+    }
+    assert!(unreachable_seen > 0, "the budget must run out mid-partition");
+    assert_eq!(
+        cluster.net.delivered + cluster.net.unreachable,
+        cluster.net.sent
+    );
+    assert_eq!(cluster.net.unreachable, unreachable_seen);
+    assert!(
+        cluster
+            .net
+            .drain_fault_log()
+            .iter()
+            .any(|e| e.kind == FaultKind::MemberUnreachable),
+        "exhaustion lands on the fault log"
+    );
+}
